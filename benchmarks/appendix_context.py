@@ -1,0 +1,93 @@
+"""Paper Appendix B: impact of context evolution.
+
+Strategy 1: gemini-flash standalone; Strategy 2: mistral first, then
+gemini WITH the failed attempt in context. The calibrated env implements
+the measured +5pt context gain; claim: Strategy 2's success rate exceeds
+Strategy 1's, at higher cost — and some queries succeed ONLY through the
+context path.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import env as env_mod
+
+MISTRAL, GEMINI = 0, 3
+AIME = 1
+
+
+def run(queries: int = 2000, seed: int = 0) -> Dict:
+    env = env_mod.CalibratedPoolEnv()
+    params = env.make(jax.random.PRNGKey(seed))
+    key = jax.random.PRNGKey(seed + 1)
+
+    s1_hits, s2_hits, context_saves, context_hurts = 0, 0, 0, 0
+    s1_cost, s2_cost = 0.0, 0.0
+    for t in range(queries):
+        kq, k1, k2, k3 = jax.random.split(jax.random.fold_in(key, t), 4)
+        q = env.reset(params, kq, dataset=jnp.int32(AIME))
+        # Strategy 1: gemini alone
+        r1, c1, _ = env.step(params, k1, q, jnp.int32(GEMINI))
+        s1_cost += float(c1)
+        hit1 = float(r1) > 0.5
+        s1_hits += hit1
+        # Strategy 2: mistral first; on failure gemini sees the context
+        rm, cm, q2 = env.step(params, k2, q, jnp.int32(MISTRAL))
+        s2_cost += float(cm)
+        if float(rm) > 0.5:
+            hit2 = True
+        else:
+            rg, cg, _ = env.step(params, k3, q2, jnp.int32(GEMINI))
+            s2_cost += float(cg)
+            hit2 = float(rg) > 0.5
+        s2_hits += hit2
+        if hit2 and not hit1:
+            context_saves += 1
+        if hit1 and not hit2:
+            context_hurts += 1
+
+    out = {
+        "strategy1_gemini_only": s1_hits / queries,
+        "strategy2_mistral_then_gemini": s2_hits / queries,
+        "context_driven_successes": context_saves,
+        "context_losses": context_hurts,
+        "cost1": s1_cost / queries,
+        "cost2": s2_cost / queries,
+        "queries": queries,
+    }
+    common.save_json("appendix_context", out)
+    return out
+
+
+def check_claims(out) -> Dict[str, bool]:
+    return {
+        "context_improves_success":
+            out["strategy2_mistral_then_gemini"]
+            > out["strategy1_gemini_only"],
+        "context_saves_exist": out["context_driven_successes"] > 0,
+        "sequential_costs_more": out["cost2"] > out["cost1"],
+    }
+
+
+def main():
+    out = run()
+    print("\n=== Appendix B (context impact) ===")
+    print(f"gemini-only: {100*out['strategy1_gemini_only']:.1f}% "
+          f"@ ${out['cost1']:.2e}")
+    print(f"mistral→gemini w/ context: "
+          f"{100*out['strategy2_mistral_then_gemini']:.1f}% "
+          f"@ ${out['cost2']:.2e}")
+    print(f"context-driven successes: {out['context_driven_successes']}, "
+          f"losses: {out['context_losses']}")
+    claims = check_claims(out)
+    print("claims:", claims)
+    return out, claims
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks.
+
+On CPU the production path is the jitted jnp reference (Pallas interpret
+mode is a correctness harness, not a perf path), so we time the jitted
+reference implementations at production-relevant shapes and report the
+per-call latency of the routing hot loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # µs
+
+
+def run() -> Dict[str, float]:
+    key = jax.random.PRNGKey(0)
+    out: Dict[str, float] = {}
+
+    # routing hot loop: B=128 concurrent queries × K=6 arms, d=384
+    b, k, d = 128, 6, 384
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (b, d))
+    theta = jax.random.normal(ks[1], (k, d))
+    a = jax.random.normal(ks[2], (k, d, d))
+    a_inv = jnp.einsum("kde,kfe->kdf", a, a) / d + jnp.eye(d)[None]
+    score = jax.jit(lambda x, t, ai: ref.linucb_score_ref(x, t, ai, 0.675))
+    out["linucb_score_B128_K6_d384"] = _time(score, x, theta, a_inv)
+
+    xv = jax.random.normal(key, (d,))
+    mask = jnp.zeros(k).at[2].set(1.0)
+    sm = jax.jit(ref.sherman_morrison_ref)
+    out["sherman_morrison_K6_d384"] = _time(sm, a_inv, xv, mask)
+
+    q = jax.random.normal(ks[0], (1, 1024, 8, 64), jnp.float32)
+    kk = jax.random.normal(ks[1], (1, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 1024, 2, 64), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v,
+                                                         causal=True))
+    out["attention_ref_S1024_H8"] = _time(fa, q, kk, v, iters=5)
+
+    common.save_json("bench_kernels", out)
+    return out
+
+
+def main():
+    out = run()
+    print("\n=== Kernel micro-benchmarks (jitted reference path, CPU) ===")
+    for name, us in out.items():
+        print(f"{name},{us:.1f}us")
+    return out, {"all_finite": all(v > 0 for v in out.values())}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints a ``name,us_per_call,derived`` CSV summary line per benchmark
+(us_per_call = wall time per simulated routing round or kernel call;
+derived = the headline metric of that table), plus each module's own
+detailed table. Full payloads land in results/benchmarks/*.json.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run``
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (appendix_context, bench_kernels, fig2_budget_cdf,
+                        fig3_budget_sensitivity, table1_2_accuracy_cost,
+                        table3_position, theorem_regret)
+from benchmarks import common
+
+
+def main() -> None:
+    rows = []
+    all_claims = {}
+
+    suites = [
+        ("table1_2_accuracy_cost", table1_2_accuracy_cost,
+         lambda p: p["accuracy"]["knapsack"]["avg"]),
+        ("table3_position", table3_position,
+         lambda p: p["knapsack"]["first_step_share"]),
+        ("fig2_budget_cdf", fig2_budget_cdf,
+         lambda p: p["budget_linucb"]["within_budget_frac"]),
+        ("fig3_budget_sensitivity", fig3_budget_sensitivity,
+         lambda p: list(p["knapsack"].values())[-1]),
+        ("theorem_regret", theorem_regret,
+         lambda p: p["greedy_linucb"]["loglog_slope"]),
+        ("appendix_context", appendix_context,
+         lambda p: p["strategy2_mistral_then_gemini"]
+         - p["strategy1_gemini_only"]),
+        ("bench_kernels", bench_kernels,
+         lambda p: p["linucb_score_B128_K6_d384"]),
+    ]
+
+    for name, mod, derive in suites:
+        t0 = time.perf_counter()
+        payload, claims = mod.main()
+        dt = time.perf_counter() - t0
+        # per-round (or per-call) time in µs
+        rounds = common.ROUNDS if "kernel" not in name else 1
+        us = dt / max(rounds, 1) * 1e6
+        rows.append((name, us, derive(payload)))
+        all_claims[name] = claims
+
+    print("\n================ SUMMARY (name,us_per_call,derived) ===========")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.4f}")
+
+    failed = {k: {c: ok for c, ok in v.items() if not ok}
+              for k, v in all_claims.items() if not all(v.values())}
+    print("\nclaim checks:",
+          "ALL PASS" if not failed else f"FAILURES: {failed}")
+    common.save_json("claims", all_claims)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end driver: serve a pool of REAL (reduced) JAX models behind the
+paper's bandit router, with batched requests and online feedback.
+
+Three reduced-architecture arms with very different cost profiles —
+qwen1.5-0.5b (dense), xlstm-350m (recurrent), recurrentgemma-2b (hybrid) —
+serve generation requests. The router learns from simulated user feedback
+(quality ∝ a hidden per-arm affinity to the query's topic direction) and
+shifts traffic toward the arm each topic prefers, while tracking spend.
+
+Run: PYTHONPATH=src python examples/serve_multi_llm.py [--rounds N]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import features
+from repro.models import registry
+from repro.serving.engine import Engine
+from repro.serving.scheduler import ArmSpec, BanditScheduler, Request
+
+ARM_ARCHS = ("qwen1.5-0.5b", "xlstm-350m", "recurrentgemma-2b")
+TOPICS = ("prove the binomial identity", "summarize this meeting",
+          "translate to french", "debug this python function")
+DIM = 64
+
+
+def build_pool():
+    arms = []
+    for i, arch in enumerate(ARM_ARCHS):
+        cfg = get_config(arch).reduced()
+        params = registry.init_params(cfg, jax.random.PRNGKey(i))
+        eng = Engine(cfg, params, cache_len=48)
+        arms.append(ArmSpec(arch, eng, cost_per_token=1e-5 * (i + 1)))
+    return arms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=6)
+    args = ap.parse_args()
+
+    arms = build_pool()
+    sched = BanditScheduler(arms, dim=DIM, max_new_tokens=8)
+
+    # hidden ground truth: which arm suits which topic (unknown to router)
+    rng = np.random.default_rng(0)
+    affinity = rng.dirichlet(np.ones(len(arms)), size=len(TOPICS))
+
+    uid = 0
+    spend = np.zeros(len(arms))
+    hits = np.zeros(len(arms))
+    for rnd in range(args.rounds):
+        reqs = []
+        metas = []
+        for b in range(args.batch):
+            topic = rng.integers(0, len(TOPICS))
+            text = TOPICS[topic] + f" case {rng.integers(1000)}"
+            ctx = features.embed_text(text, DIM)
+            cfg0 = arms[0].engine.cfg
+            toks = jnp.asarray(
+                rng.integers(0, 256, (1, 16)), jnp.int32)
+            reqs.append(Request(uid=uid, context=ctx,
+                                batch={"tokens": toks}))
+            metas.append((topic, ctx))
+            uid += 1
+
+        resps = sched.serve(reqs, key=jax.random.PRNGKey(rnd))
+        for resp, (topic, ctx) in zip(resps, metas):
+            # simulated user feedback: Bernoulli(affinity[topic, arm])
+            reward = float(rng.random() < affinity[topic, resp.arm])
+            sched.feedback(resp.arm, ctx, reward)
+            spend[resp.arm] += resp.cost
+            hits[resp.arm] += reward
+        counts = np.bincount([r.arm for r in resps], minlength=len(arms))
+        print(f"round {rnd}: traffic={counts.tolist()} "
+              f"spend=${spend.sum():.4f}")
+
+    print("\nfinal traffic shares vs hidden best arms:")
+    scores = np.asarray(sched._score(sched.state, jnp.asarray(
+        np.stack([features.embed_text(t, DIM) for t in TOPICS]))))
+    for t, topic in enumerate(TOPICS):
+        print(f"  {topic!r}: router prefers {arms[int(scores[t].argmax())].name},"
+              f" hidden best {arms[int(affinity[t].argmax())].name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.registry import ARCHS, CONFIGS, get_config
+from repro.configs.shapes import SHAPES, get_shape
+
+__all__ = ["ModelConfig", "ShapeConfig", "ARCHS", "CONFIGS", "get_config",
+           "SHAPES", "get_shape"]

@@ -1,0 +1,21 @@
+"""arctic-480b — MoE with 128 experts top-2 AND a dense residual MLP.
+
+[hf:Snowflake/snowflake-arctic-base] Snowflake Arctic: dense-MoE hybrid —
+every layer runs a (small) dense FFN in parallel with the routed experts.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32_000,
+    num_experts=128,
+    top_k=2,
+    dense_residual=True,
+    citation="hf:Snowflake/snowflake-arctic-base",
+)

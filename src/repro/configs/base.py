@@ -1,0 +1,122 @@
+"""Config system: model architecture + input-shape descriptions.
+
+``ModelConfig`` is a frozen dataclass covering every assigned architecture
+family (dense / moe / hybrid / ssm / encdec-audio / vlm). Each
+``configs/<arch>.py`` instantiates one with the exact assigned numbers and
+cites its source. ``reduced()`` produces the CPU-smoke variant mandated by
+the brief (≤2 layers, d_model ≤ 512, ≤4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+FAMILIES = ("dense", "moe", "hybrid", "ssm", "encdec", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # one of FAMILIES
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    citation: str = ""
+
+    head_dim: Optional[int] = None  # default d_model // num_heads
+    # --- attention options ---
+    qkv_bias: bool = False          # Qwen1.5 family
+    qk_norm: bool = False           # Qwen3: RMSNorm on q and k per head
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()   # Qwen2-VL M-RoPE (t, h, w) halves
+    sliding_window: Optional[int] = None   # local attention window
+    # --- MoE options ---
+    num_experts: int = 0
+    top_k: int = 0
+    dense_residual: bool = False    # Arctic: dense MLP in parallel with MoE
+    shared_expert: bool = False     # Llama-4: always-on shared expert
+    capacity_factor: float = 1.25
+    # --- hybrid (RecurrentGemma) options ---
+    # pattern entry per layer: "rec" (RG-LRU block) or "attn" (local attn)
+    hybrid_attn_period: int = 3     # every 3rd layer is attention (1:2)
+    rglru_width: Optional[int] = None  # recurrence width (default d_model)
+    conv_width: int = 4
+    # --- ssm (xLSTM) options ---
+    slstm_every: int = 2            # every 2nd block is sLSTM, rest mLSTM
+    # --- encoder-decoder (Whisper) options ---
+    encoder_layers: int = 0
+    num_frames: int = 1500          # encoder positions from the audio stub
+    # --- vlm options ---
+    num_patches: int = 256          # patch embeddings from the vision stub
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def reduced(self) -> "ModelConfig":
+        """CPU smoke-test variant of the same family (brief: 2 layers,
+        d_model ≤ 512, ≤ 4 experts)."""
+        d_model = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = max(1, min(self.num_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        changes = dict(
+            num_layers=2,
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=d_model // heads,
+            d_ff=min(self.d_ff, 4 * d_model) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_frames=64,
+            num_patches=16,
+            dtype="float32",
+        )
+        if self.num_experts:
+            changes["num_experts"] = 4
+            changes["top_k"] = min(self.top_k, 2)
+        if self.encoder_layers:
+            changes["encoder_layers"] = 2
+        if self.sliding_window:
+            changes["sliding_window"] = 16
+        if self.rglru_width:
+            changes["rglru_width"] = d_model
+        if self.mrope_sections:
+            hd_half = (d_model // heads) // 2
+            t = hd_half // 4
+            changes["mrope_sections"] = (t, (hd_half - t) // 2,
+                                         hd_half - t - (hd_half - t) // 2)
+        return dataclasses.replace(self, **changes)
+
+    def with_sliding_window(self, window: int) -> "ModelConfig":
+        """Beyond-paper variant used for long_500k on full-attention archs."""
+        return dataclasses.replace(self, sliding_window=window)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+    def reduced(self) -> "ShapeConfig":
+        return dataclasses.replace(self, seq_len=min(self.seq_len, 64),
+                                   global_batch=min(self.global_batch, 2))

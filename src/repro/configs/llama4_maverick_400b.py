@@ -1,0 +1,24 @@
+"""llama4-maverick-400b-a17b — MoE, 128 experts top-1 + shared expert,
+early-fusion multimodal (text path implemented; fusion enters as embeddings).
+
+[hf:meta-llama/Llama-4-Scout-17B-16E] (family card; Maverick sibling as
+assigned). Notably this model is ALSO one of the paper's six candidate
+LLMs (Table 1, "llama-4-maverick") — the routing experiments use its
+calibrated accuracy/cost row.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202_048,
+    num_experts=128,
+    top_k=1,
+    shared_expert=True,
+    citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

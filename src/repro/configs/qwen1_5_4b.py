@@ -1,0 +1,19 @@
+"""qwen1.5-4b — dense decoder with QKV bias (MHA: kv == heads).
+
+[hf:Qwen/Qwen1.5-0.5B] (family card, 4B sibling as assigned).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151_936,
+    qkv_bias=True,
+    rope_theta=1e6,
+    citation="hf:Qwen/Qwen1.5-0.5B",
+)

@@ -1,0 +1,23 @@
+"""qwen2-vl-72b — VLM language backbone with M-RoPE; ViT frontend STUB.
+
+[arXiv:2409.12191] Wang et al., "Qwen2-VL". ``input_specs`` provides
+precomputed patch embeddings (dynamic-resolution ViT output) per the brief;
+M-RoPE applies (temporal, height, width) rotary sections [16, 24, 24] over
+the 64 frequency pairs of head_dim=128.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29_568,
+    vocab_size=152_064,
+    mrope_sections=(16, 24, 24),
+    num_patches=256,
+    rope_theta=1e6,
+    citation="arXiv:2409.12191",
+)

@@ -1,0 +1,19 @@
+"""qwen3-1.7b — dense decoder with per-head qk RMSNorm and GQA.
+
+[hf:Qwen/Qwen3-8B] (family card; 1.7B sibling config as assigned).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=6144,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1e6,
+    citation="hf:Qwen/Qwen3-8B",
+)

@@ -1,0 +1,24 @@
+"""recurrentgemma-2b — hybrid RG-LRU + local attention, 1 attn : 2 recurrent.
+
+[arXiv:2402.19427] De et al., "Griffin: Mixing Gated Linear Recurrences with
+Local Attention for Efficient Language Models" (RecurrentGemma release).
+Natively sub-quadratic: constant-size RG-LRU state + 2048-token local
+attention window ⇒ runs long_500k without any variant.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256_000,
+    sliding_window=2048,      # local attention window of the attn layers
+    hybrid_attn_period=3,     # layers 2,5,8,… are attention (1:2 ratio)
+    rglru_width=2560,
+    conv_width=4,
+    citation="arXiv:2402.19427",
+)

@@ -1,0 +1,29 @@
+"""--arch lookup table over the assigned architecture pool."""
+from __future__ import annotations
+
+from repro.configs import (arctic_480b, llama4_maverick_400b,
+                           qwen1_5_0_5b, qwen1_5_4b, qwen2_vl_72b,
+                           qwen3_1_7b, recurrentgemma_2b, starcoder2_3b,
+                           whisper_tiny, xlstm_350m)
+from repro.configs.base import ModelConfig
+
+CONFIGS = {
+    "whisper-tiny": whisper_tiny.CONFIG,
+    "starcoder2-3b": starcoder2_3b.CONFIG,
+    "qwen1.5-0.5b": qwen1_5_0_5b.CONFIG,
+    "recurrentgemma-2b": recurrentgemma_2b.CONFIG,
+    "qwen3-1.7b": qwen3_1_7b.CONFIG,
+    "qwen1.5-4b": qwen1_5_4b.CONFIG,
+    "arctic-480b": arctic_480b.CONFIG,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b.CONFIG,
+    "xlstm-350m": xlstm_350m.CONFIG,
+    "qwen2-vl-72b": qwen2_vl_72b.CONFIG,
+}
+
+ARCHS = tuple(CONFIGS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCHS}")
+    return CONFIGS[name]

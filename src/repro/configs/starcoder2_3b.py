@@ -1,0 +1,18 @@
+"""starcoder2-3b — dense decoder, GQA (kv=2), RoPE, sliding-window-capable.
+
+[arXiv:2402.19173] Lozhkov et al., "StarCoder 2 and The Stack v2".
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    d_ff=12_288,
+    vocab_size=49_152,
+    rope_theta=1e5,
+    citation="arXiv:2402.19173",
+)

@@ -1,0 +1,23 @@
+"""whisper-tiny — encoder-decoder audio transformer backbone.
+
+[arXiv:2212.04356] Radford et al., "Robust Speech Recognition via
+Large-Scale Weak Supervision". The mel-spectrogram + conv feature extractor
+is a STUB per the brief: ``input_specs`` provides precomputed frame
+embeddings (1500 frames × d_model) for the encoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    num_layers=4,            # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51_865,
+    num_frames=1500,
+    rope_theta=0.0,          # Whisper uses learned/sinusoidal positions
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,20 @@
+"""xlstm-350m — alternating sLSTM + mLSTM residual blocks, no separate FFN.
+
+[arXiv:2405.04517] Beck et al., "xLSTM: Extended Long Short-Term Memory".
+d_ff=0: the blocks carry their own up/down projections. Constant-size
+recurrent state ⇒ native long_500k support.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    slstm_every=2,           # blocks 1,3,5,… sLSTM; 0,2,4,… mLSTM
+    citation="arXiv:2405.04517",
+)

@@ -1,0 +1,101 @@
+"""Baseline routers the paper compares against (§6).
+
+* **MetaLLM** [7] — single-step LinUCB on a blended reward
+  ``r − w_cost · cost`` (accuracy/cost trade-off learned from feedback).
+* **MixLLM** [12] — single-step linear contextual bandit scoring
+  ``quality − λ·(cost + latency)`` with the paper's λ = 1.4.
+* **Majority Voting** [23] — query every arm, correct if ≥2 agree-correct;
+  cost is the sum of all arms' costs.
+* **Random** — uniform arm each step (multi-step, like ours).
+* **Fixed single arm** — each candidate LLM on its own (Table 1 rows).
+
+MetaLLM and MixLLM are deliberately *single-step*: they route once per user
+query and do not exploit context evolution — the paper attributes their
+accuracy gap to exactly this (§6.1.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linucb
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaLLMConfig:
+    num_arms: int
+    dim: int = 384
+    alpha: float = 0.675
+    lam: float = 0.45
+    cost_weight: float = 20.0   # blends dollars into the [0,1] reward scale
+
+    def linucb(self) -> linucb.LinUCBConfig:
+        return linucb.LinUCBConfig(self.num_arms, self.dim, self.alpha,
+                                   self.lam)
+
+
+class MetaLLMState(NamedTuple):
+    bandit: linucb.LinUCBState
+
+
+def metallm_init(cfg: MetaLLMConfig) -> MetaLLMState:
+    return MetaLLMState(linucb.init(cfg.linucb()))
+
+
+def metallm_select(state: MetaLLMState, x: jax.Array,
+                   cfg: MetaLLMConfig) -> jax.Array:
+    return linucb.select(state.bandit, x, cfg.linucb())
+
+
+def metallm_update(state: MetaLLMState, arm: jax.Array, x: jax.Array,
+                   reward: jax.Array, cost: jax.Array,
+                   cfg: MetaLLMConfig) -> MetaLLMState:
+    blended = reward - cfg.cost_weight * cost
+    return MetaLLMState(linucb.update(state.bandit, arm, x, blended))
+
+
+@dataclasses.dataclass(frozen=True)
+class MixLLMConfig:
+    num_arms: int
+    dim: int = 384
+    alpha: float = 0.675
+    lam: float = 0.45
+    trade_off: float = 1.4      # paper-reported optimal λ for MixLLM
+    cost_scale: float = 50.0    # dollars → quality-scale units
+    latency_penalty: float = 0.01
+
+    def linucb(self) -> linucb.LinUCBConfig:
+        return linucb.LinUCBConfig(self.num_arms, self.dim, self.alpha,
+                                   self.lam)
+
+
+class MixLLMState(NamedTuple):
+    bandit: linucb.LinUCBState   # models response quality
+    cost_sum: jax.Array          # (K,)
+    cost_count: jax.Array        # (K,)
+
+
+def mixllm_init(cfg: MixLLMConfig) -> MixLLMState:
+    return MixLLMState(linucb.init(cfg.linucb()),
+                       jnp.zeros((cfg.num_arms,)),
+                       jnp.zeros((cfg.num_arms,)))
+
+
+def mixllm_select(state: MixLLMState, x: jax.Array,
+                  cfg: MixLLMConfig) -> jax.Array:
+    quality = linucb.ucb_scores(state.bandit, x, cfg.alpha)
+    c_hat = state.cost_sum / jnp.maximum(state.cost_count, 1.0)
+    penalty = cfg.trade_off * (cfg.cost_scale * c_hat + cfg.latency_penalty)
+    return jnp.argmax(quality - penalty, axis=-1)
+
+
+def mixllm_update(state: MixLLMState, arm: jax.Array, x: jax.Array,
+                  reward: jax.Array, cost: jax.Array,
+                  cfg: MixLLMConfig) -> MixLLMState:
+    onehot = jax.nn.one_hot(arm, state.cost_sum.shape[0])
+    return MixLLMState(linucb.update(state.bandit, arm, x, reward),
+                       state.cost_sum + onehot * cost,
+                       state.cost_count + onehot)

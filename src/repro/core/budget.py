@@ -1,0 +1,138 @@
+"""Budget-aware Greedy LinUCB under stochastic costs (paper §5.1).
+
+On top of the LinUCB reward model, each arm has an unknown mean cost
+``μ_k``; the learner tracks the empirical mean ``ĉ_k`` with a Hoeffding
+confidence width ``β_k = sqrt(log(2TK/δ) / (2 N_k))`` and selects
+
+    argmax_k  UCB_k(x) / max(ĉ_k − β_k, ε)
+    s.t.      ĉ_k + β_k ≤ remaining budget
+
+— optimism in reward, conservatism in cost (two-level confidence).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linucb
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetConfig:
+    """Hyper-parameters of budget-aware LinUCB (paper §5.1 / Thm 2)."""
+
+    num_arms: int
+    dim: int = 384
+    alpha: float = 0.675
+    lam: float = 0.45
+    horizon_t: int = 10_000      # T in β_k (total decision budget)
+    delta: float = 0.05
+    eps: float = 1e-7            # ε floor for the cost denominator (≪ any real cost)
+    c_max: float = 1.0           # costs live in [0, C_max]
+    dtype: jnp.dtype = jnp.float32
+
+    def linucb(self) -> linucb.LinUCBConfig:
+        return linucb.LinUCBConfig(num_arms=self.num_arms, dim=self.dim,
+                                   alpha=self.alpha, lam=self.lam,
+                                   dtype=self.dtype)
+
+
+class BudgetState(NamedTuple):
+    bandit: linucb.LinUCBState
+    cost_sum: jax.Array     # (K,) Σ observed costs
+    cost_count: jax.Array   # (K,) N_k
+
+
+def init(cfg: BudgetConfig) -> BudgetState:
+    return BudgetState(
+        bandit=linucb.init(cfg.linucb()),
+        cost_sum=jnp.zeros((cfg.num_arms,), cfg.dtype),
+        cost_count=jnp.zeros((cfg.num_arms,), cfg.dtype),
+    )
+
+
+def cost_estimates(state: BudgetState, cfg: BudgetConfig):
+    """Empirical mean cost ĉ_k and confidence width β_k per arm.
+
+    DEVIATION from the paper's literal β_k = √(log(2TK/δ)/2N_k): that
+    absolute Hoeffding width presumes costs in [0,1]. With dollar-scale
+    costs (≈1e-4, paper Table 2) it exceeds any realistic per-query budget
+    for ~10⁶ pulls and the conservative feasibility test deadlocks. We use
+    the RELATIVE width β_k = ĉ_k·√(log(2TK/δ)/2N_k) (empirical-Bernstein
+    flavor for positive costs), capped at C_max — the same √(log/N) decay,
+    on the scale the costs actually live on.
+
+    Unpulled arms: ĉ=0 with width C_max — the score denominator hits the
+    ε floor (optimistically cheap) and selection handles cold start.
+    """
+    n = state.cost_count
+    pulled = n > 0
+    c_hat = jnp.where(pulled, state.cost_sum / jnp.maximum(n, 1.0), 0.0)
+    rel = jnp.sqrt(jnp.log(2.0 * cfg.horizon_t * cfg.num_arms / cfg.delta)
+                   / (2.0 * jnp.maximum(n, 1.0)))
+    beta = jnp.where(pulled, jnp.minimum(c_hat * rel, cfg.c_max),
+                     cfg.c_max)
+    return c_hat, beta
+
+
+def scores(state: BudgetState, x: jax.Array, cfg: BudgetConfig,
+           remaining_budget: jax.Array):
+    """Cost-normalized optimistic scores + feasibility mask.
+
+    Feasibility uses the EMPIRICAL MEAN ĉ_k ≤ remaining — matching the
+    paper's own oracle (§5.1 defines k* over arms with μ_k ≤ b_{t,h}).
+    A strict upper-confidence test (ĉ+β ≤ b) deadlocks marginal arms:
+    their width can only shrink when pulled, which the test forbids.
+    Optimism in reward / realism in cost; the β lower bound still powers
+    the optimistic score denominator, per the paper.
+    """
+    ucb = linucb.ucb_scores(state.bandit, x, cfg.alpha)        # (K,) or (B,K)
+    c_hat, beta = cost_estimates(state, cfg)
+    lower = jnp.maximum(c_hat - beta, cfg.eps)
+    score = ucb / lower
+    feasible = c_hat <= remaining_budget
+    return score, feasible
+
+
+def select(state: BudgetState, x: jax.Array, cfg: BudgetConfig,
+           remaining_budget: jax.Array) -> jax.Array:
+    """Highest score among budget-feasible arms; -1 if none feasible.
+
+    Cold start: an arm with no cost observations has upper bound C_max,
+    which would deadlock any budget < C_max before a single pull. Unpulled
+    arms are therefore treated as feasible (forced initial exploration) —
+    the conservative upper-bound test applies from the first observation
+    on. The paper's analysis implicitly assumes each arm is tried once.
+    """
+    score, feasible = scores(state, x, cfg, remaining_budget)
+    feasible = feasible | (state.cost_count == 0)
+    neg_inf = jnp.array(-jnp.inf, score.dtype)
+    masked = jnp.where(feasible, score, neg_inf)
+    arm = jnp.argmax(masked, axis=-1)
+    any_feasible = jnp.any(feasible, axis=-1)
+    return jnp.where(any_feasible, arm, -1)
+
+
+def update(state: BudgetState, arm: jax.Array, x: jax.Array,
+           reward: jax.Array, cost: jax.Array) -> BudgetState:
+    """Reward update (Sherman–Morrison) + cost statistics update."""
+    k = cfg_arms = state.cost_sum.shape[0]
+    onehot = jax.nn.one_hot(arm, k, dtype=state.cost_sum.dtype)
+    return BudgetState(
+        bandit=linucb.update(state.bandit, arm, x, reward),
+        cost_sum=state.cost_sum + onehot * cost,
+        cost_count=state.cost_count + onehot,
+    )
+
+
+def theorem2_bound(cfg: BudgetConfig, t: int, horizon: int, s_norm: float,
+                   l_norm: float, mu: jax.Array) -> float:
+    """Theorem 2: Õ(SL√(KdTH) + Σ_k C_max/μ_k² · √(T log(TK/δ)))."""
+    k, d = cfg.num_arms, cfg.dim
+    reward_term = s_norm * l_norm * jnp.sqrt(k * d * t * horizon)
+    cost_term = jnp.sum(cfg.c_max / jnp.asarray(mu) ** 2) * jnp.sqrt(
+        t * jnp.log(t * k / cfg.delta))
+    return float(reward_term + cost_term)

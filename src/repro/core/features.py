@@ -1,0 +1,37 @@
+"""Context featurization.
+
+The paper embeds queries with a sentence transformer into 384-d vectors. No
+embedding model ships in this environment, so we provide a deterministic
+hashing featurizer with the same output contract: unit-norm 384-d vectors
+that are stable across runs. The bandit layer only ever sees these vectors,
+so swapping in a real encoder is a one-line change at the call site.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Sequence
+
+import numpy as np
+
+DIM = 384
+
+
+def _token_seed(token: str) -> int:
+    return int.from_bytes(hashlib.sha256(token.encode()).digest()[:8], "little")
+
+
+def embed_text(text: str, dim: int = DIM) -> np.ndarray:
+    """Deterministic bag-of-hashed-tokens embedding, unit norm, non-negative
+    mean component so linear satisfaction scores land in a sane range."""
+    vec = np.zeros(dim, np.float32)
+    for tok in text.lower().split():
+        rng = np.random.default_rng(_token_seed(tok))
+        vec += rng.standard_normal(dim).astype(np.float32)
+    n = np.linalg.norm(vec)
+    if n > 0:
+        vec /= n
+    return vec
+
+
+def embed_batch(texts: Sequence[str], dim: int = DIM) -> np.ndarray:
+    return np.stack([embed_text(t, dim) for t in texts])

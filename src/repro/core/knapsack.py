@@ -1,0 +1,154 @@
+"""Positionally-aware knapsack heuristic (paper Algorithm 2).
+
+Each step solves a 0-1 knapsack over the not-yet-tried arms with
+values = UCB reward estimates and weights = empirical cost estimates, then
+commits the **highest-UCB arm inside the knapsack solution** first. This
+front-loads strong-but-affordable models, targeting positional utility
+(users value early correct answers).
+
+The knapsack DP is implemented in JAX with a fixed budget discretization so
+the whole planner jits; a numpy reference (`knapsack_01_ref`) backs the
+property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import budget as budget_mod
+from repro.core import linucb
+
+BUDGET_BINS = 256  # discretization of the budget axis in the DP
+
+
+@dataclasses.dataclass(frozen=True)
+class KnapsackConfig:
+    num_arms: int
+    dim: int = 384
+    alpha: float = 0.675
+    lam: float = 0.45
+    horizon_t: int = 10_000
+    delta: float = 0.05
+    eps: float = 1e-7
+    c_max: float = 1.0
+    dtype: jnp.dtype = jnp.float32
+
+    def budget(self) -> budget_mod.BudgetConfig:
+        return budget_mod.BudgetConfig(
+            num_arms=self.num_arms, dim=self.dim, alpha=self.alpha,
+            lam=self.lam, horizon_t=self.horizon_t, delta=self.delta,
+            eps=self.eps, c_max=self.c_max, dtype=self.dtype)
+
+
+# State is shared with the budget-aware variant: LinUCB stats + cost stats.
+KnapsackState = budget_mod.BudgetState
+init = budget_mod.init
+update = budget_mod.update
+
+
+def knapsack_01(values: jax.Array, weights: jax.Array, capacity: jax.Array,
+                mask: jax.Array, w_max: jax.Array) -> jax.Array:
+    """0-1 knapsack selection mask via DP over a discretized budget axis.
+
+    values, weights: (K,) float. capacity: scalar. mask: (K,) bool — arms
+    allowed to participate. w_max: scalar used to scale weights onto the
+    integer grid (pass the max representable weight, e.g. the budget).
+    Returns (K,) bool take/leave mask of an optimal solution.
+
+    DP over arms with ``lax.scan``; each row keeps the best value per budget
+    bin plus the take-decision bitmask (K ≤ 32 arms packed in an int32).
+    """
+    k = values.shape[0]
+    scale = (BUDGET_BINS - 1) / jnp.maximum(w_max, 1e-12)
+    w_int = jnp.ceil(weights * scale).astype(jnp.int32)        # conservative
+    w_int = jnp.maximum(w_int, 0)
+    cap_int = jnp.floor(capacity * scale).astype(jnp.int32)
+    cap_int = jnp.clip(cap_int, 0, BUDGET_BINS - 1)
+
+    vals = jnp.where(mask, jnp.maximum(values, 0.0), -1.0)
+
+    bins = jnp.arange(BUDGET_BINS)
+
+    def scan_arm(carry, inp):
+        best, take_bits = carry            # (BINS,), (BINS,) int32 bitmask
+        idx, v, w = inp
+        usable = (v >= 0.0)
+        shifted = bins - w
+        prev_ok = (shifted >= 0) & usable
+        src = jnp.clip(shifted, 0, BUDGET_BINS - 1)
+        cand_val = jnp.where(prev_ok, best[src] + v, -jnp.inf)
+        take = cand_val > best
+        new_best = jnp.where(take, cand_val, best)
+        new_bits = jnp.where(take, take_bits[src] | (1 << idx), take_bits)
+        return (new_best, new_bits), None
+
+    best0 = jnp.zeros((BUDGET_BINS,), values.dtype)
+    bits0 = jnp.zeros((BUDGET_BINS,), jnp.int32)
+    (best, bits), _ = jax.lax.scan(
+        scan_arm, (best0, bits0),
+        (jnp.arange(k, dtype=jnp.int32), vals, w_int))
+
+    chosen_bits = bits[cap_int]
+    return ((chosen_bits >> jnp.arange(k)) & 1).astype(bool)
+
+
+def knapsack_01_ref(values: np.ndarray, weights_int: np.ndarray,
+                    capacity_int: int) -> np.ndarray:
+    """Exact integer-weight 0-1 knapsack (numpy), oracle for tests."""
+    k = len(values)
+    best = np.zeros(capacity_int + 1)
+    take = np.zeros((k, capacity_int + 1), bool)
+    for i in range(k):
+        if values[i] < 0:
+            continue
+        new_best = best.copy()
+        w = int(weights_int[i])
+        for c in range(capacity_int, w - 1, -1):
+            cand = best[c - w] + values[i]
+            if cand > new_best[c]:
+                new_best[c] = cand
+                take[i, c] = True
+        best = new_best
+    sel = np.zeros(k, bool)
+    c = capacity_int
+    for i in range(k - 1, -1, -1):
+        if take[i, c]:
+            sel[i] = True
+            c -= int(weights_int[i])
+    return sel
+
+
+def plan(state: KnapsackState, x: jax.Array, cfg: KnapsackConfig,
+         total_budget: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 2: build the ordered candidate list for one query.
+
+    Returns ``(order, valid)`` where ``order`` is (K,) arm indices in the
+    order they should be tried and ``valid`` marks which entries are real
+    (the list may be shorter than K when the budget runs out).
+    """
+    bcfg = cfg.budget()
+    ucb = linucb.ucb_scores(state.bandit, x, cfg.alpha)        # (K,)
+    c_hat, beta = budget_mod.cost_estimates(state, bcfg)
+    w = jnp.maximum(c_hat, cfg.eps)                            # knapsack weights
+
+    def body(carry, _):
+        b, used = carry                                        # budget, (K,) bool
+        sel = knapsack_01(ucb, w, b, ~used, total_budget)
+        sel = sel & ~used
+        score = jnp.where(sel, ucb, -jnp.inf)
+        k_next = jnp.argmax(score)
+        ok = jnp.any(sel) & (w[k_next] <= b)
+        b_new = jnp.where(ok, b - w[k_next], b)
+        used_new = used | (jax.nn.one_hot(k_next, cfg.num_arms) > 0) & ok
+        entry = jnp.where(ok, k_next, -1)
+        return (b_new, used_new), entry
+
+    (_, _), order = jax.lax.scan(
+        body, (total_budget, jnp.zeros((cfg.num_arms,), bool)),
+        None, length=cfg.num_arms)
+    valid = order >= 0
+    return order, valid

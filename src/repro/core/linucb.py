@@ -1,0 +1,135 @@
+"""Greedy LinUCB for multi-LLM selection (paper Algorithm 1).
+
+Maintains, for each arm (LLM) ``k``, a ridge-regression model
+``(A_k, b_k)`` with ``A_k = λI + Σ x xᵀ`` and ``b_k = Σ r x``. We store
+``A_k⁻¹`` directly and update it with the Sherman–Morrison rank-1 identity,
+so a posterior update costs O(d²) instead of the O(d³) solve in the
+paper's pseudocode — an exact, not approximate, reformulation.
+
+All state is a pytree of arrays and every transition is a pure function, so
+the whole bandit can live inside ``jax.jit``/``lax.scan`` loops and be
+dispatched on TPU alongside the models it routes to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LinUCBConfig:
+    """Hyper-parameters of Greedy LinUCB (paper §4, Experiment §6)."""
+
+    num_arms: int
+    dim: int = 384
+    alpha: float = 0.675      # exploration parameter (paper's value)
+    lam: float = 0.45         # ridge regularization λ (paper's value)
+    dtype: jnp.dtype = jnp.float32
+
+
+class LinUCBState(NamedTuple):
+    """Per-arm sufficient statistics. Shapes: (K, d, d), (K, d), (K, d), (K,)."""
+
+    a_inv: jax.Array   # A_k⁻¹
+    b: jax.Array       # Σ r·x per arm
+    theta: jax.Array   # A_k⁻¹ b_k (cached ridge estimate)
+    counts: jax.Array  # number of pulls per arm
+
+
+def init(cfg: LinUCBConfig) -> LinUCBState:
+    k, d = cfg.num_arms, cfg.dim
+    eye = jnp.eye(d, dtype=cfg.dtype) / cfg.lam
+    return LinUCBState(
+        a_inv=jnp.broadcast_to(eye, (k, d, d)).copy(),
+        b=jnp.zeros((k, d), cfg.dtype),
+        theta=jnp.zeros((k, d), cfg.dtype),
+        counts=jnp.zeros((k,), jnp.int32),
+    )
+
+
+def ucb_scores(state: LinUCBState, x: jax.Array, alpha: float) -> jax.Array:
+    """LinUCB index for every arm: ``<x,θ̂_k> + α·sqrt(xᵀ A_k⁻¹ x)``.
+
+    ``x`` may be ``(d,)`` for one context or ``(B, d)`` for a batch; the
+    return is ``(K,)`` or ``(B, K)`` respectively.
+    """
+    squeezed = x.ndim == 1
+    xb = jnp.atleast_2d(x)                                    # (B, d)
+    mean = jnp.einsum("bd,kd->bk", xb, state.theta)
+    # quadratic form x A⁻¹ x, batched over arms and contexts
+    ax = jnp.einsum("kde,be->bkd", state.a_inv, xb)           # (B, K, d)
+    quad = jnp.einsum("bkd,bd->bk", ax, xb)
+    scores = mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
+    return scores[0] if squeezed else scores
+
+
+def confidence_width(state: LinUCBState, x: jax.Array) -> jax.Array:
+    """``sqrt(xᵀ A_k⁻¹ x)`` per arm (the width α multiplies)."""
+    xb = jnp.atleast_2d(x)
+    ax = jnp.einsum("kde,be->bkd", state.a_inv, xb)
+    quad = jnp.einsum("bkd,bd->bk", ax, xb)
+    w = jnp.sqrt(jnp.maximum(quad, 0.0))
+    return w[0] if x.ndim == 1 else w
+
+
+def select(state: LinUCBState, x: jax.Array, cfg: LinUCBConfig) -> jax.Array:
+    """Greedy argmax over the UCB index (paper Alg. 1 line 9)."""
+    return jnp.argmax(ucb_scores(state, x, cfg.alpha), axis=-1)
+
+
+def update(state: LinUCBState, arm: jax.Array, x: jax.Array,
+           reward: jax.Array) -> LinUCBState:
+    """Rank-1 posterior update of the selected arm (Alg. 1 line 11).
+
+    Sherman–Morrison:  (A + xxᵀ)⁻¹ = A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x).
+    Implemented with a one-hot mask over arms so it stays jit-able with a
+    traced ``arm`` index.
+    """
+    k = state.b.shape[0]
+    onehot = jax.nn.one_hot(arm, k, dtype=state.b.dtype)       # (K,)
+    a_inv_k = state.a_inv[arm]                                 # (d, d)
+    ax = a_inv_k @ x                                           # (d,)
+    denom = 1.0 + x @ ax
+    delta = jnp.outer(ax, ax) / denom                          # (d, d)
+    a_inv = state.a_inv - onehot[:, None, None] * delta[None]
+    b = state.b + onehot[:, None] * (reward * x)[None]
+    theta_k = a_inv[arm] @ b[arm]
+    theta = jnp.where(onehot[:, None] > 0, theta_k[None], state.theta)
+    counts = state.counts + onehot.astype(jnp.int32)
+    return LinUCBState(a_inv=a_inv, b=b, theta=theta, counts=counts)
+
+
+def batch_update(state: LinUCBState, arms: jax.Array, xs: jax.Array,
+                 rewards: jax.Array) -> LinUCBState:
+    """Fold a batch of (arm, x, r) observations into the state sequentially.
+
+    Order matters only up to floating point; Sherman–Morrison applied in any
+    order yields the same ``A_k`` so results are deterministic given the batch.
+    """
+    def body(s, inp):
+        a, x, r = inp
+        return update(s, a, x, r), None
+
+    state, _ = jax.lax.scan(body, state, (arms, xs, rewards))
+    return state
+
+
+def dense_a(state: LinUCBState, cfg: LinUCBConfig) -> jax.Array:
+    """Recover A_k (for tests / theory checks): inverse of the stored A_k⁻¹."""
+    return jnp.linalg.inv(state.a_inv)
+
+
+def theorem1_bound(cfg: LinUCBConfig, t: int, horizon: int, s_norm: float,
+                   l_norm: float, delta: float = 0.05) -> float:
+    """Evaluate the Theorem 1 regret bound O(√(KdTH)·(SL+√λS)·log(KTL²/λδ)).
+
+    Used by tests/benchmarks to check the measured regret curve sits below a
+    constant multiple of the bound and grows sublinearly.
+    """
+    k, d = cfg.num_arms, cfg.dim
+    log_term = jnp.log(k * t * l_norm ** 2 / (cfg.lam * delta) + 1.0)
+    return float(jnp.sqrt(k * d * t * horizon)
+                 * (s_norm * l_norm + jnp.sqrt(cfg.lam) * s_norm) * log_term)

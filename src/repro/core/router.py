@@ -1,0 +1,431 @@
+"""Unified routing policies + the multi-step interaction driver.
+
+``run_pool_experiment`` plays a policy against :class:`CalibratedPoolEnv`
+for T rounds of ≤H steps and records everything the paper's tables need:
+per-step rewards/costs/arms, success position, myopic regret. The per-round
+transition is one jitted function (policy state pytrees thread through a
+``lax.scan`` over steps), so thousands of rounds run in seconds on CPU.
+
+``run_synthetic_experiment`` does the same against the exactly-linear
+environment and is what the Theorem 1/2 validation tests consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, budget as budget_mod, env as env_mod
+from repro.core import knapsack as knapsack_mod
+from repro.core import linucb
+
+POLICIES = ("greedy_linucb", "budget_linucb", "knapsack", "metallm",
+            "mixllm", "voting", "random")
+
+
+class RoundLog(NamedTuple):
+    arms: jax.Array      # (H,) int, -1 = step not taken
+    rewards: jax.Array   # (H,)
+    costs: jax.Array     # (H,)
+    regrets: jax.Array   # (H,) myopic regret of executed steps, 0 otherwise
+    budget: jax.Array    # () the round budget (inf if unconstrained)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    arms: np.ndarray       # (T, H)
+    rewards: np.ndarray    # (T, H)
+    costs: np.ndarray      # (T, H)
+    regrets: np.ndarray    # (T, H)
+    budgets: np.ndarray    # (T,)
+    datasets: np.ndarray   # (T,)
+
+    @property
+    def executed(self) -> np.ndarray:
+        return self.arms >= 0
+
+    @property
+    def success_step(self) -> np.ndarray:
+        """1-based step of first success, 0 if the round never succeeded."""
+        hit = self.rewards > 0.5
+        first = np.argmax(hit, axis=1) + 1
+        return np.where(hit.any(axis=1), first, 0)
+
+    @property
+    def accuracy(self) -> float:
+        return float((self.success_step > 0).mean())
+
+    def accuracy_by_position(self) -> np.ndarray:
+        """Fraction of rounds solved exactly at step h (paper Table 3)."""
+        h = self.rewards.shape[1]
+        ss = self.success_step
+        return np.array([(ss == i + 1).mean() for i in range(h)])
+
+    @property
+    def avg_steps(self) -> float:
+        return float(self.executed.sum(axis=1).mean())
+
+    @property
+    def cost_per_round(self) -> np.ndarray:
+        return self.costs.sum(axis=1)
+
+    @property
+    def cumulative_regret(self) -> np.ndarray:
+        return np.cumsum(self.regrets.sum(axis=1))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "accuracy": self.accuracy,
+            "avg_steps": self.avg_steps,
+            "avg_cost": float(self.cost_per_round.mean()),
+            "first_step_accuracy": float(self.accuracy_by_position()[0]),
+            "total_regret": float(self.cumulative_regret[-1]),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Policy adapters: uniform (init / plan / select / update) API over pytrees
+# ---------------------------------------------------------------------------
+
+class PolicyAdapter(NamedTuple):
+    name: str
+    multi_step: bool
+    init: Callable[[], Any]
+    plan: Callable[[Any, jax.Array, jax.Array], Any]
+    select: Callable[[Any, Any, jax.Array, jax.Array, jax.Array], jax.Array]
+    update: Callable[[Any, Any, jax.Array, jax.Array, jax.Array, jax.Array],
+                     Any]
+
+
+def make_policy(name: str, num_arms: int, dim: int,
+                alpha: float = 0.675, lam: float = 0.45,
+                horizon_t: int = 10_000, c_max: float = 1.0,
+                seed: int = 0) -> PolicyAdapter:
+    """Build a policy adapter by name ('fixed:<k>' selects one arm forever)."""
+    no_plan = lambda state, x, b: jnp.int32(0)
+
+    if name == "greedy_linucb":
+        cfg = linucb.LinUCBConfig(num_arms, dim, alpha, lam)
+        return PolicyAdapter(
+            name, True,
+            init=lambda: linucb.init(cfg),
+            plan=no_plan,
+            select=lambda s, p, x, h, rem: linucb.select(s, x, cfg),
+            update=lambda s, p, a, x, r, c: linucb.update(s, a, x, r),
+        )
+
+    if name == "budget_linucb":
+        cfg = budget_mod.BudgetConfig(num_arms, dim, alpha, lam,
+                                      horizon_t=horizon_t, c_max=c_max)
+        return PolicyAdapter(
+            name, True,
+            init=lambda: budget_mod.init(cfg),
+            plan=no_plan,
+            select=lambda s, p, x, h, rem: budget_mod.select(s, x, cfg, rem),
+            update=lambda s, p, a, x, r, c: budget_mod.update(s, a, x, r, c),
+        )
+
+    if name == "knapsack":
+        cfg = knapsack_mod.KnapsackConfig(num_arms, dim, alpha, lam,
+                                          horizon_t=horizon_t, c_max=c_max)
+
+        def plan(state, x, b):
+            order, valid = knapsack_mod.plan(state, x, cfg, b)
+            return jnp.where(valid, order, -1)
+
+        return PolicyAdapter(
+            name, True,
+            init=lambda: knapsack_mod.init(cfg.budget()),
+            plan=plan,
+            select=lambda s, p, x, h, rem: p[h],
+            update=lambda s, p, a, x, r, c: knapsack_mod.update(s, a, x, r, c),
+        )
+
+    if name == "metallm":
+        cfg = baselines.MetaLLMConfig(num_arms, dim, alpha, lam)
+        return PolicyAdapter(
+            name, False,
+            init=lambda: baselines.metallm_init(cfg),
+            plan=no_plan,
+            select=lambda s, p, x, h, rem: baselines.metallm_select(s, x, cfg),
+            update=lambda s, p, a, x, r, c: baselines.metallm_update(
+                s, a, x, r, c, cfg),
+        )
+
+    if name == "mixllm":
+        cfg = baselines.MixLLMConfig(num_arms, dim, alpha, lam)
+        return PolicyAdapter(
+            name, False,
+            init=lambda: baselines.mixllm_init(cfg),
+            plan=no_plan,
+            select=lambda s, p, x, h, rem: baselines.mixllm_select(s, x, cfg),
+            update=lambda s, p, a, x, r, c: baselines.mixllm_update(
+                s, a, x, r, c, cfg),
+        )
+
+    if name == "random":
+        # single-step, like the paper's Random baseline (Table 1: ~40%,
+        # i.e. the average single-model accuracy — one routed call/query)
+        def rand_select(s, p, x, h, rem):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), s)
+            key = jax.random.fold_in(key, h)
+            return jax.random.randint(key, (), 0, num_arms)
+
+        return PolicyAdapter(
+            name, False,
+            init=lambda: jnp.int32(0),   # state = round counter
+            plan=no_plan,
+            select=rand_select,
+            update=lambda s, p, a, x, r, c: s + 1,
+        )
+
+    if name.startswith("fixed:"):
+        k = int(name.split(":")[1])
+        return PolicyAdapter(
+            name, False,
+            init=lambda: jnp.int32(0),
+            plan=no_plan,
+            select=lambda s, p, x, h, rem: jnp.int32(k),
+            update=lambda s, p, a, x, r, c: s,
+        )
+
+    raise ValueError(f"unknown policy {name!r} (choose from {POLICIES})")
+
+
+# ---------------------------------------------------------------------------
+# Pool-environment driver
+# ---------------------------------------------------------------------------
+
+def _pool_round(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
+                params: env_mod.PoolParams, state: Any, key: jax.Array,
+                budget_table: jax.Array, budget_jitter: float,
+                dataset: Optional[jax.Array]) -> Tuple[Any, RoundLog, jax.Array]:
+    """One user round: ≤H adaptive steps. Pure & jit-able.
+
+    ``budget_table``: (num_datasets,) per-dataset base budgets (paper
+    protocol: greedy LinUCB's avg per-query cost ±5%); +inf disables."""
+    kq, kb, kloop = jax.random.split(key, 3)
+    q0 = env.reset(params, kq, dataset)
+    round_budget = budget_table[q0.dataset] * (
+        1.0 + budget_jitter * jax.random.uniform(kb, minval=-1.0,
+                                                 maxval=1.0))
+    plan = policy.plan(state, q0.x, round_budget)
+    h_max = env.horizon if policy.multi_step else 1
+
+    def step_fn(carry, h):
+        state, q, remaining, done, kh = carry
+        kh, ks = jax.random.split(kh)
+        arm = policy.select(state, plan, q.x, h, remaining)
+        arm = jnp.asarray(arm, jnp.int32)
+        executed = (~done) & (arm >= 0)
+        arm_safe = jnp.clip(arm, 0, env.num_arms - 1)
+
+        r, c, q_next = env.step(params, ks, q, arm_safe)
+        # myopic regret vs the best arm for the *current* context
+        probs = env.success_probs(params, q)
+        reg = jnp.max(probs) - probs[arm_safe]
+
+        new_state = policy.update(state, plan, arm_safe, q.x, r, c)
+        state = jax.tree.map(
+            lambda new, old: jnp.where(executed, new, old), new_state, state)
+        q = jax.tree.map(lambda new, old: jnp.where(executed, new, old),
+                         q_next, q)
+        remaining = jnp.where(executed, remaining - c, remaining)
+        done = done | (executed & (r > 0.5)) | (~executed)
+
+        log = (jnp.where(executed, arm_safe, -1),
+               jnp.where(executed, r, 0.0),
+               jnp.where(executed, c, 0.0),
+               jnp.where(executed, reg, 0.0))
+        return (state, q, remaining, done, kh), log
+
+    init = (state, q0, round_budget, jnp.asarray(False), kloop)
+    (state, _, _, _, _), (arms, rewards, costs, regrets) = jax.lax.scan(
+        step_fn, init, jnp.arange(h_max))
+
+    pad = env.horizon - h_max
+    if pad:
+        arms = jnp.concatenate([arms, -jnp.ones((pad,), arms.dtype)])
+        rewards = jnp.concatenate([rewards, jnp.zeros((pad,))])
+        costs = jnp.concatenate([costs, jnp.zeros((pad,))])
+        regrets = jnp.concatenate([regrets, jnp.zeros((pad,))])
+    return state, RoundLog(arms, rewards, costs, regrets, round_budget), \
+        q0.dataset
+
+
+def _voting_round(env: env_mod.CalibratedPoolEnv, params: env_mod.PoolParams,
+                  key: jax.Array, dataset: Optional[jax.Array]):
+    """Majority voting: query all arms once; correct if ≥2 arms are correct."""
+    kq, ks = jax.random.split(key)
+    q = env.reset(params, kq, dataset)
+    probs = env.success_probs(params, q)
+    hits = jax.random.bernoulli(ks, probs)
+    reward = (hits.sum() >= 2).astype(jnp.float32)
+    cost = params.cost[:, q.dataset].sum()
+    reg = jnp.max(probs) - reward  # vs best single arm, per paper's framing
+    return reward, cost, jnp.maximum(reg, 0.0), q.dataset
+
+
+def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
+                        seed: int = 0,
+                        env: Optional[env_mod.CalibratedPoolEnv] = None,
+                        base_budget=1e-3,
+                        budget_jitter: float = 0.05,
+                        dataset: Optional[int] = None,
+                        alpha: float = 0.675, lam: float = 0.45
+                        ) -> ExperimentResult:
+    """Play ``policy_name`` for ``rounds`` user queries; returns full logs.
+
+    ``base_budget`` mirrors the paper's protocol: each round's budget is
+    the base ±5% (uniform). A scalar applies to all datasets; an array of
+    per-dataset budgets implements the paper's "greedy LinUCB's average
+    cost per query" reference. Unbudgeted policies get +inf.
+    """
+    env = env or env_mod.CalibratedPoolEnv()
+    key = jax.random.PRNGKey(seed)
+    kenv, kround = jax.random.split(key)
+    params = env.make(kenv)
+
+    budgeted = policy_name in ("budget_linucb", "knapsack")
+    ds_arg = None if dataset is None else jnp.int32(dataset)
+
+    T, H = rounds, env.horizon
+    arms = np.full((T, H), -1, np.int32)
+    rewards = np.zeros((T, H), np.float32)
+    costs = np.zeros((T, H), np.float32)
+    regrets = np.zeros((T, H), np.float32)
+    budgets = np.zeros((T,), np.float32)
+    datasets = np.zeros((T,), np.int32)
+
+    if policy_name == "voting":
+        vr = jax.jit(functools.partial(_voting_round, env, params,
+                                       dataset=ds_arg))
+        for t in range(T):
+            r, c, reg, ds = vr(jax.random.fold_in(kround, t))
+            rewards[t, 0], costs[t, 0] = float(r), float(c)
+            regrets[t, 0], datasets[t] = float(reg), int(ds)
+            arms[t, 0] = env.num_arms  # sentinel: "all arms"
+            budgets[t] = np.inf
+        return ExperimentResult(arms, rewards, costs, regrets, budgets,
+                                datasets)
+
+    policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
+                         lam=lam, horizon_t=rounds * env.horizon,
+                         c_max=float(env_mod.TABLE2_COST.max()) * 4.0,
+                         seed=seed)
+    state = policy.init()
+    round_fn = jax.jit(functools.partial(
+        _pool_round, policy, env, params, budget_jitter=budget_jitter,
+        dataset=ds_arg))
+
+    if budgeted:
+        table = np.broadcast_to(np.asarray(base_budget, np.float32),
+                                (env.num_datasets,)).copy()
+    else:
+        table = np.full((env.num_datasets,), np.inf, np.float32)
+    table_j = jnp.asarray(table)
+
+    for t in range(T):
+        state, log, ds = round_fn(state=state,
+                                  key=jax.random.fold_in(kround, t),
+                                  budget_table=table_j)
+        arms[t] = np.asarray(log.arms)
+        rewards[t] = np.asarray(log.rewards)
+        costs[t] = np.asarray(log.costs)
+        regrets[t] = np.asarray(log.regrets)
+        budgets[t] = float(log.budget)
+        datasets[t] = int(ds)
+    return ExperimentResult(arms, rewards, costs, regrets, budgets, datasets)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic-environment driver (Theorem 1 / 2 validation)
+# ---------------------------------------------------------------------------
+
+def run_synthetic_experiment(policy_name: str, *, rounds: int = 2000,
+                             num_arms: int = 6, dim: int = 16,
+                             horizon: int = 4, seed: int = 0,
+                             noise_sd: float = 0.1,
+                             alpha: float = 0.675, lam: float = 0.45,
+                             base_budget: float = 2.0) -> Dict[str, np.ndarray]:
+    """LinUCB vs the exactly-linear env; returns cumulative regret curves."""
+    env = env_mod.SyntheticLinearEnv(num_arms=num_arms, dim=dim,
+                                     noise_sd=noise_sd, horizon=horizon)
+    key = jax.random.PRNGKey(seed)
+    kenv, kround = jax.random.split(key)
+    params = env.make(kenv)
+
+    budgeted = policy_name == "budget_linucb"
+    if budgeted:
+        cfg = budget_mod.BudgetConfig(num_arms, dim, alpha, lam,
+                                      horizon_t=rounds * horizon, c_max=2.0)
+        state = budget_mod.init(cfg)
+    else:
+        cfg = linucb.LinUCBConfig(num_arms, dim, alpha, lam)
+        state = linucb.init(cfg)
+
+    def round_fn(state, key, budget):
+        kx, kloop = jax.random.split(key)
+        x0 = env.reset(params, kx)
+
+        def step_fn(carry, h):
+            state, x, remaining, done, kh = carry
+            kh, kf, kc, kg = jax.random.split(kh, 4)
+            if budgeted:
+                arm = budget_mod.select(state, x, cfg, remaining)
+            else:
+                arm = linucb.select(state, x, cfg)
+            arm = jnp.asarray(arm, jnp.int32)
+            executed = (~done) & (arm >= 0)
+            arm_safe = jnp.clip(arm, 0, num_arms - 1)
+
+            r = env.feedback(params, kf, x, arm_safe)
+            c = env.cost(params, kc, arm_safe)
+            means = env.mean_reward(params, x)
+            if budgeted:
+                feas = params.cost_mean <= remaining
+                ratio = jnp.where(feas, means / params.cost_mean, -jnp.inf)
+                oracle = jnp.argmax(ratio)
+                reg = means[oracle] - means[arm_safe]
+            else:
+                reg = jnp.max(means) - means[arm_safe]
+
+            if budgeted:
+                new_state = budget_mod.update(state, arm_safe, x, r, c)
+            else:
+                new_state = linucb.update(state, arm_safe, x, r)
+            state = jax.tree.map(
+                lambda n, o: jnp.where(executed, n, o), new_state, state)
+            success = r > 0.5
+            x_next = env.evolve(params, kg, x, arm_safe, r)
+            x = jnp.where(executed & ~success, x_next, x)
+            remaining = jnp.where(executed, remaining - c, remaining)
+            done = done | (executed & success) | (~executed)
+            return (state, x, remaining, done, kh), \
+                jnp.where(executed, jnp.maximum(reg, 0.0), 0.0)
+
+        init = (state, x0, jnp.float32(budget), jnp.asarray(False), kloop)
+        (state, _, _, _, _), regs = jax.lax.scan(step_fn, init,
+                                                 jnp.arange(horizon))
+        return state, regs.sum()
+
+    round_jit = jax.jit(round_fn)
+    per_round = np.zeros(rounds, np.float32)
+    for t in range(rounds):
+        state, reg = round_jit(state, jax.random.fold_in(kround, t),
+                               base_budget)
+        per_round[t] = float(reg)
+    return {"per_round_regret": per_round,
+            "cumulative_regret": np.cumsum(per_round)}
+
+
+def sublinearity_slope(cum_regret: np.ndarray, burn_in: int = 50) -> float:
+    """log-log slope of cumulative regret vs t; <1 ⇒ sublinear, 0.5 ≈ √T."""
+    t = np.arange(1, len(cum_regret) + 1)[burn_in:]
+    y = np.maximum(cum_regret[burn_in:], 1e-8)
+    coef = np.polyfit(np.log(t), np.log(y), 1)
+    return float(coef[0])

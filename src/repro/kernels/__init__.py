@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+  linucb_score     — fused batched UCB scoring (the paper's routing loop)
+  sherman_morrison — rank-1 bandit posterior update
+  flash_attention  — blocked causal/sliding-window GQA prefill attention
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
+wrappers (interpret-mode on CPU, native on TPU).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

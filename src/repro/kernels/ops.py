@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs as traced JAX ops — bit-faithful to the block algorithm);
+on a real TPU backend they compile natively. ``INTERPRET`` auto-detects,
+and can be forced via ``REPRO_PALLAS_INTERPRET=1``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import linucb_score as _ls
+from repro.kernels import sherman_morrison as _sm
+
+INTERPRET = (jax.default_backend() != "tpu"
+             or os.environ.get("REPRO_PALLAS_INTERPRET") == "1")
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def linucb_score(x, theta, a_inv, alpha: float):
+    return _ls.linucb_score(x, theta, a_inv, alpha, interpret=INTERPRET)
+
+
+@jax.jit
+def sherman_morrison(a_inv, x, mask):
+    return _sm.sherman_morrison(a_inv, x, mask, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=INTERPRET)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def linucb_score_ref(x: jax.Array, theta: jax.Array, a_inv: jax.Array,
+                     alpha: float) -> jax.Array:
+    """UCB scores. x: (B,d); theta: (K,d); a_inv: (K,d,d) → (B,K)."""
+    mean = jnp.einsum("bd,kd->bk", x, theta)
+    ax = jnp.einsum("kde,be->bkd", a_inv, x)
+    quad = jnp.einsum("bkd,bd->bk", ax, x)
+    return mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
+
+
+def sherman_morrison_ref(a_inv: jax.Array, x: jax.Array,
+                         mask: jax.Array) -> jax.Array:
+    """Rank-1 inverse update applied to masked arms.
+
+    a_inv: (K,d,d); x: (d,); mask: (K,) float (1.0 = update this arm).
+    (A + xxᵀ)⁻¹ = A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x)."""
+    ax = jnp.einsum("kde,e->kd", a_inv, x)                  # (K,d)
+    denom = 1.0 + jnp.einsum("d,kd->k", x, ax)              # (K,)
+    delta = ax[:, :, None] * ax[:, None, :] / denom[:, None, None]
+    return a_inv - mask[:, None, None] * delta
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """Full-softmax GQA attention. q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd).
+    Positions are 0..S-1 on both sides (prefill layout)."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kf) / jnp.sqrt(hd)
+    q_pos = jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    valid = jnp.ones((sq, skv), bool)
+    if causal:
+        valid &= kv_pos <= q_pos
+    if window is not None:
+        valid &= kv_pos > q_pos - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bkgqd", p, vf)
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: masked rank-1 Sherman–Morrison update of A_k⁻¹.
+
+The bandit posterior update after a routed batch: for each arm flagged in
+``mask``, fold the context rank-1 term into the stored inverse —
+
+    A⁻¹ ← A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x)
+
+Grid (K,): one program per arm, the (d,d) inverse VMEM-resident, one
+matvec + one outer product on the MXU. Masked arms write back unchanged —
+keeping the kernel shape static so the router can jit one update for any
+selection pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_inv_ref, x_ref, mask_ref, o_ref):
+    a_inv = a_inv_ref[0].astype(jnp.float32)        # (d, d)
+    x = x_ref[...].astype(jnp.float32)              # (1, d)
+    m = mask_ref[0].astype(jnp.float32)             # scalar
+    ax = (x @ a_inv)                                # (1, d)
+    denom = 1.0 + jnp.sum(ax * x)
+    delta = (ax.T @ ax) / denom                     # (d, d)
+    o_ref[0] = (a_inv - m * delta).astype(o_ref.dtype)
+
+
+def sherman_morrison(a_inv: jax.Array, x: jax.Array, mask: jax.Array, *,
+                     interpret: bool = False) -> jax.Array:
+    """a_inv: (K,d,d); x: (d,); mask: (K,) → updated (K,d,d)."""
+    k, d, _ = a_inv.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((1,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, d, d), lambda j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, d, d), a_inv.dtype),
+        interpret=interpret,
+    )(a_inv, x.reshape(1, d), mask.astype(jnp.float32))

@@ -1,0 +1,3 @@
+from repro.launch import mesh, sharding
+
+__all__ = ["mesh", "sharding"]

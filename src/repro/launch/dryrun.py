@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Test hook (still before ANY jax import): reduced meshes for CI runs.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination, build the real
+jitted step function with explicit in/out shardings, ``.lower()`` it
+against ShapeDtypeStruct inputs (no allocation), ``.compile()`` it for the
+forced-host-device production mesh, and record:
+
+  * ``compiled.memory_analysis()``  — proves the per-device footprint fits
+  * ``compiled.cost_analysis()``    — FLOPs / bytes for §Roofline
+  * collective bytes parsed from the optimized HLO (per collective kind)
+
+Shapes: train_4k → train_step; prefill_32k → prefill; decode_32k /
+long_500k → serve_step (one token, deep KV / recurrent cache). The single
+documented skip is whisper-tiny × long_500k (DESIGN.md §5).
+
+CLI:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+(--all self-spawns one subprocess per combo so a failure cannot take down
+the sweep, and each compile gets a fresh XLA.)
+"""
+import argparse
+import functools
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, get_shape
+from repro.configs.shapes import SHAPES
+from repro.launch import mesh as mesh_mod
+from repro.launch import sharding
+from repro.models import common, registry
+from repro.roofline import analysis, hlo_parse
+from repro.serving import engine
+from repro.training import optimizer, train_step
+
+
+def build_lowerable(cfg, shape, mesh):
+    """(fn, args_sds, in_shardings, out_shardings) for one combo."""
+    dcfg = registry.decode_variant(cfg, shape)
+    # Weights shard over BOTH axes in every mode. §Perf iteration 3b
+    # tested TP-only weights for dense decode (hypothesis: avoid the
+    # per-step FSDP gather) — REFUTED: XLA then partitions the QKV/MLP
+    # matmuls through larger resharded intermediates and measured memory
+    # traffic rose 5× (0.43s → 2.05s). FSDP everywhere stands.
+    # REPRO_MOE_EP=0 and REPRO_SLSTM_CHUNK=1 reproduce the other §Perf
+    # baselines.
+    fsdp = True
+    params_sds = registry.param_specs(dcfg)
+    p_sh = sharding.params_shardings(params_sds, mesh, fsdp=fsdp)
+    rep = sharding.replicated(mesh)
+
+    act_spec = sharding.activation_spec(mesh, shape, dcfg)
+    common.set_activation_sharding(
+        jax.NamedSharding(mesh, act_spec) if act_spec is not None else None)
+    # §Perf knob: REPRO_MOE_EP=0 falls back to the pure-GSPMD MoE path
+    # (the measured-against baseline in EXPERIMENTS.md §Perf iteration 2)
+    if dcfg.num_experts and os.environ.get("REPRO_MOE_EP", "1") != "0":
+        common.set_moe_mesh(mesh, sharding.data_axes_of(mesh))
+    else:
+        common.set_moe_mesh(None, None)
+
+    if shape.kind == "train":
+        opt_cfg = optimizer.OptimizerConfig()
+        fn = train_step.make_train_step(dcfg, opt_cfg, remat=True)
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        o_sh = optimizer.OptState(mu=p_sh, nu=p_sh, step=rep)
+        batch_sds = registry.input_specs(dcfg, shape)
+        b_sh = sharding.batch_shardings(batch_sds, mesh)
+        metrics_sds = jax.eval_shape(fn, params_sds, opt_sds, batch_sds)[2]
+        m_sh = jax.tree.map(lambda _: rep, metrics_sds)
+        # params + optimizer state donated (updated in place every step)
+        return (fn, (params_sds, opt_sds, batch_sds),
+                (p_sh, o_sh, b_sh), (p_sh, o_sh, m_sh), (0, 1))
+
+    if shape.kind == "prefill":
+        cache_len = min(dcfg.sliding_window or shape.seq_len,
+                        shape.seq_len)
+        fn = engine.make_prefill(dcfg, cache_len=cache_len)
+        batch_sds = registry.input_specs(dcfg, shape)
+        b_sh = sharding.batch_shardings(batch_sds, mesh)
+        out_sds = jax.eval_shape(fn, params_sds, batch_sds)
+        logits_sh = sharding.batch_shardings(out_sds[0], mesh)
+        cache_sh = sharding.cache_shardings(out_sds[1], mesh)
+        return (fn, (params_sds, batch_sds), (p_sh, b_sh),
+                (logits_sh, cache_sh), ())
+
+    # decode — the cache is DONATED (in-place KV update on real hardware;
+    # without donation every step copies the full multi-GB cache)
+    fn = engine.make_serve_step(dcfg)
+    specs = registry.input_specs(dcfg, shape)
+    cache_sds, token_sds = specs["cache"], specs["token"]
+    c_sh = sharding.cache_shardings(cache_sds, mesh)
+    t_sh = sharding.batch_shardings(token_sds, mesh)
+    out_sds = jax.eval_shape(fn, params_sds, cache_sds, token_sds)
+    logits_sh = sharding.batch_shardings(out_sds[0], mesh)
+    return (fn, (params_sds, cache_sds, token_sds), (p_sh, c_sh, t_sh),
+            (logits_sh, c_sh), (1,))
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            mesh=None, verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = registry.supports(cfg, shape)
+    result: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "mesh": mesh_kind}
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return result
+
+    if mesh is None:
+        mesh = mesh_mod.make_production_mesh(
+            multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = build_lowerable(cfg, shape, mesh)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # loop-corrected static analysis (XLA's cost_analysis counts while
+    # bodies once — useless for scan-over-layers; see roofline/hlo_parse)
+    static = hlo_parse.analyze(hlo)
+    coll = {k: float(v) for k, v in static["collectives"].items()}
+
+    # everything below is per-device (the SPMD-partitioned module)
+    flops_dev = float(static["flops"])
+    bytes_dev = float(static["bytes"])
+    coll_dev = float(sum(coll.values()))
+
+    roof = analysis.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_kind, chips=chips,
+        hlo_flops=flops_dev * chips, hlo_bytes=bytes_dev * chips,
+        coll_bytes=coll_dev * chips, coll_breakdown=coll,
+        model_flops=analysis.model_flops(cfg, shape),
+        peak_bytes_per_device=_mem_field(mem))
+
+    result.update({
+        "status": "ok",
+        "compile_s": t1 - t0,
+        "memory_analysis": _mem_dict(mem),
+        "cost_analysis_per_device": {"flops": flops_dev,
+                                     "bytes_accessed": bytes_dev},
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "collective_bytes_per_device": coll,
+        "roofline": roof.to_dict(),
+    })
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: "
+              f"compile {t1 - t0:.1f}s")
+        print(f"  memory_analysis: {_mem_dict(mem)}")
+        print(f"  cost_analysis:   flops/dev={flops_dev:.3e} "
+              f"bytes/dev={bytes_dev:.3e}")
+        print(f"  collectives/dev: {coll}")
+        print(f"  roofline: compute={roof.t_compute:.3e}s "
+              f"memory={roof.t_memory:.3e}s "
+              f"collective={roof.t_collective:.3e}s "
+              f"→ {roof.bottleneck}-bound; useful={roof.useful_ratio:.2f}")
+    return result
+
+
+def _mem_field(mem) -> Optional[float]:
+    for name in ("temp_size_in_bytes",):
+        if hasattr(mem, name):
+            return float(getattr(mem, name))
+    return None
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, name):
+            out[name] = float(getattr(mem, name))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = []
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mk in meshes:
+                    tag = f"{arch}__{shape}__{mk}".replace("/", "_")
+                    path = os.path.join(args.out, tag + ".json")
+                    if os.path.exists(path):
+                        with open(path) as f:
+                            if json.load(f).get("status") in ("ok",
+                                                              "skipped"):
+                                print(f"[dryrun] cached {tag}")
+                                continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mk,
+                           "--out", args.out]
+                    print(f"[dryrun] spawning {tag}", flush=True)
+                    r = subprocess.run(cmd, timeout=args.timeout)
+                    if r.returncode != 0:
+                        failures.append(tag)
+        print(f"[dryrun] sweep done; {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    assert args.arch and args.shape and args.mesh != "both"
+    try:
+        result = run_one(args.arch, args.shape, args.mesh)
+    except Exception:
+        result = {"arch": args.arch, "shape": args.shape,
+                  "mesh": args.mesh, "status": "error",
+                  "traceback": traceback.format_exc()}
+        print(result["traceback"], file=sys.stderr)
+    tag = f"{args.arch}__{args.shape}__{args.mesh}".replace("/", "_")
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=2)
+    return 0 if result["status"] in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

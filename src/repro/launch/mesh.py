@@ -1,0 +1,27 @@
+"""Production mesh definition (TPU v5e pods).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (jax locks the device count on first init, and
+smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The data-parallel axes of a production mesh (pod folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# TPU v5e hardware constants (per chip) for the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,120 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Dry-run / §Roofline
+tables.
+
+Run: PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_all(dirpath: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(rows: List[Dict], mesh: str) -> str:
+    out = ["| arch | shape | status | compile_s | temp/dev | args/dev | "
+           "coll/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | - |"
+                       f" - | - | - |")
+            continue
+        mem = r["memory_analysis"]
+        coll = sum(r["collective_bytes_per_device"].values())
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{r['compile_s']:.0f} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+            f"{fmt_bytes(coll)} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Dict], mesh: str = "single") -> str:
+    out = ["| arch | shape | t_compute | t_memory | t_coll | bottleneck | "
+           "useful | note |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        roof = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{roof['t_compute_s']:.2e} | {roof['t_memory_s']:.2e} | "
+            f"{roof['t_collective_s']:.2e} | {roof['bottleneck']} | "
+            f"{roof['useful_ratio']:.2f} | |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows: List[Dict]) -> List[Dict]:
+    """The three §Perf targets: worst compute-fraction among big runs,
+    most collective-bound, most paper-representative (decode serving)."""
+    ok = [r for r in rows if r["status"] == "ok" and r["mesh"] == "single"]
+
+    def frac_compute(r):
+        roof = r["roofline"]
+        tot = (roof["t_compute_s"] + roof["t_memory_s"]
+               + roof["t_collective_s"])
+        return roof["t_compute_s"] / max(tot, 1e-30)
+
+    big = [r for r in ok if r["roofline"]["t_compute_s"] > 1e-3]
+    worst = min(big, key=frac_compute) if big else None
+    coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"]
+               / max(r["roofline"]["t_compute_s"]
+                     + r["roofline"]["t_memory_s"]
+                     + r["roofline"]["t_collective_s"], 1e-30))
+    serve = [r for r in ok if r["shape"] == "decode_32k"]
+    rep = max(serve, key=lambda r: r["roofline"]["t_memory_s"]) \
+        if serve else None
+    picks = []
+    for r in (worst, coll, rep):
+        if r and r not in picks:
+            picks.append(r)
+    return picks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    print(f"{len(rows)} combos: {n_ok} ok, {n_skip} skipped, "
+          f"{len(rows) - n_ok - n_skip} failed\n")
+    for mesh in ("single", "multi"):
+        print(f"## Dry-run ({mesh} mesh)\n")
+        print(dryrun_table(rows, mesh))
+        print()
+    print("## Roofline (single-pod)\n")
+    print(roofline_table(rows))
+    print("\n## Hillclimb picks\n")
+    for r in pick_hillclimb(rows):
+        print(f"- {r['arch']} × {r['shape']}: "
+              f"{r['roofline']['bottleneck']}-bound")
+
+
+if __name__ == "__main__":
+    main()

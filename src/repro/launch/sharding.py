@@ -1,0 +1,171 @@
+"""GSPMD sharding rules for every architecture family.
+
+Strategy (per DESIGN.md §6):
+  * tensor parallelism over the ``model`` axis: attention heads / FFN
+    hidden / vocab / MoE experts shard their wide dimension;
+  * data parallelism over ``data`` (and ``pod``): the batch dimension of
+    activations; in train mode weights additionally shard their other
+    dimension over ``data`` (ZeRO/FSDP-style) so optimizer state fits;
+  * decode KV caches shard batch over DP and head_dim over ``model``
+    (head counts are often < 16, head_dim is always a multiple of 16);
+  * every rule checks divisibility and falls back to replication — the
+    whisper vocab (51865) is the one notable case.
+
+Rules are keyed on parameter NAME + rank, so they cover all families
+without per-arch tables.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# names whose FIRST dim is the sharded ("wide") contraction input
+_ROW_SHARDED = {"wo", "wd", "w_down", "w_o", "w2"}
+# MoE expert tensors: leading expert dim shards over 'model'
+_EXPERT = {"wg", "wu", "wd"}
+
+
+def _div(n: int, mesh, axis: Optional[str]) -> bool:
+    if axis is None:
+        return False
+    return n % mesh.shape[axis] == 0
+
+
+def _axis(mesh, name: str) -> Optional[str]:
+    return name if name in mesh.axis_names else None
+
+
+def param_spec(path: Tuple[str, ...], leaf, mesh, *,
+               fsdp: bool) -> P:
+    """PartitionSpec for one parameter, from its tree path + shape.
+
+    Transformer-family layer params are STACKED with a leading layer axis
+    (scan-over-layers); that axis is detected from the path (under
+    "layers" with no list index) and left unsharded.
+    """
+    name = path[-1]
+    shape = tuple(leaf.shape)
+    # stacked layer axis? list-based families have a numeric path entry
+    stacked = ("layers" in path
+               and not any(p.isdigit() for p in path))
+    eff = shape[1:] if stacked else shape
+    model = _axis(mesh, "model")
+    data = _axis(mesh, "data") if fsdp else None
+
+    def maybe(n, axis):
+        return axis if _div(n, mesh, axis) else None
+
+    def out(*dims):
+        return P(None, *dims) if stacked else P(*dims)
+
+    if name == "embed":
+        return P(maybe(shape[0], model), maybe(shape[1], data))
+
+    # MoE expert weights: experts over 'model'; the wide F dim over 'data'
+    # (matches the shard_map expert-parallel layout — wg/wu are (E,D,F),
+    # wd is (E,F,D))
+    if len(eff) == 3 and name in _EXPERT and "moe" in path:
+        f_axis = "data" if fsdp else None
+        if name == "wd":
+            return out(maybe(eff[0], model), maybe(eff[1], f_axis), None)
+        return out(maybe(eff[0], model), None, maybe(eff[2], f_axis))
+
+    if len(eff) == 2:
+        if name in _ROW_SHARDED:
+            return out(maybe(eff[0], model), maybe(eff[1], data))
+        return out(maybe(eff[0], data), maybe(eff[1], model))
+
+    # 1D / scalars: replicated (norm scales, biases, gates, Λ)
+    return P()
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def params_shardings(param_tree: Any, mesh, *, fsdp: bool) -> Any:
+    """Sharding pytree matching ``param_tree`` (arrays or SDS leaves)."""
+    def spec(path, leaf):
+        return NamedSharding(mesh,
+                             param_spec(_path_names(path), leaf, mesh,
+                                        fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(spec, param_tree)
+
+
+def batch_shardings(batch: Any, mesh) -> Any:
+    """Model inputs: batch dim over all DP axes (if divisible)."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    def spec(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        n = 1
+        for a in dp:
+            n *= mesh.shape[a]
+        first = dp if (leaf.ndim and b % n == 0) else None
+        rest = [None] * (leaf.ndim - 1) if leaf.ndim else []
+        return NamedSharding(mesh, P(first, *rest))
+    return jax.tree.map(spec, batch)
+
+
+def cache_shardings(cache: Any, mesh) -> Any:
+    """Decode caches: batch over DP where identifiable, last dim over
+    'model' when divisible.
+
+    Leaf layouts seen across families:
+      (L,B,W,KV,hd) stacked KV · (B,W,KV,hd) KV · (B,W) positions ·
+      (B,H,dk,dv)/(B,H,dk)/(B,H) mLSTM · (B,D) sLSTM/RG-LRU · scalars.
+    The batch dim is dim 0 except for stacked (L,B,…) KV where it is
+    dim 1.
+    """
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    model = mesh.shape["model"]
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims: list = [None] * leaf.ndim
+        b_dim = 1 if leaf.ndim == 5 else 0   # (L,B,…) stacked KV vs (B,…)
+        if leaf.shape[b_dim] % n_dp == 0:
+            dims[b_dim] = dp
+        if leaf.ndim >= 2 and leaf.shape[-1] % model == 0 \
+                and leaf.shape[-1] >= model:
+            dims[-1] = "model"
+        return NamedSharding(mesh, P(*dims))
+    return jax.tree.map(spec, cache)
+
+
+def activation_spec(mesh, shape: ShapeConfig, cfg: ModelConfig) -> Optional[P]:
+    """Sequence-parallel residual-stream spec for full-seq passes."""
+    if shape.kind == "decode":
+        return None
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    b_ax = dp if shape.global_batch % n_dp == 0 else None
+    s_ax = "model" if shape.seq_len % mesh.shape["model"] == 0 else None
+    return P(b_ax, s_ax, None)
+
+
+def data_axes_of(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

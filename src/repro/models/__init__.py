@@ -1,0 +1,5 @@
+from repro.models import (common, moe, registry, rglru, transformer,
+                          whisper, xlstm)
+
+__all__ = ["common", "moe", "registry", "rglru", "transformer", "whisper",
+           "xlstm"]

@@ -1,0 +1,353 @@
+"""Shared model components: norms, rotary embeddings (RoPE / M-RoPE),
+blockwise (flash-structured) GQA attention, MLPs, initializers.
+
+Attention is implemented **blockwise over the KV axis with an online
+softmax** (the flash-attention recurrence) in pure JAX: peak memory is
+O(S·block) instead of O(S²), which is what lets the 32k-prefill and
+500k-decode shapes compile within HBM on the production mesh. The Pallas
+kernel in ``repro.kernels.flash_attention`` is the TPU-native version of
+the same recurrence; this module is the portable reference path that the
+dry-run lowers (Pallas TPU kernels cannot lower on the CPU dry-run
+platform).
+
+Conventions:
+  activations  (batch, seq, d_model)
+  q/k/v        (batch, seq, heads, head_dim)
+  positions    int32 (batch, seq); kv slots with position < 0 are invalid
+               (used for unfilled / ring-buffer cache slots)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# activation-sharding hook (set by the launcher, no-op elsewhere)
+#
+# Megatron-style sequence parallelism: the residual stream (B,S,D) between
+# blocks is sharded (batch→data, seq→model) so the per-layer remat carries
+# of deep models fit HBM. Models call ``constrain`` on the residual; the
+# launcher installs the PartitionSpec via ``set_activation_sharding`` while
+# lowering under its mesh. On CPU tests the hook is None and nothing
+# happens.
+# ---------------------------------------------------------------------------
+
+_ACT_SPEC = None
+_MOE_SPEC = None
+
+
+def set_activation_sharding(spec) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    if _ACT_SPEC is not None and x.ndim == 3 and x.shape[1] > 1:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    return x
+
+
+def set_moe_mesh(mesh, dp_axes) -> None:
+    """Install the mesh for the manual expert-parallel MoE path
+    (``moe.moe_ffn_ep`` via shard_map). ``set_moe_mesh(None, None)``
+    reverts to the portable GSPMD einsum path (EXPERIMENTS.md §Perf
+    iteration 2)."""
+    global _MOE_SPEC
+    _MOE_SPEC = (mesh, dp_axes) if mesh is not None else None
+
+
+def moe_mesh():
+    return _MOE_SPEC
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init, stored (d_in, d_out)."""
+    std = scale / jnp.sqrt(d_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0,
+                                              (d_in, d_out))).astype(dtype)
+
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d_model))
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Qwen3-style per-head q/k RMSNorm: x is (..., heads, head_dim)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# positional encodings
+# ---------------------------------------------------------------------------
+
+def sinusoidal_embed(positions: jax.Array, d_model: int) -> jax.Array:
+    """Whisper-style sinusoidal embedding of arbitrary (possibly traced)
+    ``positions``; returns positions.shape + (d_model,)."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / (half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_positions(num_pos: int, d_model: int) -> jax.Array:
+    """Fixed sinusoidal table (num_pos, d_model)."""
+    return sinusoidal_embed(jnp.arange(num_pos), d_model)
+
+
+def rope_inv_freq(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               inv_freq: jax.Array) -> jax.Array:
+    """Rotate (B,S,H,hd) by per-token ``positions`` (B,S). Half-split layout."""
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL M-RoPE: ``positions`` (B,S,3) = (temporal, height, width);
+    frequency pairs are split into ``sections`` (sums to head_dim//2), each
+    section rotated by its own position stream."""
+    assert sum(sections) == inv_freq.shape[0], (sections, inv_freq.shape)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        ang = positions[..., i].astype(jnp.float32)[..., None] \
+            * inv_freq[start:start + sec]
+        parts.append(ang)
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                     # (B,S,hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (flash recurrence in pure JAX)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_pos: jax.Array, kv_pos: jax.Array,
+                        *, causal: bool = True,
+                        window: Optional[int] = None,
+                        block_kv: int = 1024) -> jax.Array:
+    """Online-softmax attention, O(S·block) memory.
+
+    q: (B,Sq,H,hd)   k,v: (B,Skv,KV,hd)   q_pos: (B,Sq)   kv_pos: (B,Skv)
+    Invalid KV slots are flagged with negative positions. GQA is handled by
+    grouping H into KV groups. Returns (B,Sq,H,hd).
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    block_kv = min(block_kv, skv)
+    pad = (-skv) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_blocks = (skv + pad) // block_kv
+
+    qf = q.astype(jnp.float32).reshape(b, sq, kv, g, hd)
+    kf = k.astype(jnp.float32).reshape(b, n_blocks, block_kv, kv, hd)
+    vf = v.astype(jnp.float32).reshape(b, n_blocks, block_kv, kv, hd)
+    pf = kv_pos.reshape(b, n_blocks, block_kv)
+
+    # checkpoint: the backward pass recomputes each KV block's scores
+    # instead of storing them — without this, scan saves every block's
+    # (b,kv,g,sq,block) p-matrix and the backward footprint is the full
+    # S×S attention matrix again.
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp                       # (b,block,kv,hd) ×2, (b,block)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kb) * scale
+        valid = pb[:, None, None, None, :] >= 0
+        if causal:
+            valid &= pb[:, None, None, None, :] <= \
+                q_pos[:, None, None, :, None]
+        if window is not None:
+            valid &= pb[:, None, None, None, :] > \
+                q_pos[:, None, None, :, None] - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vb)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0),
+         jnp.moveaxis(pf, 1, 0)))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]              # (b,kv,g,sq,hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projection + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    hd, dt = cfg.hd, cfg.activation_dtype
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.num_heads * hd, dt),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.num_kv_heads * hd, dt),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.num_kv_heads * hd, dt),
+        "wo": init_linear(ks[3], cfg.num_heads * hd, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attention_qkv(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array):
+    """Project + (m)rope; returns q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections:
+        inv = rope_inv_freq(hd, cfg.rope_theta)
+        q = apply_mrope(q, positions, inv, cfg.mrope_sections)
+        k = apply_mrope(k, positions, inv, cfg.mrope_sections)
+    elif cfg.rope_theta > 0:
+        inv = rope_inv_freq(hd, cfg.rope_theta)
+        q = apply_rope(q, positions, inv)
+        k = apply_rope(k, positions, inv)
+    return q, k, v
+
+
+def self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array, *, causal: bool = True,
+                   window: Optional[int] = None,
+                   block_kv: int = 1024) -> Tuple[jax.Array, Dict]:
+    """Full-sequence self-attention (train / prefill). Returns (out, kv)."""
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    scalar_pos = positions[..., 0] if cfg.mrope_sections else positions
+    o = blockwise_attention(q, k, v, scalar_pos, scalar_pos, causal=causal,
+                            window=window, block_kv=block_kv)
+    b, s = x.shape[:2]
+    out = o.reshape(b, s, cfg.num_heads * cfg.hd) @ p["wo"]
+    return out, {"k": k, "v": v}
+
+
+def decode_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                     positions: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, cache_pos: jax.Array,
+                     slot: jax.Array, *, window: Optional[int] = None,
+                     block_kv: int = 1024):
+    """One-token decode against a (possibly ring-buffer) KV cache.
+
+    x: (B,1,D); cache_k/v: (B,W,KV,hd); cache_pos: (B,W) int32 with -1 for
+    unfilled slots; slot: () int32 — the slot this token writes.
+    Returns (out, new_cache_k, new_cache_v, new_cache_pos).
+    """
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    scalar_pos = positions[..., 0] if cfg.mrope_sections else positions
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    cache_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache_pos, scalar_pos.astype(cache_pos.dtype), slot, axis=1)
+
+    o = blockwise_attention(q, cache_k, cache_v, scalar_pos, cache_pos,
+                            causal=True, window=window, block_kv=block_kv)
+    b = x.shape[0]
+    out = o.reshape(b, 1, cfg.num_heads * cfg.hd) @ p["wo"]
+    return out, cache_k, cache_v, cache_pos
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype,
+             kind: str = "swiglu") -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"wg": init_linear(ks[0], d_model, d_ff, dtype),
+                "wu": init_linear(ks[1], d_model, d_ff, dtype),
+                "wd": init_linear(ks[2], d_ff, d_model, dtype)}
+    return {"w1": init_linear(ks[0], d_model, d_ff, dtype),
+            "w2": init_linear(ks[1], d_ff, d_model, dtype)}
+
+
+def mlp(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if "wg" in p:
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# shared output head
+# ---------------------------------------------------------------------------
+
+def logits_from_hidden(x: jax.Array, embed: jax.Array,
+                       final_norm: jax.Array, eps: float) -> jax.Array:
+    """Tied-embedding LM head."""
+    x = rms_norm(x, final_norm, eps)
+    return jnp.einsum("bsd,vd->bsv", x, embed.astype(x.dtype))

@@ -1,0 +1,222 @@
+"""Mixture-of-Experts FFN (GShard-style capacity-based token-choice routing).
+
+Covers arctic-480b (128 experts, top-2, PLUS a dense residual MLP in
+parallel — Arctic's dense-MoE hybrid) and llama4-maverick (128 experts,
+top-1, PLUS an always-on shared expert).
+
+TPU adaptation: tokens are dispatched into a dense (E, C, D) expert buffer
+via a scatter (position-in-expert from a cumulative sum), the expert FFNs
+run as one batched einsum over the expert axis — which shards cleanly over
+the mesh 'model' axis (expert parallelism) and lets GSPMD insert the
+all-to-all-style collectives — and results scatter back with the gate
+weights. Overflowing tokens beyond the capacity ``C = ceil(T·k/E · cf)``
+are dropped (their residual path passes through), the standard
+capacity-factor contract. A Switch-style load-balance auxiliary loss is
+returned for training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    dt = cfg.activation_dtype
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    std = 1.0 / jnp.sqrt(d)
+
+    def w(k, shape):
+        return (std * jax.random.truncated_normal(k, -2.0, 2.0, shape)
+                ).astype(dt)
+
+    p = {
+        "router": common.init_linear(kr, d, e, jnp.float32),
+        "wg": w(kg, (e, d, f)),
+        "wu": w(ku, (e, d, f)),
+        "wd": (jax.random.truncated_normal(kd, -2.0, 2.0, (e, f, d))
+               / jnp.sqrt(f)).astype(dt),
+    }
+    if cfg.shared_expert:
+        p["shared"] = common.init_mlp(ks, d, f, dt)
+    return p
+
+
+def capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(num_tokens * cfg.top_k * cfg.capacity_factor
+            / cfg.num_experts) + 1
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(p: Dict, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Routed expert FFN. x: (B,S,D) → (y, aux_loss).
+
+    Two execution paths:
+      * pure-GSPMD einsum path (below) — portable, used on CPU/tests;
+      * manual expert-parallel ``shard_map`` path (``moe_ffn_ep``) when
+        the launcher installs a mesh — EXPERIMENTS.md §Perf iteration 2:
+        GSPMD turns the dispatch scatter into full-buffer all-reduces
+        (measured 13.4 TB/device on arctic train_4k), while the manual
+        path keeps dispatch local and only gathers the per-layer expert
+        weights over the data axis.
+    """
+    if common.moe_mesh() is not None:
+        mesh, dp_axes = common.moe_mesh()
+        n_dp = 1
+        for a in dp_axes:
+            n_dp *= mesh.shape[a]
+        # shard_map needs tokens divisible by the DP shards; tiny decode
+        # batches (long_500k: B=1) fall back to the portable path
+        if (x.shape[0] * x.shape[1]) % n_dp == 0 \
+                and cfg.num_experts % mesh.shape["model"] == 0:
+            return moe_ffn_ep(p, x, cfg, mesh, dp_axes)
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss: E · Σ_e fraction_e · mean_prob_e
+    onehot_top1 = jax.nn.one_hot(expert_idx[:, 0], e)
+    aux = e * jnp.sum(onehot_top1.mean(0) * probs.mean(0))
+
+    # position of each (token, choice) inside its expert's capacity buffer
+    flat_e = expert_idx.reshape(t * k)                          # (TK,)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)             # (TK, E)
+    pos = (jnp.cumsum(oh, axis=0) - 1)                          # (TK, E)
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < c
+    pos_c = jnp.clip(pos, 0, c - 1)
+
+    # dispatch: scatter token activations into the (E, C, D) buffer
+    token_of = jnp.repeat(jnp.arange(t), k)                     # (TK,)
+    buf = jnp.zeros((e, c, d), x.dtype)
+    upd = jnp.where(keep[:, None], xt[token_of], 0.0)
+    buf = buf.at[flat_e, pos_c].add(upd)
+
+    # expert FFNs as one batched einsum over the expert axis
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["wd"])                # (E, C, D)
+
+    # combine: gather each kept choice back and weight by its gate
+    gathered = out[flat_e, pos_c]                               # (TK, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = gate_vals.reshape(t * k).astype(x.dtype)
+    y = jax.ops.segment_sum(gathered * w[:, None], token_of,
+                            num_segments=t)
+    y = y.reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + common.mlp(p["shared"], x)
+    return y.astype(x.dtype), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# manual expert parallelism (shard_map)
+# ---------------------------------------------------------------------------
+
+def moe_ffn_ep(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, dp_axes
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via ``shard_map``.
+
+    Layout: tokens sharded over the DP axes (replicated over 'model');
+    experts sharded over 'model' (E_loc = E/16 per shard); expert weights
+    additionally sharded over 'data' on their wide dim and ALL-GATHERED
+    per layer inside the shard (1–2 GB) — the per-layer weight gather
+    replaces GSPMD's (E,C,D)-buffer all-reduces. Each model shard
+    dispatches only the tokens routed to ITS experts (a local gather —
+    tokens are already replicated across 'model'), runs its expert FFNs
+    locally, and the combine is one psum over 'model' (the standard TP
+    activation reduction).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    n_model = mesh.shape["model"]
+    assert e % n_model == 0
+    e_loc = e // n_model
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    t_global = b * s
+    t_loc = t_global // n_dp
+    c_loc = max(int(t_loc * k * cfg.capacity_factor / e) + 1, k)
+
+    xt = x.reshape(t_global, d)
+
+    def local_fn(xt_loc, router, wg, wu, wd):
+        # xt_loc (t_loc, d); router replicated; wg/wu (e_loc, d, f_loc);
+        # wd (e_loc, f_loc, d)
+        wg = jax.lax.all_gather(wg, dp_axes, axis=2, tiled=True)
+        wu = jax.lax.all_gather(wu, dp_axes, axis=2, tiled=True)
+        wd = jax.lax.all_gather(wd, dp_axes, axis=1, tiled=True)
+
+        logits = xt_loc.astype(jnp.float32) @ router          # (t_loc, e)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        # local load-balance contribution (Switch loss over local tokens)
+        onehot_top1 = jax.nn.one_hot(expert_idx[:, 0], e)
+        aux = e * jnp.sum(onehot_top1.mean(0) * probs.mean(0))
+        aux = jax.lax.pmean(aux, dp_axes)
+
+        # dispatch only the choices owned by this model shard
+        lo = jax.lax.axis_index("model") * e_loc
+        flat_e = expert_idx.reshape(t_loc * k) - lo
+        mine = (flat_e >= 0) & (flat_e < e_loc)
+        fe = jnp.clip(flat_e, 0, e_loc - 1)
+        oh = jax.nn.one_hot(fe, e_loc, dtype=jnp.int32) \
+            * mine[:, None].astype(jnp.int32)
+        pos = jnp.cumsum(oh, axis=0) - 1
+        pos = jnp.take_along_axis(pos, fe[:, None], axis=1)[:, 0]
+        keep = mine & (pos < c_loc)
+        pos_c = jnp.clip(pos, 0, c_loc - 1)
+
+        token_of = jnp.repeat(jnp.arange(t_loc), k)
+        buf = jnp.zeros((e_loc, c_loc, d), xt_loc.dtype)
+        upd = jnp.where(keep[:, None], xt_loc[token_of], 0.0)
+        buf = buf.at[fe, pos_c].add(upd)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+            * jnp.einsum("ecd,edf->ecf", buf, wu)
+        out = jnp.einsum("ecf,efd->ecd", h, wd)               # local
+
+        gathered = out[fe, pos_c]
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        w = gate_vals.reshape(t_loc * k).astype(xt_loc.dtype)
+        y = jax.ops.segment_sum(gathered * w[:, None], token_of,
+                                num_segments=t_loc)
+        # combine across expert shards (standard TP activation reduction)
+        y = jax.lax.psum(y, "model")
+        return y, aux
+
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    y, aux = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None), P(), P("model", None, "data"),
+                  P("model", None, "data"), P("model", "data", None)),
+        out_specs=(P(dp, None), P()),
+        check_rep=False,
+    )(xt, p["router"], p["wg"], p["wu"], p["wd"])
+
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + common.mlp(p["shared"], x)
+    return y.astype(x.dtype), aux.astype(jnp.float32)

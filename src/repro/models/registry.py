@@ -1,0 +1,188 @@
+"""Unified model API over all assigned architecture families.
+
+Every family exposes the same four entry points through this module:
+
+  init_params(cfg, key)                  → params pytree
+  train_logits(params, cfg, batch)       → (logits, aux_loss)
+  prefill(params, cfg, batch, cache_len) → (last logits, cache)
+  decode_step(params, cfg, cache, token) → (logits, cache)
+
+``batch`` is a dict: always "tokens" (B,S) int32; plus "frames" (B,F,D)
+for the audio enc-dec stub frontend and "patch_embeds" (B,P,D) for the VLM
+stub frontend. ``input_specs`` builds ShapeDtypeStruct stand-ins for any
+(arch × input-shape) pair — the dry-run lowers against these without
+allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import rglru, transformer, whisper, xlstm
+
+# Window used for the documented beyond-paper sliding-window variant that
+# makes long_500k feasible for full-attention archs (see DESIGN.md §5).
+LONG_CONTEXT_WINDOW = 8192
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+
+
+def module_for(cfg: ModelConfig):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer
+    if cfg.family == "hybrid":
+        return rglru
+    if cfg.family == "ssm":
+        return xlstm
+    if cfg.family == "encdec":
+        return whisper
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    return module_for(cfg).init_params(cfg, key)
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def train_logits(params: Dict, cfg: ModelConfig, batch: Dict[str, Any], *,
+                 remat: bool = False, block_kv: int = 1024
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence logits + auxiliary (MoE load-balance) loss."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        logits, aux = transformer.forward(
+            params, cfg, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"), remat=remat,
+            return_aux=True, block_kv=block_kv)
+        return logits, aux
+    if cfg.family == "hybrid":
+        return rglru.forward(params, cfg, batch["tokens"], remat=remat,
+                             block_kv=block_kv), zero
+    if cfg.family == "ssm":
+        return xlstm.forward(params, cfg, batch["tokens"], remat=remat,
+                             block_kv=block_kv), zero
+    return whisper.forward(params, cfg, batch["tokens"], batch["frames"],
+                           remat=remat, block_kv=block_kv), zero
+
+
+def train_hidden(params: Dict, cfg: ModelConfig, batch: Dict[str, Any], *,
+                 remat: bool = False, block_kv: int = 1024
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Normalized final hidden states (B,S,D) + aux loss — the training
+    path; the LM head is applied chunked inside the loss to avoid
+    materializing (B,S,vocab) logits."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        hidden, aux = transformer.forward(
+            params, cfg, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"), remat=remat,
+            return_aux=True, head=False, block_kv=block_kv)
+        return hidden, aux
+    if cfg.family == "hybrid":
+        return rglru.forward(params, cfg, batch["tokens"], remat=remat,
+                             head=False, block_kv=block_kv), zero
+    if cfg.family == "ssm":
+        return xlstm.forward(params, cfg, batch["tokens"], remat=remat,
+                             head=False, block_kv=block_kv), zero
+    return whisper.forward(params, cfg, batch["tokens"], batch["frames"],
+                           remat=remat, head=False, block_kv=block_kv), zero
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict[str, Any], *,
+            cache_len: Optional[int] = None, block_kv: int = 1024):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   patch_embeds=batch.get("patch_embeds"),
+                                   cache_len=cache_len, block_kv=block_kv)
+    if cfg.family == "hybrid":
+        return rglru.prefill(params, cfg, batch["tokens"],
+                             cache_len=cache_len, block_kv=block_kv)
+    if cfg.family == "ssm":
+        return xlstm.prefill(params, cfg, batch["tokens"],
+                             cache_len=cache_len, block_kv=block_kv)
+    return whisper.prefill(params, cfg, batch["tokens"], batch["frames"],
+                           cache_len=cache_len, block_kv=block_kv)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    return module_for(cfg).init_cache(cfg, batch, max_len)
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                token: jax.Array, *, block_kv: int = 1024):
+    return module_for(cfg).decode_step(params, cfg, cache, token,
+                                       block_kv=block_kv)
+
+
+# ---------------------------------------------------------------------------
+# shape plumbing for the dry-run
+# ---------------------------------------------------------------------------
+
+def decode_variant(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Config actually lowered for a decode shape: long_500k on a
+    full-attention arch switches in the sliding-window variant."""
+    if (shape.kind == "decode" and shape.seq_len > 100_000
+            and cfg.family in _TRANSFORMER_FAMILIES
+            and cfg.sliding_window is None):
+        return cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def cache_window(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV-cache length a decode shape needs under ``cfg``."""
+    if cfg.family == "ssm":
+        return 1   # constant-size recurrent state; no KV buffer
+    w = cfg.sliding_window or shape.seq_len
+    return min(w, shape.seq_len)
+
+
+def supports(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason). The single documented skip: whisper × long_500k."""
+    if cfg.family == "encdec" and shape.name == "long_500k":
+        return False, ("encoder-decoder audio model: 500k-token decode is "
+                       "not meaningful for a 448-token decoder with a "
+                       "1500-frame encoder (DESIGN.md §5)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                include_cache: bool = True) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    train/prefill → {"tokens", ["labels"], ["frames"/"patch_embeds"]}
+    decode        → {"token", "cache"}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = cfg.activation_dtype
+    sds = jax.ShapeDtypeStruct
+
+    def frontend(spec: Dict[str, Any]) -> Dict[str, Any]:
+        if cfg.family == "encdec":
+            spec["frames"] = sds((b, cfg.num_frames, cfg.d_model), act)
+        if cfg.family == "vlm":
+            spec["patch_embeds"] = sds((b, cfg.num_patches, cfg.d_model),
+                                       act)
+        return spec
+
+    if shape.kind == "train":
+        return frontend({"tokens": sds((b, s), i32),
+                         "labels": sds((b, s), i32)})
+    if shape.kind == "prefill":
+        return frontend({"tokens": sds((b, s), i32)})
+
+    # decode: one new token against a seq_len-deep cache
+    dcfg = decode_variant(cfg, shape)
+    w = cache_window(dcfg, shape)
+    cache = jax.eval_shape(
+        functools.partial(init_cache, dcfg, b, w))
+    return {"token": sds((b, 1), i32), "cache": cache}

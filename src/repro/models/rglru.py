@@ -1,0 +1,283 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern (1 attention : 2 recurrent): layer l is local attention when
+``(l + 1) % hybrid_attn_period == 0``, else an RG-LRU block. Every layer is
+followed by a gated MLP, pre-norm residuals throughout.
+
+RG-LRU cell (De et al., arXiv:2402.19427):
+    r_t = σ(W_a u_t + b_a)            recurrence gate
+    i_t = σ(W_x u_t + b_x)            input gate
+    a_t = exp(−c · softplus(Λ) · r_t) diagonal decay, c = 8
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+TPU adaptation: the linear recurrence runs as ``lax.associative_scan``
+(parallel prefix) over time for train/prefill — O(S log S) work, fully
+parallel across the sequence — and as a single carried state for decode.
+A width-4 causal depthwise conv precedes the cell, with its last 3 inputs
+carried in the decode cache. Constant-size state ⇒ native long_500k.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+LRU_C = 8.0
+
+
+def is_attention_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    return (layer_idx + 1) % cfg.hybrid_attn_period == 0
+
+
+def init_recurrent(key, cfg: ModelConfig) -> Dict:
+    dt = cfg.activation_dtype
+    d, r = cfg.d_model, cfg.rglru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_u": common.init_linear(ks[0], d, r, dt),       # recurrent branch
+        "w_y": common.init_linear(ks[1], d, r, dt),       # gate branch
+        "w_o": common.init_linear(ks[2], r, d, dt),
+        "conv": (jax.random.truncated_normal(ks[3], -2.0, 2.0,
+                                             (cfg.conv_width, r))
+                 / jnp.sqrt(cfg.conv_width)).astype(dt),
+        "w_a": common.init_linear(ks[4], r, r, jnp.float32, scale=0.1),
+        "w_x": common.init_linear(ks[5], r, r, jnp.float32, scale=0.1),
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "b_x": jnp.zeros((r,), jnp.float32),
+        # Λ init so that a ≈ 0.9…0.999 at r=0.5 (paper's stable range)
+        "lam": jnp.linspace(-4.0, -1.0, r).astype(jnp.float32),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array,
+                 history: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv, width W. u: (B,S,R), w: (W,R).
+    ``history``: (B,W-1,R) carried inputs preceding u (decode path)."""
+    width = w.shape[0]
+    if history is None:
+        history = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([history, u], axis=1)
+    out = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(width))
+    return out
+
+
+def _rglru_gates(p: Dict, u: jax.Array):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"] + p["b_x"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r          # (B,S,R) ≤ 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, gated_in
+
+
+def rglru_scan(p: Dict, u: jax.Array,
+               h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU via parallel prefix scan.
+
+    u: (B,S,R) → (h (B,S,R), h_last (B,R)). ``h0`` folds in a carried
+    state (chunked prefill)."""
+    a, b = _rglru_gates(p, u)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_step(p: Dict, u: jax.Array, h: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token RG-LRU. u: (B,1,R), h: (B,R) → (out (B,1,R), h')."""
+    a, b = _rglru_gates(p, u)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new[:, None].astype(u.dtype), h_new
+
+
+def recurrent_block(p: Dict, x: jax.Array, *,
+                    state: Optional[Dict] = None):
+    """Temporal-mixing block. Full-seq when ``state`` is None; else one-step
+    decode with ``state = {"h": (B,R), "conv": (B,W-1,R)}``."""
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_u"]
+    if state is None:
+        uc = _causal_conv(u, p["conv"])
+        h, h_last = rglru_scan(p, uc)
+        new_state = {"h": h_last,
+                     "conv": u[:, -(p["conv"].shape[0] - 1):]}
+    else:
+        uc = _causal_conv(u, p["conv"], history=state["conv"])
+        h, h_last = rglru_step(p, uc, state["h"])
+        new_state = {"h": h_last,
+                     "conv": jnp.concatenate([state["conv"], u],
+                                             axis=1)[:, 1:]}
+    out = (h * y) @ p["w_o"]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    layers = []
+    for l in range(cfg.num_layers):
+        k1, k2 = jax.random.split(keys[l])
+        dt = cfg.activation_dtype
+        layer = {
+            "mlp": common.init_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+            "mix_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if is_attention_layer(cfg, l):
+            layer["attn"] = common.init_attention(k1, cfg)
+        else:
+            layer["rec"] = init_recurrent(k1, cfg)
+        layers.append(layer)
+    return {
+        "embed": common.init_embed(keys[-1], cfg.vocab_size, cfg.d_model,
+                                   cfg.activation_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.activation_dtype),
+        "layers": layers,
+    }
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array, *,
+            remat: bool = False, return_state: bool = False,
+            head: bool = True, block_kv: int = 1024):
+    """Full-sequence forward. ``return_state`` additionally returns the
+    decode cache (recurrent states + local-attention window KV)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    states = []
+
+    for l, layer in enumerate(params["layers"]):
+        def block(x, layer=layer, l=l):
+            h = common.rms_norm(x, layer["mix_norm"], cfg.norm_eps)
+            if is_attention_layer(cfg, l):
+                o, kv = common.self_attention(
+                    layer["attn"], h, cfg, positions, causal=True,
+                    window=cfg.sliding_window, block_kv=block_kv)
+                st = kv
+            else:
+                o, st = recurrent_block(layer["rec"], h)
+            x = x + o
+            x = x + common.mlp(layer["mlp"],
+                               common.rms_norm(x, layer["mlp_norm"],
+                                               cfg.norm_eps))
+            return common.constrain(x), st
+
+        if remat and not return_state:
+            x, st = jax.checkpoint(block)(x)
+        else:
+            x, st = block(x)
+        states.append(st)
+
+    if head:
+        out = common.logits_from_hidden(x, params["embed"],
+                                        params["final_norm"], cfg.norm_eps)
+    else:
+        out = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not return_state:
+        return out
+    return out, states
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Decode cache: per attn layer a window-sized KV ring; per recurrent
+    layer the RG-LRU state + conv history. ``max_len`` is clamped to the
+    local window — the whole point of the hybrid."""
+    dt = cfg.activation_dtype
+    w = min(max_len, cfg.sliding_window or max_len)
+    r = cfg.rglru_width or cfg.d_model
+    layers = []
+    for l in range(cfg.num_layers):
+        if is_attention_layer(cfg, l):
+            layers.append({
+                "k": jnp.zeros((batch, w, cfg.num_kv_heads, cfg.hd), dt),
+                "v": jnp.zeros((batch, w, cfg.num_kv_heads, cfg.hd), dt),
+            })
+        else:
+            layers.append({
+                "h": jnp.zeros((batch, r), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dt),
+            })
+    return {"layers": layers,
+            "pos": -jnp.ones((batch, w), jnp.int32),
+            "next_pos": jnp.zeros((), jnp.int32),
+            "window": w}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, *,
+            cache_len: Optional[int] = None, block_kv: int = 1024):
+    b, s = tokens.shape
+    logits, states = forward(params, cfg, tokens, return_state=True,
+                             block_kv=block_kv)
+    w = min(cache_len or s, cfg.sliding_window or s)
+    layers = []
+    for l, st in enumerate(states):
+        if is_attention_layer(cfg, l):
+            take = min(w, s)
+            k = st["k"][:, s - take:]
+            v = st["v"][:, s - take:]
+            pad = w - take
+            if pad:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            layers.append({"k": k, "v": v})
+        else:
+            layers.append(st)
+    take = min(w, s)
+    pos = jnp.broadcast_to(jnp.arange(s - take, s, dtype=jnp.int32)[None],
+                           (b, take))
+    pos = jnp.pad(pos, ((0, 0), (0, w - take)), constant_values=-1)
+    cache = {"layers": layers, "pos": pos,
+             "next_pos": jnp.asarray(s, jnp.int32), "window": w}
+    return logits[:, -1:], cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                token: jax.Array, *, block_kv: int = 1024):
+    b = token.shape[0]
+    w = cache["window"]
+    pos_now = cache["next_pos"]
+    positions = jnp.broadcast_to(pos_now, (b, 1)).astype(jnp.int32)
+    slot = (pos_now % w).astype(jnp.int32)
+    x = params["embed"][token].astype(cfg.activation_dtype)
+
+    cache_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions, slot, axis=1)
+
+    new_layers = []
+    for l, layer in enumerate(params["layers"]):
+        h = common.rms_norm(x, layer["mix_norm"], cfg.norm_eps)
+        st = cache["layers"][l]
+        if is_attention_layer(cfg, l):
+            o, ck, cv, _ = common.decode_attention(
+                layer["attn"], h, cfg, positions, st["k"], st["v"],
+                cache_pos, slot, window=cfg.sliding_window,
+                block_kv=block_kv)
+            new_layers.append({"k": ck, "v": cv})
+        else:
+            o, new_st = recurrent_block(layer["rec"], h, state=st)
+            new_layers.append(new_st)
+        x = x + o
+        x = x + common.mlp(layer["mlp"],
+                           common.rms_norm(x, layer["mlp_norm"],
+                                           cfg.norm_eps))
+
+    logits = common.logits_from_hidden(x, params["embed"],
+                                       params["final_norm"], cfg.norm_eps)
+    return logits, {"layers": new_layers, "pos": cache_pos,
+                    "next_pos": pos_now + 1, "window": w}

@@ -1,0 +1,228 @@
+"""Dense decoder-only transformer family.
+
+Covers: starcoder2-3b, qwen1.5-0.5b, qwen1.5-4b, qwen3-1.7b (dense) and
+qwen2-vl-72b (vlm — same backbone with M-RoPE + patch-embedding splice).
+Layers are homogeneous, so parameters are stacked with a leading layer axis
+and the forward pass is one ``lax.scan`` — this keeps the HLO (and compile
+time) independent of depth, which matters for the 80-layer dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, moe
+
+
+def init_layer(key, cfg: ModelConfig) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = cfg.activation_dtype
+    layer = {
+        "attn": common.init_attention(k1, cfg),
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.num_experts > 0:
+        layer["moe"] = moe.init_moe(k2, cfg)
+        if cfg.dense_residual:   # Arctic: dense MLP in parallel with MoE
+            layer["mlp"] = common.init_mlp(k3, cfg.d_model, cfg.d_ff, dt)
+    else:
+        layer["mlp"] = common.init_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+    return layer
+
+
+def apply_ffn(cfg: ModelConfig, layer: Dict, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Dense MLP or routed MoE (+ parallel dense residual for Arctic).
+    Returns (y, aux_load_balance_loss)."""
+    if cfg.num_experts > 0:
+        y, aux = moe.moe_ffn(layer["moe"], x, cfg)
+        if cfg.dense_residual:
+            y = y + common.mlp(layer["mlp"], x)
+        return y, aux
+    return common.mlp(layer["mlp"], x), jnp.zeros((), jnp.float32)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    kl, ke = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": common.init_embed(ke, cfg.vocab_size, cfg.d_model,
+                                   cfg.activation_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.activation_dtype),
+        "layers": layers,
+    }
+
+
+def _layer_fwd(cfg: ModelConfig, x, layer, positions, window, block_kv):
+    h, kv = common.self_attention(
+        layer["attn"], common.rms_norm(x, layer["attn_norm"], cfg.norm_eps),
+        cfg, positions, causal=True, window=window, block_kv=block_kv)
+    x = x + h
+    y, aux = apply_ffn(cfg, layer,
+                       common.rms_norm(x, layer["mlp_norm"], cfg.norm_eps))
+    return common.constrain(x + y), kv, aux
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int,
+                      start: int | jax.Array = 0) -> jax.Array:
+    """Token positions; (B,S) scalar or (B,S,3) for M-RoPE models.
+
+    For the VLM, the first ``num_patches`` slots hold image patches laid out
+    on a √P×√P grid (temporal=0), text follows with t=h=w advancing — the
+    Qwen2-VL M-RoPE scheme."""
+    pos = start + jnp.arange(seq)[None, :].astype(jnp.int32)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if not cfg.mrope_sections:
+        return pos
+    p = cfg.num_patches
+    side = max(int(p ** 0.5), 1)
+    idx = jnp.asarray(start, jnp.int32) + jnp.arange(seq, dtype=jnp.int32)
+    is_patch = idx < p
+    text_pos = idx - p + side        # text stream continues after the grid
+    t = jnp.where(is_patch, 0, text_pos)
+    hh = jnp.where(is_patch, idx // side, text_pos)
+    ww = jnp.where(is_patch, idx % side, text_pos)
+    grid = jnp.stack([t, hh, ww], axis=-1).astype(jnp.int32)   # (S,3)
+    return jnp.broadcast_to(grid[None], (batch, seq, 3))
+
+
+def embed_inputs(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                 patch_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Token embeddings; for the VLM the first P positions are replaced by
+    the (stub) vision-frontend patch embeddings."""
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    if patch_embeds is not None:
+        p = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, p:]], axis=1)
+    return x
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            patch_embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None, *, remat: bool = False,
+            return_kv: bool = False, return_aux: bool = False,
+            head: bool = True, block_kv: int = 1024):
+    """Full-sequence forward (training / prefill). Returns logits
+    (and per-layer KV stacks / summed MoE aux loss when requested)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    x = embed_inputs(params, cfg, tokens, patch_embeds)
+
+    fwd = functools.partial(_layer_fwd, cfg, positions=positions,
+                            window=cfg.sliding_window, block_kv=block_kv)
+    if remat:
+        fwd = jax.checkpoint(fwd)
+
+    def scan_body(carry, layer):
+        x, aux_sum = carry
+        x, kv, aux = fwd(x, layer)
+        return (x, aux_sum + aux), (kv if return_kv else None)
+
+    (x, aux_sum), kvs = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    if head:
+        out_first = common.logits_from_hidden(x, params["embed"],
+                                              params["final_norm"],
+                                              cfg.norm_eps)
+    else:   # normalized hidden states (chunked-CE training path)
+        out_first = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out = [out_first]
+    if return_kv:
+        out.append(kvs)
+    if return_aux:
+        out.append(aux_sum)
+    return tuple(out) if len(out) > 1 else logits
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """KV cache. For sliding-window configs ``max_len`` may be the window
+    size; slots carry explicit positions (-1 = empty) so ring-buffer reuse
+    is safe."""
+    dt = cfg.activation_dtype
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": -jnp.ones((batch, max_len), jnp.int32),
+        "next_pos": jnp.zeros((), jnp.int32),   # next absolute position
+    }
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            patch_embeds: Optional[jax.Array] = None, *,
+            cache_len: Optional[int] = None, block_kv: int = 1024):
+    """Run the full prompt, materializing the KV cache. Returns
+    (last-token logits, cache)."""
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    logits, kvs = forward(params, cfg, tokens, patch_embeds,
+                          return_kv=True, block_kv=block_kv)
+    # kvs leaves: (L, B, S, KV, hd) — take the last cache_len positions
+    take = min(cache_len, s)
+    k = kvs["k"][:, :, s - take:]
+    v = kvs["v"][:, :, s - take:]
+    pad = cache_len - take
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    # mask positions: the scalar (temporal for M-RoPE) stream, so decode
+    # masking agrees with the full-sequence forward pass
+    all_pos = default_positions(cfg, b, s)
+    scalar = all_pos[..., 0] if cfg.mrope_sections else all_pos
+    pos = scalar[:, s - take:].astype(jnp.int32)
+    pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    cache = {"k": k, "v": v, "pos": pos,
+             "next_pos": jnp.asarray(s, jnp.int32)}
+    return logits[:, -1:], cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                token: jax.Array, *, block_kv: int = 1024
+                ) -> Tuple[jax.Array, Dict]:
+    """One-token decode. ``token``: (B,1) int32. Ring-buffer semantics: the
+    new KV overwrites slot ``next_pos % W``."""
+    b = token.shape[0]
+    w = cache["k"].shape[2]
+    pos_now = cache["next_pos"]
+    positions = default_positions(cfg, b, 1, start=pos_now)
+    x = embed_inputs(params, cfg, token)
+    slot = (pos_now % w).astype(jnp.int32)
+
+    scalar_pos = positions[..., 0] if cfg.mrope_sections else positions
+    cache_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], scalar_pos.astype(jnp.int32), slot, axis=1)
+
+    def scan_body(x, inp):
+        layer, ck, cv = inp
+        h = common.rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        q, k, v = common.attention_qkv(layer["attn"], h, cfg, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        o = common.blockwise_attention(q, ck, cv, scalar_pos, cache_pos,
+                                       causal=True,
+                                       window=cfg.sliding_window,
+                                       block_kv=block_kv)
+        o = o.reshape(b, 1, cfg.num_heads * cfg.hd) @ layer["attn"]["wo"]
+        x = x + o
+        y, _ = apply_ffn(cfg, layer,
+                         common.rms_norm(x, layer["mlp_norm"], cfg.norm_eps))
+        return x + y, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    logits = common.logits_from_hidden(x, params["embed"],
+                                       params["final_norm"], cfg.norm_eps)
+    new_cache = {"k": new_k, "v": new_v, "pos": cache_pos,
+                 "next_pos": pos_now + 1}
+    return logits, new_cache

@@ -1,0 +1,210 @@
+"""Whisper-tiny encoder-decoder backbone (audio).
+
+[arXiv:2212.04356]. The mel-spectrogram + 2×conv feature extractor is a
+STUB per the brief: the model consumes precomputed frame embeddings
+(B, num_frames, d_model) — ``input_specs`` supplies them. Sinusoidal
+positions, bidirectional encoder, causal decoder with cross-attention,
+GELU MLPs (Whisper's original design — no RoPE, no gating).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+def _init_block(key, cfg: ModelConfig, cross: bool) -> Dict:
+    ks = jax.random.split(key, 3)
+    dt = cfg.activation_dtype
+    p = {
+        "attn": common.init_attention(ks[0], cfg),
+        "mlp": common.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt,
+                               kind="gelu"),
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cross:
+        p["xattn"] = common.init_attention(ks[2], cfg)
+        p["xattn_norm"] = jnp.ones((cfg.d_model,), dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    ke, kd, kt = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": common.init_embed(kt, cfg.vocab_size, cfg.d_model,
+                                   cfg.activation_dtype),
+        "enc_layers": [_init_block(k, cfg, cross=False) for k in enc_keys],
+        "dec_layers": [_init_block(k, cfg, cross=True) for k in dec_keys],
+        "enc_norm": jnp.ones((cfg.d_model,), cfg.activation_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.activation_dtype),
+    }
+
+
+def _cross_attention(p: Dict, x: jax.Array, cfg: ModelConfig,
+                     enc_k: jax.Array, enc_v: jax.Array,
+                     block_kv: int) -> jax.Array:
+    """Decoder→encoder attention; K/V precomputed from encoder states."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.hd)
+    f = enc_k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    kv_pos = jnp.zeros((b, f), jnp.int32)     # bidirectional: all visible
+    o = common.blockwise_attention(q, enc_k, enc_v, q_pos, kv_pos,
+                                   causal=False, block_kv=block_kv)
+    return o.reshape(b, s, cfg.num_heads * cfg.hd) @ p["wo"]
+
+
+def cross_kv(p: Dict, cfg: ModelConfig, enc_out: jax.Array):
+    b, f, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(b, f, cfg.num_kv_heads, cfg.hd)
+    v = (enc_out @ p["wv"]).reshape(b, f, cfg.num_kv_heads, cfg.hd)
+    return k, v
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jax.Array, *,
+           block_kv: int = 1024) -> jax.Array:
+    """frames: (B, F, D) stub frontend embeddings → encoder states."""
+    b, f, _ = frames.shape
+    x = frames.astype(cfg.activation_dtype) \
+        + common.sinusoidal_positions(f, cfg.d_model).astype(
+            cfg.activation_dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+    for layer in params["enc_layers"]:
+        h, _ = common.self_attention(
+            layer["attn"],
+            common.rms_norm(x, layer["attn_norm"], cfg.norm_eps),
+            cfg, pos, causal=False, block_kv=block_kv)
+        x = x + h
+        x = x + common.mlp(layer["mlp"],
+                           common.rms_norm(x, layer["mlp_norm"],
+                                           cfg.norm_eps))
+    return common.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array, *, remat: bool = False,
+            return_kv: bool = False, head: bool = True,
+            block_kv: int = 1024):
+    """Teacher-forced decoder over ``tokens`` given audio ``frames``."""
+    enc = encode(params, cfg, frames, block_kv=block_kv)
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"][tokens].astype(cfg.activation_dtype) \
+        + common.sinusoidal_positions(s, cfg.d_model).astype(
+            cfg.activation_dtype)[None]
+
+    kvs = []
+    for layer in params["dec_layers"]:
+        def block(x, layer=layer):
+            h, kv = common.self_attention(
+                layer["attn"],
+                common.rms_norm(x, layer["attn_norm"], cfg.norm_eps),
+                cfg, pos, causal=True, block_kv=block_kv)
+            x = x + h
+            ek, ev = cross_kv(layer["xattn"], cfg, enc)
+            x = x + _cross_attention(
+                layer["xattn"],
+                common.rms_norm(x, layer["xattn_norm"], cfg.norm_eps),
+                cfg, ek, ev, block_kv)
+            x = x + common.mlp(layer["mlp"],
+                               common.rms_norm(x, layer["mlp_norm"],
+                                               cfg.norm_eps))
+            return common.constrain(x), kv
+        if remat and not return_kv:
+            x, kv = jax.checkpoint(block)(x)
+        else:
+            x, kv = block(x)
+        kvs.append(kv)
+
+    if head:
+        out = common.logits_from_hidden(x, params["embed"],
+                                        params["final_norm"], cfg.norm_eps)
+    else:
+        out = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (out, kvs, enc) if return_kv else out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    dt = cfg.activation_dtype
+    layers = []
+    for _ in range(cfg.num_layers):
+        layers.append({
+            "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.hd), dt),
+            "xk": jnp.zeros((batch, cfg.num_frames, cfg.num_kv_heads,
+                             cfg.hd), dt),
+            "xv": jnp.zeros((batch, cfg.num_frames, cfg.num_kv_heads,
+                             cfg.hd), dt),
+        })
+    return {"layers": layers,
+            "pos": -jnp.ones((batch, max_len), jnp.int32),
+            "next_pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array, *, cache_len: Optional[int] = None,
+            block_kv: int = 1024):
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    logits, kvs, enc = forward(params, cfg, tokens, frames, return_kv=True,
+                               block_kv=block_kv)
+    layers = []
+    take = min(cache_len, s)
+    pad = cache_len - take
+    for layer, kv in zip(params["dec_layers"], kvs):
+        k, v = kv["k"][:, s - take:], kv["v"][:, s - take:]
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        xk, xv = cross_kv(layer["xattn"], cfg, enc)
+        layers.append({"k": k, "v": v, "xk": xk, "xv": xv})
+    pos = jnp.broadcast_to(jnp.arange(s - take, s, dtype=jnp.int32)[None],
+                           (b, take))
+    pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    cache = {"layers": layers, "pos": pos,
+             "next_pos": jnp.asarray(s, jnp.int32)}
+    return logits[:, -1:], cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                token: jax.Array, *, block_kv: int = 1024):
+    b = token.shape[0]
+    w = cache["layers"][0]["k"].shape[1]
+    pos_now = cache["next_pos"]
+    positions = jnp.broadcast_to(pos_now, (b, 1)).astype(jnp.int32)
+    slot = (pos_now % w).astype(jnp.int32)
+    pos_embed = common.sinusoidal_embed(positions, cfg.d_model).astype(
+        cfg.activation_dtype)                                  # (B,1,D)
+    x = params["embed"][token].astype(cfg.activation_dtype) + pos_embed
+
+    cache_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions, slot, axis=1)
+
+    new_layers = []
+    for layer, st in zip(params["dec_layers"], cache["layers"]):
+        h = common.rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        o, ck, cv, _ = common.decode_attention(
+            layer["attn"], h, cfg, positions, st["k"], st["v"], cache_pos,
+            slot, block_kv=block_kv)
+        x = x + o
+        x = x + _cross_attention(
+            layer["xattn"],
+            common.rms_norm(x, layer["xattn_norm"], cfg.norm_eps),
+            cfg, st["xk"], st["xv"], block_kv)
+        x = x + common.mlp(layer["mlp"],
+                           common.rms_norm(x, layer["mlp_norm"],
+                                           cfg.norm_eps))
+        new_layers.append({"k": ck, "v": cv, "xk": st["xk"],
+                           "xv": st["xv"]})
+
+    logits = common.logits_from_hidden(x, params["embed"],
+                                       params["final_norm"], cfg.norm_eps)
+    return logits, {"layers": new_layers, "pos": cache_pos,
+                    "next_pos": pos_now + 1}

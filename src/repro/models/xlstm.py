@@ -1,0 +1,391 @@
+"""xLSTM: alternating mLSTM (matrix-memory) and sLSTM (scalar-memory) blocks.
+
+[arXiv:2405.04517] Beck et al. d_ff = 0: each block carries its own up/down
+projections (factor 2), there is no separate FFN.
+
+mLSTM recurrence (per head, exponential gating, stabilized):
+    C_t = f_t C_{t−1} + i_t v_t k_tᵀ        (d_k × d_v matrix memory)
+    n_t = f_t n_{t−1} + i_t k_t
+    h_t = (q_tᵀ C_t) / max(|q_tᵀ n_t|, exp(−m_t))
+
+TPU adaptation: the quadratic "parallel form" of the paper is O(S²) memory;
+we instead run the **chunkwise form** (intra-chunk quadratic + inter-chunk
+carried matrix state, all in a log-stabilized domain) — O(S·chunk) memory,
+MXU-friendly block matmuls, and the exact same recurrence. Decode carries
+(Ĉ, n̂, m) per layer — constant state ⇒ native long_500k.
+
+sLSTM is a true nonlinear RNN (recurrent weights R feed h_{t−1} back into
+the gates), so it runs as ``lax.scan`` over time — sequential by
+construction, as the paper itself notes (it trades parallelism for the
+ability to revise storage decisions).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+CHUNK = 256
+NEG = -1e30
+
+
+def is_slstm_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    return layer_idx % cfg.slstm_every == 1
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> Dict:
+    dt = cfg.activation_dtype
+    d = cfg.d_model
+    di = 2 * d                       # paper: up-projection factor 2
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": common.init_linear(ks[0], d, di, dt),
+        "w_z": common.init_linear(ks[1], d, di, dt),    # output gate branch
+        "w_q": common.init_linear(ks[2], di, di, dt),
+        "w_k": common.init_linear(ks[3], di, di, dt),
+        "w_v": common.init_linear(ks[4], di, di, dt),
+        "w_i": common.init_linear(ks[5], di, cfg.num_heads, jnp.float32),
+        "w_f": common.init_linear(ks[6], di, cfg.num_heads, jnp.float32),
+        "b_i": jnp.zeros((cfg.num_heads,), jnp.float32),
+        "b_f": 3.0 * jnp.ones((cfg.num_heads,), jnp.float32),  # open forget
+        "w_down": common.init_linear(ks[7], di, d, dt),
+        "out_norm": jnp.ones((di,), dt),
+    }
+
+
+def _mlstm_heads(p: Dict, x: jax.Array, cfg: ModelConfig):
+    """Project to per-head q,k,v and log gates. x: (B,S,D)."""
+    b, s, _ = x.shape
+    nh = cfg.num_heads
+    u = x @ p["w_up"]
+    z = x @ p["w_z"]
+    di = u.shape[-1]
+    hd = di // nh
+    q = (u @ p["w_q"]).reshape(b, s, nh, hd)
+    k = (u @ p["w_k"]).reshape(b, s, nh, hd) / jnp.sqrt(hd)
+    v = (u @ p["w_v"]).reshape(b, s, nh, hd)
+    uf = u.astype(jnp.float32)
+    logi = uf @ p["w_i"] + p["b_i"]                      # (B,S,H)
+    logf = jax.nn.log_sigmoid(uf @ p["w_f"] + p["b_f"])  # (B,S,H) ≤ 0
+    return q, k, v, logi, logf, z
+
+
+def mlstm_chunkwise(q, k, v, logi, logf, state=None, chunk: int = CHUNK):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v: (B,S,H,hd); logi/logf: (B,S,H).
+    state: optional (C_hat (B,H,dk,dv), n_hat (B,H,dk), m (B,H)).
+    Returns (h (B,S,H,hd), new_state).
+    """
+    b, s, nh, hd = q.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=NEG)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = (s + pad) // chunk
+
+    def resh(x, extra=()):
+        return jnp.moveaxis(
+            x.reshape((b, n_chunks, chunk) + x.shape[2:]), 1, 0)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)        # (N,B,L,H,hd)
+    lic, lfc = resh(logi), resh(logf)             # (N,B,L,H)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.full((b, nh), NEG, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inp):
+        c_hat, n_hat, m_prev = carry
+        qb, kb, vb, li, lf = inp
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        bcum = jnp.cumsum(lf, axis=1)                        # (B,L,H)
+        # intra-chunk log weights W[t,u] = b_t − b_u + logi_u (u ≤ t)
+        wlog = (bcum[:, :, None, :] - bcum[:, None, :, :]
+                + li[:, None, :, :])                          # (B,T,U,H)
+        wlog = jnp.where(causal[None, :, :, None], wlog, NEG)
+        s_inter = bcum + m_prev[:, None, :]                   # (B,L,H)
+        m_t = jnp.maximum(wlog.max(axis=2), s_inter)          # (B,L,H)
+        m_t = jnp.maximum(m_t, -30.0)   # keep exp(−m_t) finite pre-update
+        wgt = jnp.exp(wlog - m_t[:, :, None, :])              # (B,T,U,H)
+        scores = jnp.einsum("bthd,buhd->btuh", qf, kf) * wgt
+        intra = jnp.einsum("btuh,buhd->bthd", scores, vf)
+        inter_scale = jnp.exp(s_inter - m_t)                  # (B,L,H)
+        inter = jnp.einsum("bthd,bhde->bthe", qf, c_hat) \
+            * inter_scale[..., None]
+        num = intra + inter
+        n_t = jnp.einsum("btuh,buhd->bthd", wgt, kf) \
+            + n_hat[:, None] * inter_scale[..., None]
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", qf, n_t)),
+            jnp.exp(-m_t))
+        h = num / denom[..., None]                            # (B,L,H,hd)
+
+        # carry to next chunk (log-stabilized)
+        b_l = bcum[:, -1]                                     # (B,H)
+        end_w = b_l[:, None, :] - bcum + li                   # (B,L,H)
+        m_new = jnp.maximum(b_l + m_prev, end_w.max(axis=1))
+        scale_old = jnp.exp(b_l + m_prev - m_new)
+        wk = jnp.exp(end_w - m_new[:, None, :])               # (B,L,H)
+        c_new = c_hat * scale_old[..., None, None] + jnp.einsum(
+            "buhd,buhe,buh->bhde", kf, vf, wk)
+        n_new = n_hat * scale_old[..., None] + jnp.einsum(
+            "buhd,buh->bhd", kf, wk)
+        return (c_new, n_new, m_new), h
+
+    (c, n, m), hs = jax.lax.scan(body, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s + pad, nh, hd)[:, :s]
+    return h.astype(q.dtype), (c, n, m)
+
+
+def mlstm_step(q, k, v, logi, logf, state):
+    """Single-token mLSTM update. q,k,v: (B,1,H,hd); logi/f: (B,1,H)."""
+    c_hat, n_hat, m_prev = state
+    qf = q[:, 0].astype(jnp.float32)                    # (B,H,hd)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    li, lf = logi[:, 0], logf[:, 0]                     # (B,H)
+    m_new = jnp.maximum(jnp.maximum(lf + m_prev, li), -30.0)
+    f_s = jnp.exp(lf + m_prev - m_new)
+    i_s = jnp.exp(li - m_new)
+    c_new = c_hat * f_s[..., None, None] \
+        + i_s[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n_new = n_hat * f_s[..., None] + i_s[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                        jnp.exp(-m_new))
+    h = (num / denom[..., None])[:, None]               # (B,1,H,hd)
+    return h.astype(q.dtype), (c_new, n_new, m_new)
+
+
+def mlstm_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                state=None, single_step: bool = False):
+    q, k, v, logi, logf, z = _mlstm_heads(p, x, cfg)
+    if single_step:
+        h, new_state = mlstm_step(q, k, v, logi, logf, state)
+    else:
+        h, new_state = mlstm_chunkwise(q, k, v, logi, logf, state)
+    b, s = x.shape[:2]
+    h = h.reshape(b, s, -1)
+    h = common.rms_norm(h, p["out_norm"], 1e-6)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> Dict:
+    """sLSTM parameters.
+
+    PERF (EXPERIMENTS.md §Perf iteration 1): the four input projections are
+    FUSED into one (D, 4D) matrix applied to the whole sequence OUTSIDE
+    the sequential time scan (they don't depend on h_{t−1}), and the
+    recurrent weights are BLOCK-DIAGONAL per head — which is also the
+    xLSTM paper's actual design. This removes the per-timestep re-read of
+    8 (D,D) matrices from HBM that dominated the baseline roofline.
+    """
+    dt = cfg.activation_dtype
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    ks = jax.random.split(key, 5)
+    b_in = jnp.zeros((4 * d,), jnp.float32)
+    b_in = b_in.at[2 * d:3 * d].set(3.0)   # open forget-gate bias
+    return {
+        "w_in": common.init_linear(ks[0], d, 4 * d, jnp.float32),
+        "b_in": b_in,
+        # block-diagonal recurrence: head state (hd) → its 4 gates (4·hd)
+        "r": (0.3 / jnp.sqrt(hd) * jax.random.truncated_normal(
+            ks[1], -2.0, 2.0, (nh, hd, 4 * hd))).astype(jnp.float32),
+        "w_gate": common.init_linear(ks[2], d, d, dt),
+        "w_down": common.init_linear(ks[3], d, d, dt),
+        "out_norm": jnp.ones((d,), dt),
+    }
+
+
+def slstm_cell(p: Dict, pre_t: jax.Array, state):
+    """One sLSTM step. pre_t: (B,4D) precomputed input projection
+    (z|i|f|o sections). state: (c,n,h,m) each (B,D)."""
+    c, n, h, m = state
+    b, d = c.shape
+    nh, hd = p["r"].shape[0], p["r"].shape[1]
+    rec = jnp.einsum("bhd,hde->bhe", h.reshape(b, nh, hd),
+                     p["r"]).reshape(b, nh, 4, hd)
+    gates = pre_t.reshape(b, 4, nh, hd).transpose(0, 2, 1, 3) + rec
+    zi, ii, fi, oi = (gates[:, :, j].reshape(b, d) for j in range(4))
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    logf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(logf + m, ii)
+    i_s = jnp.exp(ii - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+# §Perf knob: 1 ⇒ per-timestep projections (the naive-RNN baseline);
+# 256 ⇒ hoisted chunked projections (weights read once per chunk).
+SLSTM_CHUNK = int(__import__("os").environ.get("REPRO_SLSTM_CHUNK", "256"))
+
+
+def slstm_block(p: Dict, x: jax.Array, cfg: ModelConfig, *, state=None,
+                single_step: bool = False):
+    """Two-level scan: the input projections of a CHUNK of timesteps are
+    hoisted into one (B,chunk,D)@(D,4D) matmul (weights read once per
+    chunk instead of per step), the inner scan runs only the irreducible
+    block-diagonal recurrence. Chunking bounds the materialized
+    projection buffer to (B,chunk,4D)."""
+    b, s, d = x.shape
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, d), -30.0))
+    xf = x.astype(jnp.float32)
+
+    if single_step:
+        pre = xf[:, 0] @ p["w_in"] + p["b_in"]
+        new_state, h = slstm_cell(p, pre, state)
+        hs = h[:, None]
+    else:
+        ch = min(SLSTM_CHUNK, s)
+        pad = (-s) % ch
+        if pad:
+            xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        n = (s + pad) // ch
+        xc = jnp.moveaxis(xf.reshape(b, n, ch, d), 1, 0)  # (N,B,CH,D)
+
+        def outer(st, x_chunk):
+            pre = x_chunk @ p["w_in"] + p["b_in"]         # (B,CH,4D)
+
+            def inner(st, pre_t):
+                return slstm_cell(p, pre_t, st)
+
+            st, hs = jax.lax.scan(inner, st, jnp.moveaxis(pre, 0, 1))
+            return st, jnp.moveaxis(hs, 0, 1)             # (B,CH,D)
+
+        new_state, hcs = jax.lax.scan(outer, state, xc)
+        hs = jnp.moveaxis(hcs, 0, 1).reshape(b, s + pad, d)[:, :s]
+
+    hs = hs.astype(x.dtype)
+    hs = common.rms_norm(hs, p["out_norm"], 1e-6)
+    out = (hs * jax.nn.silu(x @ p["w_gate"])) @ p["w_down"]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    layers = []
+    for l in range(cfg.num_layers):
+        dt = cfg.activation_dtype
+        layer = {"norm": jnp.ones((cfg.d_model,), dt)}
+        if is_slstm_layer(cfg, l):
+            layer["slstm"] = init_slstm(keys[l], cfg)
+        else:
+            layer["mlstm"] = init_mlstm(keys[l], cfg)
+        layers.append(layer)
+    return {
+        "embed": common.init_embed(keys[-1], cfg.vocab_size, cfg.d_model,
+                                   cfg.activation_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.activation_dtype),
+        "layers": layers,
+    }
+
+
+def _apply_layer(cfg, l, layer, x, *, state=None, single_step=False):
+    h = common.rms_norm(x, layer["norm"], cfg.norm_eps)
+    if is_slstm_layer(cfg, l):
+        o, st = slstm_block(layer["slstm"], h, cfg, state=state,
+                            single_step=single_step)
+    else:
+        o, st = mlstm_block(layer["mlstm"], h, cfg, state=state,
+                            single_step=single_step)
+    return common.constrain(x + o), st
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array, *,
+            remat: bool = False, return_state: bool = False,
+            head: bool = True, block_kv: int = 1024):
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    states = []
+    for l, layer in enumerate(params["layers"]):
+        def block(x, layer=layer, l=l):
+            return _apply_layer(cfg, l, layer, x)
+        if remat and not return_state:
+            x, st = jax.checkpoint(block)(x)
+        else:
+            x, st = block(x)
+        states.append(st)
+    if head:
+        out = common.logits_from_hidden(x, params["embed"],
+                                        params["final_norm"], cfg.norm_eps)
+    else:
+        out = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (out, states) if return_state else out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Constant-size recurrent cache (independent of max_len)."""
+    di = 2 * cfg.d_model
+    hd = di // cfg.num_heads
+    d = cfg.d_model
+    layers = []
+    for l in range(cfg.num_layers):
+        if is_slstm_layer(cfg, l):
+            z = jnp.zeros((batch, d), jnp.float32)
+            layers.append((z, z, z, jnp.full((batch, d), -30.0)))
+        else:
+            layers.append((jnp.zeros((batch, cfg.num_heads, hd, hd),
+                                     jnp.float32),
+                           jnp.zeros((batch, cfg.num_heads, hd), jnp.float32),
+                           jnp.full((batch, cfg.num_heads), NEG,
+                                    jnp.float32)))
+    return {"layers": layers, "next_pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, *,
+            cache_len: Optional[int] = None, block_kv: int = 1024):
+    logits, states = forward(params, cfg, tokens, return_state=True)
+    cache = {"layers": states,
+             "next_pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits[:, -1:], cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                token: jax.Array, *, block_kv: int = 1024):
+    x = params["embed"][token].astype(cfg.activation_dtype)
+    new_layers = []
+    for l, layer in enumerate(params["layers"]):
+        x, st = _apply_layer(cfg, l, layer, x, state=cache["layers"][l],
+                             single_step=True)
+        new_layers.append(st)
+    logits = common.logits_from_hidden(x, params["embed"],
+                                       params["final_norm"], cfg.norm_eps)
+    return logits, {"layers": new_layers,
+                    "next_pos": cache["next_pos"] + 1}

@@ -1,0 +1,190 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs   / (chips × 197e12)
+    memory     = HLO_bytes   / (chips × 819e9)
+    collective = coll_bytes  / (chips × 50e9)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are NOT there, so we parse the optimized HLO text: build a symbol
+table of every op's result shape, then sum the operand sizes of each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train; 2·N·D for
+inference passes — the "useful"-compute yardstick the brief asks to compare
+against compiled FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "opaque": 0,
+}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*\)|[\w\[\],\s{}]+?)\s+"
+    r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (may be a tuple)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    sizes: Dict[str, int] = {}
+    # pass 1: symbol table name → result bytes
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, shape_str, _ = m.groups()
+            sizes[name] = _shape_bytes(shape_str)
+
+    out = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue   # async pair: counted at -start
+        # operands: %refs inside the first (...) group
+        args = line.split("(", 1)[1]
+        operands = re.findall(r"%?([\w\.\-]+)", args)
+        got = sum(sizes.get(o, 0) for o in operands if o in sizes)
+        if got == 0:
+            got = _shape_bytes(shape_str)   # fallback: result size
+        out[kind] += got
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    peak_bytes_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes, "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "peak_bytes_per_device": self.peak_bytes_per_device,
+        }
+
+
+def count_params(cfg: ModelConfig) -> Tuple[float, float]:
+    """(total, active) parameter counts from the config (analytic)."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+        + cfg.num_heads * hd * d
+    dense_mlp = 3 * d * f if f else 0
+    if cfg.family == "ssm":
+        di = 2 * d
+        mlstm = 2 * d * di + 3 * di * di + di * d
+        # fused input proj (4d²) + block-diag recurrence + gate/down
+        slstm = 4 * d * d + 4 * d * d // cfg.num_heads + 2 * d * d
+        n_sl = sum(1 for l in range(cfg.num_layers)
+                   if l % cfg.slstm_every == 1)
+        layers = (cfg.num_layers - n_sl) * mlstm + n_sl * slstm
+        total = layers + cfg.vocab_size * d
+        return float(total), float(total)
+    if cfg.family == "hybrid":
+        r = cfg.rglru_width or d
+        rec = 2 * d * r + r * d + 2 * r * r + cfg.conv_width * r
+        n_attn = sum(1 for l in range(cfg.num_layers)
+                     if (l + 1) % cfg.hybrid_attn_period == 0)
+        layers = n_attn * attn + (cfg.num_layers - n_attn) * rec \
+            + cfg.num_layers * dense_mlp
+        total = layers + cfg.vocab_size * d
+        return float(total), float(total)
+    if cfg.num_experts:
+        expert = 3 * d * f
+        moe_total = cfg.num_experts * expert + d * cfg.num_experts
+        active = cfg.top_k * expert
+        extra = expert if (cfg.dense_residual or cfg.shared_expert) else 0
+        per_layer_t = attn + moe_total + extra
+        per_layer_a = attn + active + extra
+        total = cfg.num_layers * per_layer_t + cfg.vocab_size * d
+        act = cfg.num_layers * per_layer_a + cfg.vocab_size * d
+        return float(total), float(act)
+    enc = cfg.encoder_layers * (attn + dense_mlp) if cfg.family == "encdec" \
+        else 0
+    cross = cfg.num_layers * attn if cfg.family == "encdec" else 0
+    total = cfg.num_layers * (attn + dense_mlp) + enc + cross \
+        + cfg.vocab_size * d
+    return float(total), float(total)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_active·D for train; 2·N_active·tokens for inference."""
+    _, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch   # decode: one token/seq

@@ -1,0 +1,315 @@
+"""Static analysis of optimized HLO text with loop-trip-count correction.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE — useless for
+scan-over-layers models (an 80-layer scan under-counts ~80×). This module
+re-derives the three roofline inputs by walking the computation graph:
+
+  * **flops** — 2·M·N·K for every ``dot`` (batch dims included), each
+    multiplied by the product of enclosing loop trip counts
+    (``backend_config known_trip_count``, emitted by XLA for lax.scan).
+    Elementwise FLOPs are ignored: the compute roofline term is
+    MXU-dominated by construction.
+  * **bytes** — per top-level op: result + operand bytes (fusions counted
+    at the fusion boundary — internals live in registers/VMEM, which is
+    exactly the HBM-traffic model we want), × loop multipliers.
+  * **collective bytes** — operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, × loop multipliers,
+    keyed by kind.
+
+The walker handles while (×trip), call/to_apply (×1), fusion calls
+(descend for dots only), and conditional (max over branches).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\s]+?))\s+"
+    r"([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota", "partition-id",
+                   "replica-id"}
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",") if d.strip()]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in _dims(m.group(2)):
+        n *= d
+    return n
+
+
+class Op:
+    __slots__ = ("name", "shape", "kind", "line", "operands")
+
+    def __init__(self, name, shape, kind, line):
+        self.name, self.shape, self.kind, self.line = name, shape, kind, line
+        args = line.split("(", 1)[1].split(")")[0]
+        self.operands = re.findall(r"%([\w\.\-]+)", args)
+
+
+def _parse_computations(text: str):
+    """Returns (comps: name → [Op], tables: name → {op name → shape str})."""
+    comps: Dict[str, List[Op]] = {}
+    tables: Dict[str, Dict[str, str]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if hdr and "=" not in line.split("(")[0]:
+            current = hdr.group(1)
+            comps[current] = []
+            tables[current] = {}
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[current].append(Op(m.group(1), m.group(2),
+                                     m.group(3), line))
+            tables[current][m.group(1)] = m.group(2)
+        else:
+            # parameter lines: "%p = f32[...] parameter(0)" match _OP_RE;
+            # anything else (e.g. constants with literals) — try loose parse
+            lm = re.match(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                          r"((?:\([^)]*\)|[\w\[\],{}\s]+?))\s+\w", line)
+            if lm:
+                tables[current][lm.group(1)] = lm.group(2)
+    return comps, tables
+
+
+def _dot_flops(op: Op, table: Dict[str, str]) -> float:
+    """2 × result_elems × contracted size (lhs shape via symbol table)."""
+    out = _result_elems(op.shape)
+    cd = _LHS_CDIMS.search(op.line)
+    k = 1
+    if cd and op.operands:
+        lhs_shape = table.get(op.operands[0], "")
+        m = _SHAPE_RE.search(lhs_shape)
+        if m:
+            dims = _dims(m.group(2))
+            for d in _dims(cd.group(1)):
+                if d < len(dims):
+                    k *= dims[d]
+    return 2.0 * out * k
+
+
+def _op_bytes(op: Op, table: Dict[str, str]) -> int:
+    """HBM traffic model per top-level op.
+
+    Slicing/indexing ops only touch the slice, not the whole operand:
+      dynamic-slice / slice / gather        → 2 × result bytes
+      dynamic-update-slice                  → 2 × update bytes (in-place)
+      scatter / scatter-add                 → 2 × updates bytes
+    Everything else: result + operand bytes (each op boundary is a
+    potential HBM round trip; fusions are counted at their boundary).
+    """
+    if op.kind in _SKIP_BYTES_OPS:
+        return 0
+    res = _shape_bytes(op.shape)
+    if op.kind in ("dynamic-slice", "slice", "gather"):
+        return 2 * res
+    if op.kind == "dynamic-update-slice":
+        upd = _shape_bytes(table.get(op.operands[1], "")) \
+            if len(op.operands) > 1 else res
+        return 2 * upd
+    if op.kind.startswith("scatter"):
+        upd = _shape_bytes(table.get(op.operands[-1], "")) \
+            if op.operands else res
+        return 2 * upd
+    if op.kind == "fusion":
+        # slice/update-rooted fusions only touch the slice, not the whole
+        # buffer (the in-place KV-cache pattern under buffer donation)
+        if "dynamic-update-slice" in op.line or \
+                "dynamic_update_slice" in op.line:
+            ops_b = [_shape_bytes(table.get(o, "")) for o in op.operands]
+            big = max(ops_b) if ops_b else 0
+            return 2 * (sum(ops_b) - big)
+        if "dynamic-slice" in op.line or "dynamic_slice" in op.line:
+            return 2 * res
+    opnd = sum(_shape_bytes(table.get(o, "")) for o in op.operands)
+    return res + opnd
+
+
+def analyze(text: str, detail: bool = False) -> Dict[str, object]:
+    """Loop-corrected {flops, bytes, collectives:{kind: bytes}}.
+
+    ``detail=True`` additionally returns ``top_collectives``: the largest
+    individual collective ops as (kind, bytes×trips, trips, op_name
+    metadata) — the §Perf hypothesis-forming view."""
+    comps, tables = _parse_computations(text)
+    detail_rows: List[Tuple[str, float, float, str]] = []
+
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+    mult_of: Dict[str, float] = {}   # computation → loop multiplier
+
+    def walk(comp: str) -> Tuple[float, float, Dict[str, float]]:
+        if comp in memo:
+            return memo[comp]
+        memo[comp] = (0.0, 0.0, {k: 0.0 for k in COLLECTIVES})  # cycle guard
+        flops = 0.0
+        byts = 0.0
+        coll = {k: 0.0 for k in COLLECTIVES}
+        table = tables.get(comp, {})
+        for op in comps.get(comp, []):
+            if op.kind == "dot":
+                flops += _dot_flops(op, table)
+                byts += _op_bytes(op, table)
+                continue
+            ckind = next((c for c in COLLECTIVES
+                          if op.kind.startswith(c)), None)
+            if ckind and not op.kind.endswith("-done"):
+                got = sum(_shape_bytes(table.get(o, ""))
+                          for o in op.operands)
+                coll[ckind] += got or _shape_bytes(op.shape)
+                byts += _op_bytes(op, table)
+                continue
+            if op.kind == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _BODY_RE.search(op.line)
+                if bm:
+                    f, b, c = walk(bm.group(1))
+                    flops += trip * f
+                    byts += trip * b
+                    for k in coll:
+                        coll[k] += trip * c[k]
+                continue
+            if op.kind == "fusion":
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    f, _, c = walk(cm.group(1))  # dots inside fusions count
+                    flops += f
+                    for k in coll:
+                        coll[k] += c[k]
+                byts += _op_bytes(op, table)
+                continue
+            if op.kind in ("call", "async-start"):
+                tm = _TOAPPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+                if tm:
+                    f, b, c = walk(tm.group(1))
+                    flops += f
+                    byts += b
+                    for k in coll:
+                        coll[k] += c[k]
+                continue
+            if op.kind == "conditional":
+                bm = _BRANCHES_RE.search(op.line)
+                if bm:
+                    branches = [b.strip().lstrip("%")
+                                for b in bm.group(1).split(",")]
+                    results = [walk(b) for b in branches if b in comps]
+                    if results:
+                        best = max(results, key=lambda r: r[0] + r[1])
+                        flops += best[0]
+                        byts += best[1]
+                        for k in coll:
+                            coll[k] += best[2][k]
+                continue
+            byts += _op_bytes(op, table)
+        memo[comp] = (flops, byts, coll)
+        return memo[comp]
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+    flops, byts, coll = walk(entry)
+    out = {"flops": flops, "bytes": byts, "collectives": coll,
+           "entry": entry, "num_computations": len(comps)}
+    if detail:
+        out["top_collectives"] = _collective_detail(comps, tables, entry)
+    return out
+
+
+def _collective_detail(comps, tables, entry, limit: int = 2000):
+    """Top-down traversal recording every collective op with its effective
+    loop multiplier. Returns rows sorted by total bytes desc."""
+    rows: List[Tuple[str, float, float, str]] = []
+    seen = 0
+
+    def visit(comp: str, mult: float, depth: int = 0):
+        nonlocal seen
+        if depth > 20 or seen > limit:
+            return
+        table = tables.get(comp, {})
+        for op in comps.get(comp, []):
+            ckind = next((c for c in COLLECTIVES
+                          if op.kind.startswith(c)), None)
+            if ckind and not op.kind.endswith("-done"):
+                got = sum(_shape_bytes(table.get(o, ""))
+                          for o in op.operands) or _shape_bytes(op.shape)
+                meta = ""
+                mm = re.search(r'op_name="([^"]*)"', op.line)
+                if mm:
+                    meta = mm.group(1)[-90:]
+                rows.append((ckind, got * mult, mult, meta))
+                seen += 1
+            elif op.kind == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _BODY_RE.search(op.line)
+                if bm:
+                    visit(bm.group(1), mult * trip, depth + 1)
+            elif op.kind == "fusion":
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    visit(cm.group(1), mult, depth + 1)
+            elif op.kind in ("call", "async-start"):
+                tm = _TOAPPLY_RE.search(op.line) or \
+                    _CALLS_RE.search(op.line)
+                if tm:
+                    visit(tm.group(1), mult, depth + 1)
+
+    visit(entry, 1.0)
+    rows.sort(key=lambda r: -r[1])
+    return rows[:40]

@@ -1,0 +1,3 @@
+from repro.serving import engine, scheduler
+
+__all__ = ["engine", "scheduler"]

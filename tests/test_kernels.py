@@ -1,0 +1,167 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the real block algorithm on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.linucb_score import linucb_score
+from repro.kernels.sherman_morrison import sherman_morrison
+
+TOL = {jnp.float32: dict(atol=2e-4, rtol=2e-4),
+       jnp.bfloat16: dict(atol=5e-2, rtol=5e-2)}
+
+
+def _spd(key, k, d):
+    a = jax.random.normal(key, (k, d, d))
+    return jnp.einsum("kde,kfe->kdf", a, a) / d + jnp.eye(d)[None]
+
+
+class TestLinUCBScore:
+    @pytest.mark.parametrize("b", [1, 7, 128, 300])
+    @pytest.mark.parametrize("k", [1, 6, 10])
+    @pytest.mark.parametrize("d", [64, 384])
+    def test_shape_sweep(self, b, k, d):
+        key = jax.random.PRNGKey(b * 1000 + k * 10 + d)
+        ks = jax.random.split(key, 3)
+        x = jax.random.normal(ks[0], (b, d))
+        theta = jax.random.normal(ks[1], (k, d))
+        a_inv = _spd(ks[2], k, d)
+        got = linucb_score(x, theta, a_inv, 0.675, interpret=True)
+        want = ref.linucb_score_ref(x, theta, a_inv, 0.675)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **TOL[jnp.float32])
+
+    def test_block_size_invariance(self):
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 3)
+        x = jax.random.normal(ks[0], (96, 128))
+        theta = jax.random.normal(ks[1], (4, 128))
+        a_inv = _spd(ks[2], 4, 128)
+        a = linucb_score(x, theta, a_inv, 0.5, block_b=16, interpret=True)
+        b = linucb_score(x, theta, a_inv, 0.5, block_b=96, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    def test_matches_bandit_library(self):
+        """The kernel scores == core.linucb.ucb_scores on real bandit state."""
+        from repro.core import linucb as lib
+        cfg = lib.LinUCBConfig(num_arms=5, dim=32)
+        s = lib.init(cfg)
+        key = jax.random.PRNGKey(1)
+        for i in range(20):
+            k1, k2, key = jax.random.split(key, 3)
+            x = jax.random.uniform(k1, (32,))
+            x = x / jnp.linalg.norm(x)
+            s = lib.update(s, jnp.int32(i % 5), x,
+                           jax.random.bernoulli(k2).astype(jnp.float32))
+        xs = jax.random.uniform(key, (8, 32))
+        got = linucb_score(xs, s.theta, s.a_inv, cfg.alpha, interpret=True)
+        want = lib.ucb_scores(s, xs, cfg.alpha)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestShermanMorrison:
+    @pytest.mark.parametrize("k", [1, 6])
+    @pytest.mark.parametrize("d", [16, 128, 384])
+    def test_shape_sweep(self, k, d):
+        key = jax.random.PRNGKey(k * 17 + d)
+        a_inv = _spd(key, k, d)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+        mask = (jax.random.uniform(jax.random.fold_in(key, 2), (k,))
+                > 0.5).astype(jnp.float32)
+        got = sherman_morrison(a_inv, x, mask, interpret=True)
+        want = ref.sherman_morrison_ref(a_inv, x, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_agrees_with_direct_inverse(self):
+        d = 24
+        key = jax.random.PRNGKey(3)
+        a = _spd(key, 1, d)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+        updated = sherman_morrison(a, x, jnp.ones((1,)), interpret=True)
+        direct = jnp.linalg.inv(jnp.linalg.inv(a[0]) + jnp.outer(x, x))
+        np.testing.assert_allclose(np.asarray(updated[0]),
+                                   np.asarray(direct), atol=1e-3)
+
+    def test_masked_arm_untouched(self):
+        d = 16
+        a = _spd(jax.random.PRNGKey(4), 3, d)
+        x = jax.random.normal(jax.random.PRNGKey(5), (d,))
+        out = sherman_morrison(a, x, jnp.asarray([0.0, 1.0, 0.0]),
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(a[0]),
+                                   atol=1e-6)
+        assert not np.allclose(np.asarray(out[1]), np.asarray(a[1]))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("h,kv", [(4, 4), (8, 2), (6, 1)])
+    @pytest.mark.parametrize("s", [128, 384])
+    def test_sweep_causal(self, dtype, h, kv, s):
+        key = jax.random.PRNGKey(s + h)
+        ks = jax.random.split(key, 3)
+        hd = 64
+        q = jax.random.normal(ks[0], (2, s, h, hd), dtype)
+        k = jax.random.normal(ks[1], (2, s, kv, hd), dtype)
+        v = jax.random.normal(ks[2], (2, s, kv, hd), dtype)
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype])
+
+    @pytest.mark.parametrize("window", [32, 128, 1000])
+    def test_sliding_window(self, window):
+        key = jax.random.PRNGKey(window)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 256, 4, 32))
+        k = jax.random.normal(ks[1], (1, 256, 2, 32))
+        v = jax.random.normal(ks[2], (1, 256, 2, 32))
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_non_causal(self):
+        key = jax.random.PRNGKey(9)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 32))
+        k = jax.random.normal(ks[1], (1, 128, 2, 32))
+        v = jax.random.normal(ks[2], (1, 128, 2, 32))
+        got = flash_attention(q, k, v, causal=False, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_block_size_invariance(self):
+        key = jax.random.PRNGKey(10)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 256, 2, 32))
+        k = jax.random.normal(ks[1], (1, 256, 2, 32))
+        v = jax.random.normal(ks[2], (1, 256, 2, 32))
+        a = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+        b = flash_attention(q, k, v, block_q=128, block_k=256,
+                            interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    def test_matches_model_attention_path(self):
+        """Kernel output == the model substrate's blockwise attention."""
+        from repro.models import common
+        key = jax.random.PRNGKey(11)
+        ks = jax.random.split(key, 3)
+        b, s, h, kv, hd = 2, 128, 4, 2, 32
+        q = jax.random.normal(ks[0], (b, s, h, hd))
+        k = jax.random.normal(ks[1], (b, s, kv, hd))
+        v = jax.random.normal(ks[2], (b, s, kv, hd))
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        want = common.blockwise_attention(q, k, v, pos, pos, causal=True,
+                                          block_kv=64)
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (brief deliverable f).
+
+Each assigned architecture is instantiated as a REDUCED variant of the same
+family (2 layers, d_model ≤ 256, ≤ 4 experts) and runs a forward pass and a
+prefill→decode step on CPU, asserting output shapes and no NaNs. The FULL
+configs are exercised only by the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES
+from repro.models import registry
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key, seq=S, batch=B):
+    kt, kf = jax.random.split(key)
+    out = {"tokens": jax.random.randint(kt, (batch, seq), 0,
+                                        cfg.vocab_size),
+           "labels": jax.random.randint(kf, (batch, seq), 0,
+                                        cfg.vocab_size)}
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            kf, (batch, cfg.num_frames, cfg.d_model),
+            cfg.activation_dtype)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.random.normal(
+            kf, (batch, cfg.num_patches, cfg.d_model),
+            cfg.activation_dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = registry.init_params(cfg, key)
+    batch = make_batch(cfg, key)
+    logits, aux = registry.train_logits(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+    assert not np.isnan(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_prefill_then_decode(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = registry.init_params(cfg, key)
+    batch = make_batch(cfg, key)
+    logits, cache = registry.prefill(params, cfg, batch, cache_len=S + 4)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = registry.decode_step(params, cfg, cache, tok)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert not np.isnan(np.asarray(logits, np.float32)).any()
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Prefill+decode logits must match the full-sequence forward pass —
+    the KV-cache/recurrent-state path is exact, not approximate.
+
+    MoE caveat: capacity-based routing drops tokens as a function of the
+    whole batch, so exact parity only holds when capacity is large enough
+    that nothing drops — we raise the capacity factor accordingly here."""
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    key = jax.random.PRNGKey(2)
+    params = registry.init_params(cfg, key)
+    batch = make_batch(cfg, key)
+    toks = batch["tokens"]
+
+    # full forward over S tokens: logits at position S-2 predict token S-1
+    full_logits, _ = registry.train_logits(params, cfg, batch)
+
+    pre = {**batch, "tokens": toks[:, :S - 1]}
+    _, cache = registry.prefill(params, cfg, pre, cache_len=S)
+    dec_logits, _ = registry.decode_step(params, cfg, cache,
+                                         toks[:, S - 1:S])
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32), atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        ok, reason = registry.supports(cfg, shape)
+        if not ok:
+            assert arch == "whisper-tiny" and shape.name == "long_500k"
+            continue
+        specs = registry.input_specs(cfg, shape)
+        if shape.kind == "decode":
+            assert specs["token"].shape == (shape.global_batch, 1)
+            assert "cache" in specs
+        else:
+            assert specs["tokens"].shape == (shape.global_batch,
+                                             shape.seq_len)
+
+
+def test_sliding_window_variant_bounds_cache():
+    cfg = get_config("qwen3-1.7b")
+    shape = SHAPES["long_500k"]
+    dcfg = registry.decode_variant(cfg, shape)
+    assert dcfg.sliding_window == registry.LONG_CONTEXT_WINDOW
+    assert registry.cache_window(dcfg, shape) == registry.LONG_CONTEXT_WINDOW
+
+
+def test_ssm_cache_is_constant_size():
+    cfg = get_config("xlstm-350m")
+    s32 = registry.input_specs(cfg, SHAPES["decode_32k"])
+    s500 = registry.input_specs(cfg, SHAPES["long_500k"])
+    size32 = sum(np.prod(l.shape)
+                 for l in jax.tree.leaves(s32["cache"]["layers"]))
+    # per-sequence state identical; only batch differs (128 vs 1)
+    size500 = sum(np.prod(l.shape)
+                  for l in jax.tree.leaves(s500["cache"]["layers"]))
+    assert size32 == 128 * size500

@@ -1,0 +1,131 @@
+"""Roofline analysis tests: loop-corrected HLO statics + analytic FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.roofline import analysis, hlo_parse
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    """The whole point: XLA counts a while body once; we correct it."""
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(sds, sds).compile()
+    got = hlo_parse.analyze(compiled.as_text())
+    expected = 7 * 2 * 64 ** 3
+    assert got["flops"] == pytest.approx(expected, rel=0.01)
+    raw = compiled.cost_analysis().get("flops", 0.0)
+    assert raw < expected / 3   # raw undercounts (body counted once)
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    sds = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    compiled = jax.jit(f).lower(sds, sds).compile()
+    got = hlo_parse.analyze(compiled.as_text())
+    assert got["flops"] == pytest.approx(15 * 2 * 32 ** 3, rel=0.01)
+
+
+def test_plain_matmul_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    compiled = jax.jit(f).lower(a, b).compile()
+    got = hlo_parse.analyze(compiled.as_text())
+    assert got["flops"] == pytest.approx(2 * 128 * 256 * 64, rel=0.01)
+
+
+def test_collective_parse_from_synthetic_hlo():
+    text = """
+HloModule m
+
+ENTRY %main (p0: f32[1024,256]) -> f32[1024,256] {
+  %p0 = f32[1024,256]{1,0} parameter(0)
+  %ar = f32[1024,256]{1,0} all-reduce(%p0), replica_groups={}
+  ROOT %ag = f32[1024,256]{1,0} all-gather(%ar), dimensions={0}
+}
+"""
+    got = hlo_parse.analyze(text)
+    per = 1024 * 256 * 4
+    assert got["collectives"]["all-reduce"] == per
+    assert got["collectives"]["all-gather"] == per
+
+
+class TestAnalyticCounts:
+    @pytest.mark.parametrize("arch,nominal", [
+        ("starcoder2-3b", 3e9), ("qwen1.5-0.5b", 0.5e9),
+        ("qwen1.5-4b", 4e9), ("qwen3-1.7b", 1.7e9),
+        ("recurrentgemma-2b", 2.5e9), ("xlstm-350m", 0.35e9),
+        ("qwen2-vl-72b", 72e9),
+    ])
+    def test_param_count_near_nominal(self, arch, nominal):
+        total, active = analysis.count_params(get_config(arch))
+        assert total == active
+        assert 0.4 * nominal < total < 2.2 * nominal, total
+
+    def test_moe_active_much_smaller_than_total(self):
+        total, active = analysis.count_params(get_config("arctic-480b"))
+        assert total > 4e11          # ~480B
+        assert active < total / 10   # top-2 of 128
+
+    def test_llama4_active_ratio(self):
+        # the assigned config (48L, ALL layers MoE 128e, d_ff 8192) totals
+        # ~783B; the real Maverick interleaves MoE every other layer to hit
+        # 400B — we implement the assigned numbers literally. Active params
+        # match the name's "a17b".
+        total, active = analysis.count_params(
+            get_config("llama4-maverick-400b-a17b"))
+        assert 5e11 < total < 9e11
+        assert 1e10 < active < 4e10  # ~17B active ✓
+
+    def test_model_flops_scaling(self):
+        cfg = get_config("qwen3-1.7b")
+        train = analysis.model_flops(cfg, SHAPES["train_4k"])
+        prefill = analysis.model_flops(cfg, SHAPES["prefill_32k"])
+        decode = analysis.model_flops(cfg, SHAPES["decode_32k"])
+        assert train == pytest.approx(3 * prefill, rel=1e-6)
+        assert decode == pytest.approx(
+            prefill * SHAPES["decode_32k"].global_batch
+            / (SHAPES["prefill_32k"].global_batch
+               * SHAPES["prefill_32k"].seq_len), rel=1e-6)
+
+
+class TestRooflineTerms:
+    def _roof(self, flops=1e15, byts=1e12, coll=1e11):
+        return analysis.Roofline(
+            arch="a", shape="s", mesh="single", chips=256,
+            hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll,
+            coll_breakdown={}, model_flops=flops / 2)
+
+    def test_bottleneck_selection(self):
+        r = self._roof(flops=1e20, byts=1.0, coll=1.0)
+        assert r.bottleneck == "compute"
+        r = self._roof(flops=1.0, byts=1e20, coll=1.0)
+        assert r.bottleneck == "memory"
+        r = self._roof(flops=1.0, byts=1.0, coll=1e20)
+        assert r.bottleneck == "collective"
+
+    def test_terms_use_hw_constants(self):
+        r = self._roof()
+        assert r.t_compute == pytest.approx(1e15 / (256 * 197e12))
+        assert r.t_memory == pytest.approx(1e12 / (256 * 819e9))
+        assert r.t_collective == pytest.approx(1e11 / (256 * 50e9))
+        assert r.useful_ratio == pytest.approx(0.5)
