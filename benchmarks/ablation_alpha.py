@@ -6,6 +6,8 @@ choice isn't a cliff. Not part of ``benchmarks.run`` (extra study).
 """
 from __future__ import annotations
 
+import numpy as np
+
 from benchmarks import common
 from repro.core import router
 
@@ -13,12 +15,18 @@ ALPHAS = (0.0, 0.1, 0.3, 0.675, 1.0, 2.0)
 
 
 def run(rounds: int = 300) -> dict:
+    """Each α entry = mean over ``common.SEEDS`` vmapped replications."""
+    seeds = list(range(common.SEEDS))
     out = {}
     for a in ALPHAS:
-        res = router.run_pool_experiment("greedy_linucb", rounds=rounds,
-                                         seed=0, alpha=a)
-        out[f"{a:g}"] = {"accuracy": res.accuracy,
-                         "regret": float(res.cumulative_regret[-1])}
+        sweep = router.run_pool_experiment_sweep(
+            "greedy_linucb", seeds, rounds=rounds, alpha=a)
+        out[f"{a:g}"] = {
+            "accuracy": float(np.mean([r.accuracy for r in sweep])),
+            "accuracy_sd": float(np.std([r.accuracy for r in sweep])),
+            "regret": float(np.mean([r.cumulative_regret[-1]
+                                     for r in sweep])),
+        }
     common.save_json("ablation_alpha", out)
     return out
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro.core import router
 from repro.kernels import ref
 
 
@@ -46,12 +47,38 @@ def run() -> Dict[str, float]:
     sm = jax.jit(ref.sherman_morrison_ref)
     out["sherman_morrison_K6_d384"] = _time(sm, a_inv, xv, mask)
 
+    bsz = 64
+    xs_b = jax.random.normal(ks[1], (bsz, d))
+    masks_b = jax.nn.one_hot(jax.random.randint(ks[2], (bsz,), 0, k), k)
+    smb = jax.jit(ref.sherman_morrison_batch_ref)
+    out[f"sherman_morrison_batch_B{bsz}_K6_d384"] = _time(
+        smb, a_inv, xs_b, masks_b, iters=5)
+
     q = jax.random.normal(ks[0], (1, 1024, 8, 64), jnp.float32)
     kk = jax.random.normal(ks[1], (1, 1024, 2, 64), jnp.float32)
     v = jax.random.normal(ks[2], (1, 1024, 2, 64), jnp.float32)
     fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v,
                                                          causal=True))
     out["attention_ref_S1024_H8"] = _time(fa, q, kk, v, iters=5)
+
+    # scanned experiment driver (rounds/sec at the paper shape) vs the
+    # legacy per-round dispatch loop — the end-to-end hot path the
+    # kernels above serve. Equal round counts, shared median-of-3 timing
+    # (common.median_secs); benchmarks/bench_driver.py holds the full
+    # comparison matrix.
+    rounds = 256
+    for policy in ("greedy_linucb", "budget_linucb"):
+        run_scan = lambda: router.run_pool_experiment(
+            policy, rounds=rounds, dispatch="scan")
+        run_pr = lambda: router.run_pool_experiment(
+            policy, rounds=rounds, dispatch="per_round")
+        run_scan()   # warm the cached jitted drivers
+        run_pr()
+        scan_rps = rounds / common.median_secs(run_scan)
+        pr_rps = rounds / common.median_secs(run_pr)
+        out[f"driver_scan_rounds_per_s_{policy}"] = scan_rps
+        out[f"driver_per_round_rounds_per_s_{policy}"] = pr_rps
+        out[f"driver_scan_speedup_{policy}"] = scan_rps / pr_rps
 
     common.save_json("bench_kernels", out)
     return out
@@ -60,8 +87,12 @@ def run() -> Dict[str, float]:
 def main():
     out = run()
     print("\n=== Kernel micro-benchmarks (jitted reference path, CPU) ===")
-    for name, us in out.items():
-        print(f"{name},{us:.1f}us")
+    for name, v in out.items():
+        if name.startswith("driver_"):
+            unit = "x" if "speedup" in name else "rounds/s"
+            print(f"{name},{v:.1f}{unit}")
+        else:
+            print(f"{name},{v:.1f}us")
     return out, {"all_finite": all(v > 0 for v in out.values())}
 
 

@@ -12,9 +12,10 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (appendix_context, bench_kernels, fig2_budget_cdf,
-                        fig3_budget_sensitivity, table1_2_accuracy_cost,
-                        table3_position, theorem_regret)
+from benchmarks import (appendix_context, bench_driver, bench_kernels,
+                        fig2_budget_cdf, fig3_budget_sensitivity,
+                        table1_2_accuracy_cost, table3_position,
+                        theorem_regret)
 from benchmarks import common
 
 
@@ -38,6 +39,8 @@ def main() -> None:
          - p["strategy1_gemini_only"]),
         ("bench_kernels", bench_kernels,
          lambda p: p["linucb_score_B128_K6_d384"]),
+        ("bench_driver", bench_driver,
+         lambda p: p["pool_d64_sweep6_greedy_linucb"]["speedup"]),
     ]
 
     for name, mod, derive in suites:
@@ -45,7 +48,7 @@ def main() -> None:
         payload, claims = mod.main()
         dt = time.perf_counter() - t0
         # per-round (or per-call) time in µs
-        rounds = common.ROUNDS if "kernel" not in name else 1
+        rounds = common.ROUNDS if not name.startswith("bench") else 1
         us = dt / max(rounds, 1) * 1e6
         rows.append((name, us, derive(payload)))
         all_claims[name] = claims

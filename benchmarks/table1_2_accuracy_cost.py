@@ -9,34 +9,44 @@ Claims validated (paper §6.1.1):
 """
 from __future__ import annotations
 
-import time
 from typing import Dict
+
+import numpy as np
 
 from benchmarks import common
 from repro.core import env as env_mod
 
 
 def run() -> Dict:
+    """Every (policy, dataset) entry is the mean over ``common.SEEDS``
+    replications, run as one vmapped sweep per (policy, dataset)."""
     table_acc: Dict[str, Dict[str, float]] = {}
     table_cost: Dict[str, Dict[str, float]] = {}
+    table_acc_sd: Dict[str, Dict[str, float]] = {}
     timings: Dict[str, float] = {}
 
     names = (common.FIXED + common.BASELINES + common.OUR_POLICIES)
     for name in names:
-        per_ds, dt = common.run_policy_per_dataset(name)
+        per_ds, dt = common.run_policy_sweep_per_dataset(name)
         label = (env_mod.ARM_NAMES[int(name.split(":")[1])]
                  if name.startswith("fixed:") else name)
-        acc = {ds: res.accuracy for ds, res in per_ds.items()}
-        cost = {ds: float(res.cost_per_round.mean())
-                for ds, res in per_ds.items()}
+        accs = {ds: [res.accuracy for res in sweep]
+                for ds, sweep in per_ds.items()}
+        costs = {ds: [float(res.cost_per_round.mean()) for res in sweep]
+                 for ds, sweep in per_ds.items()}
+        acc = {ds: float(np.mean(v)) for ds, v in accs.items()}
+        acc_sd = {ds: float(np.std(v)) for ds, v in accs.items()}
+        cost = {ds: float(np.mean(v)) for ds, v in costs.items()}
         acc["avg"] = sum(acc.values()) / len(acc)
         cost["avg"] = sum(cost.values()) / len(cost)
         table_acc[label] = acc
+        table_acc_sd[label] = acc_sd
         table_cost[label] = cost
         timings[label] = dt
 
-    payload = {"accuracy": table_acc, "cost": table_cost,
-               "timings_s": timings, "rounds": common.ROUNDS}
+    payload = {"accuracy": table_acc, "accuracy_sd": table_acc_sd,
+               "cost": table_cost, "timings_s": timings,
+               "rounds": common.ROUNDS, "seeds": common.SEEDS}
     common.save_json("table1_2", payload)
     return payload
 

@@ -51,10 +51,11 @@ def metallm_select(state: MetaLLMState, x: jax.Array,
 
 
 def metallm_update(state: MetaLLMState, arm: jax.Array, x: jax.Array,
-                   reward: jax.Array, cost: jax.Array,
-                   cfg: MetaLLMConfig) -> MetaLLMState:
+                   reward: jax.Array, cost: jax.Array, cfg: MetaLLMConfig,
+                   mask: jax.Array | None = None) -> MetaLLMState:
     blended = reward - cfg.cost_weight * cost
-    return MetaLLMState(linucb.update(state.bandit, arm, x, blended))
+    return MetaLLMState(linucb.update(state.bandit, arm, x, blended,
+                                      mask=mask))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,9 +94,10 @@ def mixllm_select(state: MixLLMState, x: jax.Array,
 
 
 def mixllm_update(state: MixLLMState, arm: jax.Array, x: jax.Array,
-                  reward: jax.Array, cost: jax.Array,
-                  cfg: MixLLMConfig) -> MixLLMState:
-    onehot = jax.nn.one_hot(arm, state.cost_sum.shape[0])
-    return MixLLMState(linucb.update(state.bandit, arm, x, reward),
-                       state.cost_sum + onehot * cost,
-                       state.cost_count + onehot)
+                  reward: jax.Array, cost: jax.Array, cfg: MixLLMConfig,
+                  mask: jax.Array | None = None) -> MixLLMState:
+    # slice-indexed (like linucb.update) so scan carries update in place
+    m = 1.0 if mask is None else jnp.asarray(mask, state.cost_sum.dtype)
+    return MixLLMState(linucb.update(state.bandit, arm, x, reward, mask=mask),
+                       state.cost_sum.at[arm].add(m * cost),
+                       state.cost_count.at[arm].add(m))

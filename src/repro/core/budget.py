@@ -117,14 +117,18 @@ def select(state: BudgetState, x: jax.Array, cfg: BudgetConfig,
 
 
 def update(state: BudgetState, arm: jax.Array, x: jax.Array,
-           reward: jax.Array, cost: jax.Array) -> BudgetState:
-    """Reward update (Sherman–Morrison) + cost statistics update."""
-    k = cfg_arms = state.cost_sum.shape[0]
-    onehot = jax.nn.one_hot(arm, k, dtype=state.cost_sum.dtype)
+           reward: jax.Array, cost: jax.Array,
+           mask: jax.Array | None = None) -> BudgetState:
+    """Reward update (Sherman–Morrison) + cost statistics update.
+
+    Slice-indexed like ``linucb.update`` so the whole state threads
+    through ``lax.scan`` carries with in-place arm-local writes;
+    ``mask=0`` gates the update off (see ``linucb.update``)."""
+    m = 1.0 if mask is None else jnp.asarray(mask, state.cost_sum.dtype)
     return BudgetState(
-        bandit=linucb.update(state.bandit, arm, x, reward),
-        cost_sum=state.cost_sum + onehot * cost,
-        cost_count=state.cost_count + onehot,
+        bandit=linucb.update(state.bandit, arm, x, reward, mask=mask),
+        cost_sum=state.cost_sum.at[arm].add(m * cost),
+        cost_count=state.cost_count.at[arm].add(m),
     )
 
 

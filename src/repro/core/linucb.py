@@ -9,14 +9,52 @@ paper's pseudocode — an exact, not approximate, reformulation.
 All state is a pytree of arrays and every transition is a pure function, so
 the whole bandit can live inside ``jax.jit``/``lax.scan`` loops and be
 dispatched on TPU alongside the models it routes to.
+
+Backend switch
+--------------
+``ucb_scores`` / ``update`` / ``batch_update`` have two implementations of
+the same math: the pure-jnp path (``kernels/ref.py`` semantics, fastest
+under XLA on CPU) and the fused Pallas kernels
+(``kernels/linucb_score.py`` / ``kernels/sherman_morrison.py``, the TPU
+production path shared with ``serving.scheduler``). Selection is a
+module-level switch — ``set_backend("ref" | "pallas" |
+"pallas_interpret" | "auto")`` or env var ``REPRO_LINUCB_BACKEND`` —
+resolved at trace time, so every driver (per-round, scanned, vmapped
+sweeps) picks up the same hot-path implementation with no API change.
+"auto" means: Pallas on TPU, jnp reference elsewhere.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+BACKENDS = ("auto", "ref", "pallas", "pallas_interpret")
+_BACKEND = os.environ.get("REPRO_LINUCB_BACKEND", "auto")
+if _BACKEND not in BACKENDS:
+    import warnings
+    warnings.warn(f"REPRO_LINUCB_BACKEND={_BACKEND!r} is not one of "
+                  f"{BACKENDS}; falling back to 'auto'")
+    _BACKEND = "auto"
+
+
+def set_backend(name: str) -> str:
+    """Select the hot-path implementation; returns the previous setting."""
+    global _BACKEND
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r} (choose from {BACKENDS})")
+    prev, _BACKEND = _BACKEND, name
+    return prev
+
+
+def resolved_backend() -> str:
+    """The backend actually in effect: 'ref', 'pallas' or 'pallas_interpret'."""
+    if _BACKEND == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return _BACKEND
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,23 +69,61 @@ class LinUCBConfig:
 
 
 class LinUCBState(NamedTuple):
-    """Per-arm sufficient statistics. Shapes: (K, d, d), (K, d), (K, d), (K,)."""
+    """Per-arm sufficient statistics.
 
-    a_inv: jax.Array   # A_k⁻¹
-    b: jax.Array       # Σ r·x per arm
-    theta: jax.Array   # A_k⁻¹ b_k (cached ridge estimate)
-    counts: jax.Array  # number of pulls per arm
+    ``a_inv_t`` stores every arm's inverse in one 2-D block matrix of
+    shape ``(d, K·d)`` — column block ``k`` is ``A_k⁻¹`` (symmetric, so
+    row/column orientation is interchangeable). The flat 2-D layout is
+    deliberate: XLA:CPU only dispatches a dot to the fast GEMM runtime
+    when its operands are plain rank-2 buffers — a ``(K,d,d)`` tensor
+    reshaped at trace time gets fused into a slow loop nest instead. The
+    scoring hot path is then one ``(B,d) @ (d,K·d)`` GEMM.
+
+    Use the :attr:`a_inv` property for the conventional ``(K, d, d)``
+    view (tests, Pallas kernels, diagnostics).
+    """
+
+    a_inv_t: jax.Array  # (d, K·d) — block k = A_k⁻¹
+    b: jax.Array        # (K, d) Σ r·x per arm
+    theta: jax.Array    # (K, d) A_k⁻¹ b_k (cached ridge estimate)
+    counts: jax.Array   # (K,) number of pulls per arm
+
+    @property
+    def num_arms(self) -> int:
+        return self.b.shape[0]
+
+    @property
+    def a_inv(self) -> jax.Array:
+        """(K, d, d) view of the per-arm inverses (transpose copy)."""
+        d, kd = self.a_inv_t.shape
+        return jnp.swapaxes(self.a_inv_t.reshape(d, kd // d, d), 0, 1)
+
+
+def _pack_a_inv(a_inv: jax.Array) -> jax.Array:
+    """(K, d, d) → the state's (d, K·d) block layout."""
+    k, d, _ = a_inv.shape
+    return jnp.swapaxes(a_inv, 0, 1).reshape(d, k * d)
 
 
 def init(cfg: LinUCBConfig) -> LinUCBState:
     k, d = cfg.num_arms, cfg.dim
     eye = jnp.eye(d, dtype=cfg.dtype) / cfg.lam
     return LinUCBState(
-        a_inv=jnp.broadcast_to(eye, (k, d, d)).copy(),
+        a_inv_t=jnp.tile(eye, (1, k)),
         b=jnp.zeros((k, d), cfg.dtype),
         theta=jnp.zeros((k, d), cfg.dtype),
         counts=jnp.zeros((k,), jnp.int32),
     )
+
+
+def _quad_forms(state: LinUCBState, xb: jax.Array) -> jax.Array:
+    """``x_b ᵀ A_k⁻¹ x_b`` for every (context, arm): (B, K).
+
+    One rank-2 GEMM against the (d, K·d) block matrix; symmetry of A⁻¹
+    makes contracting the row axis equal to the paper's xᵀA⁻¹x."""
+    d, kd = state.a_inv_t.shape
+    xa = (xb @ state.a_inv_t).reshape(xb.shape[0], kd // d, d)  # (B, K, d)
+    return jnp.sum(xa * xb[:, None, :], axis=-1)
 
 
 def ucb_scores(state: LinUCBState, x: jax.Array, alpha: float) -> jax.Array:
@@ -58,20 +134,22 @@ def ucb_scores(state: LinUCBState, x: jax.Array, alpha: float) -> jax.Array:
     """
     squeezed = x.ndim == 1
     xb = jnp.atleast_2d(x)                                    # (B, d)
-    mean = jnp.einsum("bd,kd->bk", xb, state.theta)
-    # quadratic form x A⁻¹ x, batched over arms and contexts
-    ax = jnp.einsum("kde,be->bkd", state.a_inv, xb)           # (B, K, d)
-    quad = jnp.einsum("bkd,bd->bk", ax, xb)
-    scores = mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
+    backend = resolved_backend()
+    if backend == "ref":
+        mean = jnp.einsum("bd,kd->bk", xb, state.theta)
+        quad = _quad_forms(state, xb)
+        scores = mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
+    else:
+        from repro.kernels import linucb_score as _ls
+        scores = _ls.linucb_score(xb, state.theta, state.a_inv, float(alpha),
+                                  interpret=backend == "pallas_interpret")
     return scores[0] if squeezed else scores
 
 
 def confidence_width(state: LinUCBState, x: jax.Array) -> jax.Array:
     """``sqrt(xᵀ A_k⁻¹ x)`` per arm (the width α multiplies)."""
     xb = jnp.atleast_2d(x)
-    ax = jnp.einsum("kde,be->bkd", state.a_inv, xb)
-    quad = jnp.einsum("bkd,bd->bk", ax, xb)
-    w = jnp.sqrt(jnp.maximum(quad, 0.0))
+    w = jnp.sqrt(jnp.maximum(_quad_forms(state, xb), 0.0))
     return w[0] if x.ndim == 1 else w
 
 
@@ -81,40 +159,98 @@ def select(state: LinUCBState, x: jax.Array, cfg: LinUCBConfig) -> jax.Array:
 
 
 def update(state: LinUCBState, arm: jax.Array, x: jax.Array,
-           reward: jax.Array) -> LinUCBState:
+           reward: jax.Array,
+           mask: Optional[jax.Array] = None) -> LinUCBState:
     """Rank-1 posterior update of the selected arm (Alg. 1 line 11).
 
     Sherman–Morrison:  (A + xxᵀ)⁻¹ = A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x).
-    Implemented with a one-hot mask over arms so it stays jit-able with a
-    traced ``arm`` index.
+    Implemented with dynamic-slice updates so it stays jit-able with a
+    traced ``arm`` index and only the selected arm's statistics are
+    written. ``θ_k`` is maintained by the exact O(d) identity
+    ``θ_new = θ + r·ax − ax·(⟨ax,b⟩ + r·⟨x,ax⟩)/denom`` (with
+    ``ax = A⁻¹x``) instead of a (d,d) matvec.
+
+    ``mask``: optional scalar bool/float; 0 makes the update a no-op
+    while keeping the op graph static — how the experiment drivers gate
+    not-executed steps without conditionals or full-state selects.
     """
-    k = state.b.shape[0]
-    onehot = jax.nn.one_hot(arm, k, dtype=state.b.dtype)       # (K,)
-    a_inv_k = state.a_inv[arm]                                 # (d, d)
-    ax = a_inv_k @ x                                           # (d,)
-    denom = 1.0 + x @ ax
-    delta = jnp.outer(ax, ax) / denom                          # (d, d)
-    a_inv = state.a_inv - onehot[:, None, None] * delta[None]
-    b = state.b + onehot[:, None] * (reward * x)[None]
-    theta_k = a_inv[arm] @ b[arm]
-    theta = jnp.where(onehot[:, None] > 0, theta_k[None], state.theta)
-    counts = state.counts + onehot.astype(jnp.int32)
-    return LinUCBState(a_inv=a_inv, b=b, theta=theta, counts=counts)
+    d, kd = state.a_inv_t.shape
+    col = arm * d
+    m = None if mask is None else jnp.asarray(mask, state.b.dtype)
+    backend = resolved_backend()
+    if backend == "ref":
+        # one full-width GEMM then slice the arm's d entries, NOT
+        # ``x @ block`` after the slice: a dot whose operand is a
+        # dynamic-slice producer gets loop-fused by XLA:CPU (no fast GEMM
+        # dispatch) and measures ~1.8× slower despite K× less traffic.
+        # The rank-1 write is still confined to the arm's (d,d) block, so
+        # inside a scan carry XLA updates the block matrix in place.
+        ax = jax.lax.dynamic_slice(x @ state.a_inv_t, (col,), (d,))  # (d,)
+        denom = 1.0 + x @ ax
+        delta = jnp.outer(ax, ax) / denom                      # (d, d)
+        if m is not None:
+            delta = m * delta
+        block = jax.lax.dynamic_slice(state.a_inv_t, (0, col), (d, d))
+        a_inv_t = jax.lax.dynamic_update_slice(state.a_inv_t, block - delta,
+                                               (0, col))
+    else:
+        from repro.kernels import sherman_morrison as _sm
+        k = state.b.shape[0]
+        onehot = jax.nn.one_hot(arm, k, dtype=state.b.dtype)   # (K,)
+        if m is not None:
+            onehot = m * onehot
+        a_inv = _sm.sherman_morrison(state.a_inv, x, onehot,
+                                     interpret=backend == "pallas_interpret")
+        a_inv_t = _pack_a_inv(a_inv)
+        ax = jax.lax.dynamic_slice(x @ state.a_inv_t, (col,), (d,))
+        denom = 1.0 + x @ ax
+    # θ_k incrementally, in O(d):  A⁻¹_new b_new
+    #   = (A⁻¹ − axaxᵀ/denom)(b + r·x)
+    #   = θ_old + r·ax − ax·(⟨ax,b⟩ + r·⟨ax,x⟩)/denom
+    # using the cached invariant θ_old = A⁻¹b — no (d,d) matvec needed.
+    b_arm = state.b[arm]
+    scale = (ax @ b_arm + reward * (x @ ax)) / denom
+    dtheta = reward * ax - scale * ax
+    db = reward * x
+    one = jnp.int32(1)
+    if m is not None:
+        dtheta, db = m * dtheta, m * db
+        one = jnp.asarray(mask, jnp.int32)
+    b = state.b.at[arm].add(db)
+    theta = state.theta.at[arm].add(dtheta)
+    counts = state.counts.at[arm].add(one)
+    return LinUCBState(a_inv_t=a_inv_t, b=b, theta=theta, counts=counts)
 
 
 def batch_update(state: LinUCBState, arms: jax.Array, xs: jax.Array,
                  rewards: jax.Array) -> LinUCBState:
-    """Fold a batch of (arm, x, r) observations into the state sequentially.
+    """Fold a batch of (arm, x, r) observations into the state.
 
+    Semantically identical to applying :func:`update` once per row in
+    batch order, but the inverse fold runs as one batched Sherman–Morrison
+    (per-arm sequential, all arms in parallel) and ``b`` / ``counts`` /
+    ``theta`` as single vectorized ops — no scan over B full-state updates.
     Order matters only up to floating point; Sherman–Morrison applied in any
     order yields the same ``A_k`` so results are deterministic given the batch.
     """
-    def body(s, inp):
-        a, x, r = inp
-        return update(s, a, x, r), None
-
-    state, _ = jax.lax.scan(body, state, (arms, xs, rewards))
-    return state
+    k = state.b.shape[0]
+    onehot = jax.nn.one_hot(arms, k, dtype=state.b.dtype)      # (B, K)
+    backend = resolved_backend()
+    if backend == "ref":
+        from repro.kernels import ref as _ref
+        a_inv = _ref.sherman_morrison_batch_ref(state.a_inv, xs, onehot)
+    else:
+        from repro.kernels import sherman_morrison as _sm
+        a_inv = _sm.sherman_morrison_batch(
+            state.a_inv, xs, onehot,
+            interpret=backend == "pallas_interpret")
+    b = state.b + jnp.einsum("bk,bd->kd", onehot, rewards[:, None] * xs)
+    counts = state.counts + onehot.sum(axis=0).astype(jnp.int32)
+    touched = onehot.sum(axis=0) > 0
+    theta = jnp.where(touched[:, None],
+                      jnp.einsum("kde,ke->kd", a_inv, b), state.theta)
+    return LinUCBState(a_inv_t=_pack_a_inv(a_inv), b=b, theta=theta,
+                       counts=counts)
 
 
 def dense_a(state: LinUCBState, cfg: LinUCBConfig) -> jax.Array:

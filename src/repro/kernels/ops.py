@@ -31,6 +31,11 @@ def sherman_morrison(a_inv, x, mask):
     return _sm.sherman_morrison(a_inv, x, mask, interpret=INTERPRET)
 
 
+@jax.jit
+def sherman_morrison_batch(a_inv, xs, mask):
+    return _sm.sherman_morrison_batch(a_inv, xs, mask, interpret=INTERPRET)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window",
                                              "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal: bool = True,

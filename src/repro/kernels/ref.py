@@ -30,6 +30,22 @@ def sherman_morrison_ref(a_inv: jax.Array, x: jax.Array,
     return a_inv - mask[:, None, None] * delta
 
 
+def sherman_morrison_batch_ref(a_inv: jax.Array, xs: jax.Array,
+                               mask: jax.Array) -> jax.Array:
+    """Sequential fold of B rank-1 updates, in batch order.
+
+    a_inv: (K,d,d); xs: (B,d); mask: (B,K) float (1.0 = fold row b into
+    arm k). Row b's update sees the inverse after rows 0..b-1 — the same
+    semantics as applying :func:`sherman_morrison_ref` once per row."""
+
+    def fold(a, inp):
+        x, m = inp
+        return sherman_morrison_ref(a, x, m), None
+
+    out, _ = jax.lax.scan(fold, a_inv, (xs, mask))
+    return out
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True,
                         window: Optional[int] = None) -> jax.Array:

@@ -9,6 +9,9 @@ Grid (K,): one program per arm, the (d,d) inverse VMEM-resident, one
 matvec + one outer product on the MXU. Masked arms write back unchanged —
 keeping the kernel shape static so the router can jit one update for any
 selection pattern.
+
+``sherman_morrison_batch`` folds a whole (B,d) batch of contexts per arm
+in one ``pallas_call`` — the replay/ingest path of ``linucb.batch_update``.
 """
 from __future__ import annotations
 
@@ -43,3 +46,50 @@ def sherman_morrison(a_inv: jax.Array, x: jax.Array, mask: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((k, d, d), a_inv.dtype),
         interpret=interpret,
     )(a_inv, x.reshape(1, d), mask.astype(jnp.float32))
+
+
+def _batch_kernel(a_inv_ref, xs_ref, mask_ref, o_ref):
+    """Fold B rank-1 terms into one arm's inverse, in batch order.
+
+    The per-arm fold is inherently sequential (each rank-1 update reads
+    the previous inverse), but all K arms run in parallel across the grid
+    and the (d,d) inverse stays VMEM-resident for the whole batch — one
+    HBM read + one write per arm instead of B of each.
+    """
+    a_inv = a_inv_ref[0].astype(jnp.float32)        # (d, d)
+    xs = xs_ref[...].astype(jnp.float32)            # (B, d)
+    m = mask_ref[0].astype(jnp.float32)             # (B,)
+
+    def fold(i, a):
+        x = jax.lax.dynamic_slice_in_dim(xs, i, 1)  # (1, d)
+        ax = x @ a                                  # (1, d)
+        denom = 1.0 + jnp.sum(ax * x)
+        delta = (ax.T @ ax) / denom                 # (d, d)
+        return a - m[i] * delta
+
+    out = jax.lax.fori_loop(0, xs.shape[0], fold, a_inv)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def sherman_morrison_batch(a_inv: jax.Array, xs: jax.Array, mask: jax.Array,
+                           *, interpret: bool = False) -> jax.Array:
+    """Batched sequential fold: a_inv (K,d,d); xs (B,d); mask (B,K).
+
+    Equivalent to applying :func:`sherman_morrison` once per batch row in
+    order, but as a single ``pallas_call`` — grid (K,), each program folds
+    the whole batch for its arm with the inverse held in VMEM.
+    """
+    k, d, _ = a_inv.shape
+    b = xs.shape[0]
+    return pl.pallas_call(
+        _batch_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda j: (j, 0, 0)),
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((1, b), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d, d), lambda j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, d, d), a_inv.dtype),
+        interpret=interpret,
+    )(a_inv, xs, mask.astype(jnp.float32).T)

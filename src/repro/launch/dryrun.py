@@ -137,7 +137,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
     t1 = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_parse.xla_cost_dict(compiled)
     hlo = compiled.as_text()
     # loop-corrected static analysis (XLA's cost_analysis counts while
     # bodies once — useless for scan-over-layers; see roofline/hlo_parse)

@@ -313,3 +313,15 @@ def _collective_detail(comps, tables, entry, limit: int = 2000):
     visit(entry, 1.0)
     rows.sort(key=lambda r: -r[1])
     return rows[:40]
+
+
+def xla_cost_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jaxlibs return a dict, newer ones a one-element list of dicts
+    (one per partition). Returns a plain {property: value} dict either way
+    (empty if XLA reports nothing)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

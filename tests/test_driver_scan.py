@@ -1,0 +1,201 @@
+"""Device-resident experiment engine: equivalence guarantees.
+
+The chunked-scan driver, the legacy per-round driver, and the vmapped
+multi-seed sweep must all produce bit-identical ``ExperimentResult``
+arrays for the same seed — the scan/vmap lifting is a pure dispatch
+transformation. Likewise the Pallas kernels (interpret mode on CPU) must
+match the jnp reference path inside ``linucb.ucb_scores`` / ``update``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import linucb, router
+
+FIELDS = ("arms", "rewards", "costs", "regrets", "budgets", "datasets")
+ROUNDS = 60
+
+
+def _assert_results_equal(a, b, label=""):
+    for f in FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{label}: field {f!r}")
+
+
+class TestScanEqualsPerRound:
+    @pytest.mark.parametrize("policy", router.POLICIES)
+    def test_pool_bitwise(self, policy):
+        a = router.run_pool_experiment(policy, rounds=ROUNDS, seed=5,
+                                       dispatch="per_round")
+        b = router.run_pool_experiment(policy, rounds=ROUNDS, seed=5,
+                                       dispatch="scan", chunk_size=32)
+        _assert_results_equal(a, b, policy)
+
+    def test_chunk_size_invariance(self):
+        """Chunking (incl. the padded tail) never changes results."""
+        base = router.run_pool_experiment("greedy_linucb", rounds=50,
+                                          seed=1, chunk_size=50)
+        for chunk in (1, 7, 16, 256):
+            got = router.run_pool_experiment("greedy_linucb", rounds=50,
+                                             seed=1, chunk_size=chunk)
+            _assert_results_equal(base, got, f"chunk={chunk}")
+
+    def test_synthetic_bitwise(self):
+        for policy in ("greedy_linucb", "budget_linucb"):
+            a = router.run_synthetic_experiment(policy, rounds=200, seed=2,
+                                                dispatch="per_round")
+            b = router.run_synthetic_experiment(policy, rounds=200, seed=2,
+                                                dispatch="scan",
+                                                chunk_size=64)
+            np.testing.assert_array_equal(a["per_round_regret"],
+                                          b["per_round_regret"], policy)
+
+    def test_unknown_dispatch_rejected(self):
+        with pytest.raises(ValueError):
+            router.run_pool_experiment("greedy_linucb", rounds=4,
+                                       dispatch="bogus")
+
+
+class TestVmappedSweep:
+    @pytest.mark.parametrize("policy", ["greedy_linucb", "budget_linucb",
+                                        "random", "voting"])
+    def test_sweep_matches_sequential(self, policy):
+        seeds = [0, 3, 11]
+        sweep = router.run_pool_experiment_sweep(policy, seeds,
+                                                 rounds=ROUNDS,
+                                                 chunk_size=32)
+        assert len(sweep) == len(seeds)
+        for s, res in zip(seeds, sweep):
+            seq = router.run_pool_experiment(policy, rounds=ROUNDS, seed=s,
+                                             chunk_size=32)
+            _assert_results_equal(seq, res, f"{policy} seed={s}")
+
+    def test_sweep_per_seed_budgets(self):
+        """(S,1) budgets give each replication its own budget table."""
+        seeds = [0, 1]
+        budgets = np.asarray([5e-4, 2e-3], np.float32)
+        sweep = router.run_pool_experiment_sweep(
+            "budget_linucb", seeds, rounds=40,
+            base_budget=budgets[:, None])
+        for i, res in enumerate(sweep):
+            seq = router.run_pool_experiment(
+                "budget_linucb", rounds=40, seed=seeds[i],
+                base_budget=float(budgets[i]))
+            _assert_results_equal(seq, res, f"budget seed={seeds[i]}")
+
+    def test_sweep_ambiguous_budget_rejected(self):
+        """1-D budgets of the wrong length fail loudly (S==D ambiguity)."""
+        with pytest.raises(ValueError):
+            router.run_pool_experiment_sweep(
+                "budget_linucb", [0, 1], rounds=8,
+                base_budget=np.asarray([1e-3, 2e-3], np.float32))
+
+    def test_synthetic_sweep_matches_sequential(self):
+        seeds = [4, 9]
+        sweep = router.run_synthetic_experiment_sweep(
+            "greedy_linucb", seeds, rounds=150)
+        assert sweep["per_round_regret"].shape == (2, 150)
+        for i, s in enumerate(seeds):
+            seq = router.run_synthetic_experiment("greedy_linucb",
+                                                  rounds=150, seed=s)
+            np.testing.assert_array_equal(sweep["per_round_regret"][i],
+                                          seq["per_round_regret"])
+
+
+class TestKernelBackendParity:
+    """Pallas kernels (interpret mode) == jnp reference inside the bandit."""
+
+    def _trained_state(self, k=4, d=32, n=25):
+        cfg = linucb.LinUCBConfig(num_arms=k, dim=d)
+        s = linucb.init(cfg)
+        key = jax.random.PRNGKey(0)
+        for i in range(n):
+            kx, kr, key = jax.random.split(key, 3)
+            x = jax.random.uniform(kx, (d,))
+            x = x / jnp.linalg.norm(x)
+            s = linucb.update(s, jnp.int32(i % k), x,
+                              jax.random.bernoulli(kr).astype(jnp.float32))
+        return cfg, s, key
+
+    def test_set_backend_validates(self):
+        with pytest.raises(ValueError):
+            linucb.set_backend("not-a-backend")
+        assert linucb.resolved_backend() in ("ref", "pallas",
+                                             "pallas_interpret")
+
+    def test_backend_switch_reaches_cached_drivers(self, monkeypatch):
+        """set_backend() after a first run must re-trace the drivers —
+        the backend is part of the jitted-driver cache key, so a cached
+        'ref' program may not be silently reused."""
+        from repro.kernels import linucb_score as ls_mod
+        # compile the 'ref' program for this exact config first
+        router.run_pool_experiment("greedy_linucb", rounds=9, seed=0)
+        calls = {"n": 0}
+        orig = ls_mod.linucb_score
+
+        def counting(*args, **kwargs):
+            calls["n"] += 1
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(ls_mod, "linucb_score", counting)
+        prev = linucb.set_backend("pallas_interpret")
+        try:
+            router.run_pool_experiment("greedy_linucb", rounds=9, seed=0)
+        finally:
+            linucb.set_backend(prev)
+        assert calls["n"] > 0, \
+            "backend switch did not re-trace the cached driver"
+
+    def test_ucb_scores_parity(self):
+        cfg, s, key = self._trained_state()
+        xs = jax.random.uniform(key, (5, 32))
+        want = linucb.ucb_scores(s, xs, cfg.alpha)
+        prev = linucb.set_backend("pallas_interpret")
+        try:
+            got = linucb.ucb_scores(s, xs, cfg.alpha)
+        finally:
+            linucb.set_backend(prev)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_update_parity(self):
+        cfg, s, key = self._trained_state()
+        x = jax.random.uniform(key, (32,))
+        want = linucb.update(s, jnp.int32(1), x, jnp.float32(1.0))
+        prev = linucb.set_backend("pallas_interpret")
+        try:
+            got = linucb.update(s, jnp.int32(1), x, jnp.float32(1.0))
+        finally:
+            linucb.set_backend(prev)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4), want, got)
+
+    def test_update_mask_gates_to_noop(self):
+        cfg, s, key = self._trained_state()
+        x = jax.random.uniform(key, (32,))
+        got = linucb.update(s, jnp.int32(2), x, jnp.float32(1.0),
+                            mask=jnp.asarray(False))
+        np.testing.assert_array_equal(np.asarray(got.a_inv_t),
+                                      np.asarray(s.a_inv_t))
+        np.testing.assert_array_equal(np.asarray(got.counts),
+                                      np.asarray(s.counts))
+
+    def test_batch_update_parity_and_sequential_equivalence(self):
+        cfg, s, key = self._trained_state()
+        arms = jnp.array([0, 3, 0, 2], jnp.int32)
+        xs = jax.random.uniform(key, (4, 32))
+        rs = jnp.array([1.0, 0.0, 1.0, 1.0])
+        seq = s
+        for a, x, r in zip(arms, xs, rs):
+            seq = linucb.update(seq, a, x, r)
+        batch_ref = linucb.batch_update(s, arms, xs, rs)
+        prev = linucb.set_backend("pallas_interpret")
+        try:
+            batch_pallas = linucb.batch_update(s, arms, xs, rs)
+        finally:
+            linucb.set_backend(prev)
+        for got, label in ((batch_ref, "ref"), (batch_pallas, "pallas")):
+            jax.tree.map(lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3),
+                seq, got)

