@@ -4,6 +4,15 @@ On CPU the production path is the jitted jnp reference (Pallas interpret
 mode is a correctness harness, not a perf path), so we time the jitted
 reference implementations at production-relevant shapes and report the
 per-call latency of the routing hot loop.
+
+The ``pallas_*`` section compares the native ``(d, K·d)`` block-layout
+kernels against the legacy ``(K, d, d)`` entry points, both in interpret
+mode: the legacy wrappers pay the transpose round-trip the pre-PR hot
+path paid on every call, and the legacy single-arm update rewrites all K
+inverses. The structural win is ``pallas_update_layout_speedup``
+(O(K·d²) → O(d²), ~8× at K=6 — asserted ≥ 2 by the health check); the
+score/batch legs only shed a transpose from ~10 ms of interpret-mode
+work, so they hover at parity within this container's ±40% timing noise.
 """
 from __future__ import annotations
 
@@ -15,17 +24,22 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core import router
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
-def _time(fn, *args, iters: int = 20) -> float:
+def _time(fn, *args, iters: int = 20, repeats: int = 3) -> float:
+    """Best-of-``repeats`` mean latency (µs) — min over repeats rejects
+    scheduler noise that a single pass happily reports as ±20%."""
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6   # µs
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
 
 
 def run() -> Dict[str, float]:
@@ -53,6 +67,36 @@ def run() -> Dict[str, float]:
     smb = jax.jit(ref.sherman_morrison_batch_ref)
     out[f"sherman_morrison_batch_B{bsz}_K6_d384"] = _time(
         smb, a_inv, xs_b, masks_b, iters=5)
+
+    # native (d, K·d) Pallas kernels vs the legacy (K,d,d) entry points
+    # (interpret mode on CPU — the real block algorithm as traced ops)
+    a_inv_t = ref.pack_block(a_inv)
+    out["pallas_native_score_B128_K6_d384"] = _time(
+        ops.linucb_score_blocked, x, theta, a_inv_t, 0.675, iters=10,
+        repeats=5)
+    out["pallas_kdd_score_B128_K6_d384"] = _time(
+        ops.linucb_score, x, theta, a_inv, 0.675, iters=10, repeats=5)
+    out["pallas_score_layout_speedup"] = (
+        out["pallas_kdd_score_B128_K6_d384"]
+        / out["pallas_native_score_B128_K6_d384"])
+
+    arm_j = jnp.int32(2)
+    out["pallas_native_update_arm_K6_d384"] = _time(
+        ops.sherman_morrison_arm, a_inv_t, xv, arm_j, jnp.float32(1.0),
+        iters=5)
+    out["pallas_kdd_update_K6_d384"] = _time(
+        ops.sherman_morrison, a_inv, xv, mask, iters=5)
+    out["pallas_update_layout_speedup"] = (
+        out["pallas_kdd_update_K6_d384"]
+        / out["pallas_native_update_arm_K6_d384"])
+
+    out[f"pallas_native_batch_B{bsz}_K6_d384"] = _time(
+        ops.sherman_morrison_batch_blocked, a_inv_t, xs_b, masks_b, iters=3)
+    out[f"pallas_kdd_batch_B{bsz}_K6_d384"] = _time(
+        ops.sherman_morrison_batch, a_inv, xs_b, masks_b, iters=3)
+    out["pallas_batch_layout_speedup"] = (
+        out[f"pallas_kdd_batch_B{bsz}_K6_d384"]
+        / out[f"pallas_native_batch_B{bsz}_K6_d384"])
 
     q = jax.random.normal(ks[0], (1, 1024, 8, 64), jnp.float32)
     kk = jax.random.normal(ks[1], (1, 1024, 2, 64), jnp.float32)
@@ -88,12 +132,14 @@ def main():
     out = run()
     print("\n=== Kernel micro-benchmarks (jitted reference path, CPU) ===")
     for name, v in out.items():
-        if name.startswith("driver_"):
-            unit = "x" if "speedup" in name else "rounds/s"
-            print(f"{name},{v:.1f}{unit}")
+        if "speedup" in name:
+            print(f"{name},{v:.2f}x")
+        elif name.startswith("driver_"):
+            print(f"{name},{v:.1f}rounds/s")
         else:
             print(f"{name},{v:.1f}us")
-    return out, {"all_finite": all(v > 0 for v in out.values())}
+    return out, {"all_finite": all(v > 0 for v in out.values()),
+                 "update_layout_win": out["pallas_update_layout_speedup"] >= 2.0}
 
 
 if __name__ == "__main__":

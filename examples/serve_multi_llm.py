@@ -80,10 +80,10 @@ def main():
               f"spend=${spend.sum():.4f}")
 
     print("\nfinal traffic shares vs hidden best arms:")
-    scores = np.asarray(sched._score(sched.state, jnp.asarray(
-        np.stack([features.embed_text(t, DIM) for t in TOPICS]))))
+    prefer = sched.route(np.stack([features.embed_text(t, DIM)
+                                   for t in TOPICS]))
     for t, topic in enumerate(TOPICS):
-        print(f"  {topic!r}: router prefers {arms[int(scores[t].argmax())].name},"
+        print(f"  {topic!r}: router prefers {arms[int(prefer[t])].name},"
               f" hidden best {arms[int(affinity[t].argmax())].name}")
 
 

@@ -93,7 +93,10 @@ def scores(state: BudgetState, x: jax.Array, cfg: BudgetConfig,
     c_hat, beta = cost_estimates(state, cfg)
     lower = jnp.maximum(c_hat - beta, cfg.eps)
     score = ucb / lower
-    feasible = c_hat <= remaining_budget
+    # remaining may be a scalar (shared budget) or (B,) per-request (the
+    # serving scheduler's batched route); trailing-axis broadcast keeps
+    # feasibility aligned with the (…, K) scores either way.
+    feasible = c_hat <= jnp.asarray(remaining_budget)[..., None]
     return score, feasible
 
 

@@ -21,8 +21,9 @@ def _token_seed(token: str) -> int:
 
 
 def embed_text(text: str, dim: int = DIM) -> np.ndarray:
-    """Deterministic bag-of-hashed-tokens embedding, unit norm, non-negative
-    mean component so linear satisfaction scores land in a sane range."""
+    """Deterministic bag-of-hashed-tokens embedding, unit norm (or the
+    zero vector for token-free input). Components are signed — each token
+    contributes a hashed standard-normal direction."""
     vec = np.zeros(dim, np.float32)
     for tok in text.lower().split():
         rng = np.random.default_rng(_token_seed(tok))

@@ -21,10 +21,17 @@ module-level switch — ``set_backend("ref" | "pallas" |
 "pallas_interpret" | "auto")`` or env var ``REPRO_LINUCB_BACKEND`` —
 resolved at trace time, so every driver (per-round, scanned, vmapped
 sweeps) picks up the same hot-path implementation with no API change.
-"auto" means: Pallas on TPU, jnp reference elsewhere.
+"auto" means: Pallas on TPU, jnp reference elsewhere. ``backend_scope``
+scopes a temporary override (tests, the serving scheduler, CI legs).
+
+Both backends consume the ``(d, K·d)`` block state NATIVELY: the Pallas
+kernels take the block matrix directly (BlockSpec column block k = arm
+k's A_k⁻¹), so the hot path never materializes a ``(K, d, d)`` tensor or
+pays a transpose — TPU serving is zero-copy with the experiment engine.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import NamedTuple, Optional
@@ -57,6 +64,22 @@ def resolved_backend() -> str:
     return _BACKEND
 
 
+@contextlib.contextmanager
+def backend_scope(name: Optional[str] = None):
+    """Temporarily select a backend; restores the previous one on exit.
+
+    ``None`` keeps the current setting (a no-op scope). Yields the
+    resolved backend in effect inside the scope. Trace-time only — safe
+    to use around jit tracing (the scheduler keys its compiled programs
+    on the backend name).
+    """
+    prev = set_backend(name) if name is not None else _BACKEND
+    try:
+        yield resolved_backend()
+    finally:
+        set_backend(prev)
+
+
 @dataclasses.dataclass(frozen=True)
 class LinUCBConfig:
     """Hyper-parameters of Greedy LinUCB (paper §4, Experiment §6)."""
@@ -79,8 +102,11 @@ class LinUCBState(NamedTuple):
     reshaped at trace time gets fused into a slow loop nest instead. The
     scoring hot path is then one ``(B,d) @ (d,K·d)`` GEMM.
 
-    Use the :attr:`a_inv` property for the conventional ``(K, d, d)``
-    view (tests, Pallas kernels, diagnostics).
+    The Pallas kernels consume this layout natively (their BlockSpecs
+    address column block k directly), so the fast path is identical on
+    both backends. Use the :attr:`a_inv` property for the conventional
+    ``(K, d, d)`` view (tests, diagnostics) — it is a transpose COPY,
+    never touched on the hot path.
     """
 
     a_inv_t: jax.Array  # (d, K·d) — block k = A_k⁻¹
@@ -95,14 +121,8 @@ class LinUCBState(NamedTuple):
     @property
     def a_inv(self) -> jax.Array:
         """(K, d, d) view of the per-arm inverses (transpose copy)."""
-        d, kd = self.a_inv_t.shape
-        return jnp.swapaxes(self.a_inv_t.reshape(d, kd // d, d), 0, 1)
-
-
-def _pack_a_inv(a_inv: jax.Array) -> jax.Array:
-    """(K, d, d) → the state's (d, K·d) block layout."""
-    k, d, _ = a_inv.shape
-    return jnp.swapaxes(a_inv, 0, 1).reshape(d, k * d)
+        from repro.kernels.ref import unpack_block
+        return unpack_block(self.a_inv_t)
 
 
 def init(cfg: LinUCBConfig) -> LinUCBState:
@@ -140,9 +160,11 @@ def ucb_scores(state: LinUCBState, x: jax.Array, alpha: float) -> jax.Array:
         quad = _quad_forms(state, xb)
         scores = mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
     else:
+        # native block-layout kernel: zero-copy against the state buffer
         from repro.kernels import linucb_score as _ls
-        scores = _ls.linucb_score(xb, state.theta, state.a_inv, float(alpha),
-                                  interpret=backend == "pallas_interpret")
+        scores = _ls.linucb_score_blocked(
+            xb, state.theta, state.a_inv_t, float(alpha),
+            interpret=backend == "pallas_interpret")
     return scores[0] if squeezed else scores
 
 
@@ -194,15 +216,16 @@ def update(state: LinUCBState, arm: jax.Array, x: jax.Array,
         a_inv_t = jax.lax.dynamic_update_slice(state.a_inv_t, block - delta,
                                                (0, col))
     else:
+        # native single-arm kernel: scalar-prefetch indexes the arm's
+        # (d, d) column block, the rest of the buffer aliases through —
+        # O(d²) work, no (K,d,d) round-trip, and ``ax`` (computed inside
+        # the kernel anyway) comes back so the θ update below needs no
+        # second GEMM over the block matrix.
         from repro.kernels import sherman_morrison as _sm
-        k = state.b.shape[0]
-        onehot = jax.nn.one_hot(arm, k, dtype=state.b.dtype)   # (K,)
-        if m is not None:
-            onehot = m * onehot
-        a_inv = _sm.sherman_morrison(state.a_inv, x, onehot,
-                                     interpret=backend == "pallas_interpret")
-        a_inv_t = _pack_a_inv(a_inv)
-        ax = jax.lax.dynamic_slice(x @ state.a_inv_t, (col,), (d,))
+        gate = jnp.float32(1.0) if m is None else m
+        a_inv_t, ax = _sm.sherman_morrison_arm(
+            state.a_inv_t, x, arm, gate,
+            interpret=backend == "pallas_interpret")
         denom = 1.0 + x @ ax
     # θ_k incrementally, in O(d):  A⁻¹_new b_new
     #   = (A⁻¹ − axaxᵀ/denom)(b + r·x)
@@ -233,27 +256,31 @@ def batch_update(state: LinUCBState, arms: jax.Array, xs: jax.Array,
     Order matters only up to floating point; Sherman–Morrison applied in any
     order yields the same ``A_k`` so results are deterministic given the batch.
     """
+    d, kd = state.a_inv_t.shape
     k = state.b.shape[0]
     onehot = jax.nn.one_hot(arms, k, dtype=state.b.dtype)      # (B, K)
     backend = resolved_backend()
     if backend == "ref":
         from repro.kernels import ref as _ref
-        a_inv = _ref.sherman_morrison_batch_ref(state.a_inv, xs, onehot)
+        a_inv_t = _ref.sherman_morrison_batch_blocked_ref(state.a_inv_t,
+                                                          xs, onehot)
     else:
+        # native block-layout kernel: per-arm fold directly on (d, K·d)
         from repro.kernels import sherman_morrison as _sm
-        a_inv = _sm.sherman_morrison_batch(
-            state.a_inv, xs, onehot,
+        a_inv_t = _sm.sherman_morrison_batch_blocked(
+            state.a_inv_t, xs, onehot,
             interpret=backend == "pallas_interpret")
     b = state.b + jnp.einsum("bk,bd->kd", onehot, rewards[:, None] * xs)
     counts = state.counts + onehot.sum(axis=0).astype(jnp.int32)
     touched = onehot.sum(axis=0) > 0
-    theta = jnp.where(touched[:, None],
-                      jnp.einsum("kde,ke->kd", a_inv, b), state.theta)
-    return LinUCBState(a_inv_t=_pack_a_inv(a_inv), b=b, theta=theta,
-                       counts=counts)
+    # θ_k = A_k⁻¹ b_k for touched arms, read straight off the block
+    # layout: a_inv_t.reshape(d, K, d)[i, k, j] == A_k⁻¹[i, j].
+    theta_new = jnp.einsum("ikj,kj->ki", a_inv_t.reshape(d, k, d), b)
+    theta = jnp.where(touched[:, None], theta_new, state.theta)
+    return LinUCBState(a_inv_t=a_inv_t, b=b, theta=theta, counts=counts)
 
 
-def dense_a(state: LinUCBState, cfg: LinUCBConfig) -> jax.Array:
+def dense_a(state: LinUCBState) -> jax.Array:
     """Recover A_k (for tests / theory checks): inverse of the stored A_k⁻¹."""
     return jnp.linalg.inv(state.a_inv)
 

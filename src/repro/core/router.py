@@ -259,6 +259,32 @@ def make_policy(name: str, num_arms: int, dim: int,
     raise ValueError(f"unknown policy {name!r} (choose from {POLICIES})")
 
 
+def policy_route_batch(policy: PolicyAdapter, state: Any, xs: jax.Array,
+                       steps: jax.Array, remaining: jax.Array) -> jax.Array:
+    """Batched request routing through a :class:`PolicyAdapter`.
+
+    The serving scheduler's generic arm-selection path — one call routes a
+    whole request batch under ANY policy in :data:`POLICIES` (greedy,
+    budget-aware, knapsack, baselines) with per-request refinement steps
+    and budgets. ``xs``: (B, d) contexts; ``steps``: (B,) int32 refinement
+    step h per request; ``remaining``: (B,) remaining budget per request
+    (+inf = unconstrained). Returns (B,) selected arms (−1 = policy opted
+    out, e.g. no budget-feasible arm).
+
+    The policy state is shared read-only across the batch; ``plan`` and
+    ``select`` are vmapped over requests, so the LinUCB scoring inside
+    runs under whichever backend (``linucb.set_backend``) is in effect at
+    trace time — the same switch the experiment drivers key their cached
+    programs on.
+    """
+
+    def one(x, h, rem):
+        plan = policy.plan(state, x, rem)
+        return jnp.asarray(policy.select(state, plan, x, h, rem), jnp.int32)
+
+    return jax.vmap(one)(xs, steps, remaining)
+
+
 # ---------------------------------------------------------------------------
 # Pool-environment driver
 # ---------------------------------------------------------------------------

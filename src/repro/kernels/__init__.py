@@ -1,11 +1,23 @@
 """Pallas TPU kernels for the perf-critical compute hot spots.
 
   linucb_score     — fused batched UCB scoring (the paper's routing loop)
-  sherman_morrison — rank-1 bandit posterior update
+  sherman_morrison — rank-1 bandit posterior updates (single-arm + batch)
   flash_attention  — blocked causal/sliding-window GQA prefill attention
 
-Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
-wrappers (interpret-mode on CPU, native on TPU).
+Kernel layout contract (zero-copy hot path)
+-------------------------------------------
+The LinUCB kernels operate NATIVELY on the ``(d, K·d)`` block matrix that
+``core.linucb.LinUCBState`` stores — BlockSpec column block ``k`` is arm
+``k``'s ``A_k⁻¹`` — so the pallas backend of ``linucb.ucb_scores`` /
+``update`` / ``batch_update`` never materializes a ``(K, d, d)`` tensor
+and TPU serving shares buffers with the experiment engine copy-free. The
+single-arm update (``sherman_morrison_arm``) indexes the selected arm's
+block via scalar prefetch and aliases the rest of the state buffer
+through: O(d²) work, not O(K·d²). Conventional ``(K, d, d)`` entry points
+survive as thin transpose-paying wrappers for tests and diagnostics.
+
+Each kernel has a pure-jnp oracle in ``ref.py`` (both layouts); ``ops.py``
+holds the jit'd wrappers (interpret-mode on CPU, native on TPU).
 """
 from repro.kernels import ops, ref
 

@@ -1,16 +1,29 @@
-"""Pallas TPU kernel: fused batched LinUCB scoring.
+"""Pallas TPU kernel: fused batched LinUCB scoring, native block layout.
 
 The routing hot loop at serving scale: score B concurrent request contexts
 against K arms in one pass —
 
     score[b,k] = x_b·θ_k + α · sqrt(x_b ᵀ A_k⁻¹ x_b)
 
+Kernel layout contract (zero-copy with ``core.linucb.LinUCBState``)
+-------------------------------------------------------------------
+The per-arm inverses arrive as ONE rank-2 block matrix ``a_inv_t`` of
+shape ``(d, K·d)`` — BlockSpec column block ``k`` IS arm ``k``'s
+``A_k⁻¹``, exactly the layout the bandit state stores. No ``(K, d, d)``
+tensor is ever materialized on this path: the kernel's BlockSpec
+``(d, d), (0, k)`` DMAs each arm's block straight out of the state
+buffer. d = 384 = 3×128 lanes stays MXU-aligned in both layouts.
+
 Tiling: grid (B/BB, K). Each program holds one (BB, d) context tile and one
 arm's (d, d) A⁻¹ + (d,) θ resident in VMEM, computes the quadratic form as
 two MXU matmuls — (BB,d)@(d,d) then a row-wise dot with the tile — and the
-mean as (BB,d)@(d,1). d = 384 = 3×128 lanes; BB = 128 sublanes: both matmul
-operands are MXU-aligned. VMEM footprint/program ≈ (BB·d + d·d + BB·d)·4B
-≈ 1.3 MB — comfortably inside the ~16 MB VMEM budget.
+mean as (BB,d)@(d,1). BB = 128 sublanes: both matmul operands are
+MXU-aligned. VMEM footprint/program ≈ (BB·d + d·d + BB·d)·4B ≈ 1.3 MB —
+comfortably inside the ~16 MB VMEM budget.
+
+``linucb_score`` keeps the conventional ``(K, d, d)`` signature as a thin
+wrapper (tests/diagnostics); it pays one transpose to reach the block
+layout and then runs the same kernel.
 """
 from __future__ import annotations
 
@@ -25,7 +38,7 @@ DEFAULT_BLOCK_B = 128
 
 def _kernel(x_ref, theta_ref, a_inv_ref, o_ref, *, alpha: float):
     x = x_ref[...].astype(jnp.float32)              # (BB, d)
-    a_inv = a_inv_ref[0].astype(jnp.float32)        # (d, d)
+    a_inv = a_inv_ref[...].astype(jnp.float32)      # (d, d) — arm's block
     theta = theta_ref[0].astype(jnp.float32)        # (d,)
     mean = x @ theta                                # (BB,)
     xa = x @ a_inv                                  # (BB, d)  MXU
@@ -34,12 +47,19 @@ def _kernel(x_ref, theta_ref, a_inv_ref, o_ref, *, alpha: float):
     o_ref[...] = score[:, None].astype(o_ref.dtype)
 
 
-def linucb_score(x: jax.Array, theta: jax.Array, a_inv: jax.Array,
-                 alpha: float, *, block_b: int = DEFAULT_BLOCK_B,
-                 interpret: bool = False) -> jax.Array:
-    """x: (B,d); theta: (K,d); a_inv: (K,d,d) → scores (B,K) float32."""
+def linucb_score_blocked(x: jax.Array, theta: jax.Array, a_inv_t: jax.Array,
+                         alpha: float, *, block_b: int = DEFAULT_BLOCK_B,
+                         interpret: bool = False) -> jax.Array:
+    """Native-layout scoring: zero-copy against the bandit state.
+
+    x: (B,d); theta: (K,d); a_inv_t: (d, K·d) block matrix (column block
+    k = A_k⁻¹) → scores (B,K) float32.
+    """
     b, d = x.shape
     k = theta.shape[0]
+    if a_inv_t.shape != (d, k * d):
+        raise ValueError(f"a_inv_t must be (d, K·d)=({d}, {k * d}), "
+                         f"got {a_inv_t.shape}")
     block_b = min(block_b, b)
     pad = (-b) % block_b
     if pad:
@@ -52,10 +72,22 @@ def linucb_score(x: jax.Array, theta: jax.Array, a_inv: jax.Array,
         in_specs=[
             pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
             pl.BlockSpec((1, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, d, d), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((d, d), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b + pad, k), jnp.float32),
         interpret=interpret,
-    )(x, theta, a_inv)
+    )(x, theta, a_inv_t)
     return out[:b]
+
+
+def linucb_score(x: jax.Array, theta: jax.Array, a_inv: jax.Array,
+                 alpha: float, *, block_b: int = DEFAULT_BLOCK_B,
+                 interpret: bool = False) -> jax.Array:
+    """(K,d,d) wrapper for tests/diagnostics (pays one transpose copy).
+
+    x: (B,d); theta: (K,d); a_inv: (K,d,d) → scores (B,K) float32.
+    """
+    from repro.kernels.ref import pack_block
+    return linucb_score_blocked(x, theta, pack_block(a_inv), alpha,
+                                block_b=block_b, interpret=interpret)

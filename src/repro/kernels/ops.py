@@ -4,6 +4,15 @@ On the CPU container the kernels execute in ``interpret=True`` mode (the
 kernel body runs as traced JAX ops — bit-faithful to the block algorithm);
 on a real TPU backend they compile natively. ``INTERPRET`` auto-detects,
 and can be forced via ``REPRO_PALLAS_INTERPRET=1``.
+
+Two tiers per LinUCB kernel:
+
+* ``*_blocked`` / ``sherman_morrison_arm`` — the production contract,
+  operating natively on the ``(d, K·d)`` block matrix that
+  ``core.linucb.LinUCBState`` stores (zero-copy; see the kernel module
+  docstrings for the layout contract).
+* the conventional ``(K, d, d)`` names — thin wrappers for tests and
+  diagnostics; each pays a transpose into the block layout.
 """
 from __future__ import annotations
 
@@ -22,8 +31,26 @@ INTERPRET = (jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("alpha",))
+def linucb_score_blocked(x, theta, a_inv_t, alpha: float):
+    return _ls.linucb_score_blocked(x, theta, a_inv_t, alpha,
+                                    interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
 def linucb_score(x, theta, a_inv, alpha: float):
     return _ls.linucb_score(x, theta, a_inv, alpha, interpret=INTERPRET)
+
+
+@jax.jit
+def sherman_morrison_arm(a_inv_t, x, arm, mask):
+    return _sm.sherman_morrison_arm(a_inv_t, x, arm, mask,
+                                    interpret=INTERPRET)
+
+
+@jax.jit
+def sherman_morrison_batch_blocked(a_inv_t, xs, mask):
+    return _sm.sherman_morrison_batch_blocked(a_inv_t, xs, mask,
+                                              interpret=INTERPRET)
 
 
 @jax.jit

@@ -1,4 +1,12 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Layout: the LinUCB kernels have two entry points each — the conventional
+``(K, d, d)`` form and a ``*_blocked`` form on the ``(d, K·d)`` block
+matrix that ``core.linucb.LinUCBState`` stores natively (column block k =
+A_k⁻¹; see ``pack_block`` / ``unpack_block``). The blocked oracles are
+defined by round-tripping through the (K,d,d) math so both views share a
+single source of truth.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -7,6 +15,18 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+def pack_block(a_inv: jax.Array) -> jax.Array:
+    """(K, d, d) → the state's (d, K·d) block layout (transpose copy)."""
+    k, d, _ = a_inv.shape
+    return jnp.swapaxes(a_inv, 0, 1).reshape(d, k * d)
+
+
+def unpack_block(a_inv_t: jax.Array) -> jax.Array:
+    """(d, K·d) block layout → conventional (K, d, d) (transpose copy)."""
+    d, kd = a_inv_t.shape
+    return jnp.swapaxes(a_inv_t.reshape(d, kd // d, d), 0, 1)
 
 
 def linucb_score_ref(x: jax.Array, theta: jax.Array, a_inv: jax.Array,
@@ -44,6 +64,34 @@ def sherman_morrison_batch_ref(a_inv: jax.Array, xs: jax.Array,
 
     out, _ = jax.lax.scan(fold, a_inv, (xs, mask))
     return out
+
+
+def linucb_score_blocked_ref(x: jax.Array, theta: jax.Array,
+                             a_inv_t: jax.Array, alpha: float) -> jax.Array:
+    """Blocked-layout scoring oracle. a_inv_t: (d, K·d) → (B, K)."""
+    return linucb_score_ref(x, theta, unpack_block(a_inv_t), alpha)
+
+
+def sherman_morrison_arm_ref(a_inv_t: jax.Array, x: jax.Array,
+                             arm: jax.Array, mask: jax.Array):
+    """Single-arm blocked-layout oracle; returns (a_inv_t_new, ax).
+
+    a_inv_t: (d, K·d); x: (d,); arm: () int; mask: () float. ``ax`` is
+    A_arm⁻¹ x on the pre-update inverse, matching the kernel contract."""
+    d, kd = a_inv_t.shape
+    onehot = jax.nn.one_hot(arm, kd // d, dtype=jnp.float32)
+    m = jnp.asarray(mask, jnp.float32) * onehot
+    out = pack_block(sherman_morrison_ref(unpack_block(a_inv_t), x, m))
+    block = jax.lax.dynamic_slice(a_inv_t, (0, arm * d), (d, d))
+    return out, x @ block
+
+
+def sherman_morrison_batch_blocked_ref(a_inv_t: jax.Array, xs: jax.Array,
+                                       mask: jax.Array) -> jax.Array:
+    """Blocked-layout batch-fold oracle. a_inv_t: (d, K·d); xs: (B,d);
+    mask: (B,K) → updated (d, K·d)."""
+    return pack_block(sherman_morrison_batch_ref(unpack_block(a_inv_t),
+                                                 xs, mask))
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -1,62 +1,100 @@
-"""Pallas TPU kernel: masked rank-1 Sherman–Morrison update of A_k⁻¹.
+"""Pallas TPU kernels: rank-1 Sherman–Morrison updates of A_k⁻¹, native
+block layout.
 
-The bandit posterior update after a routed batch: for each arm flagged in
-``mask``, fold the context rank-1 term into the stored inverse —
+The bandit posterior update after a routed step/batch: fold the context
+rank-1 term into the stored inverse —
 
     A⁻¹ ← A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x)
 
-Grid (K,): one program per arm, the (d,d) inverse VMEM-resident, one
-matvec + one outer product on the MXU. Masked arms write back unchanged —
-keeping the kernel shape static so the router can jit one update for any
-selection pattern.
+Kernel layout contract (zero-copy with ``core.linucb.LinUCBState``)
+-------------------------------------------------------------------
+All native kernels take the state's ``(d, K·d)`` block matrix directly —
+BlockSpec column block ``k`` is arm ``k``'s ``A_k⁻¹`` — so no ``(K, d, d)``
+tensor is ever materialized on the production path.
 
-``sherman_morrison_batch`` folds a whole (B,d) batch of contexts per arm
-in one ``pallas_call`` — the replay/ingest path of ``linucb.batch_update``.
+``sherman_morrison_arm`` is the serving/driver hot path: ONE arm's rank-1
+update in O(d²). The arm index rides in as a scalar-prefetch operand, so
+the BlockSpec index map DMAs exactly that arm's (d, d) block into VMEM;
+``input_output_aliases`` hands the state buffer through, leaving the other
+K−1 blocks untouched — the kernel never reads or rewrites them (the old
+``(K, d, d)`` kernel one-hot-gated ALL K inverses: O(K·d²) work for a
+one-arm update). It also emits ``ax = A⁻¹x`` (computed anyway for the
+update) so the caller's O(d) θ-update needs no second GEMM.
+
+``sherman_morrison_batch_blocked`` folds a whole (B,d) batch of contexts
+per arm in one ``pallas_call`` — the replay/ingest path of
+``linucb.batch_update``. Grid (K,): each program keeps its arm's (d,d)
+block VMEM-resident for the whole fold — one HBM read + one write per arm.
+
+The ``(K, d, d)`` entry points (``sherman_morrison`` /
+``sherman_morrison_batch``) remain as thin wrappers for tests and
+diagnostics; they pay a transpose into the block layout and back.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(a_inv_ref, x_ref, mask_ref, o_ref):
-    a_inv = a_inv_ref[0].astype(jnp.float32)        # (d, d)
+def _arm_kernel(arm_ref, a_ref, x_ref, m_ref, o_ref, ax_ref):
+    del arm_ref  # consumed by the BlockSpec index maps
+    d = a_ref.shape[0]
+    a = a_ref[...].astype(jnp.float32)              # (d, d) — arm's block
     x = x_ref[...].astype(jnp.float32)              # (1, d)
-    m = mask_ref[0].astype(jnp.float32)             # scalar
-    ax = (x @ a_inv)                                # (1, d)
+    m = m_ref[0, 0].astype(jnp.float32)             # scalar gate
+    ax = x @ a                                      # (1, d)
     denom = 1.0 + jnp.sum(ax * x)
-    delta = (ax.T @ ax) / denom                     # (d, d)
-    o_ref[0] = (a_inv - m * delta).astype(o_ref.dtype)
+    delta = (ax.reshape(d, 1) @ ax) / denom         # (d, d) MXU outer prod
+    o_ref[...] = (a - m * delta).astype(o_ref.dtype)
+    ax_ref[...] = ax.astype(ax_ref.dtype)
 
 
-def sherman_morrison(a_inv: jax.Array, x: jax.Array, mask: jax.Array, *,
-                     interpret: bool = False) -> jax.Array:
-    """a_inv: (K,d,d); x: (d,); mask: (K,) → updated (K,d,d)."""
-    k, d, _ = a_inv.shape
-    return pl.pallas_call(
-        _kernel,
-        grid=(k,),
+def sherman_morrison_arm(a_inv_t: jax.Array, x: jax.Array, arm: jax.Array,
+                         mask: jax.Array, *, interpret: bool = False):
+    """Single-arm rank-1 update on the (d, K·d) block layout, O(d²).
+
+    a_inv_t: (d, K·d); x: (d,); arm: () int; mask: () float (0 gates the
+    write off). Returns ``(a_inv_t_new, ax)`` with ``ax = A_arm⁻¹ x``
+    evaluated on the PRE-update inverse (shape (d,)). Only arm's column
+    block is touched; the rest of the buffer is aliased through.
+    """
+    d, kd = a_inv_t.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
         in_specs=[
-            pl.BlockSpec((1, d, d), lambda j: (j, 0, 0)),
-            pl.BlockSpec((1, d), lambda j: (0, 0)),
-            pl.BlockSpec((1,), lambda j: (j,)),
+            pl.BlockSpec((d, d), lambda i, arm_ref: (0, arm_ref[0])),
+            pl.BlockSpec((1, d), lambda i, arm_ref: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, arm_ref: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, d, d), lambda j: (j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, d, d), a_inv.dtype),
+        out_specs=[
+            pl.BlockSpec((d, d), lambda i, arm_ref: (0, arm_ref[0])),
+            pl.BlockSpec((1, d), lambda i, arm_ref: (0, 0)),
+        ],
+    )
+    out, ax = pl.pallas_call(
+        _arm_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((d, kd), a_inv_t.dtype),
+                   jax.ShapeDtypeStruct((1, d), a_inv_t.dtype)],
+        input_output_aliases={1: 0},    # a_inv_t buffer passes through
         interpret=interpret,
-    )(a_inv, x.reshape(1, d), mask.astype(jnp.float32))
+    )(jnp.asarray(arm, jnp.int32).reshape(1), a_inv_t, x.reshape(1, d),
+      jnp.asarray(mask, jnp.float32).reshape(1, 1))
+    return out, ax[0]
 
 
-def _batch_kernel(a_inv_ref, xs_ref, mask_ref, o_ref):
-    """Fold B rank-1 terms into one arm's inverse, in batch order.
+def _batch_kernel(a_ref, xs_ref, mask_ref, o_ref):
+    """Fold B rank-1 terms into one arm's (d,d) block, in batch order.
 
     The per-arm fold is inherently sequential (each rank-1 update reads
     the previous inverse), but all K arms run in parallel across the grid
-    and the (d,d) inverse stays VMEM-resident for the whole batch — one
-    HBM read + one write per arm instead of B of each.
+    and the (d,d) block stays VMEM-resident for the whole batch.
     """
-    a_inv = a_inv_ref[0].astype(jnp.float32)        # (d, d)
+    d = a_ref.shape[0]
+    a = a_ref[...].astype(jnp.float32)              # (d, d)
     xs = xs_ref[...].astype(jnp.float32)            # (B, d)
     m = mask_ref[0].astype(jnp.float32)             # (B,)
 
@@ -64,32 +102,61 @@ def _batch_kernel(a_inv_ref, xs_ref, mask_ref, o_ref):
         x = jax.lax.dynamic_slice_in_dim(xs, i, 1)  # (1, d)
         ax = x @ a                                  # (1, d)
         denom = 1.0 + jnp.sum(ax * x)
-        delta = (ax.T @ ax) / denom                 # (d, d)
+        delta = (ax.reshape(d, 1) @ ax) / denom     # (d, d)
         return a - m[i] * delta
 
-    out = jax.lax.fori_loop(0, xs.shape[0], fold, a_inv)
-    o_ref[0] = out.astype(o_ref.dtype)
+    out = jax.lax.fori_loop(0, xs.shape[0], fold, a)
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
-def sherman_morrison_batch(a_inv: jax.Array, xs: jax.Array, mask: jax.Array,
-                           *, interpret: bool = False) -> jax.Array:
-    """Batched sequential fold: a_inv (K,d,d); xs (B,d); mask (B,K).
+def sherman_morrison_batch_blocked(a_inv_t: jax.Array, xs: jax.Array,
+                                   mask: jax.Array, *,
+                                   interpret: bool = False) -> jax.Array:
+    """Batched sequential fold on the native layout.
 
-    Equivalent to applying :func:`sherman_morrison` once per batch row in
-    order, but as a single ``pallas_call`` — grid (K,), each program folds
-    the whole batch for its arm with the inverse held in VMEM.
+    a_inv_t: (d, K·d); xs: (B,d); mask: (B,K) float (1.0 = fold row b
+    into arm k). Equivalent to B masked rank-1 updates applied in batch
+    order; one ``pallas_call``, grid (K,).
     """
-    k, d, _ = a_inv.shape
+    d, kd = a_inv_t.shape
+    k = kd // d
     b = xs.shape[0]
     return pl.pallas_call(
         _batch_kernel,
         grid=(k,),
         in_specs=[
-            pl.BlockSpec((1, d, d), lambda j: (j, 0, 0)),
+            pl.BlockSpec((d, d), lambda j: (0, j)),
             pl.BlockSpec((b, d), lambda j: (0, 0)),
             pl.BlockSpec((1, b), lambda j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, d, d), lambda j: (j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, d, d), a_inv.dtype),
+        out_specs=pl.BlockSpec((d, d), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((d, kd), a_inv_t.dtype),
         interpret=interpret,
-    )(a_inv, xs, mask.astype(jnp.float32).T)
+    )(a_inv_t, xs, mask.astype(jnp.float32).T)
+
+
+def sherman_morrison(a_inv: jax.Array, x: jax.Array, mask: jax.Array, *,
+                     interpret: bool = False) -> jax.Array:
+    """(K,d,d) wrapper: masked rank-1 update of every flagged arm.
+
+    a_inv: (K,d,d); x: (d,); mask: (K,) → updated (K,d,d). Runs the
+    blocked batch kernel with B=1 (identical math) around a transpose
+    into/out of the block layout — tests/diagnostics only.
+    """
+    from repro.kernels.ref import pack_block, unpack_block
+    out = sherman_morrison_batch_blocked(pack_block(a_inv), x.reshape(1, -1),
+                                         mask.reshape(1, -1),
+                                         interpret=interpret)
+    return unpack_block(out)
+
+
+def sherman_morrison_batch(a_inv: jax.Array, xs: jax.Array, mask: jax.Array,
+                           *, interpret: bool = False) -> jax.Array:
+    """(K,d,d) wrapper around the blocked batch fold (tests/diagnostics).
+
+    a_inv: (K,d,d); xs: (B,d); mask: (B,K) → updated (K,d,d).
+    """
+    from repro.kernels.ref import pack_block, unpack_block
+    out = sherman_morrison_batch_blocked(pack_block(a_inv), xs, mask,
+                                         interpret=interpret)
+    return unpack_block(out)

@@ -8,6 +8,27 @@ feedback, and folds it back into the bandit state. Multi-step refinement
 (the paper's context evolution) happens by the caller resubmitting
 unsatisfied requests with an evolved context.
 
+Routing backend
+---------------
+Scoring and updates go through ``core.linucb`` under the module's backend
+switch (``linucb.set_backend`` / ``REPRO_LINUCB_BACKEND``): the jnp
+reference on CPU, the native block-layout Pallas kernels on TPU — the
+SAME jitted hot path the experiment drivers run, zero-copy against the
+``(d, K·d)`` bandit state. Every routing call is jitted; compiled
+programs are keyed on the backend name so a switch re-traces instead of
+silently reusing stale code. Pass ``backend=`` to pin one scheduler to a
+specific implementation (e.g. ``"pallas_interpret"`` to exercise the
+kernel path on CPU).
+
+Policies
+--------
+``policy=`` accepts any name from ``core.router.POLICIES``: greedy LinUCB
+(default), budget-aware LinUCB or knapsack planning (both consume the
+per-request ``remaining`` budgets passed to :meth:`BanditScheduler.route`),
+or the paper's baselines. Non-greedy policies route through
+``router.policy_route_batch`` — plan/select vmapped over the request
+batch against the shared read-only state.
+
 This is the deployment face of the framework: ``examples/serve_multi_llm.py``
 drives it end-to-end with real (reduced) JAX models as arms.
 """
@@ -15,14 +36,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core import linucb
+from repro.core import linucb, router
 from repro.serving.engine import Engine
 
 
@@ -53,47 +74,110 @@ class Response:
 
 
 class BanditScheduler:
-    """Routes request batches across the arm pool with Greedy LinUCB."""
+    """Routes request batches across the arm pool with a bandit policy."""
 
     def __init__(self, arms: Sequence[ArmSpec], dim: int = 384,
                  alpha: float = 0.675, lam: float = 0.45,
-                 max_new_tokens: int = 16, use_kernels: bool = False):
-        """``use_kernels=True`` routes the batched scoring through the
-        fused Pallas kernel (``kernels.ops.linucb_score``) — the TPU
-        production path; on CPU it runs in interpret mode (correct but
-        slower than the jitted jnp reference, so default False here)."""
+                 max_new_tokens: int = 16, policy: str = "greedy_linucb",
+                 backend: Optional[str] = None, horizon_t: int = 100_000,
+                 use_kernels: Optional[bool] = None):
+        """``backend``: pin this scheduler's routing to one linucb backend
+        ("ref" | "pallas" | "pallas_interpret"); ``None`` follows the
+        global ``linucb.set_backend`` / ``REPRO_LINUCB_BACKEND`` switch,
+        resolved per call. ``use_kernels`` is the deprecated spelling of
+        the kernel path (True ≙ backend="pallas" on TPU,
+        "pallas_interpret" on CPU)."""
+        if use_kernels is not None:
+            warnings.warn("use_kernels is deprecated; pass backend="
+                          "'pallas'/'pallas_interpret' (or set the global "
+                          "linucb backend) instead", DeprecationWarning,
+                          stacklevel=2)
+            if use_kernels and backend is None:
+                backend = ("pallas" if jax.default_backend() == "tpu"
+                           else "pallas_interpret")
+        if backend is not None and backend not in linucb.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r} "
+                             f"(choose from {linucb.BACKENDS})")
         self.arms = list(arms)
         self.cfg = linucb.LinUCBConfig(num_arms=len(self.arms), dim=dim,
                                        alpha=alpha, lam=lam)
-        self.state = linucb.init(self.cfg)
         self.max_new_tokens = max_new_tokens
-        if use_kernels:
-            from repro.kernels import ops as kops
-            self._score = lambda s, x: kops.linucb_score(
-                jnp.atleast_2d(x), s.theta, s.a_inv, self.cfg.alpha)
-        else:
-            self._score = jax.jit(
-                lambda s, x: linucb.ucb_scores(s, x, self.cfg.alpha))
-        self._update = jax.jit(linucb.update)
+        self._backend_override = backend
+        self._policy_name = policy
+        c_max = max((a.cost_per_token for a in self.arms), default=1.0) \
+            * max_new_tokens
+        self._policy = router.make_policy(policy, len(self.arms), dim,
+                                          alpha=alpha, lam=lam,
+                                          horizon_t=horizon_t, c_max=c_max)
+        self.state = self._policy.init()
+        self._route = jax.jit(self._route_fn, static_argnames=("backend",))
+        self._update = jax.jit(self._update_fn, static_argnames=("backend",))
 
-    def route(self, contexts: np.ndarray) -> np.ndarray:
-        """Batched arm selection for (B,d) request contexts."""
-        scores = self._score(self.state, jnp.asarray(contexts))
-        return np.asarray(jnp.argmax(scores, axis=-1))
+    # -- jitted hot paths (one compiled program per backend name) ---------
 
-    def feedback(self, arm: int, context: np.ndarray, reward: float) -> None:
+    def _route_fn(self, state, xs, steps, remaining, *, backend: str):
+        with linucb.backend_scope(backend):
+            if self._policy_name == "greedy_linucb":
+                # the scoring hot loop: one batched (B,d)@(d,K·d) GEMM /
+                # fused Pallas kernel straight off the block state
+                scores = linucb.ucb_scores(state, xs, self.cfg.alpha)
+                return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+            return router.policy_route_batch(self._policy, state, xs,
+                                             steps, remaining)
+
+    def _update_fn(self, state, arm, x, reward, cost, *, backend: str):
+        with linucb.backend_scope(backend):
+            return self._policy.update(state, jnp.int32(0), arm, x, reward,
+                                       cost, jnp.asarray(True))
+
+    def _backend(self) -> str:
+        return self._backend_override or linucb.resolved_backend()
+
+    # -- public API -------------------------------------------------------
+
+    def route(self, contexts: np.ndarray, *,
+              steps: Optional[np.ndarray] = None,
+              remaining: Optional[np.ndarray] = None) -> np.ndarray:
+        """Batched arm selection for (B,d) request contexts.
+
+        ``steps``: optional (B,) refinement step per request (multi-step
+        policies); ``remaining``: optional (B,) remaining budget per
+        request (budget/knapsack policies; +inf when omitted). Returns
+        (B,) selected arms; −1 means the policy opted out of the request.
+        """
+        xs = jnp.asarray(contexts, jnp.float32)
+        b = xs.shape[0]
+        steps_j = (jnp.zeros((b,), jnp.int32) if steps is None
+                   else jnp.asarray(steps, jnp.int32))
+        rem_j = (jnp.full((b,), jnp.inf, jnp.float32) if remaining is None
+                 else jnp.broadcast_to(
+                     jnp.asarray(remaining, jnp.float32), (b,)))
+        arm = self._route(self.state, xs, steps_j, rem_j,
+                          backend=self._backend())
+        return np.asarray(arm)
+
+    def feedback(self, arm: int, context: np.ndarray, reward: float,
+                 cost: float = 0.0) -> None:
+        """Fold one observation back into the policy state."""
         self.state = self._update(self.state, jnp.int32(arm),
                                   jnp.asarray(context, jnp.float32),
-                                  jnp.float32(reward))
+                                  jnp.float32(reward), jnp.float32(cost),
+                                  backend=self._backend())
 
     def serve(self, requests: Sequence[Request], *,
               temperature: float = 0.0,
+              remaining: Optional[np.ndarray] = None,
               key: Optional[jax.Array] = None) -> List[Response]:
-        """One scheduling round: route → per-arm batched generation."""
+        """One scheduling round: route → per-arm batched generation.
+
+        Requests the policy opts out of (arm −1, e.g. budget-infeasible)
+        are skipped; the caller sees no Response for them this round.
+        """
         if not requests:
             return []
         contexts = np.stack([r.context for r in requests])
-        choices = self.route(contexts)
+        steps = np.asarray([r.step for r in requests], np.int32)
+        choices = self.route(contexts, steps=steps, remaining=remaining)
         key = key if key is not None else jax.random.PRNGKey(0)
 
         responses: List[Response] = []

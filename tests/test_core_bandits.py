@@ -87,6 +87,16 @@ class TestLinUCB:
         w1 = float(linucb.confidence_width(s, x)[0])
         assert w1 < w0 / 2
 
+    def test_dense_a_inverts_state(self):
+        """dense_a recovers A_k = λI + Σxxᵀ from the stored inverse."""
+        s = linucb.init(CFG)
+        x = _rand_x(jax.random.PRNGKey(7))
+        s = linucb.update(s, jnp.int32(1), x, jnp.float32(1.0))
+        a = np.asarray(linucb.dense_a(s))
+        want = np.eye(12) * CFG.lam + np.outer(np.asarray(x), np.asarray(x))
+        np.testing.assert_allclose(a[1], want, atol=1e-4)
+        np.testing.assert_allclose(a[0], np.eye(12) * CFG.lam, atol=1e-5)
+
     def test_batch_update_equals_sequential(self):
         key = jax.random.PRNGKey(4)
         arms = jnp.array([0, 1, 0, 2, 4], jnp.int32)

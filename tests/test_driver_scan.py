@@ -129,16 +129,18 @@ class TestKernelBackendParity:
         the backend is part of the jitted-driver cache key, so a cached
         'ref' program may not be silently reused."""
         from repro.kernels import linucb_score as ls_mod
-        # compile the 'ref' program for this exact config first
-        router.run_pool_experiment("greedy_linucb", rounds=9, seed=0)
+        # compile the 'ref' program for this exact config first (pinned so
+        # the test also works when the ambient backend is already pallas)
+        with linucb.backend_scope("ref"):
+            router.run_pool_experiment("greedy_linucb", rounds=9, seed=0)
         calls = {"n": 0}
-        orig = ls_mod.linucb_score
+        orig = ls_mod.linucb_score_blocked
 
         def counting(*args, **kwargs):
             calls["n"] += 1
             return orig(*args, **kwargs)
 
-        monkeypatch.setattr(ls_mod, "linucb_score", counting)
+        monkeypatch.setattr(ls_mod, "linucb_score_blocked", counting)
         prev = linucb.set_backend("pallas_interpret")
         try:
             router.run_pool_experiment("greedy_linucb", rounds=9, seed=0)
@@ -199,3 +201,105 @@ class TestKernelBackendParity:
             jax.tree.map(lambda a, b: np.testing.assert_allclose(
                 np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3),
                 seq, got)
+
+    def test_backend_scope_restores(self):
+        before = linucb.resolved_backend()
+        with linucb.backend_scope("pallas_interpret") as eff:
+            assert eff == "pallas_interpret"
+            assert linucb.resolved_backend() == "pallas_interpret"
+        assert linucb.resolved_backend() == before
+        with linucb.backend_scope(None):       # no-op scope
+            assert linucb.resolved_backend() == before
+
+    def test_scan_driver_backend_parity(self):
+        """The full chunked-scan pool driver produces the same experiment
+        under the ref path and the native-layout Pallas kernels."""
+        with linucb.backend_scope("ref"):
+            want = router.run_pool_experiment("greedy_linucb", rounds=40,
+                                              seed=5, chunk_size=16)
+        with linucb.backend_scope("pallas_interpret"):
+            got = router.run_pool_experiment("greedy_linucb", rounds=40,
+                                             seed=5, chunk_size=16)
+        np.testing.assert_array_equal(want.arms, got.arms)
+        np.testing.assert_allclose(want.rewards, got.rewards, atol=1e-5)
+        np.testing.assert_allclose(want.regrets, got.regrets, atol=1e-5)
+
+    def test_scan_driver_backend_parity_budget(self):
+        with linucb.backend_scope("ref"):
+            want = router.run_pool_experiment("budget_linucb", rounds=30,
+                                              seed=3, chunk_size=16)
+        with linucb.backend_scope("pallas_interpret"):
+            got = router.run_pool_experiment("budget_linucb", rounds=30,
+                                             seed=3, chunk_size=16)
+        np.testing.assert_array_equal(want.arms, got.arms)
+        np.testing.assert_allclose(want.costs, got.costs, atol=1e-5)
+
+    def test_vmapped_sweep_backend_parity(self):
+        """The vmapped seed sweep vmaps the Pallas kernels (scalar-prefetch
+        arm indexing included) and must match the ref sweep per seed."""
+        seeds = [0, 7]
+        with linucb.backend_scope("ref"):
+            want = router.run_pool_experiment_sweep(
+                "greedy_linucb", seeds, rounds=30, chunk_size=16)
+        with linucb.backend_scope("pallas_interpret"):
+            got = router.run_pool_experiment_sweep("greedy_linucb", seeds,
+                                                   rounds=30, chunk_size=16)
+        for s, w, g in zip(seeds, want, got):
+            np.testing.assert_array_equal(w.arms, g.arms,
+                                          err_msg=f"seed {s}")
+            np.testing.assert_allclose(w.rewards, g.rewards, atol=1e-5)
+
+    def test_synthetic_driver_backend_parity(self):
+        with linucb.backend_scope("ref"):
+            want = router.run_synthetic_experiment("greedy_linucb",
+                                                   rounds=100, seed=2)
+        with linucb.backend_scope("pallas_interpret"):
+            got = router.run_synthetic_experiment("greedy_linucb",
+                                                  rounds=100, seed=2)
+        np.testing.assert_allclose(want["per_round_regret"],
+                                   got["per_round_regret"], atol=1e-5)
+
+
+class TestZeroCopyJaxpr:
+    """The pallas-backend hot paths must stay zero-copy: no transpose, no
+    (K,d,d) materialization anywhere in the traced program (the pre-PR
+    kernels round-tripped (d,K·d) → (K,d,d) → kernel → repack on every
+    call)."""
+
+    K, D = 4, 32
+
+    def _state(self):
+        return linucb.init(linucb.LinUCBConfig(num_arms=self.K, dim=self.D))
+
+    def _kdd_sig(self):
+        return f"f32[{self.K},{self.D},{self.D}]"
+
+    def test_ucb_scores_jaxpr_clean(self):
+        s = self._state()
+        xs = jnp.ones((5, self.D))
+        with linucb.backend_scope("pallas_interpret"):
+            txt = str(jax.make_jaxpr(
+                lambda s, x: linucb.ucb_scores(s, x, 0.5))(s, xs))
+        assert "transpose" not in txt
+        assert self._kdd_sig() not in txt
+
+    def test_update_jaxpr_clean(self):
+        s = self._state()
+        x = jnp.ones((self.D,))
+        with linucb.backend_scope("pallas_interpret"):
+            txt = str(jax.make_jaxpr(
+                lambda s, x: linucb.update(s, jnp.int32(1), x,
+                                           jnp.float32(1.0),
+                                           mask=jnp.asarray(True)))(s, x))
+        assert "transpose" not in txt
+        assert self._kdd_sig() not in txt
+
+    def test_batch_update_jaxpr_no_kdd(self):
+        s = self._state()
+        arms = jnp.array([0, 1], jnp.int32)
+        xs = jnp.ones((2, self.D))
+        rs = jnp.ones((2,))
+        with linucb.backend_scope("pallas_interpret"):
+            txt = str(jax.make_jaxpr(
+                lambda s: linucb.batch_update(s, arms, xs, rs))(s))
+        assert self._kdd_sig() not in txt

@@ -7,9 +7,10 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.linucb_score import linucb_score
+from repro.kernels.linucb_score import linucb_score, linucb_score_blocked
 from repro.kernels.sherman_morrison import sherman_morrison, \
-    sherman_morrison_batch
+    sherman_morrison_arm, sherman_morrison_batch, \
+    sherman_morrison_batch_blocked
 
 TOL = {jnp.float32: dict(atol=2e-4, rtol=2e-4),
        jnp.bfloat16: dict(atol=5e-2, rtol=5e-2)}
@@ -137,6 +138,134 @@ class TestShermanMorrisonBatch:
                                      interpret=True)
         np.testing.assert_allclose(np.asarray(out), np.asarray(a_inv),
                                    atol=1e-6)
+
+
+class TestBlockedLayoutKernels:
+    """Native (d, K·d) kernels: parity with both oracle layouts.
+
+    The blocked entry points are the production contract (zero-copy with
+    ``LinUCBState.a_inv_t``); the (K,d,d) names are wrappers around them,
+    so wrapper == blocked-under-pack is an exact identity check."""
+
+    @pytest.mark.parametrize("b", [1, 7, 128])
+    @pytest.mark.parametrize("k,d", [(1, 64), (6, 128), (3, 384)])
+    def test_score_blocked_matches_ref(self, b, k, d):
+        key = jax.random.PRNGKey(b * 1000 + k * 10 + d)
+        ks = jax.random.split(key, 3)
+        x = jax.random.normal(ks[0], (b, d))
+        theta = jax.random.normal(ks[1], (k, d))
+        a_inv_t = ref.pack_block(_spd(ks[2], k, d))
+        got = linucb_score_blocked(x, theta, a_inv_t, 0.675, interpret=True)
+        want = ref.linucb_score_blocked_ref(x, theta, a_inv_t, 0.675)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **TOL[jnp.float32])
+
+    def test_score_blocked_rejects_bad_layout(self):
+        x = jnp.zeros((2, 8))
+        theta = jnp.zeros((3, 8))
+        with pytest.raises(ValueError):
+            linucb_score_blocked(x, theta, jnp.zeros((8, 16)), 0.5,
+                                 interpret=True)
+
+    @pytest.mark.parametrize("k,d", [(1, 16), (4, 64), (6, 384)])
+    def test_arm_update_matches_ref(self, k, d):
+        key = jax.random.PRNGKey(k * 31 + d)
+        a_inv_t = ref.pack_block(_spd(key, k, d))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+        arm = jnp.int32(k - 1)
+        got, got_ax = sherman_morrison_arm(a_inv_t, x, arm,
+                                           jnp.float32(1.0), interpret=True)
+        want, want_ax = ref.sherman_morrison_arm_ref(a_inv_t, x, arm,
+                                                     jnp.float32(1.0))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(got_ax), np.asarray(want_ax),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_arm_update_touches_only_selected_block(self):
+        k, d = 5, 32
+        a_inv_t = ref.pack_block(_spd(jax.random.PRNGKey(0), k, d))
+        x = jax.random.normal(jax.random.PRNGKey(1), (d,))
+        out, _ = sherman_morrison_arm(a_inv_t, x, jnp.int32(2),
+                                      jnp.float32(1.0), interpret=True)
+        for j in range(k):
+            blk_in = np.asarray(a_inv_t[:, j * d:(j + 1) * d])
+            blk_out = np.asarray(out[:, j * d:(j + 1) * d])
+            if j == 2:
+                assert not np.allclose(blk_in, blk_out)
+            else:
+                np.testing.assert_array_equal(blk_in, blk_out)
+
+    def test_arm_update_mask_gates_off(self):
+        """mask=0 leaves the buffer bitwise untouched but still emits ax."""
+        k, d = 3, 24
+        a_inv_t = ref.pack_block(_spd(jax.random.PRNGKey(2), k, d))
+        x = jax.random.normal(jax.random.PRNGKey(3), (d,))
+        out, ax = sherman_morrison_arm(a_inv_t, x, jnp.int32(1),
+                                       jnp.float32(0.0), interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(a_inv_t))
+        want = np.asarray(x) @ np.asarray(a_inv_t[:, d:2 * d])
+        np.testing.assert_allclose(np.asarray(ax), want, atol=1e-4,
+                                   rtol=1e-4)
+
+    @pytest.mark.parametrize("b", [1, 5, 32])
+    @pytest.mark.parametrize("k,d", [(1, 16), (6, 64), (4, 128)])
+    def test_batch_blocked_matches_ref(self, b, k, d):
+        key = jax.random.PRNGKey(b * 100 + k * 10 + d)
+        a_inv_t = ref.pack_block(_spd(key, k, d))
+        xs = jax.random.normal(jax.random.fold_in(key, 1), (b, d))
+        mask = jax.nn.one_hot(
+            jax.random.randint(jax.random.fold_in(key, 2), (b,), 0, k), k)
+        got = sherman_morrison_batch_blocked(a_inv_t, xs, mask,
+                                             interpret=True)
+        want = ref.sherman_morrison_batch_blocked_ref(a_inv_t, xs, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_wrappers_are_thin_views_of_blocked(self):
+        """(K,d,d) entry points == pack → blocked kernel → unpack."""
+        k, d, b = 4, 48, 6
+        key = jax.random.PRNGKey(7)
+        a_inv = _spd(key, k, d)
+        a_inv_t = ref.pack_block(a_inv)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (b, d))
+        theta = jax.random.normal(jax.random.fold_in(key, 2), (k, d))
+        np.testing.assert_array_equal(
+            np.asarray(linucb_score(x, theta, a_inv, 0.5, interpret=True)),
+            np.asarray(linucb_score_blocked(x, theta, a_inv_t, 0.5,
+                                            interpret=True)))
+        mask = jax.nn.one_hot(
+            jax.random.randint(jax.random.fold_in(key, 3), (b,), 0, k), k)
+        np.testing.assert_array_equal(
+            np.asarray(sherman_morrison_batch(a_inv, x, mask,
+                                              interpret=True)),
+            np.asarray(ref.unpack_block(sherman_morrison_batch_blocked(
+                a_inv_t, x, mask, interpret=True))))
+
+    def test_pack_unpack_roundtrip(self):
+        a_inv = _spd(jax.random.PRNGKey(11), 3, 20)
+        np.testing.assert_array_equal(
+            np.asarray(ref.unpack_block(ref.pack_block(a_inv))),
+            np.asarray(a_inv))
+
+    def test_ops_jitted_blocked_wrappers(self):
+        k, d = 3, 32
+        key = jax.random.PRNGKey(13)
+        a_inv_t = ref.pack_block(_spd(key, k, d))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (2, d))
+        theta = jax.random.normal(jax.random.fold_in(key, 2), (k, d))
+        got = ops.linucb_score_blocked(x, theta, a_inv_t, 0.5)
+        want = ref.linucb_score_blocked_ref(x, theta, a_inv_t, 0.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+        out, ax = ops.sherman_morrison_arm(a_inv_t, x[0], jnp.int32(1),
+                                           jnp.float32(1.0))
+        wout, wax = ref.sherman_morrison_arm_ref(a_inv_t, x[0], jnp.int32(1),
+                                                 jnp.float32(1.0))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(wout),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(ax), np.asarray(wax),
+                                   atol=1e-4, rtol=1e-4)
 
 
 class TestFlashAttention:

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.serving.engine import Engine, sample_token
@@ -44,12 +45,13 @@ def test_engine_greedy_deterministic():
 
 
 def test_scheduler_kernel_path_matches_reference():
-    """use_kernels=True (Pallas scoring) routes identically."""
+    """use_kernels=True (deprecated Pallas spelling) routes identically."""
     cfg, eng = _engine(seed=0)
     _, eng1 = _engine(seed=1)
     arms = [ArmSpec("a", eng, 1e-5), ArmSpec("b", eng1, 1e-4)]
     ref = BanditScheduler(arms, dim=32)
-    ker = BanditScheduler(arms, dim=32, use_kernels=True)
+    with pytest.deprecated_call():
+        ker = BanditScheduler(arms, dim=32, use_kernels=True)
     rng = np.random.default_rng(1)
     for i in range(10):
         ctx = rng.standard_normal(32).astype(np.float32)
@@ -58,6 +60,52 @@ def test_scheduler_kernel_path_matches_reference():
         ker.feedback(a, ctx, r)
     ctxs = rng.standard_normal((5, 32)).astype(np.float32)
     np.testing.assert_array_equal(ref.route(ctxs), ker.route(ctxs))
+
+
+def test_scheduler_backend_routing_matches_ref():
+    """backend='pallas_interpret' (native block-layout kernels) selects
+    the same arms as backend='ref' for identical feedback streams."""
+    cfg, eng = _engine(seed=0)
+    _, eng1 = _engine(seed=1)
+    arms = [ArmSpec("a", eng, 1e-5), ArmSpec("b", eng1, 1e-4)]
+    sref = BanditScheduler(arms, dim=32, backend="ref")
+    sker = BanditScheduler(arms, dim=32, backend="pallas_interpret")
+    rng = np.random.default_rng(2)
+    for i in range(12):
+        ctx = rng.standard_normal(32).astype(np.float32)
+        r, a = float(rng.random() < 0.5), int(rng.integers(0, 2))
+        sref.feedback(a, ctx, r)
+        sker.feedback(a, ctx, r)
+    ctxs = rng.standard_normal((6, 32)).astype(np.float32)
+    np.testing.assert_array_equal(sref.route(ctxs), sker.route(ctxs))
+    # states agree too (the kernel update path is the same math)
+    np.testing.assert_allclose(np.asarray(sref.state.a_inv_t),
+                               np.asarray(sker.state.a_inv_t),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_scheduler_rejects_unknown_backend():
+    cfg, eng = _engine(seed=0)
+    with pytest.raises(ValueError):
+        BanditScheduler([ArmSpec("a", eng, 1e-5)], dim=16, backend="bogus")
+
+
+def test_scheduler_budget_policy_opts_out():
+    """budget_linucb routing consumes per-request budgets: once every
+    arm's observed cost exceeds the remaining budget, route returns -1."""
+    cfg, eng = _engine(seed=0)
+    _, eng1 = _engine(seed=1)
+    arms = [ArmSpec("cheap", eng, 1e-5), ArmSpec("pricey", eng1, 1e-4)]
+    sched = BanditScheduler(arms, dim=16, policy="budget_linucb")
+    rng = np.random.default_rng(3)
+    ctx = rng.standard_normal(16).astype(np.float32)
+    for a in (0, 1):
+        for _ in range(40):
+            sched.feedback(a, ctx, 1.0, cost=0.5)
+    out = sched.route(ctx[None], remaining=np.asarray([1e-6], np.float32))
+    assert out[0] == -1
+    ok = sched.route(ctx[None], remaining=np.asarray([10.0], np.float32))
+    assert ok[0] >= 0
 
 
 def test_scheduler_routes_and_learns():
