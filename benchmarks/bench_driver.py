@@ -5,6 +5,14 @@ one-jitted-call-per-round loop (``dispatch="per_round"``), plus the
 vmapped multi-seed sweep against sequential per-round replications, at
 three regimes:
 
+``--sharded`` runs the seeds × streams scaling suite instead: the
+``shard_map``-sharded seed sweep vs the single-device vmapped sweep, and
+the multi-stream engine at several stream widths, on 8 forced host
+devices (the process re-execs itself with
+``--xla_force_host_platform_device_count=8`` when needed — the flag must
+precede jax init). Scaling efficiency (speedup / devices) lands in the
+bench trajectory JSON as ``bench_driver_sharded``.
+
 * ``pool_d384`` — the paper shape (K=6 arms, d=384). The round body is
   memory-bound on the (d, K·d) LinUCB inverse here, so the scan's win is
   the dispatch+transfer overhead plus in-place carry updates.
@@ -19,6 +27,10 @@ Results land in the bench trajectory via ``common.save_json``.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import subprocess
+import sys
 from typing import Dict
 
 import numpy as np
@@ -29,6 +41,10 @@ from repro.core import router
 
 ROUNDS = 2000
 SWEEP_SEEDS = 6
+SHARD_DEVICES = 8
+SHARD_SEEDS = 8
+SHARD_ROUNDS = 500
+STREAM_WIDTHS = (1, 8, 32)
 
 
 def _timed(fn) -> float:
@@ -131,7 +147,134 @@ def run() -> Dict:
     return out
 
 
+def run_sharded() -> Dict:
+    """Seeds × streams scaling suite (requires the forced host devices)."""
+    import jax
+
+    ndev = len(jax.devices())
+    env64 = env_mod.CalibratedPoolEnv(dim=64)
+    seeds = list(range(SHARD_SEEDS))
+    # forced host devices timeshare the real cores, so scaling efficiency
+    # on an oversubscribed CPU box mostly measures dispatch overhead —
+    # record the core count so the number is interpretable (the win
+    # materializes on real multi-chip meshes; parity is what CPU proves)
+    out: Dict[str, object] = {"devices": ndev, "rounds": SHARD_ROUNDS,
+                              "host_cores": os.cpu_count()}
+
+    # sharded seed sweep vs single-device vmap, same program otherwise
+    def vmapped():
+        return router.run_pool_experiment_sweep(
+            "greedy_linucb", seeds, rounds=SHARD_ROUNDS, env=env64,
+            shard=False)
+
+    def sharded():
+        return router.run_pool_experiment_sweep(
+            "greedy_linucb", seeds, rounds=SHARD_ROUNDS, env=env64,
+            shard=True)
+
+    a, b = vmapped(), sharded()      # warm both compiled programs
+    parity = all(
+        np.array_equal(getattr(x, f), getattr(y, f))
+        for x, y in zip(a, b)
+        for f in ("arms", "rewards", "costs", "regrets", "budgets",
+                  "datasets"))
+    vmap_s = _timed(vmapped)
+    shard_s = _timed(sharded)
+    speedup = vmap_s / shard_s
+    out["seed_sweep"] = {
+        "seeds": SHARD_SEEDS,
+        "vmap_s": vmap_s,
+        "shard_s": shard_s,
+        "speedup": speedup,
+        "scaling_efficiency": speedup / ndev,
+        "shard_equals_vmap": parity,
+        "seed_rounds_per_s": SHARD_SEEDS * SHARD_ROUNDS / shard_s,
+    }
+
+    # multi-stream engine: user-rounds/s at several stream widths (one
+    # shared posterior; width 1 is the batching-free reference). Streams
+    # run UNsharded here: a per-round shard_map on timeshared host
+    # devices pays cross-device dispatch every round for no real
+    # parallelism — stream sharding is for real multi-chip meshes.
+    streams_out: Dict[str, object] = {}
+    base_rps = None
+    for b_width in STREAM_WIDTHS:
+        def ms(b_width=b_width):
+            return router.run_pool_multistream(
+                "greedy_linucb", rounds=SHARD_ROUNDS, streams=b_width,
+                env=env64, shard="none")
+        ms()
+        secs = _timed(ms)
+        rps = SHARD_ROUNDS * b_width / secs
+        base_rps = base_rps or rps
+        streams_out[f"streams_{b_width}"] = {
+            "seconds": secs,
+            "user_rounds_per_s": rps,
+            "throughput_vs_streams_1": rps / base_rps,
+        }
+    out["multistream"] = streams_out
+    common.save_json("bench_driver_sharded", out)
+    return out
+
+
+def _reexec_with_devices() -> int:
+    """Re-spawn under the forced-host-device flag (pre-jax-init only).
+
+    Replays the EXACT invocation mode that reached us (``-m`` with the
+    resolved module name, or the script path from argv) with only the
+    environment changed, so whatever launch worked the first time works
+    in the child too."""
+    from repro.xla_flags import with_host_device_count
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = with_host_device_count(env.get("XLA_FLAGS", ""),
+                                              SHARD_DEVICES)
+    spec = getattr(sys.modules.get("__main__"), "__spec__", None)
+    if spec is not None and spec.name:
+        cmd = [sys.executable, "-m", spec.name] + sys.argv[1:]
+    else:
+        cmd = [sys.executable] + sys.argv
+    return subprocess.call(cmd, env=env)
+
+
+def main_sharded() -> int:
+    import jax
+
+    if len(jax.devices()) < 2:
+        from repro.xla_flags import HOST_DEVICE_FLAG
+
+        # the flag only multiplies CPU host devices — if it is already
+        # set and we still see one device (e.g. a GPU backend won), a
+        # re-exec would recurse forever
+        if HOST_DEVICE_FLAG in os.environ.get("XLA_FLAGS", ""):
+            print("bench_driver --sharded: forced host devices had no "
+                  f"effect (backend {jax.default_backend()!r} has "
+                  f"{len(jax.devices())} device); aborting",
+                  file=sys.stderr)
+            return 1
+        return _reexec_with_devices()
+    out = run_sharded()
+    sw = out["seed_sweep"]
+    print(f"\n=== Sharded sweep: {sw['seeds']} seeds × "
+          f"{out['devices']} devices ===")
+    print(f"shard == vmap: {sw['shard_equals_vmap']}")
+    print(f"speedup {sw['speedup']:.2f}x "
+          f"(efficiency {sw['scaling_efficiency']:.2f}); "
+          f"{sw['seed_rounds_per_s']:.0f} seed-rounds/s")
+    for name, v in out["multistream"].items():
+        print(f"{name}: {v['user_rounds_per_s']:.0f} user-rounds/s "
+              f"({v['throughput_vs_streams_1']:.1f}x vs streams_1)")
+    return 0
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the seeds × streams scaling suite on "
+                         f"{SHARD_DEVICES} forced host devices")
+    args = ap.parse_args()
+    if args.sharded:
+        return sys.exit(main_sharded())
     out = run()
     print("\n=== Driver throughput: scanned engine vs per-round loop ===")
     print(f"scan == per_round (all policies): "

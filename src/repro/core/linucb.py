@@ -245,8 +245,33 @@ def update(state: LinUCBState, arm: jax.Array, x: jax.Array,
     return LinUCBState(a_inv_t=a_inv_t, b=b, theta=theta, counts=counts)
 
 
+def _fold_rows_blocked(a_inv_t: jax.Array, xs: jax.Array, arms: jax.Array,
+                       gates: jax.Array) -> jax.Array:
+    """Row-scan Sherman–Morrison fold on the block layout (ref backend).
+
+    Each row applies exactly :func:`update`'s inverse math — full-width
+    GEMM then slice (the XLA:CPU fast-GEMM trick documented there) and an
+    O(d²) write confined to the routed arm's block — so the fold costs
+    the same as B sequential updates with none of the full-K one-hot
+    work or (K,d,d) transposes of the kernel oracle."""
+    d, _ = a_inv_t.shape
+
+    def body(a, row):
+        x, arm, g = row
+        col = arm * d
+        ax = jax.lax.dynamic_slice(x @ a, (col,), (d,))
+        denom = 1.0 + x @ ax
+        delta = g * (jnp.outer(ax, ax) / denom)
+        block = jax.lax.dynamic_slice(a, (0, col), (d, d))
+        return jax.lax.dynamic_update_slice(a, block - delta, (0, col)), None
+
+    out, _ = jax.lax.scan(body, a_inv_t, (xs, arms, gates))
+    return out
+
+
 def batch_update(state: LinUCBState, arms: jax.Array, xs: jax.Array,
-                 rewards: jax.Array) -> LinUCBState:
+                 rewards: jax.Array,
+                 mask: Optional[jax.Array] = None) -> LinUCBState:
     """Fold a batch of (arm, x, r) observations into the state.
 
     Semantically identical to applying :func:`update` once per row in
@@ -255,24 +280,40 @@ def batch_update(state: LinUCBState, arms: jax.Array, xs: jax.Array,
     ``theta`` as single vectorized ops — no scan over B full-state updates.
     Order matters only up to floating point; Sherman–Morrison applied in any
     order yields the same ``A_k`` so results are deterministic given the batch.
+
+    ``mask``: optional (B,) 0/1 gate — row b contributes nothing when
+    ``mask[b]`` is 0 (how the multi-stream engine folds rounds whose tail
+    steps were never executed, with a static op graph).
+
+    The pallas backend routes through the SELECTED-BLOCK kernel
+    (``sherman_morrison_batch_selected``): the grid gathers only the
+    blocks ``arms`` actually routed to via scalar prefetch, and ``b`` /
+    ``counts`` are scatter-adds — no full-K one-hot anywhere in the
+    traced program.
     """
     d, kd = state.a_inv_t.shape
     k = state.b.shape[0]
-    onehot = jax.nn.one_hot(arms, k, dtype=state.b.dtype)      # (B, K)
+    arms = jnp.asarray(arms, jnp.int32)
+    m = None if mask is None else jnp.asarray(mask, state.b.dtype)
+    row_gate = jnp.ones(arms.shape, state.b.dtype) if m is None else m
     backend = resolved_backend()
     if backend == "ref":
-        from repro.kernels import ref as _ref
-        a_inv_t = _ref.sherman_morrison_batch_blocked_ref(state.a_inv_t,
-                                                          xs, onehot)
+        onehot = jax.nn.one_hot(arms, k, dtype=state.b.dtype)  # (B, K)
+        gated = onehot * row_gate[:, None]
+        a_inv_t = _fold_rows_blocked(state.a_inv_t, xs, arms, row_gate)
+        b = state.b + jnp.einsum("bk,bd->kd", gated,
+                                 rewards[:, None] * xs)
+        pulls = gated.sum(axis=0)
     else:
-        # native block-layout kernel: per-arm fold directly on (d, K·d)
+        # selected-block kernel: only the routed arms' (d,d) blocks move
         from repro.kernels import sherman_morrison as _sm
-        a_inv_t = _sm.sherman_morrison_batch_blocked(
-            state.a_inv_t, xs, onehot,
+        a_inv_t = _sm.sherman_morrison_batch_selected(
+            state.a_inv_t, xs, arms, row_mask=m,
             interpret=backend == "pallas_interpret")
-    b = state.b + jnp.einsum("bk,bd->kd", onehot, rewards[:, None] * xs)
-    counts = state.counts + onehot.sum(axis=0).astype(jnp.int32)
-    touched = onehot.sum(axis=0) > 0
+        b = state.b.at[arms].add((rewards * row_gate)[:, None] * xs)
+        pulls = jnp.zeros((k,), state.b.dtype).at[arms].add(row_gate)
+    counts = state.counts + pulls.astype(jnp.int32)
+    touched = pulls > 0
     # θ_k = A_k⁻¹ b_k for touched arms, read straight off the block
     # layout: a_inv_t.reshape(d, K, d)[i, k, j] == A_k⁻¹[i, j].
     theta_new = jnp.einsum("ikj,kj->ki", a_inv_t.reshape(d, k, d), b)

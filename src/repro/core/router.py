@@ -1,73 +1,30 @@
-"""Unified routing policies + the device-resident experiment engine.
+"""Unified routing policies + the public face of the experiment engine.
 
-``run_pool_experiment`` plays a policy against :class:`CalibratedPoolEnv`
-for T rounds of ≤H steps and records everything the paper's tables need:
-per-step rewards/costs/arms, success position, myopic regret. The per-round
-transition is one pure function (policy state pytrees thread through a
-``lax.scan`` over steps); the driver decides how rounds are dispatched.
+This module owns the POLICY layer: the uniform
+(init / plan / select / update) :class:`PolicyAdapter` API over pytrees,
+:func:`make_policy` building any policy in :data:`POLICIES`, the batched
+serving entry point :func:`policy_route_batch`, and the
+:class:`ExperimentResult` container the paper's tables are computed from.
 
-``run_synthetic_experiment`` does the same against the exactly-linear
-environment and is what the Theorem 1/2 validation tests consume.
-
-Chunked-scan dispatch
----------------------
-Both drivers accept ``dispatch="scan"`` (default) or ``"per_round"``:
-
-* ``"per_round"`` — the legacy path: one jitted call per round from a
-  Python for-loop. T host round-trips plus a device→host transfer of the
-  full :class:`RoundLog` every round; kept for equivalence testing and
-  debugging (easy to breakpoint a single round).
-* ``"scan"`` — the device-resident engine: rounds are lifted into a
-  ``lax.scan`` whose body is exactly the per-round transition, executed
-  in chunks of ``chunk_size`` rounds per jitted dispatch. All ``(chunk,
-  H)`` logs are materialized on device and transferred once per chunk.
-
-Carry layout: the scan carry is the policy state pytree alone — for
-LinUCB-family policies that is the ``(d, K·d)`` block-inverse matrix +
-``(K,d)`` vectors + cost statistics, a few MB at d=384. Everything else
-the round body needs is either a broadcast input (env params, the
-per-dataset ``budget_table``, the base PRNG key ``kround``) or the
-scanned-over round index ``t`` (each round derives its key as
-``fold_in(kround, t)``, so the random stream is identical regardless of
-dispatch mode or chunking). The stacked scan outputs are the per-round
-:class:`RoundLog` leaves.
-
-Step gating: within a round, steps after success (or after a budget
-opt-out) must leave the policy state untouched. The drivers express this
-as a scalar ``executed`` mask passed INTO the policy update (an O(d)
-input gate — see ``linucb.update``), never as ``lax.cond`` or a
-``jnp.where`` over the state pytree: both of those force XLA to copy the
-full block inverse every step, which measures ~3× slower than the
-straight-line masked body on CPU. The masked update is a bitwise no-op
-when ``executed`` is False, so logs match the legacy driver exactly.
-
-Choosing ``chunk_size``: compile time of the chunk program is O(1) in the
-chunk length (scan compiles its body once), so the chunk exists to bound
-*latency to first log* and per-chunk host transfer, not compile cost. The
-default 256 amortizes dispatch overhead ~256× while keeping logs
-streamable every fraction of a second on CPU; anything in 128–1024 is
-sensible. T is padded up to a multiple of the chunk so a single program
-serves every chunk (the padded tail rounds are computed and discarded —
-bounded waste of < chunk_size rounds).
-
-Multi-seed sweeps: ``run_pool_experiment_sweep`` /
-``run_synthetic_experiment_sweep`` vmap the chunked scan over a leading
-seed axis — S replications run as one batched program instead of S
-sequential experiments. Per-seed env params are built exactly as the
-sequential driver builds them (stacked, not re-derived under vmap), so
-sweep results match per-seed runs.
+The DRIVER layer — how rounds are dispatched (chunked ``lax.scan``),
+replicated (vmapped / ``shard_map``-sharded seed sweeps), batched across
+concurrent user streams, and logged (pluggable streaming sinks) — lives
+in :mod:`repro.engine`. The ``run_*`` functions here are thin wrappers
+kept for API stability; see ``repro/engine/__init__.py`` for the
+round/seed/stream/device axis model and the sink protocol. Results are
+bit-identical to the pre-engine drivers for every dispatch mode, chunk
+size, sharding layout and sink choice.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, budget as budget_mod, env as env_mod
+from repro.core import baselines, budget as budget_mod
 from repro.core import knapsack as knapsack_mod
 from repro.core import linucb
 
@@ -154,6 +111,13 @@ class PolicyAdapter(NamedTuple):
     # ``linucb.update``), which is how the drivers avoid per-step
     # conditionals or full-state selects on the (d, K·d) inverse.
     update: Callable[..., Any]
+    # fork(state, i) — decorrelate per-replica select randomness when one
+    # frozen state snapshot is shared across i = 0..B-1 concurrent
+    # streams (the multi-stream engine). Identity for deterministic
+    # selects; policies whose select keys randomness off the state (the
+    # 'random' baseline's round counter) must make fork(state, i) differ
+    # per i, or every stream of a round picks the same arm.
+    fork: Callable[[Any, jax.Array], Any] = lambda state, i: state
 
 
 def make_policy(name: str, num_arms: int, dim: int,
@@ -244,6 +208,7 @@ def make_policy(name: str, num_arms: int, dim: int,
             plan=no_plan,
             select=rand_select,
             update=lambda s, p, a, x, r, c, m: s + jnp.asarray(m, jnp.int32),
+            fork=lambda s, i: s + jnp.asarray(i, jnp.int32),
         )
 
     if name.startswith("fixed:"):
@@ -286,581 +251,49 @@ def policy_route_batch(policy: PolicyAdapter, state: Any, xs: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Pool-environment driver
+# Experiment drivers — thin wrappers over repro.engine.driver
 # ---------------------------------------------------------------------------
+# The engine imports this module for the policy layer, so it is imported
+# lazily here (first run_* call); by then this module is fully initialized.
 
-def _pool_round(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
-                params: env_mod.PoolParams, state: Any, key: jax.Array,
-                budget_table: jax.Array, budget_jitter: float,
-                dataset: Optional[jax.Array]) -> Tuple[Any, RoundLog, jax.Array]:
-    """One user round: ≤H adaptive steps. Pure & jit-able.
+def _engine():
+    from repro.engine import driver as engine_driver
+    return engine_driver
 
-    ``budget_table``: (num_datasets,) per-dataset base budgets (paper
-    protocol: greedy LinUCB's avg per-query cost ±5%); +inf disables."""
-    kq, kb, kloop = jax.random.split(key, 3)
-    q0 = env.reset(params, kq, dataset)
-    round_budget = budget_table[q0.dataset] * (
-        1.0 + budget_jitter * jax.random.uniform(kb, minval=-1.0,
-                                                 maxval=1.0))
-    plan = policy.plan(state, q0.x, round_budget)
-    h_max = env.horizon if policy.multi_step else 1
 
-    def step_fn(carry, h):
-        state, q, remaining, done, kh = carry
-        kh, ks = jax.random.split(kh)
-        arm = policy.select(state, plan, q.x, h, remaining)
-        arm = jnp.asarray(arm, jnp.int32)
-        executed = (~done) & (arm >= 0)
-        arm_safe = jnp.clip(arm, 0, env.num_arms - 1)
+def run_pool_experiment(policy_name: str, **kwargs):
+    """Play ``policy_name`` against the calibrated pool env.
 
-        r, c, q_next = env.step(params, ks, q, arm_safe)
-        # myopic regret vs the best arm for the *current* context
-        # (vector-subtract before indexing: keeps the expression in the
-        # same fused form in every compile context — per-round jit,
-        # chunked scan, vmapped sweep — so logs stay bitwise identical)
-        probs = env.success_probs(params, q)
-        reg = (jnp.max(probs) - probs)[arm_safe]
+    See :func:`repro.engine.driver.run_pool_experiment` for all options
+    (dispatch mode, chunk size, streaming ``sink=``…). Returns an
+    :class:`ExperimentResult` (default sink) or ``sink.finalize()``."""
+    return _engine().run_pool_experiment(policy_name, **kwargs)
 
-        # not-executed steps are gated INSIDE the update (O(d) mask),
-        # never by conditionals or selects over the full policy state —
-        # both would copy the (d, K·d) inverse every step
-        state = policy.update(state, plan, arm_safe, q.x, r, c, executed)
-        q = jax.tree.map(lambda new, old: jnp.where(executed, new, old),
-                         q_next, q)
-        remaining = jnp.where(executed, remaining - c, remaining)
-        done = done | (executed & (r > 0.5)) | (~executed)
 
-        log = (jnp.where(executed, arm_safe, -1),
-               jnp.where(executed, r, 0.0),
-               jnp.where(executed, c, 0.0),
-               jnp.where(executed, reg, 0.0))
-        return (state, q, remaining, done, kh), log
+def run_pool_experiment_sweep(policy_name: str, seeds, **kwargs):
+    """S replications as one vmapped / device-sharded program; one
+    :class:`ExperimentResult` per seed, bit-identical to per-seed runs.
+    See :func:`repro.engine.driver.run_pool_experiment_sweep`."""
+    return _engine().run_pool_experiment_sweep(policy_name, seeds, **kwargs)
 
-    init = (state, q0, round_budget, jnp.asarray(False), kloop)
-    (state, _, _, _, _), (arms, rewards, costs, regrets) = jax.lax.scan(
-        step_fn, init, jnp.arange(h_max))
 
-    pad = env.horizon - h_max
-    if pad:
-        arms = jnp.concatenate([arms, -jnp.ones((pad,), arms.dtype)])
-        rewards = jnp.concatenate([rewards, jnp.zeros((pad,))])
-        costs = jnp.concatenate([costs, jnp.zeros((pad,))])
-        regrets = jnp.concatenate([regrets, jnp.zeros((pad,))])
-    return state, RoundLog(arms, rewards, costs, regrets, round_budget), \
-        q0.dataset
+def run_pool_multistream(policy_name: str, **kwargs):
+    """B concurrent user streams sharing one posterior, batched per round.
+    See :func:`repro.engine.driver.run_pool_multistream`."""
+    return _engine().run_pool_multistream(policy_name, **kwargs)
 
 
-def _pool_chunk(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
-                params: env_mod.PoolParams, state: Any, kround: jax.Array,
-                budget_table: jax.Array, ts: jax.Array, *,
-                budget_jitter: float, dataset: Optional[jax.Array]):
-    """Scan the per-round transition over a chunk of round indices.
+def run_synthetic_experiment(policy_name: str, **kwargs):
+    """LinUCB vs the exactly-linear env (Theorem 1/2 validation).
+    See :func:`repro.engine.driver.run_synthetic_experiment`."""
+    return _engine().run_synthetic_experiment(policy_name, **kwargs)
 
-    Carry = policy state; each round re-derives its key as
-    ``fold_in(kround, t)`` so the stream matches the per-round driver
-    bitwise. Returns the final state plus stacked (chunk, …) logs."""
 
-    def body(state, t):
-        state, log, ds = _pool_round(policy, env, params, state,
-                                     jax.random.fold_in(kround, t),
-                                     budget_table, budget_jitter, dataset)
-        return state, (log, ds)
-
-    return jax.lax.scan(body, state, ts)
-
-
-def _voting_chunk(env: env_mod.CalibratedPoolEnv, params: env_mod.PoolParams,
-                  kround: jax.Array, ts: jax.Array, *,
-                  dataset: Optional[jax.Array]):
-    """Stateless voting rounds, scanned over a chunk of round indices."""
-
-    def body(carry, t):
-        r, c, reg, ds = _voting_round(env, params,
-                                      jax.random.fold_in(kround, t), dataset)
-        return carry, (r, c, reg, ds)
-
-    _, logs = jax.lax.scan(body, jnp.int32(0), ts)
-    return logs
-
-
-def _voting_round(env: env_mod.CalibratedPoolEnv, params: env_mod.PoolParams,
-                  key: jax.Array, dataset: Optional[jax.Array]):
-    """Majority voting: query all arms once; correct if ≥2 arms are correct."""
-    kq, ks = jax.random.split(key)
-    q = env.reset(params, kq, dataset)
-    probs = env.success_probs(params, q)
-    hits = jax.random.bernoulli(ks, probs)
-    reward = (hits.sum() >= 2).astype(jnp.float32)
-    cost = params.cost[:, q.dataset].sum()
-    reg = jnp.max(probs) - reward  # vs best single arm, per paper's framing
-    return reward, cost, jnp.maximum(reg, 0.0), q.dataset
-
-
-def _chunk_indices(rounds: int, chunk: int):
-    """Yield (lo, n, ts) per chunk; ts always has length ``chunk`` (padded
-    past T so one compiled program serves every chunk)."""
-    for lo in range(0, rounds, chunk):
-        yield lo, min(chunk, rounds - lo), \
-            jnp.arange(lo, lo + chunk, dtype=jnp.int32)
-
-
-# Jitted driver programs are cached on their static configuration so
-# repeated experiments (benchmark sweeps, tests, serving replays) reuse the
-# compiled chunk program instead of re-tracing fresh closures every call.
-# ``seed`` only reaches compiled code through the 'random' policy's closure,
-# so it is normalized out of the key for every other policy. ``backend``
-# (the resolved linucb backend) is read at trace time inside the policy
-# math, so it must be part of every cache key — otherwise set_backend()
-# after a first run would be silently ignored by the cached programs.
-@functools.lru_cache(maxsize=128)
-def _jitted_pool_drivers(policy_name: str, env: env_mod.CalibratedPoolEnv,
-                         alpha: float, lam: float, horizon_t: int,
-                         c_max: float, seed_key: int, budget_jitter: float,
-                         dataset: Optional[int], backend: str):
-    ds_arg = None if dataset is None else jnp.int32(dataset)
-    policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
-                         lam=lam, horizon_t=horizon_t, c_max=c_max,
-                         seed=seed_key)
-    round_fn = jax.jit(functools.partial(
-        _pool_round, policy, env, budget_jitter=budget_jitter,
-        dataset=ds_arg))
-    chunk_fn = jax.jit(functools.partial(
-        _pool_chunk, policy, env, budget_jitter=budget_jitter,
-        dataset=ds_arg))
-    return policy, round_fn, chunk_fn
-
-
-@functools.lru_cache(maxsize=32)
-def _jitted_voting_drivers(env: env_mod.CalibratedPoolEnv,
-                           dataset: Optional[int]):
-    ds_arg = None if dataset is None else jnp.int32(dataset)
-    round_fn = jax.jit(functools.partial(_voting_round, env, dataset=ds_arg))
-    chunk_fn = jax.jit(functools.partial(_voting_chunk, env, dataset=ds_arg))
-    return round_fn, chunk_fn
-
-
-@functools.lru_cache(maxsize=128)
-def _jitted_pool_sweep_chunk(policy_name: str,
-                             env: env_mod.CalibratedPoolEnv, alpha: float,
-                             lam: float, horizon_t: int, c_max: float,
-                             budget_jitter: float, dataset: Optional[int],
-                             backend: str):
-    ds_arg = None if dataset is None else jnp.int32(dataset)
-
-    def chunk_fn(seed, params_s, state, kround, table_row, ts):
-        policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
-                             lam=lam, horizon_t=horizon_t, c_max=c_max,
-                             seed=seed)
-        return _pool_chunk(policy, env, params_s, state, kround, table_row,
-                           ts, budget_jitter=budget_jitter, dataset=ds_arg)
-
-    return jax.jit(jax.vmap(chunk_fn, in_axes=(0, 0, 0, 0, 0, None)))
-
-
-@functools.lru_cache(maxsize=32)
-def _jitted_voting_sweep_chunk(env: env_mod.CalibratedPoolEnv,
-                               dataset: Optional[int]):
-    ds_arg = None if dataset is None else jnp.int32(dataset)
-    return jax.jit(jax.vmap(
-        functools.partial(_voting_chunk, env, dataset=ds_arg),
-        in_axes=(0, 0, None)))
-
-
-def _pool_budget_table(base_budget, num_datasets: int,
-                       budgeted: bool) -> jax.Array:
-    if budgeted:
-        table = np.broadcast_to(np.asarray(base_budget, np.float32),
-                                (num_datasets,)).copy()
-    else:
-        table = np.full((num_datasets,), np.inf, np.float32)
-    return jnp.asarray(table)
-
-
-def _pool_c_max(env: env_mod.CalibratedPoolEnv) -> float:
-    return float(env_mod.TABLE2_COST.max()) * 4.0
-
-
-def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
-                        seed: int = 0,
-                        env: Optional[env_mod.CalibratedPoolEnv] = None,
-                        base_budget=1e-3,
-                        budget_jitter: float = 0.05,
-                        dataset: Optional[int] = None,
-                        alpha: float = 0.675, lam: float = 0.45,
-                        dispatch: str = "scan",
-                        chunk_size: int = DEFAULT_CHUNK_SIZE
-                        ) -> ExperimentResult:
-    """Play ``policy_name`` for ``rounds`` user queries; returns full logs.
-
-    ``base_budget`` mirrors the paper's protocol: each round's budget is
-    the base ±5% (uniform). A scalar applies to all datasets; an array of
-    per-dataset budgets implements the paper's "greedy LinUCB's average
-    cost per query" reference. Unbudgeted policies get +inf.
-
-    ``dispatch`` picks the driver: ``"scan"`` (default, device-resident
-    chunked ``lax.scan``) or ``"per_round"`` (legacy one-jitted-call-per-
-    round loop). Both produce identical results for the same seed; see
-    the module docstring.
-    """
-    env = env or env_mod.CalibratedPoolEnv()
-    if dispatch not in DISPATCH_MODES:
-        raise ValueError(f"unknown dispatch {dispatch!r} "
-                         f"(choose from {DISPATCH_MODES})")
-    key = jax.random.PRNGKey(seed)
-    kenv, kround = jax.random.split(key)
-    params = env.make(kenv)
-
-    budgeted = policy_name in ("budget_linucb", "knapsack")
-    ds_arg = None if dataset is None else jnp.int32(dataset)
-
-    T, H = rounds, env.horizon
-    arms = np.full((T, H), -1, np.int32)
-    rewards = np.zeros((T, H), np.float32)
-    costs = np.zeros((T, H), np.float32)
-    regrets = np.zeros((T, H), np.float32)
-    budgets = np.zeros((T,), np.float32)
-    datasets = np.zeros((T,), np.int32)
-    chunk = max(1, min(chunk_size, T))
-
-    if policy_name == "voting":
-        round_fn, chunk_fn = _jitted_voting_drivers(env, dataset)
-        if dispatch == "per_round":
-            for t in range(T):
-                r, c, reg, ds = round_fn(params, jax.random.fold_in(kround, t))
-                rewards[t, 0], costs[t, 0] = float(r), float(c)
-                regrets[t, 0], datasets[t] = float(reg), int(ds)
-        else:
-            for lo, n, ts in _chunk_indices(T, chunk):
-                r, c, reg, ds = chunk_fn(params, kround, ts)
-                rewards[lo:lo + n, 0] = np.asarray(r)[:n]
-                costs[lo:lo + n, 0] = np.asarray(c)[:n]
-                regrets[lo:lo + n, 0] = np.asarray(reg)[:n]
-                datasets[lo:lo + n] = np.asarray(ds)[:n]
-        arms[:, 0] = env.num_arms  # sentinel: "all arms"
-        budgets[:] = np.inf
-        return ExperimentResult(arms, rewards, costs, regrets, budgets,
-                                datasets)
-
-    policy, round_fn, chunk_fn = _jitted_pool_drivers(
-        policy_name, env, alpha, lam, rounds * env.horizon, _pool_c_max(env),
-        seed if policy_name == "random" else 0, budget_jitter, dataset,
-        linucb.resolved_backend())
-    state = policy.init()
-    table_j = _pool_budget_table(base_budget, env.num_datasets, budgeted)
-
-    if dispatch == "per_round":
-        for t in range(T):
-            state, log, ds = round_fn(params, state,
-                                      jax.random.fold_in(kround, t), table_j)
-            arms[t] = np.asarray(log.arms)
-            rewards[t] = np.asarray(log.rewards)
-            costs[t] = np.asarray(log.costs)
-            regrets[t] = np.asarray(log.regrets)
-            budgets[t] = float(log.budget)
-            datasets[t] = int(ds)
-        return ExperimentResult(arms, rewards, costs, regrets, budgets,
-                                datasets)
-
-    for lo, n, ts in _chunk_indices(T, chunk):
-        state, (log, ds) = chunk_fn(params, state, kround, table_j, ts)
-        arms[lo:lo + n] = np.asarray(log.arms)[:n]
-        rewards[lo:lo + n] = np.asarray(log.rewards)[:n]
-        costs[lo:lo + n] = np.asarray(log.costs)[:n]
-        regrets[lo:lo + n] = np.asarray(log.regrets)[:n]
-        budgets[lo:lo + n] = np.asarray(log.budget)[:n]
-        datasets[lo:lo + n] = np.asarray(ds)[:n]
-    return ExperimentResult(arms, rewards, costs, regrets, budgets, datasets)
-
-
-# ---------------------------------------------------------------------------
-# Vmapped multi-seed sweep (pool env)
-# ---------------------------------------------------------------------------
-
-def _stack_seed_setup(env, seeds: Sequence[int]):
-    """Per-seed env params + round keys, built exactly as the sequential
-    driver builds them (then stacked) so sweep results match per-seed runs
-    even where vmapping the constructor would change floating point (QR)."""
-    params_list, kround_list = [], []
-    for s in seeds:
-        kenv, kround = jax.random.split(jax.random.PRNGKey(int(s)))
-        params_list.append(env.make(kenv))
-        kround_list.append(kround)
-    params = jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
-    return params, jnp.stack(kround_list)
-
-
-def _sweep_budget_table(base_budget, num_seeds: int, num_datasets: int,
-                        budgeted: bool) -> jax.Array:
-    """Broadcast budgets to (S, D).
-
-    Accepted shapes — chosen so no input is ambiguous when S == D:
-    scalar (all seeds/datasets), (D,) per-dataset shared by all seeds
-    (matching ``run_pool_experiment``), (S, 1) per-seed, (S, D) full.
-    """
-    if not budgeted:
-        return jnp.full((num_seeds, num_datasets), jnp.inf, jnp.float32)
-    b = np.asarray(base_budget, np.float32)
-    if b.ndim == 1:
-        if b.shape[0] != num_datasets:
-            raise ValueError(
-                f"1-D base_budget is per-dataset and must have length "
-                f"{num_datasets}, got {b.shape[0]}; pass per-seed budgets "
-                f"as shape (S, 1)")
-        b = b[None, :]
-    elif b.ndim == 2 and b.shape[0] != num_seeds:
-        raise ValueError(f"2-D base_budget must have {num_seeds} rows "
-                         f"(one per seed), got {b.shape}")
-    return jnp.asarray(np.broadcast_to(b, (num_seeds, num_datasets)).copy())
-
-
-def _broadcast_state(state, num_seeds: int):
-    return jax.tree.map(
-        lambda l: jnp.broadcast_to(jnp.asarray(l),
-                                   (num_seeds,) + jnp.asarray(l).shape),
-        state)
-
-
-def _split_sweep_result(arms, rewards, costs, regrets, budgets, datasets
-                        ) -> List[ExperimentResult]:
-    return [ExperimentResult(arms[s], rewards[s], costs[s], regrets[s],
-                             budgets[s], datasets[s])
-            for s in range(arms.shape[0])]
-
-
-def run_pool_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
-                              rounds: int = 1000,
-                              env: Optional[env_mod.CalibratedPoolEnv] = None,
-                              base_budget=1e-3,
-                              budget_jitter: float = 0.05,
-                              dataset: Optional[int] = None,
-                              alpha: float = 0.675, lam: float = 0.45,
-                              chunk_size: int = DEFAULT_CHUNK_SIZE
-                              ) -> List[ExperimentResult]:
-    """Run ``len(seeds)`` replications as ONE vmapped program.
-
-    The chunked scan of :func:`run_pool_experiment` gains a leading seed
-    axis via ``jax.vmap``: policy states, env params, PRNG keys and the
-    budget table all carry an (S, …) batch dimension, so S-seed sweeps
-    cost one dispatch per chunk instead of S. ``base_budget`` broadcasts
-    from scalar / (D,) per-dataset / (S,1) per-seed / (S,D) to per-seed
-    per-dataset budgets.
-    Returns one :class:`ExperimentResult` per seed, matching what
-    ``run_pool_experiment(seed=s)`` produces.
-    """
-    env = env or env_mod.CalibratedPoolEnv()
-    seeds = [int(s) for s in seeds]
-    S, T, H = len(seeds), rounds, env.horizon
-    ds_arg = None if dataset is None else jnp.int32(dataset)
-    budgeted = policy_name in ("budget_linucb", "knapsack")
-    chunk = max(1, min(chunk_size, T))
-
-    params, krounds = _stack_seed_setup(env, seeds)
-    arms = np.full((S, T, H), -1, np.int32)
-    rewards = np.zeros((S, T, H), np.float32)
-    costs = np.zeros((S, T, H), np.float32)
-    regrets = np.zeros((S, T, H), np.float32)
-    budgets = np.zeros((S, T), np.float32)
-    datasets = np.zeros((S, T), np.int32)
-
-    if policy_name == "voting":
-        vchunk = _jitted_voting_sweep_chunk(env, dataset)
-        for lo, n, ts in _chunk_indices(T, chunk):
-            r, c, reg, ds = vchunk(params, krounds, ts)
-            rewards[:, lo:lo + n, 0] = np.asarray(r)[:, :n]
-            costs[:, lo:lo + n, 0] = np.asarray(c)[:, :n]
-            regrets[:, lo:lo + n, 0] = np.asarray(reg)[:, :n]
-            datasets[:, lo:lo + n] = np.asarray(ds)[:, :n]
-        arms[:, :, 0] = env.num_arms
-        budgets[:] = np.inf
-        return _split_sweep_result(arms, rewards, costs, regrets, budgets,
-                                   datasets)
-
-    table = _sweep_budget_table(base_budget, S, env.num_datasets, budgeted)
-    seeds_arr = jnp.asarray(seeds, jnp.int32)
-
-    vchunk = _jitted_pool_sweep_chunk(policy_name, env, alpha, lam,
-                                      rounds * env.horizon, _pool_c_max(env),
-                                      budget_jitter, dataset,
-                                      linucb.resolved_backend())
-    state = _broadcast_state(
-        make_policy(policy_name, env.num_arms, env.dim, alpha=alpha, lam=lam,
-                    horizon_t=rounds * env.horizon, c_max=_pool_c_max(env),
-                    seed=seeds[0]).init(), S)
-
-    for lo, n, ts in _chunk_indices(T, chunk):
-        state, (log, ds) = vchunk(seeds_arr, params, state, krounds, table,
-                                  ts)
-        arms[:, lo:lo + n] = np.asarray(log.arms)[:, :n]
-        rewards[:, lo:lo + n] = np.asarray(log.rewards)[:, :n]
-        costs[:, lo:lo + n] = np.asarray(log.costs)[:, :n]
-        regrets[:, lo:lo + n] = np.asarray(log.regrets)[:, :n]
-        budgets[:, lo:lo + n] = np.asarray(log.budget)[:, :n]
-        datasets[:, lo:lo + n] = np.asarray(ds)[:, :n]
-    return _split_sweep_result(arms, rewards, costs, regrets, budgets,
-                               datasets)
-
-
-# ---------------------------------------------------------------------------
-# Synthetic-environment driver (Theorem 1 / 2 validation)
-# ---------------------------------------------------------------------------
-
-def _synthetic_round(env: env_mod.SyntheticLinearEnv, cfg, budgeted: bool,
-                     params, state, key: jax.Array, budget: jax.Array):
-    """One synthetic round of ≤horizon steps; returns (state, regret)."""
-    num_arms, horizon = env.num_arms, env.horizon
-    kx, kloop = jax.random.split(key)
-    x0 = env.reset(params, kx)
-
-    def step_fn(carry, h):
-        state, x, remaining, done, kh = carry
-        kh, kf, kc, kg = jax.random.split(kh, 4)
-        if budgeted:
-            arm = budget_mod.select(state, x, cfg, remaining)
-        else:
-            arm = linucb.select(state, x, cfg)
-        arm = jnp.asarray(arm, jnp.int32)
-        executed = (~done) & (arm >= 0)
-        arm_safe = jnp.clip(arm, 0, num_arms - 1)
-
-        r = env.feedback(params, kf, x, arm_safe)
-        c = env.cost(params, kc, arm_safe)
-        means = env.mean_reward(params, x)
-        if budgeted:
-            feas = params.cost_mean <= remaining
-            ratio = jnp.where(feas, means / params.cost_mean, -jnp.inf)
-            oracle = jnp.argmax(ratio)
-            reg = means[oracle] - means[arm_safe]
-        else:
-            reg = jnp.max(means) - means[arm_safe]
-
-        # mask-gated update — no conditionals / full-state selects
-        if budgeted:
-            state = budget_mod.update(state, arm_safe, x, r, c,
-                                      mask=executed)
-        else:
-            state = linucb.update(state, arm_safe, x, r, mask=executed)
-        success = r > 0.5
-        x_next = env.evolve(params, kg, x, arm_safe, r)
-        x = jnp.where(executed & ~success, x_next, x)
-        remaining = jnp.where(executed, remaining - c, remaining)
-        done = done | (executed & success) | (~executed)
-        return (state, x, remaining, done, kh), \
-            jnp.where(executed, jnp.maximum(reg, 0.0), 0.0)
-
-    init = (state, x0, jnp.float32(budget), jnp.asarray(False), kloop)
-    (state, _, _, _, _), regs = jax.lax.scan(step_fn, init,
-                                             jnp.arange(horizon))
-    return state, regs.sum()
-
-
-def _synthetic_chunk(env: env_mod.SyntheticLinearEnv, cfg, budgeted: bool,
-                     params, state, kround: jax.Array, budget: jax.Array,
-                     ts: jax.Array):
-    """Scan the synthetic round over a chunk of round indices."""
-
-    def body(state, t):
-        return _synthetic_round(env, cfg, budgeted, params, state,
-                                jax.random.fold_in(kround, t), budget)
-
-    return jax.lax.scan(body, state, ts)
-
-
-def _synthetic_policy_init(policy_name: str, num_arms: int, dim: int,
-                           alpha: float, lam: float, rounds: int,
-                           horizon: int):
-    budgeted = policy_name == "budget_linucb"
-    if budgeted:
-        cfg = budget_mod.BudgetConfig(num_arms, dim, alpha, lam,
-                                      horizon_t=rounds * horizon, c_max=2.0)
-        return cfg, budgeted, budget_mod.init(cfg)
-    cfg = linucb.LinUCBConfig(num_arms, dim, alpha, lam)
-    return cfg, budgeted, linucb.init(cfg)
-
-
-@functools.lru_cache(maxsize=64)
-def _jitted_synthetic_drivers(policy_name: str,
-                              env: env_mod.SyntheticLinearEnv, alpha: float,
-                              lam: float, rounds: int, backend: str):
-    cfg, budgeted, _ = _synthetic_policy_init(
-        policy_name, env.num_arms, env.dim, alpha, lam, rounds, env.horizon)
-    round_fn = jax.jit(functools.partial(_synthetic_round, env, cfg,
-                                         budgeted))
-    chunk_fn = jax.jit(functools.partial(_synthetic_chunk, env, cfg,
-                                         budgeted))
-    vchunk = jax.jit(jax.vmap(
-        functools.partial(_synthetic_chunk, env, cfg, budgeted),
-        in_axes=(0, 0, 0, None, None)))
-    return round_fn, chunk_fn, vchunk
-
-
-def run_synthetic_experiment(policy_name: str, *, rounds: int = 2000,
-                             num_arms: int = 6, dim: int = 16,
-                             horizon: int = 4, seed: int = 0,
-                             noise_sd: float = 0.1,
-                             alpha: float = 0.675, lam: float = 0.45,
-                             base_budget: float = 2.0,
-                             dispatch: str = "scan",
-                             chunk_size: int = DEFAULT_CHUNK_SIZE
-                             ) -> Dict[str, np.ndarray]:
-    """LinUCB vs the exactly-linear env; returns cumulative regret curves."""
-    if dispatch not in DISPATCH_MODES:
-        raise ValueError(f"unknown dispatch {dispatch!r} "
-                         f"(choose from {DISPATCH_MODES})")
-    env = env_mod.SyntheticLinearEnv(num_arms=num_arms, dim=dim,
-                                     noise_sd=noise_sd, horizon=horizon)
-    key = jax.random.PRNGKey(seed)
-    kenv, kround = jax.random.split(key)
-    params = env.make(kenv)
-    _, _, state = _synthetic_policy_init(
-        policy_name, num_arms, dim, alpha, lam, rounds, horizon)
-    round_fn, chunk_fn, _ = _jitted_synthetic_drivers(
-        policy_name, env, alpha, lam, rounds, linucb.resolved_backend())
-
-    per_round = np.zeros(rounds, np.float32)
-    if dispatch == "per_round":
-        for t in range(rounds):
-            state, reg = round_fn(params, state,
-                                  jax.random.fold_in(kround, t), base_budget)
-            per_round[t] = float(reg)
-    else:
-        chunk = max(1, min(chunk_size, rounds))
-        budget_j = jnp.float32(base_budget)
-        for lo, n, ts in _chunk_indices(rounds, chunk):
-            state, regs = chunk_fn(params, state, kround, budget_j, ts)
-            per_round[lo:lo + n] = np.asarray(regs)[:n]
-    return {"per_round_regret": per_round,
-            "cumulative_regret": np.cumsum(per_round)}
-
-
-def run_synthetic_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
-                                   rounds: int = 2000, num_arms: int = 6,
-                                   dim: int = 16, horizon: int = 4,
-                                   noise_sd: float = 0.1,
-                                   alpha: float = 0.675, lam: float = 0.45,
-                                   base_budget: float = 2.0,
-                                   chunk_size: int = DEFAULT_CHUNK_SIZE
-                                   ) -> Dict[str, np.ndarray]:
-    """Vmapped multi-seed synthetic sweep; regret curves shaped (S, T)."""
-    env = env_mod.SyntheticLinearEnv(num_arms=num_arms, dim=dim,
-                                     noise_sd=noise_sd, horizon=horizon)
-    seeds = [int(s) for s in seeds]
-    S = len(seeds)
-    params, krounds = _stack_seed_setup(env, seeds)
-    _, _, state0 = _synthetic_policy_init(
-        policy_name, num_arms, dim, alpha, lam, rounds, horizon)
-    state = _broadcast_state(state0, S)
-
-    chunk = max(1, min(chunk_size, rounds))
-    _, _, vchunk = _jitted_synthetic_drivers(policy_name, env, alpha, lam,
-                                             rounds,
-                                             linucb.resolved_backend())
-    budget_j = jnp.float32(base_budget)
-    per_round = np.zeros((S, rounds), np.float32)
-    for lo, n, ts in _chunk_indices(rounds, chunk):
-        state, regs = vchunk(params, state, krounds, budget_j, ts)
-        per_round[:, lo:lo + n] = np.asarray(regs)[:, :n]
-    return {"per_round_regret": per_round,
-            "cumulative_regret": np.cumsum(per_round, axis=1)}
+def run_synthetic_experiment_sweep(policy_name: str, seeds, **kwargs):
+    """Vmapped / device-sharded multi-seed synthetic sweep; (S, T) curves.
+    See :func:`repro.engine.driver.run_synthetic_experiment_sweep`."""
+    return _engine().run_synthetic_experiment_sweep(policy_name, seeds,
+                                                    **kwargs)
 
 
 def sublinearity_slope(cum_regret: np.ndarray, burn_in: int = 50) -> float:

@@ -1,0 +1,58 @@
+"""Sharded multi-stream experiment engine with streaming log sinks.
+
+This package is the machinery behind ``core.router.run_*`` — the paper's
+experiment protocol (T user rounds × ≤H refinement steps, replicated over
+seeds) turned into a device-parallel, multi-stream, streaming-output
+engine. ``core.router`` keeps the public API and the policy definitions;
+everything about *how* rounds are dispatched, replicated, sharded and
+logged lives here.
+
+The four axes
+-------------
+* **step** ``h < H`` — adaptive refinement steps within one user round
+  (the paper's context evolution). A ``lax.scan`` inside the round body.
+* **round** ``t < T`` — user rounds. A chunked ``lax.scan`` over the
+  round index: ``chunk_size`` rounds per jitted dispatch, the PRNG key
+  derived per round as ``fold_in(kround, t)`` so results are invariant
+  to chunking and dispatch mode.
+* **seed** ``s < S`` — independent replications of the whole experiment
+  (different env draws + policy streams). ``vmap`` gives one batched
+  program; ``repro.engine.shard`` lays the same axis over the devices of
+  ``launch.mesh.make_bandit_mesh`` with ``shard_map`` — embarrassingly
+  parallel, no collectives, bit-identical to the single-device sweep.
+* **stream** ``b < B`` — concurrent user streams sharing ONE policy
+  posterior (``driver.run_pool_multistream``). Streams select against a
+  frozen per-round snapshot; their observations fold back in one batched
+  ``linucb.batch_update`` (the selected-block Sherman–Morrison kernel),
+  amortizing the (d, K·d) inverse traffic across the batch. The stream
+  axis shards over the same bandit mesh, with the posterior replicated.
+
+Seed and stream are both *replication* axes and share the mesh axis name
+``"seed"``; the difference is what is replicated (whole experiments vs.
+rounds against a shared posterior).
+
+Log sinks
+---------
+Drivers never materialize (T, …) host arrays themselves — each dispatched
+chunk's logs go to a pluggable :class:`~repro.engine.sink.LogSink`:
+``append({field: (chunk, …) device arrays}, n_valid)`` per chunk, then one
+``finalize()``. :class:`~repro.engine.sink.MemorySink` (the default)
+reproduces the legacy in-memory arrays bit-for-bit;
+:class:`~repro.engine.sink.NpyChunkSink` double-buffers device→host
+transfers and appends per-chunk ``.npz`` shards under ``results/`` so
+T ≫ 10⁶ experiments hold O(chunk) host log memory. Every sink sees
+byte-identical appends, so sink choice can never change results.
+"""
+from repro.engine.driver import (fold_observations, run_pool_experiment,
+                                 run_pool_experiment_sweep,
+                                 run_pool_multistream,
+                                 run_synthetic_experiment,
+                                 run_synthetic_experiment_sweep)
+from repro.engine.sink import LogSink, MemorySink, NpyChunkSink
+
+__all__ = [
+    "LogSink", "MemorySink", "NpyChunkSink", "fold_observations",
+    "run_pool_experiment", "run_pool_experiment_sweep",
+    "run_pool_multistream", "run_synthetic_experiment",
+    "run_synthetic_experiment_sweep",
+]

@@ -1,0 +1,1019 @@
+"""The device-resident experiment engine (extracted from ``core.router``).
+
+Drives any ``core.router`` policy against the paper's environments and
+streams the logs out through a pluggable :class:`~repro.engine.sink.LogSink`.
+``core.router.run_*`` remain the public entry points — thin wrappers over
+the functions here — so nothing upstream changed signatures.
+
+Axes (see the package docstring for the full picture):
+
+* **step** ``h ≤ H`` — refinement steps inside one user round; a
+  ``lax.scan`` whose carry threads the policy state (or, multi-stream,
+  the per-stream interaction state against a frozen policy snapshot).
+* **round** ``t < T`` — user rounds; a chunked ``lax.scan`` (``chunk``
+  rounds per jitted dispatch, T padded up to a chunk multiple so one
+  compiled program serves every chunk; padded tail rounds are computed
+  and discarded).
+* **seed** ``s < S`` — independent replications; ``vmap`` on one device,
+  split over the ``"seed"`` axis of ``launch.mesh.make_bandit_mesh`` with
+  ``shard_map`` on several (``repro.engine.shard``) — bit-identical
+  either way.
+* **stream** ``b < B`` — independent user streams sharing ONE policy
+  posterior (:func:`run_pool_multistream`): each round dispatches B
+  frozen-state rounds at once, then folds every executed observation
+  through :func:`fold_observations` / ``linucb.batch_update`` — one
+  selected-block Sherman–Morrison kernel launch instead of B·H rank-1
+  updates, amortizing the d=384 inverse traffic across the batch.
+
+Chunked-scan dispatch
+---------------------
+``dispatch="scan"`` (default) lifts rounds into a ``lax.scan`` executed in
+chunks of ``chunk_size`` rounds per jitted dispatch; ``"per_round"`` is
+the legacy one-jitted-call-per-round loop (kept for equivalence testing
+and debugging). Carry = the policy state pytree alone; each round derives
+its key as ``fold_in(kround, t)``, so the random stream is identical
+regardless of dispatch mode, chunking, seed sharding, or sink choice.
+
+Step gating: steps after success (or a budget opt-out) are gated INSIDE
+the policy update (an O(d) input mask — see ``linucb.update``), never by
+``lax.cond`` or ``jnp.where`` over the state pytree: both force XLA to
+copy the full block inverse every step (~3× slower on CPU). The masked
+update is a bitwise no-op, so logs match the legacy driver exactly.
+
+Choosing ``chunk_size``: compile time of the chunk program is O(1) in the
+chunk length, so the chunk bounds *latency to first log* and per-chunk
+host transfer, not compile cost. The default 256 amortizes dispatch
+overhead ~256×; anything in 128–1024 is sensible. With an
+``NpyChunkSink`` the chunk also bounds peak host log memory — the sink
+double-buffers, holding one chunk's device arrays while writing the
+previous one, so T ≫ 10⁶ runs never materialize (T, H) host arrays.
+
+Multi-stream semantics: within a round, every stream's ≤H steps select
+against the SAME posterior snapshot (the paper's per-step update becomes
+a per-round batched fold — standard delayed-feedback batching). Results
+are deterministic given (seed, streams) but deliberately NOT bit-equal to
+B sequential single-stream rounds; the single-stream drivers remain the
+reference semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import budget as budget_mod, env as env_mod
+from repro.core import linucb
+from repro.core.router import (DEFAULT_CHUNK_SIZE, DISPATCH_MODES,
+                               ExperimentResult, PolicyAdapter, RoundLog,
+                               make_policy)
+from repro.engine import shard as shard_mod
+from repro.engine import sink as sink_mod
+
+POOL_FIELDS = ("arms", "rewards", "costs", "regrets", "budgets", "datasets")
+
+
+# ---------------------------------------------------------------------------
+# Round bodies (pool env)
+# ---------------------------------------------------------------------------
+
+def _round_setup(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
+                 params: env_mod.PoolParams, state: Any, key: jax.Array,
+                 budget_table: jax.Array, budget_jitter: float,
+                 dataset: Optional[jax.Array]):
+    """Shared round preamble: reset, budget draw, plan, step horizon.
+
+    ``budget_table``: (num_datasets,) per-dataset base budgets (paper
+    protocol: greedy LinUCB's avg per-query cost ±5%); +inf disables."""
+    kq, kb, kloop = jax.random.split(key, 3)
+    q0 = env.reset(params, kq, dataset)
+    round_budget = budget_table[q0.dataset] * (
+        1.0 + budget_jitter * jax.random.uniform(kb, minval=-1.0,
+                                                 maxval=1.0))
+    plan = policy.plan(state, q0.x, round_budget)
+    h_max = env.horizon if policy.multi_step else 1
+    return q0, round_budget, plan, h_max, kloop
+
+
+def _pool_step(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
+               params: env_mod.PoolParams, plan: Any, sel_state: Any,
+               q, remaining, done, ks: jax.Array, h):
+    """One gated refinement step — the single source of truth for the
+    select/execute/regret/log math shared by the state-threading round
+    body and the frozen-snapshot multi-stream body (which differ only in
+    where ``sel_state`` comes from and whether an update follows)."""
+    arm = policy.select(sel_state, plan, q.x, h, remaining)
+    arm = jnp.asarray(arm, jnp.int32)
+    executed = (~done) & (arm >= 0)
+    arm_safe = jnp.clip(arm, 0, env.num_arms - 1)
+    x_obs = q.x   # the context this step OBSERVED (pre-evolution) — what
+                  # the posterior update must consume
+
+    r, c, q_next = env.step(params, ks, q, arm_safe)
+    # myopic regret vs the best arm for the *current* context
+    # (vector-subtract before indexing: keeps the expression in the
+    # same fused form in every compile context — per-round jit,
+    # chunked scan, vmapped sweep — so logs stay bitwise identical)
+    probs = env.success_probs(params, q)
+    reg = (jnp.max(probs) - probs)[arm_safe]
+
+    q = jax.tree.map(lambda new, old: jnp.where(executed, new, old),
+                     q_next, q)
+    remaining = jnp.where(executed, remaining - c, remaining)
+    done = done | (executed & (r > 0.5)) | (~executed)
+
+    log = (jnp.where(executed, arm_safe, -1),
+           jnp.where(executed, r, 0.0),
+           jnp.where(executed, c, 0.0),
+           jnp.where(executed, reg, 0.0))
+    return arm_safe, executed, x_obs, r, c, q, remaining, done, log
+
+
+def _pool_round(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
+                params: env_mod.PoolParams, state: Any, key: jax.Array,
+                budget_table: jax.Array, budget_jitter: float,
+                dataset: Optional[jax.Array]) -> Tuple[Any, RoundLog, jax.Array]:
+    """One user round: ≤H adaptive steps. Pure & jit-able."""
+    q0, round_budget, plan, h_max, kloop = _round_setup(
+        policy, env, params, state, key, budget_table, budget_jitter,
+        dataset)
+
+    def step_fn(carry, h):
+        state, q, remaining, done, kh = carry
+        kh, ks = jax.random.split(kh)
+        arm_safe, executed, x_obs, r, c, q, remaining, done, log = \
+            _pool_step(policy, env, params, plan, state, q, remaining,
+                       done, ks, h)
+        # not-executed steps are gated INSIDE the update (O(d) mask),
+        # never by conditionals or selects over the full policy state —
+        # both would copy the (d, K·d) inverse every step
+        state = policy.update(state, plan, arm_safe, x_obs, r, c, executed)
+        return (state, q, remaining, done, kh), log
+
+    init = (state, q0, round_budget, jnp.asarray(False), kloop)
+    (state, _, _, _, _), (arms, rewards, costs, regrets) = jax.lax.scan(
+        step_fn, init, jnp.arange(h_max))
+
+    arms, rewards, costs, regrets = _pad_step_axis(
+        env.horizon - h_max, arms, rewards, costs, regrets)
+    return state, RoundLog(arms, rewards, costs, regrets, round_budget), \
+        q0.dataset
+
+
+def _pad_step_axis(pad: int, arms, rewards, costs, regrets):
+    if pad:
+        arms = jnp.concatenate([arms, -jnp.ones((pad,), arms.dtype)])
+        rewards = jnp.concatenate([rewards, jnp.zeros((pad,))])
+        costs = jnp.concatenate([costs, jnp.zeros((pad,))])
+        regrets = jnp.concatenate([regrets, jnp.zeros((pad,))])
+    return arms, rewards, costs, regrets
+
+
+def _pool_chunk(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
+                params: env_mod.PoolParams, state: Any, kround: jax.Array,
+                budget_table: jax.Array, ts: jax.Array, *,
+                budget_jitter: float, dataset: Optional[jax.Array]):
+    """Scan the per-round transition over a chunk of round indices.
+
+    Carry = policy state; each round re-derives its key as
+    ``fold_in(kround, t)`` so the stream matches the per-round driver
+    bitwise. Returns the final state plus stacked (chunk, …) logs."""
+
+    def body(state, t):
+        state, log, ds = _pool_round(policy, env, params, state,
+                                     jax.random.fold_in(kround, t),
+                                     budget_table, budget_jitter, dataset)
+        return state, (log, ds)
+
+    return jax.lax.scan(body, state, ts)
+
+
+def _voting_chunk(env: env_mod.CalibratedPoolEnv, params: env_mod.PoolParams,
+                  kround: jax.Array, ts: jax.Array, *,
+                  dataset: Optional[jax.Array]):
+    """Stateless voting rounds, scanned over a chunk of round indices."""
+
+    def body(carry, t):
+        r, c, reg, ds = _voting_round(env, params,
+                                      jax.random.fold_in(kround, t), dataset)
+        return carry, (r, c, reg, ds)
+
+    _, logs = jax.lax.scan(body, jnp.int32(0), ts)
+    return logs
+
+
+def _voting_round(env: env_mod.CalibratedPoolEnv, params: env_mod.PoolParams,
+                  key: jax.Array, dataset: Optional[jax.Array]):
+    """Majority voting: query all arms once; correct if ≥2 arms are correct."""
+    kq, ks = jax.random.split(key)
+    q = env.reset(params, kq, dataset)
+    probs = env.success_probs(params, q)
+    hits = jax.random.bernoulli(ks, probs)
+    reward = (hits.sum() >= 2).astype(jnp.float32)
+    cost = params.cost[:, q.dataset].sum()
+    reg = jnp.max(probs) - reward  # vs best single arm, per paper's framing
+    return reward, cost, jnp.maximum(reg, 0.0), q.dataset
+
+
+def _chunk_indices(rounds: int, chunk: int):
+    """Yield (lo, n, ts) per chunk; ts always has length ``chunk`` (padded
+    past T so one compiled program serves every chunk)."""
+    for lo in range(0, rounds, chunk):
+        yield lo, min(chunk, rounds - lo), \
+            jnp.arange(lo, lo + chunk, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Jitted driver programs (cached on their static configuration)
+# ---------------------------------------------------------------------------
+# ``seed`` only reaches compiled code through the 'random' policy's closure,
+# so it is normalized out of the key for every other policy. ``backend``
+# (the resolved linucb backend) is read at trace time inside the policy
+# math, so it must be part of every cache key — otherwise set_backend()
+# after a first run would be silently ignored by the cached programs.
+
+@functools.lru_cache(maxsize=128)
+def _jitted_pool_drivers(policy_name: str, env: env_mod.CalibratedPoolEnv,
+                         alpha: float, lam: float, horizon_t: int,
+                         c_max: float, seed_key: int, budget_jitter: float,
+                         dataset: Optional[int], backend: str):
+    ds_arg = None if dataset is None else jnp.int32(dataset)
+    policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
+                         lam=lam, horizon_t=horizon_t, c_max=c_max,
+                         seed=seed_key)
+    round_fn = jax.jit(functools.partial(
+        _pool_round, policy, env, budget_jitter=budget_jitter,
+        dataset=ds_arg))
+    chunk_fn = jax.jit(functools.partial(
+        _pool_chunk, policy, env, budget_jitter=budget_jitter,
+        dataset=ds_arg))
+    return policy, round_fn, chunk_fn
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_voting_drivers(env: env_mod.CalibratedPoolEnv,
+                           dataset: Optional[int]):
+    ds_arg = None if dataset is None else jnp.int32(dataset)
+    round_fn = jax.jit(functools.partial(_voting_round, env, dataset=ds_arg))
+    chunk_fn = jax.jit(functools.partial(_voting_chunk, env, dataset=ds_arg))
+    return round_fn, chunk_fn
+
+
+def _pool_sweep_chunk_callable(policy_name: str,
+                               env: env_mod.CalibratedPoolEnv, alpha: float,
+                               lam: float, horizon_t: int, c_max: float,
+                               budget_jitter: float, dataset: Optional[int]):
+    """The UNjitted vmapped sweep chunk — shared by the single-device jit
+    path and the shard_map path (which splits its seed axis per device)."""
+    ds_arg = None if dataset is None else jnp.int32(dataset)
+
+    def chunk_fn(seed, params_s, state, kround, table_row, ts):
+        policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
+                             lam=lam, horizon_t=horizon_t, c_max=c_max,
+                             seed=seed)
+        return _pool_chunk(policy, env, params_s, state, kround, table_row,
+                           ts, budget_jitter=budget_jitter, dataset=ds_arg)
+
+    return jax.vmap(chunk_fn, in_axes=(0, 0, 0, 0, 0, None))
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted_pool_sweep_chunk(policy_name: str,
+                             env: env_mod.CalibratedPoolEnv, alpha: float,
+                             lam: float, horizon_t: int, c_max: float,
+                             budget_jitter: float, dataset: Optional[int],
+                             backend: str, num_devices: int = 1):
+    vchunk = _pool_sweep_chunk_callable(policy_name, env, alpha, lam,
+                                        horizon_t, c_max, budget_jitter,
+                                        dataset)
+    if num_devices == 1:
+        return jax.jit(vchunk), None
+    fn, mesh = shard_mod.shard_vmapped(vchunk, num_devices,
+                                       num_seed_args=5,
+                                       num_broadcast_args=1)
+    return jax.jit(fn), mesh
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_voting_sweep_chunk(env: env_mod.CalibratedPoolEnv,
+                               dataset: Optional[int], num_devices: int = 1):
+    ds_arg = None if dataset is None else jnp.int32(dataset)
+    vchunk = jax.vmap(functools.partial(_voting_chunk, env, dataset=ds_arg),
+                      in_axes=(0, 0, None))
+    if num_devices == 1:
+        return jax.jit(vchunk), None
+    fn, mesh = shard_mod.shard_vmapped(vchunk, num_devices,
+                                       num_seed_args=2,
+                                       num_broadcast_args=1)
+    return jax.jit(fn), mesh
+
+
+# ---------------------------------------------------------------------------
+# Budget-table / seed-stacking helpers
+# ---------------------------------------------------------------------------
+
+def _pool_budget_table(base_budget, num_datasets: int,
+                       budgeted: bool) -> jax.Array:
+    if budgeted:
+        table = np.broadcast_to(np.asarray(base_budget, np.float32),
+                                (num_datasets,)).copy()
+    else:
+        table = np.full((num_datasets,), np.inf, np.float32)
+    return jnp.asarray(table)
+
+
+def _pool_c_max(env: env_mod.CalibratedPoolEnv) -> float:
+    return float(env_mod.TABLE2_COST.max()) * 4.0
+
+
+def _stack_seed_setup(env, seeds: Sequence[int]):
+    """Per-seed env params + round keys, built exactly as the sequential
+    driver builds them (then stacked) so sweep results match per-seed runs
+    even where vmapping the constructor would change floating point (QR)."""
+    params_list, kround_list = [], []
+    for s in seeds:
+        kenv, kround = jax.random.split(jax.random.PRNGKey(int(s)))
+        params_list.append(env.make(kenv))
+        kround_list.append(kround)
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+    return params, jnp.stack(kround_list)
+
+
+def _sweep_budget_table(base_budget, num_seeds: int, num_datasets: int,
+                        budgeted: bool) -> jax.Array:
+    """Broadcast budgets to (S, D).
+
+    Accepted shapes — chosen so no input is ambiguous when S == D:
+    scalar (all seeds/datasets), (D,) per-dataset shared by all seeds
+    (matching ``run_pool_experiment``), (S, 1) per-seed, (S, D) full.
+    """
+    if not budgeted:
+        return jnp.full((num_seeds, num_datasets), jnp.inf, jnp.float32)
+    b = np.asarray(base_budget, np.float32)
+    if b.ndim == 1:
+        if b.shape[0] != num_datasets:
+            raise ValueError(
+                f"1-D base_budget is per-dataset and must have length "
+                f"{num_datasets}, got {b.shape[0]}; pass per-seed budgets "
+                f"as shape (S, 1)")
+        b = b[None, :]
+    elif b.ndim == 2 and b.shape[0] != num_seeds:
+        raise ValueError(f"2-D base_budget must have {num_seeds} rows "
+                         f"(one per seed), got {b.shape}")
+    return jnp.asarray(np.broadcast_to(b, (num_seeds, num_datasets)).copy())
+
+
+def _broadcast_state(state, num_seeds: int):
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(jnp.asarray(l),
+                                   (num_seeds,) + jnp.asarray(l).shape),
+        state)
+
+
+def _split_sweep_result(arms, rewards, costs, regrets, budgets, datasets,
+                        num_seeds: Optional[int] = None
+                        ) -> List[ExperimentResult]:
+    n = arms.shape[0] if num_seeds is None else num_seeds
+    return [ExperimentResult(arms[s], rewards[s], costs[s], regrets[s],
+                             budgets[s], datasets[s])
+            for s in range(n)]
+
+
+def _result_from_logs(out: Dict[str, np.ndarray]) -> ExperimentResult:
+    return ExperimentResult(*(out[f] for f in POOL_FIELDS))
+
+
+def _empty_pool_result(env: env_mod.CalibratedPoolEnv) -> ExperimentResult:
+    h = env.horizon
+    return ExperimentResult(
+        arms=np.full((0, h), -1, np.int32),
+        rewards=np.zeros((0, h), np.float32),
+        costs=np.zeros((0, h), np.float32),
+        regrets=np.zeros((0, h), np.float32),
+        budgets=np.zeros((0,), np.float32),
+        datasets=np.zeros((0,), np.int32))
+
+
+def _voting_chunk_arrays(env, r, c, reg, ds):
+    """Expand stateless voting logs to the uniform pool sink layout."""
+    chunk, h = r.shape[0], env.horizon
+    arms = jnp.full((chunk, h), -1, jnp.int32)
+    arms = arms.at[:, 0].set(env.num_arms)   # sentinel: "all arms"
+    zeros = jnp.zeros((chunk, h), jnp.float32)
+    return {"arms": arms,
+            "rewards": zeros.at[:, 0].set(r),
+            "costs": zeros.at[:, 0].set(c),
+            "regrets": zeros.at[:, 0].set(reg),
+            "budgets": jnp.full((chunk,), jnp.inf, jnp.float32),
+            "datasets": jnp.asarray(ds, jnp.int32)}
+
+
+def _pool_chunk_arrays(log: RoundLog, ds) -> Dict[str, Any]:
+    return {"arms": log.arms, "rewards": log.rewards, "costs": log.costs,
+            "regrets": log.regrets, "budgets": log.budget, "datasets": ds}
+
+
+class _RowBuffer:
+    """Group the per_round driver's one-row logs into chunk-sized sink
+    appends, so the legacy/debug dispatch mode produces the same shard
+    layout (and host-side work) as the scan driver instead of one sink
+    append — one ``.npz`` shard — per round."""
+
+    def __init__(self, sink: sink_mod.LogSink, chunk: int) -> None:
+        self._sink, self._chunk = sink, chunk
+        self._rows: List[Dict[str, np.ndarray]] = []
+
+    def append_row(self, arrays: Dict[str, Any]) -> None:
+        self._rows.append({k: np.asarray(v) for k, v in arrays.items()})
+        if len(self._rows) == self._chunk:
+            self.flush()
+
+    def flush(self) -> None:
+        if not self._rows:
+            return
+        stacked = {k: np.concatenate([r[k] for r in self._rows])
+                   for k in self._rows[0]}
+        self._sink.append(stacked, len(self._rows))
+        self._rows = []
+
+
+# ---------------------------------------------------------------------------
+# Pool-environment driver
+# ---------------------------------------------------------------------------
+
+def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
+                        seed: int = 0,
+                        env: Optional[env_mod.CalibratedPoolEnv] = None,
+                        base_budget=1e-3,
+                        budget_jitter: float = 0.05,
+                        dataset: Optional[int] = None,
+                        alpha: float = 0.675, lam: float = 0.45,
+                        dispatch: str = "scan",
+                        chunk_size: int = DEFAULT_CHUNK_SIZE,
+                        sink: Optional[sink_mod.LogSink] = None):
+    """Play ``policy_name`` for ``rounds`` user queries.
+
+    With the default ``sink=None`` the logs land in a
+    :class:`~repro.engine.sink.MemorySink` and an
+    :class:`~repro.core.router.ExperimentResult` is returned (the legacy
+    contract, bit-identical). Pass any other sink to stream chunk logs
+    elsewhere (e.g. :class:`~repro.engine.sink.NpyChunkSink` for T ≫ 10⁶
+    disk-backed runs); the return value is then ``sink.finalize()``.
+    """
+    env = env or env_mod.CalibratedPoolEnv()
+    if dispatch not in DISPATCH_MODES:
+        raise ValueError(f"unknown dispatch {dispatch!r} "
+                         f"(choose from {DISPATCH_MODES})")
+    if rounds == 0 and sink is None:
+        # legacy contract: empty result, no compile (MemorySink cannot
+        # infer field shapes from zero appends)
+        return _empty_pool_result(env)
+    key = jax.random.PRNGKey(seed)
+    kenv, kround = jax.random.split(key)
+    params = env.make(kenv)
+
+    budgeted = policy_name in ("budget_linucb", "knapsack")
+    T = rounds
+    chunk = max(1, min(chunk_size, T))
+    return_result = sink is None
+    out_sink = sink if sink is not None else sink_mod.MemorySink()
+
+    if policy_name == "voting":
+        round_fn, chunk_fn = _jitted_voting_drivers(env, dataset)
+        if dispatch == "per_round":
+            buf = _RowBuffer(out_sink, chunk)
+            for t in range(T):
+                r, c, reg, ds = round_fn(params, jax.random.fold_in(kround, t))
+                buf.append_row(_voting_chunk_arrays(
+                    env, *(jnp.reshape(v, (1,)) for v in (r, c, reg, ds))))
+            buf.flush()
+        else:
+            for lo, n, ts in _chunk_indices(T, chunk):
+                r, c, reg, ds = chunk_fn(params, kround, ts)
+                out_sink.append(_voting_chunk_arrays(env, r, c, reg, ds), n)
+        out = out_sink.finalize()
+        return _result_from_logs(out) if return_result else out
+
+    policy, round_fn, chunk_fn = _jitted_pool_drivers(
+        policy_name, env, alpha, lam, rounds * env.horizon, _pool_c_max(env),
+        seed if policy_name == "random" else 0, budget_jitter, dataset,
+        linucb.resolved_backend())
+    state = policy.init()
+    table_j = _pool_budget_table(base_budget, env.num_datasets, budgeted)
+
+    if dispatch == "per_round":
+        buf = _RowBuffer(out_sink, chunk)
+        for t in range(T):
+            state, log, ds = round_fn(params, state,
+                                      jax.random.fold_in(kround, t), table_j)
+            buf.append_row(_pool_chunk_arrays(
+                jax.tree.map(lambda l: l[None], log),
+                jnp.reshape(ds, (1,))))
+        buf.flush()
+    else:
+        for lo, n, ts in _chunk_indices(T, chunk):
+            state, (log, ds) = chunk_fn(params, state, kround, table_j, ts)
+            out_sink.append(_pool_chunk_arrays(log, ds), n)
+    out = out_sink.finalize()
+    return _result_from_logs(out) if return_result else out
+
+
+# ---------------------------------------------------------------------------
+# Vmapped / sharded multi-seed sweep (pool env)
+# ---------------------------------------------------------------------------
+
+def run_pool_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
+                              rounds: int = 1000,
+                              env: Optional[env_mod.CalibratedPoolEnv] = None,
+                              base_budget=1e-3,
+                              budget_jitter: float = 0.05,
+                              dataset: Optional[int] = None,
+                              alpha: float = 0.675, lam: float = 0.45,
+                              chunk_size: int = DEFAULT_CHUNK_SIZE,
+                              shard: shard_mod.ShardArg = "auto"
+                              ) -> List[ExperimentResult]:
+    """Run ``len(seeds)`` replications as ONE vmapped (optionally
+    device-sharded) program.
+
+    The chunked scan of :func:`run_pool_experiment` gains a leading seed
+    axis via ``jax.vmap``: policy states, env params, PRNG keys and the
+    budget table all carry an (S, …) batch dimension, so S-seed sweeps
+    cost one dispatch per chunk instead of S. ``shard`` lays that axis
+    over the devices of ``launch.mesh.make_bandit_mesh`` with
+    ``shard_map`` (``"auto"``: largest divisor of S ≤ device count —
+    plain vmap when 1; ``True``: all devices, padding S with repeats of
+    the last seed whose results are discarded; ``False``/``"none"``:
+    single-device vmap). Sharded and unsharded sweeps are bit-identical.
+    ``base_budget`` broadcasts from scalar / (D,) per-dataset / (S,1)
+    per-seed / (S,D) to per-seed per-dataset budgets.
+    Returns one :class:`ExperimentResult` per seed, matching what
+    ``run_pool_experiment(seed=s)`` produces.
+    """
+    env = env or env_mod.CalibratedPoolEnv()
+    seeds = [int(s) for s in seeds]
+    S, T, H = len(seeds), rounds, env.horizon
+    budgeted = policy_name in ("budget_linucb", "knapsack")
+    chunk = max(1, min(chunk_size, T))
+
+    ndev = shard_mod.resolve_device_count(shard, S)
+    pad = shard_mod.pad_batch(S, ndev)
+    run_seeds = seeds + seeds[-1:] * pad
+    Sr = S + pad
+
+    params, krounds = _stack_seed_setup(env, run_seeds)
+    arms = np.full((Sr, T, H), -1, np.int32)
+    rewards = np.zeros((Sr, T, H), np.float32)
+    costs = np.zeros((Sr, T, H), np.float32)
+    regrets = np.zeros((Sr, T, H), np.float32)
+    budgets = np.zeros((Sr, T), np.float32)
+    datasets = np.zeros((Sr, T), np.int32)
+
+    if policy_name == "voting":
+        vchunk, mesh = _jitted_voting_sweep_chunk(env, dataset, ndev)
+        if mesh is not None:
+            params, krounds = shard_mod.place_seed_args(mesh,
+                                                        [params, krounds])
+        for lo, n, ts in _chunk_indices(T, chunk):
+            r, c, reg, ds = vchunk(params, krounds, ts)
+            rewards[:, lo:lo + n, 0] = np.asarray(r)[:, :n]
+            costs[:, lo:lo + n, 0] = np.asarray(c)[:, :n]
+            regrets[:, lo:lo + n, 0] = np.asarray(reg)[:, :n]
+            datasets[:, lo:lo + n] = np.asarray(ds)[:, :n]
+        arms[:, :, 0] = env.num_arms
+        budgets[:] = np.inf
+        return _split_sweep_result(arms, rewards, costs, regrets, budgets,
+                                   datasets, S)
+
+    # validate against the caller's S, then pad rows to the run width
+    table = _sweep_budget_table(base_budget, S, env.num_datasets, budgeted)
+    if pad:
+        table = jnp.concatenate([table, jnp.repeat(table[-1:], pad, axis=0)])
+    seeds_arr = jnp.asarray(run_seeds, jnp.int32)
+
+    vchunk, mesh = _jitted_pool_sweep_chunk(policy_name, env, alpha, lam,
+                                            rounds * env.horizon,
+                                            _pool_c_max(env), budget_jitter,
+                                            dataset,
+                                            linucb.resolved_backend(), ndev)
+    state = _broadcast_state(
+        make_policy(policy_name, env.num_arms, env.dim, alpha=alpha, lam=lam,
+                    horizon_t=rounds * env.horizon, c_max=_pool_c_max(env),
+                    seed=run_seeds[0]).init(), Sr)
+    if mesh is not None:
+        seeds_arr, params, state, krounds, table = shard_mod.place_seed_args(
+            mesh, [seeds_arr, params, state, krounds, table])
+
+    for lo, n, ts in _chunk_indices(T, chunk):
+        state, (log, ds) = vchunk(seeds_arr, params, state, krounds, table,
+                                  ts)
+        arms[:, lo:lo + n] = np.asarray(log.arms)[:, :n]
+        rewards[:, lo:lo + n] = np.asarray(log.rewards)[:, :n]
+        costs[:, lo:lo + n] = np.asarray(log.costs)[:, :n]
+        regrets[:, lo:lo + n] = np.asarray(log.regrets)[:, :n]
+        budgets[:, lo:lo + n] = np.asarray(log.budget)[:, :n]
+        datasets[:, lo:lo + n] = np.asarray(ds)[:, :n]
+    return _split_sweep_result(arms, rewards, costs, regrets, budgets,
+                               datasets, S)
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream driver: B user streams, one shared posterior
+# ---------------------------------------------------------------------------
+
+def fold_observations(policy: PolicyAdapter, state: Any, arms: jax.Array,
+                      xs: jax.Array, rewards: jax.Array, costs: jax.Array,
+                      masks: jax.Array) -> Any:
+    """Fold a routed batch of observations into any policy state at once.
+
+    The engine's shared posterior fold — the multi-stream round body and
+    the serving scheduler's batch-ingest path both go through here, so
+    experiments and deployment exercise the same compiled update.
+
+    * LinUCB-family states fold through ``linucb.batch_update`` — one
+      selected-block batched Sherman–Morrison kernel launch on the pallas
+      backend (only the routed arm blocks move).
+    * Budget/knapsack states do the same for the bandit statistics plus
+      masked scatter-adds of the cost statistics.
+    * Anything else falls back to a ``lax.scan`` of the policy's
+      single-observation update (identical semantics, sequential).
+
+    ``masks``: (B,) 0/1 row gates — masked rows contribute nothing (how
+    never-executed padded steps are dropped with a static op graph).
+    """
+    arms = jnp.asarray(arms, jnp.int32)
+    if isinstance(state, linucb.LinUCBState):
+        return linucb.batch_update(state, arms, xs, rewards, mask=masks)
+    if isinstance(state, budget_mod.BudgetState):
+        m = jnp.asarray(masks, state.cost_sum.dtype)
+        return budget_mod.BudgetState(
+            bandit=linucb.batch_update(state.bandit, arms, xs, rewards,
+                                       mask=masks),
+            cost_sum=state.cost_sum.at[arms].add(m * costs),
+            cost_count=state.cost_count.at[arms].add(m),
+        )
+
+    def body(s, obs):
+        a, x, r, c, m = obs
+        return policy.update(s, jnp.int32(0), a, x, r, c, m), None
+
+    state, _ = jax.lax.scan(body, state, (arms, xs, rewards, costs, masks))
+    return state
+
+
+def _pool_round_frozen(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
+                       params: env_mod.PoolParams, state: Any,
+                       key: jax.Array, budget_table: jax.Array,
+                       budget_jitter: float, dataset: Optional[jax.Array]):
+    """One stream's round against a FROZEN policy snapshot.
+
+    Like :func:`_pool_round` but no update happens inside the round —
+    every select sees the same state, and the executed (arm, x, r, c)
+    observations come back for the round-level batched fold. Returns
+    ``(RoundLog, dataset, obs)`` with obs leaves shaped (h_max, …)."""
+    q0, round_budget, plan, h_max, kloop = _round_setup(
+        policy, env, params, state, key, budget_table, budget_jitter,
+        dataset)
+
+    def step_fn(carry, h):
+        q, remaining, done, kh = carry
+        kh, ks = jax.random.split(kh)
+        arm_safe, executed, x_obs, r, c, q, remaining, done, log = \
+            _pool_step(policy, env, params, plan, state, q, remaining,
+                       done, ks, h)
+        obs = (arm_safe, x_obs, r, c, executed)
+        return (q, remaining, done, kh), (log, obs)
+
+    init = (q0, round_budget, jnp.asarray(False), kloop)
+    _, ((arms, rewards, costs, regrets), obs) = jax.lax.scan(
+        step_fn, init, jnp.arange(h_max))
+    arms, rewards, costs, regrets = _pad_step_axis(
+        env.horizon - h_max, arms, rewards, costs, regrets)
+    return RoundLog(arms, rewards, costs, regrets, round_budget), \
+        q0.dataset, obs
+
+
+def _stream_play(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
+                 budget_jitter: float, dataset: Optional[jax.Array],
+                 skeys: jax.Array, sidx: jax.Array, state: Any,
+                 params: env_mod.PoolParams, budget_table: jax.Array):
+    """vmap B frozen-state rounds over the stream axis.
+
+    Each stream selects against ``policy.fork(state, b)`` — identity for
+    deterministic policies, a per-stream decorrelation for state-keyed
+    stochastic selects (the 'random' baseline). Kept as an explicit-
+    argument function (no closed-over tracers) so the SAME callable drops
+    into ``shard_map`` — streams (keys + indices) split over the bandit
+    mesh's ``"seed"`` axis, state/params/table replicated."""
+
+    def one(kk, i, st, pp, tb):
+        return _pool_round_frozen(policy, env, pp, policy.fork(st, i), kk,
+                                  tb, budget_jitter, dataset)
+
+    return jax.vmap(one, in_axes=(0, 0, None, None, None))(
+        skeys, sidx, state, params, budget_table)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_multistream_chunk(policy_name: str,
+                              env: env_mod.CalibratedPoolEnv, alpha: float,
+                              lam: float, horizon_t: int, c_max: float,
+                              seed_key: int, budget_jitter: float,
+                              dataset: Optional[int], streams: int,
+                              num_devices: int, backend: str):
+    ds_arg = None if dataset is None else jnp.int32(dataset)
+    policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
+                         lam=lam, horizon_t=horizon_t, c_max=c_max,
+                         seed=seed_key)
+    play = functools.partial(_stream_play, policy, env, budget_jitter,
+                             ds_arg)
+    if num_devices > 1:
+        play, _ = shard_mod.shard_vmapped(play, num_devices,
+                                          num_seed_args=2,
+                                          num_broadcast_args=3)
+
+    def chunk_fn(params, state, kround, table, ts):
+        sidx = jnp.arange(streams)
+
+        def body(state, t):
+            rkey = jax.random.fold_in(kround, t)
+            skeys = jax.vmap(lambda i: jax.random.fold_in(rkey, i))(sidx)
+            log, ds, obs = play(skeys, sidx, state, params, table)
+            arms_o, xs_o, rs_o, cs_o, ex_o = obs        # (B, h), (B, h, d)…
+            bh = arms_o.shape[0] * arms_o.shape[1]
+            state = fold_observations(
+                policy, state, arms_o.reshape(bh),
+                xs_o.reshape(bh, xs_o.shape[-1]), rs_o.reshape(bh),
+                cs_o.reshape(bh), ex_o.reshape(bh).astype(jnp.float32))
+            return state, (log, ds)
+
+        return jax.lax.scan(body, state, ts)
+
+    return policy, jax.jit(chunk_fn)
+
+
+def run_pool_multistream(policy_name: str, *, rounds: int = 1000,
+                         streams: int = 8, seed: int = 0,
+                         env: Optional[env_mod.CalibratedPoolEnv] = None,
+                         base_budget=1e-3, budget_jitter: float = 0.05,
+                         dataset: Optional[int] = None,
+                         alpha: float = 0.675, lam: float = 0.45,
+                         chunk_size: int = DEFAULT_CHUNK_SIZE,
+                         shard: shard_mod.ShardArg = "none",
+                         sink: Optional[sink_mod.LogSink] = None):
+    """``rounds`` dispatches of ``streams`` concurrent user rounds sharing
+    one posterior — T·B user rounds total.
+
+    Each dispatched round plays B independent streams against a frozen
+    policy snapshot and folds every executed observation through
+    :func:`fold_observations` (``linucb.batch_update`` → selected-block
+    Sherman–Morrison kernel for LinUCB-family policies). This amortizes
+    the (d, K·d) inverse traffic over B streams — the production regime
+    for many-concurrent-user serving studies. ``shard`` splits the
+    stream-play over devices (state replicated; the fold runs on the
+    gathered observations).
+
+    Returns an :class:`ExperimentResult` with T·B rounds flattened
+    round-major (round t's B streams are consecutive), or
+    ``sink.finalize()`` when a custom sink is passed ((T, B, …) arrays).
+    """
+    env = env or env_mod.CalibratedPoolEnv()
+    if policy_name == "voting":
+        raise ValueError("voting is stateless — multi-stream batching does "
+                         "not apply; use run_pool_experiment")
+    if streams < 1:
+        raise ValueError(f"streams must be ≥ 1, got {streams}")
+    if rounds == 0 and sink is None:
+        return _empty_pool_result(env)
+    key = jax.random.PRNGKey(seed)
+    kenv, kround = jax.random.split(key)
+    params = env.make(kenv)
+    budgeted = policy_name in ("budget_linucb", "knapsack")
+    T = rounds
+    chunk = max(1, min(chunk_size, T))
+
+    ndev = shard_mod.resolve_device_count(shard, streams)
+    if streams % ndev:
+        # the stream axis is never padded: padded streams would play (and
+        # cost) real rounds whose logs must then be dropped — fail loudly
+        # instead ("auto" always picks a divisor of streams)
+        raise ValueError(
+            f"shard={shard!r} maps {streams} streams onto {ndev} devices "
+            f"but streams must be a multiple of the device count; pass "
+            f"shard='auto' or a divisible stream width")
+    policy, chunk_fn = _jitted_multistream_chunk(
+        policy_name, env, alpha, lam, rounds * streams * env.horizon,
+        _pool_c_max(env), seed if policy_name == "random" else 0,
+        budget_jitter, dataset, streams, ndev, linucb.resolved_backend())
+    state = policy.init()
+    table = _pool_budget_table(base_budget, env.num_datasets, budgeted)
+
+    return_result = sink is None
+    out_sink = sink if sink is not None else sink_mod.MemorySink()
+    for lo, n, ts in _chunk_indices(T, chunk):
+        state, (log, ds) = chunk_fn(params, state, kround, table, ts)
+        out_sink.append(_pool_chunk_arrays(log, ds), n)
+    out = out_sink.finalize()
+    if not return_result:
+        return out
+    t, b, h = out["arms"].shape
+    return ExperimentResult(
+        arms=out["arms"].reshape(t * b, h),
+        rewards=out["rewards"].reshape(t * b, h),
+        costs=out["costs"].reshape(t * b, h),
+        regrets=out["regrets"].reshape(t * b, h),
+        budgets=out["budgets"].reshape(t * b),
+        datasets=out["datasets"].reshape(t * b))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic-environment driver (Theorem 1 / 2 validation)
+# ---------------------------------------------------------------------------
+
+def _synthetic_round(env: env_mod.SyntheticLinearEnv, cfg, budgeted: bool,
+                     params, state, key: jax.Array, budget: jax.Array):
+    """One synthetic round of ≤horizon steps; returns (state, regret)."""
+    num_arms, horizon = env.num_arms, env.horizon
+    kx, kloop = jax.random.split(key)
+    x0 = env.reset(params, kx)
+
+    def step_fn(carry, h):
+        state, x, remaining, done, kh = carry
+        kh, kf, kc, kg = jax.random.split(kh, 4)
+        if budgeted:
+            arm = budget_mod.select(state, x, cfg, remaining)
+        else:
+            arm = linucb.select(state, x, cfg)
+        arm = jnp.asarray(arm, jnp.int32)
+        executed = (~done) & (arm >= 0)
+        arm_safe = jnp.clip(arm, 0, num_arms - 1)
+
+        r = env.feedback(params, kf, x, arm_safe)
+        c = env.cost(params, kc, arm_safe)
+        means = env.mean_reward(params, x)
+        if budgeted:
+            feas = params.cost_mean <= remaining
+            ratio = jnp.where(feas, means / params.cost_mean, -jnp.inf)
+            oracle = jnp.argmax(ratio)
+            reg = means[oracle] - means[arm_safe]
+        else:
+            reg = jnp.max(means) - means[arm_safe]
+
+        # mask-gated update — no conditionals / full-state selects
+        if budgeted:
+            state = budget_mod.update(state, arm_safe, x, r, c,
+                                      mask=executed)
+        else:
+            state = linucb.update(state, arm_safe, x, r, mask=executed)
+        success = r > 0.5
+        x_next = env.evolve(params, kg, x, arm_safe, r)
+        x = jnp.where(executed & ~success, x_next, x)
+        remaining = jnp.where(executed, remaining - c, remaining)
+        done = done | (executed & success) | (~executed)
+        return (state, x, remaining, done, kh), \
+            jnp.where(executed, jnp.maximum(reg, 0.0), 0.0)
+
+    init = (state, x0, jnp.float32(budget), jnp.asarray(False), kloop)
+    (state, _, _, _, _), regs = jax.lax.scan(step_fn, init,
+                                             jnp.arange(horizon))
+    return state, regs.sum()
+
+
+def _synthetic_chunk(env: env_mod.SyntheticLinearEnv, cfg, budgeted: bool,
+                     params, state, kround: jax.Array, budget: jax.Array,
+                     ts: jax.Array):
+    """Scan the synthetic round over a chunk of round indices."""
+
+    def body(state, t):
+        return _synthetic_round(env, cfg, budgeted, params, state,
+                                jax.random.fold_in(kround, t), budget)
+
+    return jax.lax.scan(body, state, ts)
+
+
+def _synthetic_policy_init(policy_name: str, num_arms: int, dim: int,
+                           alpha: float, lam: float, rounds: int,
+                           horizon: int):
+    budgeted = policy_name == "budget_linucb"
+    if budgeted:
+        cfg = budget_mod.BudgetConfig(num_arms, dim, alpha, lam,
+                                      horizon_t=rounds * horizon, c_max=2.0)
+        return cfg, budgeted, budget_mod.init(cfg)
+    cfg = linucb.LinUCBConfig(num_arms, dim, alpha, lam)
+    return cfg, budgeted, linucb.init(cfg)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_synthetic_drivers(policy_name: str,
+                              env: env_mod.SyntheticLinearEnv, alpha: float,
+                              lam: float, rounds: int, backend: str,
+                              num_devices: int = 1):
+    cfg, budgeted, _ = _synthetic_policy_init(
+        policy_name, env.num_arms, env.dim, alpha, lam, rounds, env.horizon)
+    round_fn = jax.jit(functools.partial(_synthetic_round, env, cfg,
+                                         budgeted))
+    chunk_fn = jax.jit(functools.partial(_synthetic_chunk, env, cfg,
+                                         budgeted))
+    vchunk_raw = jax.vmap(
+        functools.partial(_synthetic_chunk, env, cfg, budgeted),
+        in_axes=(0, 0, 0, None, None))
+    if num_devices == 1:
+        return round_fn, chunk_fn, jax.jit(vchunk_raw), None
+    fn, mesh = shard_mod.shard_vmapped(vchunk_raw, num_devices,
+                                       num_seed_args=3,
+                                       num_broadcast_args=2)
+    return round_fn, chunk_fn, jax.jit(fn), mesh
+
+
+def run_synthetic_experiment(policy_name: str, *, rounds: int = 2000,
+                             num_arms: int = 6, dim: int = 16,
+                             horizon: int = 4, seed: int = 0,
+                             noise_sd: float = 0.1,
+                             alpha: float = 0.675, lam: float = 0.45,
+                             base_budget: float = 2.0,
+                             dispatch: str = "scan",
+                             chunk_size: int = DEFAULT_CHUNK_SIZE,
+                             sink: Optional[sink_mod.LogSink] = None):
+    """LinUCB vs the exactly-linear env; returns cumulative regret curves
+    (or ``sink.finalize()`` when a custom sink consumes the
+    ``per_round_regret`` chunks)."""
+    if dispatch not in DISPATCH_MODES:
+        raise ValueError(f"unknown dispatch {dispatch!r} "
+                         f"(choose from {DISPATCH_MODES})")
+    if rounds == 0 and sink is None:
+        return {"per_round_regret": np.zeros((0,), np.float32),
+                "cumulative_regret": np.zeros((0,), np.float32)}
+    env = env_mod.SyntheticLinearEnv(num_arms=num_arms, dim=dim,
+                                     noise_sd=noise_sd, horizon=horizon)
+    key = jax.random.PRNGKey(seed)
+    kenv, kround = jax.random.split(key)
+    params = env.make(kenv)
+    _, _, state = _synthetic_policy_init(
+        policy_name, num_arms, dim, alpha, lam, rounds, horizon)
+    round_fn, chunk_fn, _, _ = _jitted_synthetic_drivers(
+        policy_name, env, alpha, lam, rounds, linucb.resolved_backend())
+
+    return_result = sink is None
+    out_sink = sink if sink is not None else sink_mod.MemorySink()
+    chunk = max(1, min(chunk_size, rounds))
+    if dispatch == "per_round":
+        buf = _RowBuffer(out_sink, chunk)
+        for t in range(rounds):
+            state, reg = round_fn(params, state,
+                                  jax.random.fold_in(kround, t), base_budget)
+            buf.append_row({"per_round_regret": jnp.reshape(reg, (1,))})
+        buf.flush()
+    else:
+        budget_j = jnp.float32(base_budget)
+        for lo, n, ts in _chunk_indices(rounds, chunk):
+            state, regs = chunk_fn(params, state, kround, budget_j, ts)
+            out_sink.append({"per_round_regret": regs}, n)
+    out = out_sink.finalize()
+    if not return_result:
+        return out
+    per_round = out["per_round_regret"]
+    return {"per_round_regret": per_round,
+            "cumulative_regret": np.cumsum(per_round)}
+
+
+def run_synthetic_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
+                                   rounds: int = 2000, num_arms: int = 6,
+                                   dim: int = 16, horizon: int = 4,
+                                   noise_sd: float = 0.1,
+                                   alpha: float = 0.675, lam: float = 0.45,
+                                   base_budget: float = 2.0,
+                                   chunk_size: int = DEFAULT_CHUNK_SIZE,
+                                   shard: shard_mod.ShardArg = "auto"
+                                   ) -> Dict[str, np.ndarray]:
+    """Vmapped (optionally device-sharded) multi-seed synthetic sweep;
+    regret curves shaped (S, T)."""
+    env = env_mod.SyntheticLinearEnv(num_arms=num_arms, dim=dim,
+                                     noise_sd=noise_sd, horizon=horizon)
+    seeds = [int(s) for s in seeds]
+    S = len(seeds)
+    ndev = shard_mod.resolve_device_count(shard, S)
+    pad = shard_mod.pad_batch(S, ndev)
+    run_seeds = seeds + seeds[-1:] * pad
+    Sr = S + pad
+
+    params, krounds = _stack_seed_setup(env, run_seeds)
+    _, _, state0 = _synthetic_policy_init(
+        policy_name, num_arms, dim, alpha, lam, rounds, horizon)
+    state = _broadcast_state(state0, Sr)
+
+    chunk = max(1, min(chunk_size, rounds))
+    _, _, vchunk, mesh = _jitted_synthetic_drivers(
+        policy_name, env, alpha, lam, rounds, linucb.resolved_backend(),
+        ndev)
+    if mesh is not None:
+        params, state, krounds = shard_mod.place_seed_args(
+            mesh, [params, state, krounds])
+    budget_j = jnp.float32(base_budget)
+    per_round = np.zeros((Sr, rounds), np.float32)
+    for lo, n, ts in _chunk_indices(rounds, chunk):
+        state, regs = vchunk(params, state, krounds, budget_j, ts)
+        per_round[:, lo:lo + n] = np.asarray(regs)[:, :n]
+    per_round = per_round[:S]
+    return {"per_round_regret": per_round,
+            "cumulative_regret": np.cumsum(per_round, axis=1)}

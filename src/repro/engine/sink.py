@@ -1,0 +1,127 @@
+"""Streaming log sinks: where the experiment engine's chunk logs go.
+
+The chunked drivers emit one named-array bundle per dispatched chunk —
+``{"arms": (chunk, …), "rewards": (chunk, …), …}`` device arrays whose
+LEADING axis is the round axis, of which only the first ``n`` rounds are
+valid (the scan pads T up to a chunk multiple so one compiled program
+serves every chunk). A :class:`LogSink` decides what happens to them:
+
+* :class:`MemorySink` — accumulate on the host and concatenate at
+  ``finalize()``; reproduces the legacy in-memory ``(T, …)`` arrays
+  exactly (this is the default sink behind ``run_pool_experiment``).
+* :class:`NpyChunkSink` — double-buffered streaming to disk: ``append``
+  holds the chunk's DEVICE arrays and writes the *previous* chunk as a
+  ``.npz`` shard, so the device→host transfer of chunk i overlaps the
+  (asynchronously dispatched) compute of chunk i+1 and host log memory
+  stays O(chunk) however large T grows. ``finalize()`` flushes the tail
+  shard, writes ``manifest.json``, and returns the manifest;
+  :meth:`NpyChunkSink.load` reassembles the full arrays (tests, offline
+  analysis — NOT the T ≫ 10⁶ path, which should consume shards one at a
+  time).
+
+Sinks are deliberately dumb: no dtype/shape registry, no trimming beyond
+the leading axis, no aggregation. Bitwise parity between sinks is then
+structural — every sink sees byte-identical appends.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Mapping, Optional
+
+import numpy as np
+
+MANIFEST_NAME = "manifest.json"
+
+
+class LogSink:
+    """Protocol for chunk-log consumers (subclass and override both)."""
+
+    def append(self, arrays: Mapping[str, Any], n: int) -> None:
+        """Consume one chunk: ``arrays`` of leading-axis ``chunk`` length,
+        of which rounds ``[0, n)`` are valid (the rest is padded tail)."""
+        raise NotImplementedError
+
+    def finalize(self) -> Any:
+        """Flush and return the sink's result (sink-specific)."""
+        raise NotImplementedError
+
+
+class MemorySink(LogSink):
+    """Host-memory sink: the legacy behavior, as a pluggable sink.
+
+    ``finalize()`` returns ``{name: (T, …) np.ndarray}`` — exactly the
+    arrays the pre-engine drivers materialized."""
+
+    def __init__(self) -> None:
+        self._chunks: List[Dict[str, np.ndarray]] = []
+
+    def append(self, arrays: Mapping[str, Any], n: int) -> None:
+        self._chunks.append({k: np.asarray(v)[:n] for k, v in
+                             arrays.items()})
+
+    def finalize(self) -> Dict[str, np.ndarray]:
+        if not self._chunks:
+            return {}
+        keys = self._chunks[0].keys()
+        return {k: np.concatenate([c[k] for c in self._chunks])
+                for k in keys}
+
+
+class NpyChunkSink(LogSink):
+    """Double-buffered ``.npz``-shard sink under ``directory``.
+
+    One shard per appended chunk (``<prefix>_000000.npz`` …), trimmed to
+    the valid rounds; ``manifest.json`` records the shard order, field
+    names and total round count. Peak host log memory is one chunk (the
+    pending buffer) plus one being written.
+    """
+
+    def __init__(self, directory: str, *, prefix: str = "chunk") -> None:
+        self.directory = directory
+        self.prefix = prefix
+        os.makedirs(directory, exist_ok=True)
+        self.shards: List[str] = []
+        self._pending: Optional[tuple] = None
+        self._fields: Optional[List[str]] = None
+        self._rounds = 0
+
+    def append(self, arrays: Mapping[str, Any], n: int) -> None:
+        # write the PREVIOUS chunk first: its device→host transfer has
+        # been overlapping this chunk's compute since the last append
+        self._flush()
+        self._pending = (dict(arrays), int(n))
+
+    def _flush(self) -> None:
+        if self._pending is None:
+            return
+        arrays, n = self._pending
+        self._pending = None
+        host = {k: np.asarray(v)[:n] for k, v in arrays.items()}
+        if self._fields is None:
+            self._fields = sorted(host)
+        name = f"{self.prefix}_{len(self.shards):06d}.npz"
+        np.savez(os.path.join(self.directory, name), **host)
+        self.shards.append(name)
+        self._rounds += n
+
+    def finalize(self) -> Dict[str, Any]:
+        self._flush()
+        manifest = {"rounds": self._rounds, "fields": self._fields or [],
+                    "shards": self.shards, "prefix": self.prefix}
+        with open(os.path.join(self.directory, MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f, indent=2)
+        return {"directory": self.directory, **manifest}
+
+    @staticmethod
+    def load(directory: str) -> Dict[str, np.ndarray]:
+        """Reassemble ``{field: (T, …)}`` from a finalized shard directory."""
+        with open(os.path.join(directory, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        parts: Dict[str, List[np.ndarray]] = {k: [] for k in
+                                              manifest["fields"]}
+        for name in manifest["shards"]:
+            with np.load(os.path.join(directory, name)) as shard:
+                for k in manifest["fields"]:
+                    parts[k].append(shard[k])
+        return {k: np.concatenate(v) for k, v in parts.items()}

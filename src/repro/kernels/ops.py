@@ -54,6 +54,12 @@ def sherman_morrison_batch_blocked(a_inv_t, xs, mask):
 
 
 @jax.jit
+def sherman_morrison_batch_selected(a_inv_t, xs, arms, row_mask=None):
+    return _sm.sherman_morrison_batch_selected(a_inv_t, xs, arms, row_mask,
+                                               interpret=INTERPRET)
+
+
+@jax.jit
 def sherman_morrison(a_inv, x, mask):
     return _sm.sherman_morrison(a_inv, x, mask, interpret=INTERPRET)
 

@@ -94,6 +94,22 @@ def sherman_morrison_batch_blocked_ref(a_inv_t: jax.Array, xs: jax.Array,
                                                  xs, mask))
 
 
+def sherman_morrison_batch_selected_ref(a_inv_t: jax.Array, xs: jax.Array,
+                                        arms: jax.Array,
+                                        row_mask: Optional[jax.Array] = None
+                                        ) -> jax.Array:
+    """Oracle for the selected-block fold: identical to the blocked batch
+    fold with the routing expressed as ``one_hot(arms) * row_mask``.
+
+    a_inv_t: (d, K·d); xs: (B, d); arms: (B,) int; row_mask: optional (B,)
+    float gate → updated (d, K·d)."""
+    d, kd = a_inv_t.shape
+    mask = jax.nn.one_hot(arms, kd // d, dtype=jnp.float32)
+    if row_mask is not None:
+        mask = mask * jnp.asarray(row_mask, jnp.float32)[:, None]
+    return sherman_morrison_batch_blocked_ref(a_inv_t, xs, mask)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True,
                         window: Optional[int] = None) -> jax.Array:

@@ -26,6 +26,18 @@ per arm in one ``pallas_call`` — the replay/ingest path of
 ``linucb.batch_update``. Grid (K,): each program keeps its arm's (d,d)
 block VMEM-resident for the whole fold — one HBM read + one write per arm.
 
+``sherman_morrison_batch_selected`` is the multi-stream engine / scheduler
+ingest path: the same batched fold, but the grid runs over only the
+blocks the batch actually ROUTED to. The G = min(B, K) candidate block
+indices ride in as a scalar-prefetch operand (distinct routed arms first,
+padded with distinct untouched arms whose fold masks are all-zero — a
+bitwise no-op write), so a B-request batch over a large arm pool (B < K)
+DMAs at most B blocks instead of all K, and ``input_output_aliases``
+leaves every unvisited block untouched; at B ≥ K the grid covers all K
+blocks, matching the all-arms kernel's traffic. No full-K one-hot gating
+of the inverse exists anywhere on this path — the (G, B) routing mask is
+built from an equality against the prefetched block list.
+
 The ``(K, d, d)`` entry points (``sherman_morrison`` /
 ``sherman_morrison_batch``) remain as thin wrappers for tests and
 diagnostics; they pay a transpose into the block layout and back.
@@ -133,6 +145,73 @@ def sherman_morrison_batch_blocked(a_inv_t: jax.Array, xs: jax.Array,
         out_shape=jax.ShapeDtypeStruct((d, kd), a_inv_t.dtype),
         interpret=interpret,
     )(a_inv_t, xs, mask.astype(jnp.float32).T)
+
+
+def _selected_kernel(sel_ref, a_ref, xs_ref, mask_ref, o_ref):
+    """Fold the mask-selected batch rows into ONE routed block.
+
+    The fold math IS ``_batch_kernel`` — the only difference is which
+    blocks the grid visits (program g's block index is ``sel[g]``, a
+    scalar-prefetch gather of the g-th routed arm)."""
+    del sel_ref  # consumed by the BlockSpec index maps
+    _batch_kernel(a_ref, xs_ref, mask_ref, o_ref)
+
+
+def sherman_morrison_batch_selected(a_inv_t: jax.Array, xs: jax.Array,
+                                    arms: jax.Array,
+                                    row_mask: jax.Array | None = None, *,
+                                    interpret: bool = False) -> jax.Array:
+    """Batched fold visiting only the ROUTED blocks (scalar-prefetch gather).
+
+    a_inv_t: (d, K·d); xs: (B, d); arms: (B,) int — row b's routed arm;
+    row_mask: optional (B,) float gate (0 drops row b from the fold).
+    Semantically equal to ``sherman_morrison_batch_blocked`` with the
+    one-hot mask ``one_hot(arms) * row_mask[:, None]``, but the grid is
+    (G,) with G = min(B, K): ``sel`` lists the distinct routed arms first
+    (stable arm order), padded with distinct UNtouched arms whose all-zero
+    fold masks make the write a bitwise no-op — so two grid programs never
+    touch the same block and at most B blocks move at all.
+
+    The gather wins in the B < K regime (serving batch ingest against a
+    large arm pool: B blocks DMA instead of K). With B ≥ K the grid
+    necessarily covers all K blocks — same block traffic as the all-arms
+    kernel — so ``sel`` degenerates to the identity and the routed-arm
+    histogram/argsort is skipped entirely.
+    """
+    d, kd = a_inv_t.shape
+    k = kd // d
+    b = xs.shape[0]
+    g = min(b, k)
+    arms = jnp.asarray(arms, jnp.int32)
+    if g == k:
+        # every block is visited anyway — no gather to compute
+        sel = jnp.arange(k, dtype=jnp.int32)
+    else:
+        # distinct routed arms first (ascending), then untouched arms — a
+        # scatter-add histogram + stable argsort; no one-hot materialized
+        counts = jnp.zeros((k,), jnp.int32).at[arms].add(1)
+        sel = jnp.argsort(counts == 0, stable=True).astype(jnp.int32)[:g]
+    mask = (arms[None, :] == sel[:, None]).astype(jnp.float32)  # (G, B)
+    if row_mask is not None:
+        mask = mask * jnp.asarray(row_mask, jnp.float32)[None, :]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((d, d), lambda i, sel_ref: (0, sel_ref[i])),
+            pl.BlockSpec((b, d), lambda i, sel_ref: (0, 0)),
+            pl.BlockSpec((1, b), lambda i, sel_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, d), lambda i, sel_ref: (0, sel_ref[i])),
+    )
+    return pl.pallas_call(
+        _selected_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((d, kd), a_inv_t.dtype),
+        input_output_aliases={1: 0},    # a_inv_t buffer passes through
+        interpret=interpret,
+    )(sel, a_inv_t, xs, mask)
 
 
 def sherman_morrison(a_inv: jax.Array, x: jax.Array, mask: jax.Array, *,

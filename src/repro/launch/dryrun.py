@@ -1,9 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# Test hook (still before ANY jax import): reduced meshes for CI runs.
-if os.environ.get("REPRO_DRYRUN_DEVICES"):
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
-                               + os.environ["REPRO_DRYRUN_DEVICES"])
+from repro.xla_flags import with_host_device_count
+# Force enough host devices for the production meshes — BEFORE any jax
+# import (repro is a namespace package and xla_flags imports nothing, so
+# the line above touches no jax). Preserve every other user-set XLA flag:
+# only a pre-existing host-device-count flag is replaced (this module
+# must control it; the REPRO_DRYRUN_DEVICES test hook provides reduced
+# meshes for CI runs).
+os.environ["XLA_FLAGS"] = with_host_device_count(
+    os.environ.get("XLA_FLAGS", ""),
+    os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
 
 """Multi-pod dry-run (deliverable e).
 

@@ -16,6 +16,27 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_bandit_mesh(num_devices: int | None = None):
+    """1-D mesh over the ``"seed"`` axis for bandit replication sweeps.
+
+    The experiment engine (``repro.engine.shard``) lays independent
+    seed/stream replications over this axis with ``shard_map`` — the work
+    is embarrassingly parallel, so the mesh is a flat vector of devices
+    with no model/data split. ``num_devices`` defaults to every visible
+    device; pass fewer to leave headroom (the engine picks a divisor of
+    the replication count automatically).
+
+    A FUNCTION, not a constant, for the same reason as the production
+    mesh: importing this module must never touch jax device state.
+    """
+    import numpy as np
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"num_devices must be in [1, {len(devs)}], got {n}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("seed",))
+
+
 def data_axes(mesh) -> tuple:
     """The data-parallel axes of a production mesh (pod folds into DP)."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -8,6 +8,13 @@ feedback, and folds it back into the bandit state. Multi-step refinement
 (the paper's context evolution) happens by the caller resubmitting
 unsatisfied requests with an evolved context.
 
+The batch path is shared with the experiment engine: routing is one
+batched scoring call, and :meth:`BanditScheduler.feedback_batch` folds a
+whole round of observations through the engine's multi-stream posterior
+fold (``repro.engine.driver.fold_observations`` → ``linucb.batch_update``
+→ the selected-block Sherman–Morrison kernel), so deployment and the
+paper's experiments exercise the same compiled update.
+
 Routing backend
 ---------------
 Scoring and updates go through ``core.linucb`` under the module's backend
@@ -44,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import linucb, router
+from repro.engine import driver as engine_driver
 from repro.serving.engine import Engine
 
 
@@ -112,6 +120,8 @@ class BanditScheduler:
         self.state = self._policy.init()
         self._route = jax.jit(self._route_fn, static_argnames=("backend",))
         self._update = jax.jit(self._update_fn, static_argnames=("backend",))
+        self._update_batch = jax.jit(self._update_batch_fn,
+                                     static_argnames=("backend",))
 
     # -- jitted hot paths (one compiled program per backend name) ---------
 
@@ -129,6 +139,16 @@ class BanditScheduler:
         with linucb.backend_scope(backend):
             return self._policy.update(state, jnp.int32(0), arm, x, reward,
                                        cost, jnp.asarray(True))
+
+    def _update_batch_fn(self, state, arms, xs, rewards, costs, *,
+                         backend: str):
+        # the engine's multi-stream posterior fold — linucb.batch_update
+        # (selected-block Sherman–Morrison kernel under a pallas backend)
+        # for LinUCB-family states, generic scan fold otherwise
+        with linucb.backend_scope(backend):
+            return engine_driver.fold_observations(
+                self._policy, state, arms, xs, rewards, costs,
+                jnp.ones(arms.shape, jnp.float32))
 
     def _backend(self) -> str:
         return self._backend_override or linucb.resolved_backend()
@@ -163,6 +183,27 @@ class BanditScheduler:
                                   jnp.asarray(context, jnp.float32),
                                   jnp.float32(reward), jnp.float32(cost),
                                   backend=self._backend())
+
+    def feedback_batch(self, arms, contexts: np.ndarray, rewards,
+                       costs=None) -> None:
+        """Fold a whole routed batch back into the policy state at once.
+
+        One dispatch through the SAME batched posterior fold the
+        experiment engine's multi-stream round body uses
+        (:func:`repro.engine.driver.fold_observations`): LinUCB-family
+        states fold via ``linucb.batch_update`` — on the pallas backend
+        the selected-block Sherman–Morrison kernel, which gathers only
+        the arm blocks this batch actually routed to. ``arms``: (B,)
+        selected arms; ``contexts``: (B, d); ``rewards`` / ``costs``:
+        (B,) (costs default to 0).
+        """
+        arms_j = jnp.asarray(arms, jnp.int32)
+        xs = jnp.asarray(contexts, jnp.float32)
+        rs = jnp.asarray(rewards, jnp.float32)
+        cs = (jnp.zeros(arms_j.shape, jnp.float32) if costs is None
+              else jnp.asarray(costs, jnp.float32))
+        self.state = self._update_batch(self.state, arms_j, xs, rs, cs,
+                                        backend=self._backend())
 
     def serve(self, requests: Sequence[Request], *,
               temperature: float = 0.0,

@@ -1,0 +1,22 @@
+"""XLA_FLAGS string surgery, importable BEFORE any jax import.
+
+Deliberately dependency-free (``repro`` is a namespace package, so this
+module pulls in nothing): both ``launch.dryrun`` and
+``benchmarks.bench_driver --sharded`` must rewrite the host-device-count
+flag before jax initializes, while preserving every other flag the user
+set — one implementation so the filter/append idiom cannot drift.
+"""
+from __future__ import annotations
+
+HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def with_host_device_count(flags: str, count) -> str:
+    """Return ``flags`` with the host-device-count flag set to ``count``.
+
+    Any pre-existing ``--xla_force_host_platform_device_count=...`` entry
+    is replaced (the caller owns that knob); all other flags pass through
+    untouched.
+    """
+    keep = [f for f in flags.split() if not f.startswith(HOST_DEVICE_FLAG)]
+    return " ".join(keep + [f"{HOST_DEVICE_FLAG}={count}"])

@@ -1,0 +1,349 @@
+"""Engine subsystem: chunk iteration, streaming sinks, shard_map sweeps,
+multi-stream rounds.
+
+The shard_map parity tests exercise real multi-device sharding only when
+the process was started with ``--xla_force_host_platform_device_count``
+(the CI multi-device leg); on one device they still run the shard code
+path through a 1-device mesh, which must also be bit-identical.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import env as env_mod
+from repro.core import router
+from repro.engine import LogSink, MemorySink, NpyChunkSink
+from repro.engine import driver as engine_driver
+from repro.engine import shard as shard_mod
+
+FIELDS = ("arms", "rewards", "costs", "regrets", "budgets", "datasets")
+ENV32 = env_mod.CalibratedPoolEnv(dim=32)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs --xla_force_host_platform_device_count (CI multi-device "
+           "leg)")
+
+
+def _assert_results_equal(a, b, label=""):
+    for f in FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{label}: field {f!r}")
+
+
+class TestChunkIndices:
+    def test_padded_tail(self):
+        """T not a multiple of chunk: every ts still has chunk length
+        (one compiled program serves all chunks); n covers exactly T."""
+        chunks = list(engine_driver._chunk_indices(50, 16))
+        assert [c[0] for c in chunks] == [0, 16, 32, 48]
+        assert [c[1] for c in chunks] == [16, 16, 16, 2]
+        for lo, n, ts in chunks:
+            assert ts.shape == (16,)
+            np.testing.assert_array_equal(np.asarray(ts),
+                                          np.arange(lo, lo + 16))
+        assert sum(c[1] for c in chunks) == 50
+
+    def test_exact_multiple_and_single(self):
+        assert [(lo, n) for lo, n, _ in
+                engine_driver._chunk_indices(32, 16)] == [(0, 16), (16, 16)]
+        assert [(lo, n) for lo, n, _ in
+                engine_driver._chunk_indices(3, 16)] == [(0, 3)]
+
+    def test_padded_tail_rounds_discarded(self):
+        """Results are invariant to where the padded tail falls."""
+        base = router.run_pool_experiment("greedy_linucb", rounds=45,
+                                          seed=2, env=ENV32, chunk_size=45)
+        got = router.run_pool_experiment("greedy_linucb", rounds=45,
+                                         seed=2, env=ENV32, chunk_size=16)
+        _assert_results_equal(base, got, "padded tail")
+
+
+class TestSinks:
+    def test_memory_vs_npz_bitwise(self, tmp_path):
+        """MemorySink (the default) and NpyChunkSink see byte-identical
+        appends — concatenated shards must equal the in-memory arrays."""
+        base = router.run_pool_experiment("greedy_linucb", rounds=50,
+                                          seed=3, env=ENV32, chunk_size=16)
+        manifest = router.run_pool_experiment(
+            "greedy_linucb", rounds=50, seed=3, env=ENV32, chunk_size=16,
+            sink=NpyChunkSink(str(tmp_path)))
+        assert manifest["rounds"] == 50
+        loaded = NpyChunkSink.load(str(tmp_path))
+        for f in FIELDS:
+            np.testing.assert_array_equal(getattr(base, f), loaded[f],
+                                          err_msg=f)
+
+    def test_npz_shards_are_chunk_bounded(self, tmp_path):
+        """One shard per chunk, each holding ≤ chunk rounds — the O(chunk)
+        host-memory contract for T ≫ 10⁶ runs."""
+        manifest = router.run_pool_experiment(
+            "greedy_linucb", rounds=40, seed=0, env=ENV32, chunk_size=16,
+            sink=NpyChunkSink(str(tmp_path)))
+        assert len(manifest["shards"]) == 3   # ceil(40 / 16)
+        sizes = []
+        for name in manifest["shards"]:
+            with np.load(tmp_path / name) as shard:
+                sizes.append(shard["arms"].shape[0])
+        assert sizes == [16, 16, 8]
+
+    def test_voting_and_per_round_sinks(self, tmp_path):
+        base = router.run_pool_experiment("voting", rounds=20, seed=1,
+                                          env=ENV32, chunk_size=8)
+        router.run_pool_experiment("voting", rounds=20, seed=1, env=ENV32,
+                                   chunk_size=8,
+                                   sink=NpyChunkSink(str(tmp_path / "v")))
+        loaded = NpyChunkSink.load(str(tmp_path / "v"))
+        for f in FIELDS:
+            np.testing.assert_array_equal(getattr(base, f), loaded[f])
+
+        pr = router.run_pool_experiment("greedy_linucb", rounds=9, seed=4,
+                                        env=ENV32, dispatch="per_round")
+        router.run_pool_experiment("greedy_linucb", rounds=9, seed=4,
+                                   env=ENV32, dispatch="per_round",
+                                   sink=NpyChunkSink(str(tmp_path / "pr")))
+        loaded = NpyChunkSink.load(str(tmp_path / "pr"))
+        _assert_results_equal(pr, engine_driver._result_from_logs(loaded),
+                              "per_round sink")
+
+    def test_synthetic_sink(self, tmp_path):
+        base = router.run_synthetic_experiment("greedy_linucb", rounds=90,
+                                               seed=2, chunk_size=32)
+        router.run_synthetic_experiment("greedy_linucb", rounds=90, seed=2,
+                                        chunk_size=32,
+                                        sink=NpyChunkSink(str(tmp_path)))
+        loaded = NpyChunkSink.load(str(tmp_path))
+        np.testing.assert_array_equal(base["per_round_regret"],
+                                      loaded["per_round_regret"])
+
+    def test_custom_sink_protocol(self):
+        """Any LogSink subclass receives every chunk with its valid count."""
+
+        class CountingSink(LogSink):
+            def __init__(self):
+                self.appends = []
+
+            def append(self, arrays, n):
+                self.appends.append((set(arrays), int(n)))
+
+            def finalize(self):
+                return self.appends
+
+        sink = CountingSink()
+        out = router.run_pool_experiment("greedy_linucb", rounds=20, seed=0,
+                                         env=ENV32, chunk_size=8, sink=sink)
+        assert out == [(set(FIELDS), 8), (set(FIELDS), 8), (set(FIELDS), 4)]
+
+
+class TestShardedSweep:
+    """shard_map over the bandit mesh == single-device vmap, bitwise."""
+
+    def test_resolve_device_count(self):
+        ndev = len(jax.devices())
+        assert shard_mod.resolve_device_count(False, 8) == 1
+        assert shard_mod.resolve_device_count("none", 8) == 1
+        assert shard_mod.resolve_device_count(True, 3) == ndev
+        auto = shard_mod.resolve_device_count("auto", 6)
+        assert 6 % auto == 0 and auto <= ndev
+        with pytest.raises(ValueError):
+            shard_mod.resolve_device_count("bogus", 4)
+
+    @pytest.mark.parametrize("policy", ["greedy_linucb", "budget_linucb",
+                                        "voting", "random"])
+    def test_pool_sweep_shard_parity(self, policy):
+        seeds = list(range(min(4, max(2, len(jax.devices())))))
+        want = router.run_pool_experiment_sweep(policy, seeds, rounds=24,
+                                                env=ENV32, chunk_size=12,
+                                                shard=False)
+        got = router.run_pool_experiment_sweep(policy, seeds, rounds=24,
+                                               env=ENV32, chunk_size=12,
+                                               shard=True)
+        for s, w, g in zip(seeds, want, got):
+            _assert_results_equal(w, g, f"{policy} seed={s}")
+
+    @multi_device
+    @pytest.mark.parametrize("policy", router.POLICIES)
+    def test_pool_sweep_shard_parity_all_devices(self, policy):
+        """Every policy, one seed per device — the acceptance criterion."""
+        seeds = list(range(len(jax.devices())))
+        want = router.run_pool_experiment_sweep(policy, seeds, rounds=20,
+                                                env=ENV32, chunk_size=10,
+                                                shard=False)
+        got = router.run_pool_experiment_sweep(policy, seeds, rounds=20,
+                                               env=ENV32, chunk_size=10,
+                                               shard=True)
+        for s, w, g in zip(seeds, want, got):
+            _assert_results_equal(w, g, f"{policy} seed={s}")
+
+    @multi_device
+    def test_padded_seed_axis(self):
+        """S not a multiple of the device count: padded replications are
+        computed and discarded, results still bitwise-match."""
+        seeds = list(range(len(jax.devices()) - 1)) or [0]
+        want = router.run_pool_experiment_sweep("greedy_linucb", seeds,
+                                                rounds=16, env=ENV32,
+                                                chunk_size=8, shard=False)
+        got = router.run_pool_experiment_sweep("greedy_linucb", seeds,
+                                               rounds=16, env=ENV32,
+                                               chunk_size=8, shard=True)
+        assert len(got) == len(seeds)
+        for w, g in zip(want, got):
+            _assert_results_equal(w, g, "padded seeds")
+
+    def test_synthetic_sweep_shard_close(self):
+        """The synthetic env's per-seed math is not vmap-batch-size
+        invariant (XLA lowers the d=16 matvecs differently per batch
+        shape), so sharding guarantees exactness only up to float
+        reassociation there — unlike the pool sweeps, which are bitwise."""
+        seeds = list(range(max(2, len(jax.devices()))))
+        want = router.run_synthetic_experiment_sweep(
+            "greedy_linucb", seeds, rounds=60, shard=False)
+        got = router.run_synthetic_experiment_sweep(
+            "greedy_linucb", seeds, rounds=60, shard=True)
+        np.testing.assert_allclose(want["per_round_regret"],
+                                   got["per_round_regret"], atol=2e-6)
+
+
+class TestMultiStream:
+    def test_shapes_and_determinism(self):
+        res = router.run_pool_multistream("greedy_linucb", rounds=12,
+                                          streams=4, seed=0, env=ENV32,
+                                          chunk_size=8)
+        assert res.arms.shape == (48, ENV32.horizon)
+        res2 = router.run_pool_multistream("greedy_linucb", rounds=12,
+                                           streams=4, seed=0, env=ENV32,
+                                           chunk_size=8)
+        _assert_results_equal(res, res2, "determinism")
+
+    @pytest.mark.parametrize("policy", ["budget_linucb", "metallm",
+                                        "random"])
+    def test_policies_fold(self, policy):
+        """Typed batch folds (budget) and the generic scan fallback."""
+        res = router.run_pool_multistream(policy, rounds=8, streams=3,
+                                          seed=1, env=ENV32, chunk_size=4)
+        assert res.arms.shape == (24, ENV32.horizon)
+
+    def test_learns_better_than_random(self):
+        """The shared posterior must actually learn across streams."""
+        lin = router.run_pool_multistream("greedy_linucb", rounds=150,
+                                          streams=8, seed=0, env=ENV32)
+        rnd = router.run_pool_multistream("random", rounds=150, streams=8,
+                                          seed=0, env=ENV32)
+        assert lin.accuracy > rnd.accuracy
+
+    def test_sink_parity(self, tmp_path):
+        base = router.run_pool_multistream("greedy_linucb", rounds=10,
+                                           streams=4, seed=2, env=ENV32,
+                                           chunk_size=4)
+        manifest = router.run_pool_multistream(
+            "greedy_linucb", rounds=10, streams=4, seed=2, env=ENV32,
+            chunk_size=4, sink=NpyChunkSink(str(tmp_path)))
+        loaded = NpyChunkSink.load(str(tmp_path))
+        assert loaded["arms"].shape == (10, 4, ENV32.horizon)
+        np.testing.assert_array_equal(base.arms,
+                                      loaded["arms"].reshape(40, -1))
+        assert manifest["rounds"] == 10
+
+    def test_shard_parity(self):
+        """Stream-sharded play == unsharded (replicated posterior)."""
+        a = router.run_pool_multistream("greedy_linucb", rounds=8,
+                                        streams=len(jax.devices()) * 2,
+                                        seed=2, env=ENV32, chunk_size=4,
+                                        shard="none")
+        b = router.run_pool_multistream("greedy_linucb", rounds=8,
+                                        streams=len(jax.devices()) * 2,
+                                        seed=2, env=ENV32, chunk_size=4,
+                                        shard="auto")
+        _assert_results_equal(a, b, "multistream shard")
+
+    def test_voting_rejected(self):
+        with pytest.raises(ValueError):
+            router.run_pool_multistream("voting", rounds=4, streams=2)
+
+    def test_random_streams_decorrelated(self):
+        """The 'random' baseline's select keys off the (frozen) state
+        counter — policy.fork must decorrelate streams or every stream
+        of a round routes identically."""
+        out = router.run_pool_multistream("random", rounds=6, streams=8,
+                                          seed=0, env=ENV32,
+                                          sink=MemorySink())
+        first_step = out["arms"][:, :, 0]          # (T, B)
+        assert any(len(np.unique(first_step[t])) > 1 for t in range(6))
+
+    @multi_device
+    def test_indivisible_streams_fail_loudly(self):
+        """shard=True with streams % devices != 0 must raise a clear
+        error (the stream axis is never padded), not a shard_map one."""
+        ndev = len(jax.devices())
+        with pytest.raises(ValueError, match="multiple of the device"):
+            router.run_pool_multistream("greedy_linucb", rounds=2,
+                                        streams=ndev + 1, env=ENV32,
+                                        shard=True)
+
+
+class TestZeroRounds:
+    """rounds=0 keeps the legacy empty-result contract (no compile)."""
+
+    def test_pool_empty(self):
+        res = router.run_pool_experiment("greedy_linucb", rounds=0,
+                                         env=ENV32)
+        assert res.arms.shape == (0, ENV32.horizon)
+        assert res.budgets.shape == (0,)
+
+    def test_synthetic_and_multistream_empty(self):
+        out = router.run_synthetic_experiment("greedy_linucb", rounds=0)
+        assert out["per_round_regret"].shape == (0,)
+        res = router.run_pool_multistream("greedy_linucb", rounds=0,
+                                          streams=2, env=ENV32)
+        assert res.arms.shape == (0, ENV32.horizon)
+
+
+class TestFoldObservations:
+    def test_matches_sequential_updates(self):
+        import jax.numpy as jnp
+        from repro.core import linucb
+        policy = router.make_policy("greedy_linucb", 4, 16)
+        state = policy.init()
+        key = jax.random.PRNGKey(0)
+        arms = jnp.array([0, 2, 0, 3], jnp.int32)
+        xs = jax.random.uniform(key, (4, 16))
+        rs = jnp.array([1.0, 0.0, 1.0, 1.0])
+        cs = jnp.zeros((4,))
+        ms = jnp.array([1.0, 1.0, 0.0, 1.0])
+        got = engine_driver.fold_observations(policy, state, arms, xs, rs,
+                                              cs, ms)
+        want = state
+        for i in (0, 1, 3):   # row 2 is masked out
+            want = linucb.update(want, arms[i], xs[i], rs[i])
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3), want, got)
+
+
+class TestDryrunXlaFlags:
+    def test_user_flags_preserved(self):
+        """Importing launch.dryrun must append to, not clobber, XLA_FLAGS
+        (only a pre-existing device-count flag is replaced)."""
+        # exec only the pre-docstring header (the flag logic runs before
+        # any jax import) so the test stays fast — no model imports
+        code = ("import os, importlib.util\n"
+                "spec = importlib.util.find_spec('repro.launch.dryrun')\n"
+                "head = open(spec.origin).read().split('\"\"\"')[0]\n"
+                "exec(compile(head, 'dryrun-head', 'exec'))\n"
+                "print(os.environ['XLA_FLAGS'])\n")
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                           "src"),
+                   XLA_FLAGS="--xla_cpu_enable_fast_math=false "
+                             "--xla_force_host_platform_device_count=7",
+                   REPRO_DRYRUN_DEVICES="4")
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=120)
+        assert r.returncode == 0, r.stderr
+        flags = r.stdout.strip().split()
+        assert "--xla_cpu_enable_fast_math=false" in flags
+        assert "--xla_force_host_platform_device_count=4" in flags
+        assert "--xla_force_host_platform_device_count=7" not in flags

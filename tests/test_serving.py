@@ -132,3 +132,72 @@ def test_scheduler_routes_and_learns():
     assert [r.uid for r in resps] == [0, 1, 2]
     assert all(r.arm == 1 for r in resps)
     assert all(r.cost > 0 and r.latency_s >= 0 for r in resps)
+
+
+def test_use_kernels_deprecation_warning():
+    """Regression: the deprecated use_kernels spelling must keep warning
+    (and keep working — it pins the interpret backend on CPU) until it is
+    removed. Engines are never touched at construction time, so dummy
+    arms suffice."""
+    arms = [ArmSpec("a", None, 1e-5), ArmSpec("b", None, 1e-4)]
+    with pytest.warns(DeprecationWarning, match="use_kernels"):
+        sched = BanditScheduler(arms, dim=8, use_kernels=True)
+    assert sched._backend() == ("pallas" if jax.default_backend() == "tpu"
+                                else "pallas_interpret")
+    # use_kernels=False warns too but pins nothing
+    with pytest.warns(DeprecationWarning):
+        sched_off = BanditScheduler(arms, dim=8, use_kernels=False)
+    assert sched_off._backend_override is None
+
+
+def test_scheduler_feedback_batch_matches_sequential():
+    """feedback_batch (the engine's multi-stream posterior fold) must
+    agree with one feedback() call per observation."""
+    arms = [ArmSpec("a", None, 1e-5), ArmSpec("b", None, 1e-4),
+            ArmSpec("c", None, 2e-4)]
+    batched = BanditScheduler(arms, dim=16)
+    seq = BanditScheduler(arms, dim=16)
+    rng = np.random.default_rng(5)
+    xs = rng.standard_normal((8, 16)).astype(np.float32)
+    sel = batched.route(xs)
+    rs = (rng.random(8) < 0.5).astype(np.float32)
+    cs = rng.random(8).astype(np.float32) * 1e-4
+    batched.feedback_batch(sel, xs, rs, cs)
+    for i in range(8):
+        seq.feedback(int(sel[i]), xs[i], float(rs[i]), float(cs[i]))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3),
+        batched.state, seq.state)
+    np.testing.assert_array_equal(batched.route(xs), seq.route(xs))
+
+
+def test_scheduler_feedback_batch_backend_parity():
+    """The batch fold routes through the selected-block kernel under the
+    pallas backend and must match the ref fold."""
+    arms = [ArmSpec("a", None, 1e-5), ArmSpec("b", None, 1e-4)]
+    sref = BanditScheduler(arms, dim=16, backend="ref")
+    sker = BanditScheduler(arms, dim=16, backend="pallas_interpret")
+    rng = np.random.default_rng(6)
+    xs = rng.standard_normal((6, 16)).astype(np.float32)
+    sel = sref.route(xs)
+    rs = (rng.random(6) < 0.5).astype(np.float32)
+    sref.feedback_batch(sel, xs, rs)
+    sker.feedback_batch(sel, xs, rs)
+    np.testing.assert_allclose(np.asarray(sref.state.a_inv_t),
+                               np.asarray(sker.state.a_inv_t),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_scheduler_feedback_batch_budget_policy():
+    """Budget states fold bandit stats + cost statistics in one dispatch."""
+    arms = [ArmSpec("a", None, 1e-5), ArmSpec("b", None, 1e-4)]
+    sched = BanditScheduler(arms, dim=16, policy="budget_linucb")
+    rng = np.random.default_rng(7)
+    xs = rng.standard_normal((5, 16)).astype(np.float32)
+    sel = np.asarray([0, 1, 0, 0, 1], np.int32)
+    sched.feedback_batch(sel, xs, np.ones(5, np.float32),
+                         np.full(5, 1e-4, np.float32))
+    np.testing.assert_allclose(np.asarray(sched.state.cost_count),
+                               [3.0, 2.0])
+    np.testing.assert_allclose(np.asarray(sched.state.cost_sum),
+                               [3e-4, 2e-4], rtol=1e-5)
