@@ -5,6 +5,12 @@ one-jitted-call-per-round loop (``dispatch="per_round"``), plus the
 vmapped multi-seed sweep against sequential per-round replications, at
 three regimes:
 
+``--multistream-regret`` records the statistical price of multi-stream
+batching: total myopic regret of ``run_pool_multistream`` (frozen
+per-round posterior snapshot, one batched fold) vs the per-step-updating
+single-stream driver, across stream widths, at a fixed total user-round
+count (→ ``bench_driver_multistream_regret.json``).
+
 ``--sharded`` runs the seeds × streams scaling suite instead: the
 ``shard_map``-sharded seed sweep vs the single-device vmapped sweep, and
 the multi-stream engine at several stream widths, on 8 forced host
@@ -45,6 +51,8 @@ SHARD_DEVICES = 8
 SHARD_SEEDS = 8
 SHARD_ROUNDS = 500
 STREAM_WIDTHS = (1, 8, 32)
+MS_REGRET_WIDTHS = (1, 4, 16, 64)
+MS_REGRET_USER_ROUNDS = 4096
 
 
 def _timed(fn) -> float:
@@ -217,6 +225,69 @@ def run_sharded() -> Dict:
     return out
 
 
+def run_multistream_regret() -> Dict:
+    """The regret cost of multi-stream batching (the batched-bandit angle).
+
+    ``run_pool_multistream`` plays B streams per round against a FROZEN
+    posterior snapshot and folds their observations once per round —
+    standard delayed-feedback batching. The delay costs statistical
+    efficiency: within a round no stream benefits from the others'
+    observations. This suite quantifies that cost across stream widths B
+    at a fixed total user-round count, against the per-step-updating
+    single-stream driver as the reference — the throughput numbers in
+    ``--sharded`` only mean anything alongside this regret price.
+    """
+    policies = ("greedy_linucb", "positional_linucb")
+    env64 = env_mod.CalibratedPoolEnv(dim=64)
+    total = MS_REGRET_USER_ROUNDS
+    out: Dict[str, object] = {"user_rounds": total,
+                              "stream_widths": list(MS_REGRET_WIDTHS)}
+    for policy in policies:
+        ref = router.run_pool_experiment(policy, rounds=total, env=env64,
+                                         seed=0)
+        ref_regret = float(ref.cumulative_regret[-1])
+        entry: Dict[str, object] = {
+            "per_step_reference": {
+                "total_regret": ref_regret,
+                "regret_per_round": ref_regret / total,
+                "accuracy": ref.accuracy,
+            }
+        }
+        for b in MS_REGRET_WIDTHS:
+            res = router.run_pool_multistream(policy, rounds=total // b,
+                                              streams=b, env=env64, seed=0)
+            reg = float(res.cumulative_regret[-1])
+            entry[f"streams_{b}"] = {
+                "dispatch_rounds": total // b,
+                "total_regret": reg,
+                "regret_per_round": reg / total,
+                "accuracy": res.accuracy,
+                "regret_vs_per_step": reg / max(ref_regret, 1e-9),
+            }
+        out[policy] = entry
+    common.save_json("bench_driver_multistream_regret", out)
+    return out
+
+
+def main_multistream_regret() -> int:
+    out = run_multistream_regret()
+    print(f"\n=== Multi-stream regret cost (frozen-snapshot fold vs "
+          f"per-step updates, {out['user_rounds']} user rounds) ===")
+    for policy, entry in out.items():
+        if not isinstance(entry, dict):
+            continue
+        ref = entry["per_step_reference"]
+        print(f"{policy}: per-step reference regret "
+              f"{ref['total_regret']:.1f} "
+              f"(acc {100 * ref['accuracy']:.1f}%)")
+        for b in out["stream_widths"]:
+            v = entry[f"streams_{b}"]
+            print(f"  B={b:3d}: regret {v['total_regret']:.1f} "
+                  f"({v['regret_vs_per_step']:.2f}x per-step, "
+                  f"acc {100 * v['accuracy']:.1f}%)")
+    return 0
+
+
 def _reexec_with_devices() -> int:
     """Re-spawn under the forced-host-device flag (pre-jax-init only).
 
@@ -272,9 +343,15 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="run the seeds × streams scaling suite on "
                          f"{SHARD_DEVICES} forced host devices")
+    ap.add_argument("--multistream-regret", action="store_true",
+                    help="record the regret cost of the multi-stream "
+                         "frozen-snapshot fold vs per-step updates "
+                         f"across stream widths {MS_REGRET_WIDTHS}")
     args = ap.parse_args()
     if args.sharded:
         return sys.exit(main_sharded())
+    if args.multistream_regret:
+        return sys.exit(main_multistream_regret())
     out = run()
     print("\n=== Driver throughput: scanned engine vs per-round loop ===")
     print(f"scan == per_round (all policies): "

@@ -10,6 +10,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import env as env_mod
+from repro.core import policy as policy_mod
 from repro.core import router
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
@@ -42,16 +43,19 @@ def median_secs(fn, reps: int = 3) -> float:
     return samples[len(samples) // 2]
 
 
-_GREEDY_CACHE: Dict[int, object] = {}
+_GREEDY_CACHE: Dict[tuple, object] = {}
 
 
 def greedy_reference(dataset: int, seed: int = 0):
-    """Cached greedy-LinUCB run per dataset — both a Table-1 row and the
-    budget reference (paper: per-query budget = greedy's avg cost ±5%)."""
-    if dataset not in _GREEDY_CACHE:
-        _GREEDY_CACHE[dataset] = router.run_pool_experiment(
+    """Cached greedy-LinUCB run per (dataset, seed) — both a Table-1 row
+    and the budget reference (paper: per-query budget = greedy's avg cost
+    ±5%). Keyed on the seed too, so non-zero-seed budgeted runs never
+    inherit another seed's budget."""
+    key = (dataset, seed)
+    if key not in _GREEDY_CACHE:
+        _GREEDY_CACHE[key] = router.run_pool_experiment(
             "greedy_linucb", rounds=ROUNDS, seed=seed, dataset=dataset)
-    return _GREEDY_CACHE[dataset]
+    return _GREEDY_CACHE[key]
 
 
 def dataset_budget(dataset: int, seed: int = 0) -> float:
@@ -59,20 +63,54 @@ def dataset_budget(dataset: int, seed: int = 0) -> float:
 
 
 def run_policy(name: str, *, rounds: int = None, dataset: Optional[int] = None,
-               base_budget=None, seed: int = 0):
-    if base_budget is None and name in ("budget_linucb", "knapsack"):
+               base_budget=None, seed: int = 0, streamed: bool = False):
+    """One run; ``streamed=True`` folds chunk logs through the engine's
+    streaming reducer (``repro.engine.ReducerSink``) — host memory stays
+    O(chunk) and the result is a :class:`repro.engine.StreamingSummary`
+    instead of an :class:`ExperimentResult` (budgets then come from the
+    streamed greedy reference too)."""
+    from repro.engine import ReducerSink
+    if base_budget is None and policy_mod.as_spec(name).budgeted:
+        budget_of = ((lambda i: greedy_reference_streamed(i, seed).avg_cost)
+                     if streamed else (lambda i: dataset_budget(i, seed)))
         if dataset is None:
             base_budget = np.asarray(
-                [dataset_budget(i, seed)
-                 for i in range(len(env_mod.DATASETS))], np.float32)
+                [budget_of(i) for i in range(len(env_mod.DATASETS))],
+                np.float32)
         else:
-            base_budget = dataset_budget(dataset, seed)
+            base_budget = budget_of(dataset)
     t0 = time.perf_counter()
     res = router.run_pool_experiment(
         name, rounds=rounds or ROUNDS, seed=seed, dataset=dataset,
-        base_budget=base_budget if base_budget is not None else 1e-3)
+        base_budget=base_budget if base_budget is not None else 1e-3,
+        sink=ReducerSink() if streamed else None)
     dt = time.perf_counter() - t0
     return res, dt
+
+
+# -- streaming-reducer variants (no (T, H) arrays ever materialized) --------
+
+_GREEDY_STREAM_CACHE: Dict[tuple, object] = {}
+
+
+def greedy_reference_streamed(dataset: int, seed: int = 0):
+    """Streamed greedy-LinUCB reference: an
+    :class:`repro.engine.StreamingSummary` folded chunk-by-chunk from the
+    driver — doubles as a Table row and the budget reference
+    (``avg_cost`` == the paper's greedy avg per-query cost protocol)."""
+    from repro.engine import ReducerSink
+    key = (dataset, seed)
+    if key not in _GREEDY_STREAM_CACHE:
+        _GREEDY_STREAM_CACHE[key] = router.run_pool_experiment(
+            "greedy_linucb", rounds=ROUNDS, seed=seed, dataset=dataset,
+            sink=ReducerSink())
+    return _GREEDY_STREAM_CACHE[key]
+
+
+def run_policy_streamed(name, **kwargs):
+    """:func:`run_policy` with ``streamed=True`` (kept as a named entry
+    point for the streaming aggregation path)."""
+    return run_policy(name, streamed=True, **kwargs)
 
 
 _GREEDY_SWEEP_CACHE: Dict[tuple, list] = {}
@@ -106,7 +144,7 @@ def run_policy_sweep(name: str, *, seeds=None, rounds: int = None,
     Budgeted policies default to the paper protocol budget — each seed's
     own greedy-LinUCB average cost per query on that dataset."""
     seeds = list(range(SEEDS)) if seeds is None else list(seeds)
-    if base_budget is None and name in ("budget_linucb", "knapsack"):
+    if base_budget is None and policy_mod.as_spec(name).budgeted:
         if dataset is None:
             base_budget = np.stack(
                 [dataset_budgets_sweep(i, seeds)
@@ -139,13 +177,24 @@ def run_policy_sweep_per_dataset(name: str, *, seeds=None):
     return out, total
 
 
-def run_policy_per_dataset(name: str, *, seed: int = 0):
+def run_policy_per_dataset(name: str, *, seed: int = 0,
+                           streamed: bool = False):
     """Paper protocol: each benchmark dataset is its own stream (per-arm
-    cost distributions are dataset-specific, matching Assumption 5)."""
+    cost distributions are dataset-specific, matching Assumption 5).
+
+    ``streamed=True`` aggregates every run through the engine's streaming
+    reducer instead of materializing ``(T, H)`` result arrays — the
+    entries are then :class:`repro.engine.StreamingSummary` objects
+    (same accessor names for the Table-level statistics)."""
     out = {}
     total = 0.0
     for i, ds in enumerate(env_mod.DATASETS):
-        if name == "greedy_linucb":
+        if streamed:
+            if name == "greedy_linucb":
+                res, dt = greedy_reference_streamed(i, seed), 0.0
+            else:
+                res, dt = run_policy_streamed(name, dataset=i, seed=seed)
+        elif name == "greedy_linucb":
             res, dt = greedy_reference(i, seed), 0.0
         else:
             res, dt = run_policy(name, dataset=i, seed=seed)

@@ -1,19 +1,27 @@
 """Quickstart: route queries across a simulated 6-LLM pool with the
-paper's three algorithms, in ~30 seconds on CPU.
+paper's three algorithms plus the positionally-aware extension, in
+~30 seconds on CPU.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import router
+from repro.core.policy import PolicySpec
 
 
 def main():
     print("Routing 200 user rounds (≤4 steps each) on the pool calibrated"
           " to the paper's Tables 1–2…\n")
-    for policy in ("greedy_linucb", "budget_linucb", "knapsack"):
+    policies = ("greedy_linucb", "budget_linucb", "knapsack",
+                # registered first-class; equivalent to
+                # PolicySpec.from_name("greedy_linucb")
+                #     .wrap(policy.PositionalWeight(0.8))
+                PolicySpec.from_name("positional_linucb", gamma=0.8))
+    for policy in policies:
         res = router.run_pool_experiment(policy, rounds=200, seed=0,
                                          base_budget=1.5e-3)
         s = res.summary()
-        print(f"{policy:16s} accuracy={100*s['accuracy']:5.1f}%  "
+        name = policy if isinstance(policy, str) else policy.label
+        print(f"{name:17s} accuracy={100*s['accuracy']:5.1f}%  "
               f"steps={s['avg_steps']:.2f}  "
               f"cost=${s['avg_cost']:.2e}  "
               f"step1={100*s['first_step_accuracy']:5.1f}%")

@@ -17,8 +17,9 @@ def main():
     ap.add_argument("--rounds", type=int, default=300)
     args = ap.parse_args()
 
-    policies = (["greedy_linucb", "budget_linucb", "knapsack", "metallm",
-                 "mixllm", "voting", "random"]
+    policies = (["greedy_linucb", "budget_linucb", "knapsack",
+                 "positional_linucb", "metallm", "mixllm", "voting",
+                 "random"]
                 + [f"fixed:{k}" for k in range(6)])
 
     print(f"{'policy':20s} {'dataset':10s} {'acc':>6s} {'cost':>10s} "

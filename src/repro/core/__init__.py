@@ -1,16 +1,18 @@
 """Core library: the paper's contribution (contextual-bandit LLM routing).
 
 Modules:
+  policy     — composable policy API: registry, hashable PolicySpec pytrees,
+               score-transform combinators (PositionalWeight, BudgetGate, …)
   linucb     — Greedy LinUCB (Algorithm 1) + Theorem 1 bound
   budget     — Budget-aware LinUCB under stochastic costs (§5.1, Theorem 2)
   knapsack   — Positionally-aware knapsack heuristic (Algorithm 2)
   baselines  — MetaLLM / MixLLM / voting baselines (§6)
   env        — black-box interaction environments (synthetic + calibrated)
-  router     — unified policy API + experiment drivers
+  router     — stable import surface: policy re-exports + experiment drivers
   features   — query featurization (384-d, sentence-transformer stand-in)
 """
 from repro.core import (baselines, budget, env, features, knapsack, linucb,
-                        router)
+                        policy, router)
 
 __all__ = ["baselines", "budget", "env", "features", "knapsack", "linucb",
-           "router"]
+           "policy", "router"]

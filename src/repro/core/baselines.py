@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import linucb
+from repro.core import policy as policy_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,3 +102,100 @@ def mixllm_update(state: MixLLMState, arm: jax.Array, x: jax.Array,
     return MixLLMState(linucb.update(state.bandit, arm, x, reward, mask=mask),
                        state.cost_sum.at[arm].add(m * cost),
                        state.cost_count.at[arm].add(m))
+
+
+# -- policy registration (see core.policy for the spec/registry API) --------
+
+@policy_mod.register_policy("metallm")
+def _metallm_builder(args, ctx: policy_mod.BuildContext
+                     ) -> policy_mod.PolicyAdapter:
+    policy_mod.take_args(args)
+    cfg = MetaLLMConfig(ctx.num_arms, ctx.dim, ctx.alpha, ctx.lam)
+
+    def score_parts(s, p, x, h, rem):
+        total = linucb.ucb_scores(s.bandit, x, cfg.alpha)
+        mean = linucb.mean_scores(s.bandit, x)
+        return policy_mod.ScoreParts(mean, total - mean,
+                                     jnp.ones_like(total, dtype=bool))
+
+    return policy_mod.PolicyAdapter(
+        "metallm", False,
+        init=lambda: metallm_init(cfg),
+        plan=policy_mod.no_plan,
+        select=lambda s, p, x, h, rem: metallm_select(s, x, cfg),
+        update=lambda s, p, a, x, r, c, m: metallm_update(s, a, x, r, c, cfg,
+                                                          mask=m),
+        score_parts=score_parts,
+    )
+
+
+@policy_mod.register_policy("mixllm")
+def _mixllm_builder(args, ctx: policy_mod.BuildContext
+                    ) -> policy_mod.PolicyAdapter:
+    policy_mod.take_args(args)
+    cfg = MixLLMConfig(ctx.num_arms, ctx.dim, ctx.alpha, ctx.lam)
+
+    def score_parts(s, p, x, h, rem):
+        quality = linucb.ucb_scores(s.bandit, x, cfg.alpha)
+        q_mean = linucb.mean_scores(s.bandit, x)
+        c_hat = s.cost_sum / jnp.maximum(s.cost_count, 1.0)
+        penalty = cfg.trade_off * (cfg.cost_scale * c_hat
+                                   + cfg.latency_penalty)
+        return policy_mod.ScoreParts(q_mean - penalty, quality - q_mean,
+                                     jnp.ones_like(quality, dtype=bool))
+
+    return policy_mod.PolicyAdapter(
+        "mixllm", False,
+        init=lambda: mixllm_init(cfg),
+        plan=policy_mod.no_plan,
+        select=lambda s, p, x, h, rem: mixllm_select(s, x, cfg),
+        update=lambda s, p, a, x, r, c, m: mixllm_update(s, a, x, r, c, cfg,
+                                                         mask=m),
+        score_parts=score_parts,
+    )
+
+
+@policy_mod.register_policy("random", select_uses_seed=True)
+def _random_builder(args, ctx: policy_mod.BuildContext
+                    ) -> policy_mod.PolicyAdapter:
+    # single-step, like the paper's Random baseline (Table 1: ~40%,
+    # i.e. the average single-model accuracy — one routed call/query)
+    policy_mod.take_args(args)
+    num_arms, seed = ctx.num_arms, ctx.seed
+
+    def rand_select(s, p, x, h, rem):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), s)
+        key = jax.random.fold_in(key, h)
+        return jax.random.randint(key, (), 0, num_arms)
+
+    return policy_mod.PolicyAdapter(
+        "random", False,
+        init=lambda: jnp.int32(0),   # state = round counter
+        plan=policy_mod.no_plan,
+        select=rand_select,
+        update=lambda s, p, a, x, r, c, m: s + jnp.asarray(m, jnp.int32),
+        fork=lambda s, i: s + jnp.asarray(i, jnp.int32),
+    )
+
+
+@policy_mod.register_policy("fixed")
+def _fixed_builder(args, ctx: policy_mod.BuildContext
+                   ) -> policy_mod.PolicyAdapter:
+    (arm,) = policy_mod.take_args(args, arm=None)
+    if arm is None:
+        raise ValueError("fixed policy needs arm=<k> (or the 'fixed:<k>' "
+                         "string spelling)")
+    k = int(arm)
+    return policy_mod.PolicyAdapter(
+        f"fixed:{k}", False,
+        init=lambda: jnp.int32(0),
+        plan=policy_mod.no_plan,
+        select=lambda s, p, x, h, rem: jnp.int32(k),
+        update=lambda s, p, a, x, r, c, m: s,
+    )
+
+
+# Majority voting is stateless and queries every arm at once — the
+# experiment drivers special-case it, so it registers with no adapter
+# builder (PolicySpec.from_name("voting") parses; build() refuses).
+policy_mod.register_policy_def("voting", None)

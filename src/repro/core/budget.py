@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import linucb
+from repro.core import policy as policy_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +101,22 @@ def scores(state: BudgetState, x: jax.Array, cfg: BudgetConfig,
     return score, feasible
 
 
+def score_parts(state: BudgetState, x: jax.Array, cfg: BudgetConfig,
+                remaining_budget: jax.Array) -> policy_mod.ScoreParts:
+    """The cost-normalized score decomposed for combinators
+    (``core.policy``): mean = ⟨x,θ̂⟩/lower, bonus = α·width/lower, so
+    mean + bonus is :func:`scores`' optimistic index. Feasibility
+    includes the cold-start rule of :func:`select` (unpulled arms stay
+    feasible). Single-context (K,) shapes — the adapter contract.
+    """
+    c_hat, beta = cost_estimates(state, cfg)
+    lower = jnp.maximum(c_hat - beta, cfg.eps)
+    mean = linucb.mean_scores(state.bandit, x) / lower
+    total = linucb.ucb_scores(state.bandit, x, cfg.alpha) / lower
+    feasible = (c_hat <= remaining_budget) | (state.cost_count == 0)
+    return policy_mod.ScoreParts(mean, total - mean, feasible)
+
+
 def select(state: BudgetState, x: jax.Array, cfg: BudgetConfig,
            remaining_budget: jax.Array) -> jax.Array:
     """Highest score among budget-feasible arms; -1 if none feasible.
@@ -132,6 +149,25 @@ def update(state: BudgetState, arm: jax.Array, x: jax.Array,
         bandit=linucb.update(state.bandit, arm, x, reward, mask=mask),
         cost_sum=state.cost_sum.at[arm].add(m * cost),
         cost_count=state.cost_count.at[arm].add(m),
+    )
+
+
+# -- policy registration (see core.policy for the spec/registry API) --------
+
+@policy_mod.register_policy("budget_linucb", budgeted=True)
+def _budget_builder(args, ctx: policy_mod.BuildContext
+                    ) -> policy_mod.PolicyAdapter:
+    """Budget-aware LinUCB (paper §5.1) as a registered policy adapter."""
+    policy_mod.take_args(args)
+    cfg = BudgetConfig(ctx.num_arms, ctx.dim, ctx.alpha, ctx.lam,
+                       horizon_t=ctx.horizon_t, c_max=ctx.c_max)
+    return policy_mod.PolicyAdapter(
+        "budget_linucb", True,
+        init=lambda: init(cfg),
+        plan=policy_mod.no_plan,
+        select=lambda s, p, x, h, rem: select(s, x, cfg, rem),
+        update=lambda s, p, a, x, r, c, m: update(s, a, x, r, c, mask=m),
+        score_parts=lambda s, p, x, h, rem: score_parts(s, x, cfg, rem),
     )
 
 

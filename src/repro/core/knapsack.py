@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import budget as budget_mod
 from repro.core import linucb
+from repro.core import policy as policy_mod
 
 BUDGET_BINS = 256  # discretization of the budget axis in the DP
 
@@ -152,3 +153,29 @@ def plan(state: KnapsackState, x: jax.Array, cfg: KnapsackConfig,
         None, length=cfg.num_arms)
     valid = order >= 0
     return order, valid
+
+
+# -- policy registration (see core.policy for the spec/registry API) --------
+
+@policy_mod.register_policy("knapsack", budgeted=True)
+def _knapsack_builder(args, ctx: policy_mod.BuildContext
+                      ) -> policy_mod.PolicyAdapter:
+    """Knapsack planning heuristic (paper Algorithm 2) as a registered
+    policy adapter. Plan-based — select reads the ordered candidate list,
+    so no score decomposition is exposed (score-level combinators do not
+    apply; select-level ones like EpsilonMix do)."""
+    policy_mod.take_args(args)
+    cfg = KnapsackConfig(ctx.num_arms, ctx.dim, ctx.alpha, ctx.lam,
+                         horizon_t=ctx.horizon_t, c_max=ctx.c_max)
+
+    def plan_fn(state, x, b):
+        order, valid = plan(state, x, cfg, b)
+        return jnp.where(valid, order, -1)
+
+    return policy_mod.PolicyAdapter(
+        "knapsack", True,
+        init=lambda: init(cfg.budget()),
+        plan=plan_fn,
+        select=lambda s, p, x, h, rem: p[h],
+        update=lambda s, p, a, x, r, c, m: update(s, a, x, r, c, mask=m),
+    )

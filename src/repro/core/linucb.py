@@ -39,6 +39,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import policy as policy_mod
+
 BACKENDS = ("auto", "ref", "pallas", "pallas_interpret")
 _BACKEND = os.environ.get("REPRO_LINUCB_BACKEND", "auto")
 if _BACKEND not in BACKENDS:
@@ -166,6 +168,20 @@ def ucb_scores(state: LinUCBState, x: jax.Array, alpha: float) -> jax.Array:
             xb, state.theta, state.a_inv_t, float(alpha),
             interpret=backend == "pallas_interpret")
     return scores[0] if squeezed else scores
+
+
+def mean_scores(state: LinUCBState, x: jax.Array) -> jax.Array:
+    """``⟨x, θ̂_k⟩`` per arm — the exploitation half of the UCB index.
+
+    One (B,d)@(d,K) GEMM over the cached ridge estimates: O(K·d), never
+    touches the (d, K·d) block inverse. The score-transform combinators
+    (``core.policy``) use it to split :func:`ucb_scores` into
+    (mean, bonus) without a second block-inverse dispatch — the fused
+    kernel launch stays the only traffic on the hot buffer.
+    """
+    xb = jnp.atleast_2d(x)
+    mean = jnp.einsum("bd,kd->bk", xb, state.theta)
+    return mean[0] if x.ndim == 1 else mean
 
 
 def confidence_width(state: LinUCBState, x: jax.Array) -> jax.Array:
@@ -319,6 +335,31 @@ def batch_update(state: LinUCBState, arms: jax.Array, xs: jax.Array,
     theta_new = jnp.einsum("ikj,kj->ki", a_inv_t.reshape(d, k, d), b)
     theta = jnp.where(touched[:, None], theta_new, state.theta)
     return LinUCBState(a_inv_t=a_inv_t, b=b, theta=theta, counts=counts)
+
+
+# -- policy registration (see core.policy for the spec/registry API) --------
+
+@policy_mod.register_policy("greedy_linucb")
+def _greedy_builder(args, ctx: policy_mod.BuildContext
+                    ) -> policy_mod.PolicyAdapter:
+    """Greedy LinUCB (paper Algorithm 1) as a registered policy adapter."""
+    policy_mod.take_args(args)
+    cfg = LinUCBConfig(ctx.num_arms, ctx.dim, ctx.alpha, ctx.lam)
+
+    def score_parts(s, p, x, h, rem):
+        total = ucb_scores(s, x, cfg.alpha)
+        mean = mean_scores(s, x)
+        return policy_mod.ScoreParts(mean, total - mean,
+                                     jnp.ones_like(total, dtype=bool))
+
+    return policy_mod.PolicyAdapter(
+        "greedy_linucb", True,
+        init=lambda: init(cfg),
+        plan=policy_mod.no_plan,
+        select=lambda s, p, x, h, rem: select(s, x, cfg),
+        update=lambda s, p, a, x, r, c, m: update(s, a, x, r, mask=m),
+        score_parts=score_parts,
+    )
 
 
 def dense_a(state: LinUCBState) -> jax.Array:

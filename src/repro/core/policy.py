@@ -1,0 +1,665 @@
+"""Composable policy API: registry, hashable pytree specs, combinators.
+
+The paper's contribution is a *family* of LinUCB variants — myopic,
+budget-aware, positionally-aware — and related work (pipeline-of-subtask
+selection, versatile-reward cost-aware selection) is one combinator away
+from the same LinUCB core. This module makes that family open:
+
+* :class:`PolicySpec` — a frozen, hashable, **static-pytree** description
+  of a policy: registry name + config args + a stack of score-transform
+  combinators. Specs are valid ``jit`` static arguments and dict/cache
+  keys, which is how every jitted driver/scheduler program is keyed on
+  ``(spec, backend)`` — two differently-configured same-name policies can
+  never share a compiled program.
+* :func:`register_policy` — the open registry mapping spec names to
+  adapter builders. Builders live next to their math
+  (``linucb`` / ``budget`` / ``knapsack`` / ``baselines`` register
+  themselves); new policies register from anywhere.
+* :class:`PolicyAdapter` — the uniform (init / plan / select / update)
+  runtime over pytrees that the experiment engine and the serving
+  scheduler both drive. Adapters may additionally expose
+  :attr:`PolicyAdapter.score_parts` — the UCB index decomposed into
+  (exploitation mean, exploration bonus, feasibility) — which is the
+  surface the combinators transform.
+* Combinators — :class:`PositionalWeight` (position-discounted
+  exploration favoring early-step satisfaction, the paper's missing
+  extension), :class:`BudgetGate`, :class:`EpsilonMix`,
+  :class:`CostTieBreak`. Each wraps ANY adapter exposing what it needs
+  and still traces to the same zero-copy Pallas hot path: the expensive
+  ``(d, K·d)`` block-inverse traffic stays the one fused
+  ``linucb.ucb_scores`` launch; the decomposition only adds the O(K·d)
+  ``⟨x, θ̂_k⟩`` GEMM (``linucb.mean_scores``).
+
+Spec spellings
+--------------
+``PolicySpec.from_name("budget_linucb")`` parses every legacy string
+(``"fixed:3"`` included); ``spec.with_args(alpha=0.3)`` overrides config;
+``spec.wrap(PositionalWeight(0.8))`` stacks combinators (applied
+inside-out, left to right). ``positional_linucb`` is registered as a
+first-class name — sugar for ``greedy_linucb`` (or ``base="budget_linucb"``)
+wrapped in :class:`PositionalWeight`.
+
+``make_policy`` remains as a thin deprecated shim with bit-identical
+routing; new code should build a spec and call :meth:`PolicySpec.build`
+(or the cached :func:`build_policy`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+import warnings
+from typing import (Any, Callable, Dict, NamedTuple, Optional, Tuple,
+                    Union)
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Runtime adapter: uniform (init / plan / select / update) API over pytrees
+# ---------------------------------------------------------------------------
+
+class ScoreParts(NamedTuple):
+    """The UCB index decomposed for score-transform combinators.
+
+    ``mean``: (K,) exploitation component; ``bonus``: (K,) exploration
+    component (``mean + bonus`` is the policy's full selection score);
+    ``feasible``: (K,) bool — arms the policy allows this step. Transforms
+    rescale ``bonus`` or tighten ``feasible`` without re-touching the
+    block-inverse kernel that produced them.
+    """
+
+    mean: jax.Array
+    bonus: jax.Array
+    feasible: jax.Array
+
+
+class PolicyAdapter(NamedTuple):
+    name: str
+    multi_step: bool
+    init: Callable[[], Any]
+    plan: Callable[[Any, jax.Array, jax.Array], Any]
+    select: Callable[[Any, Any, jax.Array, jax.Array, jax.Array], jax.Array]
+    # update(state, plan, arm, x, reward, cost, executed) — ``executed``
+    # is a scalar bool gating the update: when False the call must be a
+    # state no-op. Policies implement it as an O(d) input mask (see
+    # ``linucb.update``), which is how the drivers avoid per-step
+    # conditionals or full-state selects on the (d, K·d) inverse.
+    update: Callable[..., Any]
+    # fork(state, i) — decorrelate per-replica select randomness when one
+    # frozen state snapshot is shared across i = 0..B-1 concurrent
+    # streams (the multi-stream engine). Identity for deterministic
+    # selects; policies whose select keys randomness off the state (the
+    # 'random' baseline's round counter) must make fork(state, i) differ
+    # per i, or every stream of a round picks the same arm.
+    fork: Callable[[Any, jax.Array], Any] = lambda state, i: state
+    # score_parts(state, plan, x, h, remaining) -> ScoreParts, or None for
+    # policies whose select is not score-shaped (knapsack's plan lookup,
+    # the stochastic baselines). Score-level combinators require it and
+    # fail loudly at build time when absent.
+    score_parts: Optional[Callable[..., ScoreParts]] = None
+
+
+def no_plan(state, x, b):
+    """Plan stub for policies that select step-by-step."""
+    return jnp.int32(0)
+
+
+def select_from_parts(parts: ScoreParts) -> jax.Array:
+    """Canonical select over decomposed scores: feasibility-masked argmax
+    of ``mean + bonus``; −1 when no arm is feasible (policy opt-out)."""
+    scores = parts.mean + parts.bonus
+    neg_inf = jnp.asarray(-jnp.inf, scores.dtype)
+    masked = jnp.where(parts.feasible, scores, neg_inf)
+    arm = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    return jnp.where(jnp.any(parts.feasible, axis=-1), arm, -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildContext:
+    """Runtime scale the driver/scheduler knows at build time (spec args
+    override the matching fields). ``seed`` may be a traced int32 — the
+    vmapped seed sweep threads per-seed randomness through it."""
+
+    num_arms: int
+    dim: int
+    alpha: float = 0.675
+    lam: float = 0.45
+    horizon_t: int = 10_000
+    c_max: float = 1.0
+    seed: Any = 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+Builder = Callable[[Dict[str, Any], BuildContext], PolicyAdapter]
+
+
+class PolicyDef(NamedTuple):
+    builder: Optional[Builder]   # None: spec name the drivers special-case
+    budgeted: Union[bool, Callable[[Dict[str, Any]], bool]]
+    select_uses_seed: bool
+
+
+_REGISTRY: Dict[str, PolicyDef] = {}
+
+# Modules whose import registers the built-in policies (builders live next
+# to their math). Imported lazily so this module stays a leaf.
+_BUILTIN_MODULES = ("repro.core.linucb", "repro.core.budget",
+                    "repro.core.knapsack", "repro.core.baselines")
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    # flag is set only after every import succeeds: a failed builtin
+    # import surfaces its real error on every lookup instead of leaving a
+    # silent partial registry for the rest of the process
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+    _builtins_loaded = True
+
+
+def register_policy_def(name: str, builder: Optional[Builder], *,
+                        budgeted: Union[bool, Callable] = False,
+                        select_uses_seed: bool = False) -> None:
+    """Register ``name`` in the policy registry (builder may be ``None``
+    for spec names the experiment drivers handle without an adapter,
+    e.g. the stateless ``voting`` baseline)."""
+    if name in _REGISTRY:
+        raise ValueError(f"policy {name!r} is already registered")
+    _REGISTRY[name] = PolicyDef(builder, budgeted, select_uses_seed)
+
+
+def register_policy(name: str, *, budgeted: Union[bool, Callable] = False,
+                    select_uses_seed: bool = False):
+    """Decorator form of :func:`register_policy_def`.
+
+    The builder receives ``(args, ctx)``: the spec's leftover args (after
+    ``alpha``/``lam``/``horizon_t``/``c_max`` were folded into ``ctx``)
+    and the :class:`BuildContext`; it must consume args via
+    :func:`take_args` so typos fail loudly.
+    """
+
+    def deco(builder: Builder) -> Builder:
+        register_policy_def(name, builder, budgeted=budgeted,
+                            select_uses_seed=select_uses_seed)
+        return builder
+
+    return deco
+
+
+def available_policies() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def take_args(args: Dict[str, Any], **defaults):
+    """Pop declared args (with defaults) and reject anything left over."""
+    out = tuple(args.pop(k, v) for k, v in defaults.items())
+    if args:
+        raise ValueError(f"unknown policy args {sorted(args)!r} "
+                         f"(this policy accepts {sorted(defaults)!r})")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PolicySpec: hashable static-pytree policy description
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Frozen description of a policy: name + config args + combinators.
+
+    Registered as a STATIC pytree node (no leaves, the whole spec is
+    aux data), so a spec passes freely through ``jit``/``vmap`` closures
+    and works as a ``static_argnums`` argument or cache key. Hashability
+    is enforced at construction — args values must be hashable scalars or
+    tuples, transforms must be the frozen combinator dataclasses.
+    """
+
+    name: str
+    args: Tuple[Tuple[str, Any], ...] = ()
+    transforms: Tuple["ScoreTransform", ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "args",
+                           tuple(sorted((str(k), v) for k, v in self.args)))
+        object.__setattr__(self, "transforms", tuple(self.transforms))
+        try:
+            hash((self.args, self.transforms))
+        except TypeError as e:
+            raise TypeError(
+                f"PolicySpec must be hashable (it keys every jitted "
+                f"driver/scheduler program): {e}") from None
+        for t in self.transforms:
+            if not isinstance(t, ScoreTransform):
+                raise TypeError(f"transforms must be ScoreTransform "
+                                f"instances, got {t!r}")
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def from_name(cls, name: str, **args) -> "PolicySpec":
+        """Parse any legacy policy string (``"fixed:3"`` included)."""
+        if not isinstance(name, str):
+            raise TypeError(f"from_name takes a policy string, got {name!r}")
+        if ":" in name:
+            prefix, _, val = name.partition(":")
+            if prefix != "fixed":
+                raise ValueError(f"unknown policy {name!r} (only 'fixed:<k>'"
+                                 f" uses the ':' spelling)")
+            args = {"arm": int(val), **args}
+            name = "fixed"
+        _ensure_builtins()
+        if name not in _REGISTRY:
+            raise ValueError(f"unknown policy {name!r} "
+                             f"(choose from {available_policies()})")
+        return cls(name, tuple(args.items()))
+
+    def with_args(self, **args) -> "PolicySpec":
+        merged = {**dict(self.args), **args}
+        return dataclasses.replace(self, args=tuple(merged.items()))
+
+    def wrap(self, *transforms: "ScoreTransform") -> "PolicySpec":
+        """Stack combinators (applied inside-out, left to right)."""
+        return dataclasses.replace(
+            self, transforms=self.transforms + tuple(transforms))
+
+    # -- derived metadata (drivers consult these before building) ---------
+
+    @property
+    def kwargs(self) -> Dict[str, Any]:
+        return dict(self.args)
+
+    def _def(self) -> PolicyDef:
+        _ensure_builtins()
+        if self.name not in _REGISTRY:
+            raise ValueError(f"unknown policy {self.name!r} "
+                             f"(choose from {available_policies()})")
+        return _REGISTRY[self.name]
+
+    @property
+    def budgeted(self) -> bool:
+        """Whether the experiment drivers should draw real round budgets."""
+        base = self._def().budgeted
+        if callable(base):
+            base = base(self.kwargs)
+        return bool(base) or any(t.makes_budgeted for t in self.transforms)
+
+    @property
+    def select_uses_seed(self) -> bool:
+        """Whether select consumes the driver seed (cache-key relevance)."""
+        return (self._def().select_uses_seed
+                or any(t.select_uses_seed for t in self.transforms))
+
+    @property
+    def label(self) -> str:
+        """Human-readable spelling (round-trips the legacy strings)."""
+        if self.name == "fixed":
+            return f"fixed:{self.kwargs.get('arm')}"
+        return self.name
+
+    # -- building ---------------------------------------------------------
+
+    def build(self, num_arms: int, dim: int, *, alpha: float = 0.675,
+              lam: float = 0.45, horizon_t: int = 10_000,
+              c_max: float = 1.0, seed: Any = 0) -> PolicyAdapter:
+        """Build the runtime adapter at a concrete (num_arms, dim) scale.
+
+        Spec args override the matching context kwargs (``alpha``,
+        ``lam``, ``horizon_t``, ``c_max``); everything else is handed to
+        the registered builder. Safe under tracing — ``seed`` may be a
+        traced int32 (the vmapped seed sweep builds per-seed policies
+        inside the traced chunk).
+        """
+        d = self._def()
+        if d.builder is None:
+            raise ValueError(f"policy {self.name!r} has no adapter (it is "
+                             f"driver-handled); use the run_* drivers")
+        kw = self.kwargs
+        ctx = BuildContext(num_arms, dim,
+                           alpha=kw.pop("alpha", alpha),
+                           lam=kw.pop("lam", lam),
+                           horizon_t=kw.pop("horizon_t", horizon_t),
+                           c_max=kw.pop("c_max", c_max),
+                           seed=seed)
+        adapter = d.builder(kw, ctx)
+        for t in self.transforms:
+            adapter = t.apply(adapter, ctx)
+        return adapter
+
+
+def as_spec(policy: Union[str, PolicySpec]) -> PolicySpec:
+    """Normalize a policy argument (legacy string or spec) to a spec."""
+    if isinstance(policy, PolicySpec):
+        return policy
+    if isinstance(policy, str):
+        return PolicySpec.from_name(policy)
+    raise TypeError(f"policy must be a name string or PolicySpec, "
+                    f"got {type(policy).__name__}: {policy!r}")
+
+
+@functools.lru_cache(maxsize=256)
+def build_policy(policy: Union[str, PolicySpec], num_arms: int, dim: int, *,
+                 alpha: float = 0.675, lam: float = 0.45,
+                 horizon_t: int = 10_000, c_max: float = 1.0,
+                 seed: int = 0) -> PolicyAdapter:
+    """Cached :meth:`PolicySpec.build` for static (untraced) contexts —
+    the scheduler and the driver caches share adapters through here."""
+    return as_spec(policy).build(num_arms, dim, alpha=alpha, lam=lam,
+                                 horizon_t=horizon_t, c_max=c_max, seed=seed)
+
+
+def resolve_policy_arg(policy, policy_name=None) -> PolicySpec:
+    """Normalize the drivers' policy argument, honoring the deprecated
+    ``policy_name=`` keyword spelling (warns, routes bit-identically)."""
+    if policy_name is not None:
+        warnings.warn(
+            "policy_name= is deprecated; pass the policy (name string or "
+            "PolicySpec) as the first argument", DeprecationWarning,
+            stacklevel=3)
+        if policy is None:
+            policy = policy_name
+    if policy is None:
+        raise TypeError("missing required policy argument")
+    return as_spec(policy)
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim
+# ---------------------------------------------------------------------------
+
+def make_policy(name: Union[str, PolicySpec], num_arms: int, dim: int,
+                alpha: float = 0.675, lam: float = 0.45,
+                horizon_t: int = 10_000, c_max: float = 1.0,
+                seed: int = 0) -> PolicyAdapter:
+    """DEPRECATED: build a :class:`PolicySpec` and call ``spec.build``.
+
+    Kept as a thin shim — every legacy spelling builds the equivalent
+    spec and routes bit-identically through the same registered builders.
+    """
+    warnings.warn(
+        "make_policy() is deprecated; use "
+        "PolicySpec.from_name(name).build(num_arms, dim, ...) or "
+        "repro.core.policy.build_policy(...)", DeprecationWarning,
+        stacklevel=2)
+    return as_spec(name).build(num_arms, dim, alpha=alpha, lam=lam,
+                               horizon_t=horizon_t, c_max=c_max, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Score-transform combinators
+# ---------------------------------------------------------------------------
+
+class ScoreTransform:
+    """A combinator wrapping a :class:`PolicyAdapter`.
+
+    Subclasses are frozen dataclasses (hashable — they ride inside
+    :class:`PolicySpec`). ``apply(base, ctx)`` returns a new adapter.
+    Score-level transforms (:class:`PositionalWeight`,
+    :class:`BudgetGate`) rebuild ``select`` from the transformed
+    :class:`ScoreParts` and keep ``score_parts`` exposed, so they stack.
+    Select-level transforms (:class:`EpsilonMix`, :class:`CostTieBreak`)
+    perturb the final choice and set ``score_parts=None`` — stacking a
+    score-level transform on top of them fails loudly instead of silently
+    dropping the perturbation.
+    """
+
+    select_uses_seed = False
+    makes_budgeted = False
+
+    def apply(self, base: PolicyAdapter, ctx: BuildContext) -> PolicyAdapter:
+        raise NotImplementedError
+
+
+def _require_parts(base: PolicyAdapter, transform: str) -> None:
+    if base.score_parts is None:
+        raise ValueError(
+            f"{transform} needs a score-decomposed base policy "
+            f"(score_parts is None on {base.name!r}); greedy_linucb and "
+            f"budget_linucb expose one, plan-based/stochastic bases do not")
+
+
+def _empirical_costs(state) -> Tuple[jax.Array, jax.Array]:
+    """(ĉ_k, known_k) from any state carrying cost statistics."""
+    n = state.cost_count
+    known = n > 0
+    c_hat = jnp.where(known, state.cost_sum / jnp.maximum(n, 1.0), 0.0)
+    return c_hat, known
+
+
+def _resolve_costs(state, static_costs, base_name: str,
+                   transform: str) -> Tuple[jax.Array, jax.Array]:
+    """Per-arm cost estimates for cost-aware combinators: the static
+    ``costs=`` tuple when given (all known), else the state's empirical
+    cost statistics; raises (at trace time) when neither exists."""
+    if static_costs is not None:
+        return static_costs, jnp.ones_like(static_costs, bool)
+    if hasattr(state, "cost_sum"):
+        return _empirical_costs(state)
+    raise ValueError(
+        f"{transform} over {base_name!r} needs static costs= "
+        f"(its state tracks no cost statistics)")
+
+
+def _state_entropy(state) -> jax.Array:
+    """A cheap int32 that changes as the policy state evolves — folded
+    into stochastic combinators' PRNG keys so repeated identical contexts
+    (the serving hot path) still decorrelate across updates. O(K): total
+    pull counts for the bandit-family states, the counter itself for
+    scalar-counter states, 0 for anything else (context/step hashing is
+    then the only entropy)."""
+    if hasattr(state, "counts"):
+        return jnp.sum(state.counts).astype(jnp.int32)
+    if hasattr(state, "bandit"):
+        return jnp.sum(state.bandit.counts).astype(jnp.int32)
+    if isinstance(state, jax.Array) and state.ndim == 0 and \
+            jnp.issubdtype(state.dtype, jnp.integer):
+        return state.astype(jnp.int32)
+    return jnp.int32(0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PositionalWeight(ScoreTransform):
+    """Position-discounted exploration bonus (the paper's missing
+    positionally-aware LinUCB).
+
+    Users value early correct answers (Table 3's positional utility
+    Σ γ^h · acc_h), so the first refinement steps should EXPLOIT the
+    best-known arm and defer exploration to the steps a round only
+    reaches after failing anyway. The UCB bonus at step ``h`` is scaled
+    by ``1 − γ^(h+1)``: with the table's γ = 0.8 that is 0.2 at the
+    first step, ramping toward 1 as the round deepens. γ = 0 recovers
+    the undiscounted base policy; larger γ exploits harder early.
+
+    The transform touches only the decomposed bonus — the block-inverse
+    scoring stays the single fused ``linucb.ucb_scores`` dispatch.
+    """
+
+    gamma: float = 0.8
+
+    def apply(self, base: PolicyAdapter, ctx: BuildContext) -> PolicyAdapter:
+        _require_parts(base, "PositionalWeight")
+        g = float(self.gamma)
+        if not 0.0 <= g < 1.0:
+            raise ValueError(f"gamma must be in [0, 1), got {g}")
+        base_parts = base.score_parts
+
+        def parts_fn(s, p, x, h, rem):
+            parts = base_parts(s, p, x, h, rem)
+            w = 1.0 - jnp.power(g, jnp.asarray(h, jnp.float32) + 1.0)
+            return ScoreParts(parts.mean, w * parts.bonus, parts.feasible)
+
+        def select(s, p, x, h, rem):
+            return select_from_parts(parts_fn(s, p, x, h, rem))
+
+        return base._replace(name=f"positional({base.name},g={g})",
+                             select=select, score_parts=parts_fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetGate(ScoreTransform):
+    """Feasibility gate: mask arms whose estimated cost exceeds the
+    remaining budget (× ``slack``).
+
+    Costs come from the state's empirical cost statistics when the base
+    tracks them (budget/knapsack/mixllm-family states), else from the
+    static per-arm ``costs`` tuple. Arms with no cost observations stay
+    feasible (cold-start exploration, matching ``budget.select``). Marks
+    the spec ``budgeted`` so the experiment drivers draw real budgets.
+    """
+
+    costs: Optional[Tuple[float, ...]] = None
+    slack: float = 1.0
+    makes_budgeted = True
+
+    def apply(self, base: PolicyAdapter, ctx: BuildContext) -> PolicyAdapter:
+        _require_parts(base, "BudgetGate")
+        base_parts = base.score_parts
+        static_costs = (None if self.costs is None
+                        else jnp.asarray(self.costs, jnp.float32))
+        slack = float(self.slack)
+
+        def parts_fn(s, p, x, h, rem):
+            parts = base_parts(s, p, x, h, rem)
+            c_hat, known = _resolve_costs(s, static_costs, base.name,
+                                          "BudgetGate")
+            # unknown-cost arms stay feasible: cold-start exploration,
+            # matching budget.select
+            feasible = parts.feasible & ((c_hat <= slack * rem) | ~known)
+            return ScoreParts(parts.mean, parts.bonus, feasible)
+
+        def select(s, p, x, h, rem):
+            return select_from_parts(parts_fn(s, p, x, h, rem))
+
+        return base._replace(name=f"budget_gate({base.name})",
+                             select=select, score_parts=parts_fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class EpsilonMix(ScoreTransform):
+    """ε-greedy exploration mixed over ANY base select.
+
+    With probability ``eps`` the step routes to a uniform arm instead of
+    the base choice. Feasibility is respected: a −1 base select (opt-out)
+    is never overridden, and when the base exposes ``score_parts`` the
+    explore draw is uniform over its FEASIBLE arms only — stacking over
+    ``BudgetGate`` or a budget base never routes to a gated arm. Bases
+    without a score decomposition (plan-based knapsack) explore over all
+    arms. Randomness keys off the driver seed, the step index, a context
+    hash and the state's pull-count total — deterministic given (seed,
+    posterior state, step, context), decorrelated across rounds, streams
+    AND repeated identical contexts (each fold advances the counts), all
+    without touching the state pytree.
+    """
+
+    eps: float = 0.05
+    salt: int = 0
+    select_uses_seed = True
+
+    def apply(self, base: PolicyAdapter, ctx: BuildContext) -> PolicyAdapter:
+        eps = float(self.eps)
+        if not 0.0 <= eps <= 1.0:
+            raise ValueError(f"eps must be in [0, 1], got {eps}")
+        num_arms, seed, salt = ctx.num_arms, ctx.seed, int(self.salt)
+        base_parts = base.score_parts
+
+        def select(s, p, x, h, rem):
+            arm = jnp.asarray(base.select(s, p, x, h, rem), jnp.int32)
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), salt)
+            key = jax.random.fold_in(key, h)
+            xh = jax.lax.bitcast_convert_type(
+                jnp.sum(x * (1.0 + jnp.arange(x.shape[-1], dtype=x.dtype))),
+                jnp.int32)
+            key = jax.random.fold_in(key, xh)
+            key = jax.random.fold_in(key, _state_entropy(s))
+            ku, ka = jax.random.split(key)
+            if base_parts is None:
+                rnd = jax.random.randint(ka, (), 0, num_arms)
+            else:
+                # uniform over the base's feasible arms (argmax of iid
+                # uniforms restricted to the feasible set); XLA CSEs the
+                # duplicated scoring with the base select's
+                feasible = base_parts(s, p, x, h, rem).feasible
+                u = jnp.where(feasible, jax.random.uniform(ka, (num_arms,)),
+                              -jnp.inf)
+                rnd = jnp.argmax(u).astype(jnp.int32)
+            explore = jax.random.uniform(ku) < eps
+            return jnp.where((arm >= 0) & explore, rnd, arm)
+
+        return base._replace(name=f"eps_mix({base.name},eps={eps})",
+                             select=select, score_parts=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostTieBreak(ScoreTransform):
+    """Among near-tied top-scoring feasible arms, route to the cheapest.
+
+    ``tol`` is an absolute score tolerance: arms within ``tol`` of the
+    best masked score are tied. Costs come from the state's empirical
+    statistics when tracked (unpulled arms count as ``c_max`` — ties
+    never force exploration), else from static ``costs``.
+    """
+
+    tol: float = 0.05
+    costs: Optional[Tuple[float, ...]] = None
+
+    def apply(self, base: PolicyAdapter, ctx: BuildContext) -> PolicyAdapter:
+        _require_parts(base, "CostTieBreak")
+        base_parts = base.score_parts
+        static_costs = (None if self.costs is None
+                        else jnp.asarray(self.costs, jnp.float32))
+        tol, c_max = float(self.tol), float(ctx.c_max)
+
+        def select(s, p, x, h, rem):
+            parts = base_parts(s, p, x, h, rem)
+            scores = parts.mean + parts.bonus
+            neg_inf = jnp.asarray(-jnp.inf, scores.dtype)
+            masked = jnp.where(parts.feasible, scores, neg_inf)
+            best = jnp.max(masked, axis=-1)
+            near = masked >= best - tol
+            c_emp, known = _resolve_costs(s, static_costs, base.name,
+                                          "CostTieBreak")
+            # unknown-cost arms count as c_max: ties never force
+            # exploration of an unpulled arm
+            c_hat = jnp.where(known, c_emp, c_max)
+            pick = jnp.argmin(jnp.where(near, c_hat, jnp.inf),
+                              axis=-1).astype(jnp.int32)
+            return jnp.where(jnp.any(parts.feasible, axis=-1), pick, -1)
+
+        return base._replace(name=f"cost_tiebreak({base.name})",
+                             select=select, score_parts=None)
+
+
+# ---------------------------------------------------------------------------
+# positional_linucb: the combinator showcase, registered first-class
+# ---------------------------------------------------------------------------
+
+def _positional_budgeted(args: Dict[str, Any]) -> bool:
+    return args.get("base", "greedy_linucb") == "budget_linucb"
+
+
+@register_policy("positional_linucb", budgeted=_positional_budgeted)
+def _build_positional(args: Dict[str, Any],
+                      ctx: BuildContext) -> PolicyAdapter:
+    """Positionally-aware LinUCB: :class:`PositionalWeight` over a greedy
+    (default) or budget-aware LinUCB base."""
+    gamma, base_name = take_args(args, gamma=0.8, base="greedy_linucb")
+    _ensure_builtins()
+    base_def = _REGISTRY.get(base_name)
+    if base_def is None or base_def.builder is None:
+        raise ValueError(f"positional_linucb base must be a registered "
+                         f"adapter policy, got {base_name!r}")
+    base = base_def.builder({}, ctx)
+    if base.score_parts is None:
+        raise ValueError(f"positional_linucb base {base_name!r} exposes no "
+                         f"score decomposition")
+    adapter = PositionalWeight(float(gamma)).apply(base, ctx)
+    return adapter._replace(name="positional_linucb")

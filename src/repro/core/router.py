@@ -1,35 +1,40 @@
 """Unified routing policies + the public face of the experiment engine.
 
-This module owns the POLICY layer: the uniform
-(init / plan / select / update) :class:`PolicyAdapter` API over pytrees,
-:func:`make_policy` building any policy in :data:`POLICIES`, the batched
-serving entry point :func:`policy_route_batch`, and the
-:class:`ExperimentResult` container the paper's tables are computed from.
+This module is the stable import surface over two layers:
 
-The DRIVER layer — how rounds are dispatched (chunked ``lax.scan``),
-replicated (vmapped / ``shard_map``-sharded seed sweeps), batched across
-concurrent user streams, and logged (pluggable streaming sinks) — lives
-in :mod:`repro.engine`. The ``run_*`` functions here are thin wrappers
-kept for API stability; see ``repro/engine/__init__.py`` for the
-round/seed/stream/device axis model and the sink protocol. Results are
-bit-identical to the pre-engine drivers for every dispatch mode, chunk
-size, sharding layout and sink choice.
+* The POLICY layer now lives in :mod:`repro.core.policy`: the
+  :class:`~repro.core.policy.PolicySpec` registry (hashable specs, the
+  combinator API, ``positional_linucb``) and the uniform
+  (init / plan / select / update) :class:`~repro.core.policy.PolicyAdapter`
+  runtime. Re-exported here — plus the deprecated :func:`make_policy`
+  shim — so legacy imports keep working; the batched serving entry point
+  :func:`policy_route_batch` and the :class:`ExperimentResult` container
+  the paper's tables are computed from stay here.
+* The DRIVER layer — how rounds are dispatched (chunked ``lax.scan``),
+  replicated (vmapped / ``shard_map``-sharded seed sweeps), batched
+  across concurrent user streams, and logged (pluggable streaming sinks)
+  — lives in :mod:`repro.engine`. The ``run_*`` functions here are thin
+  wrappers kept for API stability; they accept a policy name string OR a
+  :class:`~repro.core.policy.PolicySpec`, and every jitted driver program
+  is keyed on ``(spec, backend)``. See ``repro/engine/__init__.py`` for
+  the round/seed/stream/device axis model and the sink protocol. Results
+  are bit-identical to the pre-engine drivers for every dispatch mode,
+  chunk size, sharding layout and sink choice.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, budget as budget_mod
-from repro.core import knapsack as knapsack_mod
-from repro.core import linucb
+from repro.core.policy import (PolicyAdapter, PolicySpec, ScoreParts,  # noqa: F401 — re-exported API
+                               as_spec, build_policy, make_policy)
 
-POLICIES = ("greedy_linucb", "budget_linucb", "knapsack", "metallm",
-            "mixllm", "voting", "random")
+POLICIES = ("greedy_linucb", "budget_linucb", "knapsack",
+            "positional_linucb", "metallm", "mixllm", "voting", "random")
 
 DISPATCH_MODES = ("scan", "per_round")
 DEFAULT_CHUNK_SIZE = 256
@@ -96,133 +101,10 @@ class ExperimentResult:
 
 
 # ---------------------------------------------------------------------------
-# Policy adapters: uniform (init / plan / select / update) API over pytrees
+# Policy layer: see repro.core.policy (registry, specs, combinators).
+# PolicyAdapter / PolicySpec / make_policy are re-exported above for API
+# stability; policy_route_batch stays here (the serving batch entry).
 # ---------------------------------------------------------------------------
-
-class PolicyAdapter(NamedTuple):
-    name: str
-    multi_step: bool
-    init: Callable[[], Any]
-    plan: Callable[[Any, jax.Array, jax.Array], Any]
-    select: Callable[[Any, Any, jax.Array, jax.Array, jax.Array], jax.Array]
-    # update(state, plan, arm, x, reward, cost, executed) — ``executed``
-    # is a scalar bool gating the update: when False the call must be a
-    # state no-op. Policies implement it as an O(d) input mask (see
-    # ``linucb.update``), which is how the drivers avoid per-step
-    # conditionals or full-state selects on the (d, K·d) inverse.
-    update: Callable[..., Any]
-    # fork(state, i) — decorrelate per-replica select randomness when one
-    # frozen state snapshot is shared across i = 0..B-1 concurrent
-    # streams (the multi-stream engine). Identity for deterministic
-    # selects; policies whose select keys randomness off the state (the
-    # 'random' baseline's round counter) must make fork(state, i) differ
-    # per i, or every stream of a round picks the same arm.
-    fork: Callable[[Any, jax.Array], Any] = lambda state, i: state
-
-
-def make_policy(name: str, num_arms: int, dim: int,
-                alpha: float = 0.675, lam: float = 0.45,
-                horizon_t: int = 10_000, c_max: float = 1.0,
-                seed: int = 0) -> PolicyAdapter:
-    """Build a policy adapter by name ('fixed:<k>' selects one arm forever).
-
-    ``seed`` may be a Python int or a traced int32 scalar — the latter is
-    how the vmapped seed sweep threads per-seed randomness into the
-    'random' baseline.
-    """
-    no_plan = lambda state, x, b: jnp.int32(0)
-
-    if name == "greedy_linucb":
-        cfg = linucb.LinUCBConfig(num_arms, dim, alpha, lam)
-        return PolicyAdapter(
-            name, True,
-            init=lambda: linucb.init(cfg),
-            plan=no_plan,
-            select=lambda s, p, x, h, rem: linucb.select(s, x, cfg),
-            update=lambda s, p, a, x, r, c, m: linucb.update(s, a, x, r,
-                                                            mask=m),
-        )
-
-    if name == "budget_linucb":
-        cfg = budget_mod.BudgetConfig(num_arms, dim, alpha, lam,
-                                      horizon_t=horizon_t, c_max=c_max)
-        return PolicyAdapter(
-            name, True,
-            init=lambda: budget_mod.init(cfg),
-            plan=no_plan,
-            select=lambda s, p, x, h, rem: budget_mod.select(s, x, cfg, rem),
-            update=lambda s, p, a, x, r, c, m: budget_mod.update(
-                s, a, x, r, c, mask=m),
-        )
-
-    if name == "knapsack":
-        cfg = knapsack_mod.KnapsackConfig(num_arms, dim, alpha, lam,
-                                          horizon_t=horizon_t, c_max=c_max)
-
-        def plan(state, x, b):
-            order, valid = knapsack_mod.plan(state, x, cfg, b)
-            return jnp.where(valid, order, -1)
-
-        return PolicyAdapter(
-            name, True,
-            init=lambda: knapsack_mod.init(cfg.budget()),
-            plan=plan,
-            select=lambda s, p, x, h, rem: p[h],
-            update=lambda s, p, a, x, r, c, m: knapsack_mod.update(
-                s, a, x, r, c, mask=m),
-        )
-
-    if name == "metallm":
-        cfg = baselines.MetaLLMConfig(num_arms, dim, alpha, lam)
-        return PolicyAdapter(
-            name, False,
-            init=lambda: baselines.metallm_init(cfg),
-            plan=no_plan,
-            select=lambda s, p, x, h, rem: baselines.metallm_select(s, x, cfg),
-            update=lambda s, p, a, x, r, c, m: baselines.metallm_update(
-                s, a, x, r, c, cfg, mask=m),
-        )
-
-    if name == "mixllm":
-        cfg = baselines.MixLLMConfig(num_arms, dim, alpha, lam)
-        return PolicyAdapter(
-            name, False,
-            init=lambda: baselines.mixllm_init(cfg),
-            plan=no_plan,
-            select=lambda s, p, x, h, rem: baselines.mixllm_select(s, x, cfg),
-            update=lambda s, p, a, x, r, c, m: baselines.mixllm_update(
-                s, a, x, r, c, cfg, mask=m),
-        )
-
-    if name == "random":
-        # single-step, like the paper's Random baseline (Table 1: ~40%,
-        # i.e. the average single-model accuracy — one routed call/query)
-        def rand_select(s, p, x, h, rem):
-            key = jax.random.fold_in(jax.random.PRNGKey(seed), s)
-            key = jax.random.fold_in(key, h)
-            return jax.random.randint(key, (), 0, num_arms)
-
-        return PolicyAdapter(
-            name, False,
-            init=lambda: jnp.int32(0),   # state = round counter
-            plan=no_plan,
-            select=rand_select,
-            update=lambda s, p, a, x, r, c, m: s + jnp.asarray(m, jnp.int32),
-            fork=lambda s, i: s + jnp.asarray(i, jnp.int32),
-        )
-
-    if name.startswith("fixed:"):
-        k = int(name.split(":")[1])
-        return PolicyAdapter(
-            name, False,
-            init=lambda: jnp.int32(0),
-            plan=no_plan,
-            select=lambda s, p, x, h, rem: jnp.int32(k),
-            update=lambda s, p, a, x, r, c, m: s,
-        )
-
-    raise ValueError(f"unknown policy {name!r} (choose from {POLICIES})")
-
 
 def policy_route_batch(policy: PolicyAdapter, state: Any, xs: jax.Array,
                        steps: jax.Array, remaining: jax.Array) -> jax.Array:
@@ -261,39 +143,39 @@ def _engine():
     return engine_driver
 
 
-def run_pool_experiment(policy_name: str, **kwargs):
-    """Play ``policy_name`` against the calibrated pool env.
+def run_pool_experiment(policy=None, **kwargs):
+    """Play ``policy`` (name string or :class:`PolicySpec`) against the
+    calibrated pool env.
 
     See :func:`repro.engine.driver.run_pool_experiment` for all options
     (dispatch mode, chunk size, streaming ``sink=``…). Returns an
     :class:`ExperimentResult` (default sink) or ``sink.finalize()``."""
-    return _engine().run_pool_experiment(policy_name, **kwargs)
+    return _engine().run_pool_experiment(policy, **kwargs)
 
 
-def run_pool_experiment_sweep(policy_name: str, seeds, **kwargs):
+def run_pool_experiment_sweep(policy=None, seeds=None, **kwargs):
     """S replications as one vmapped / device-sharded program; one
     :class:`ExperimentResult` per seed, bit-identical to per-seed runs.
     See :func:`repro.engine.driver.run_pool_experiment_sweep`."""
-    return _engine().run_pool_experiment_sweep(policy_name, seeds, **kwargs)
+    return _engine().run_pool_experiment_sweep(policy, seeds, **kwargs)
 
 
-def run_pool_multistream(policy_name: str, **kwargs):
+def run_pool_multistream(policy=None, **kwargs):
     """B concurrent user streams sharing one posterior, batched per round.
     See :func:`repro.engine.driver.run_pool_multistream`."""
-    return _engine().run_pool_multistream(policy_name, **kwargs)
+    return _engine().run_pool_multistream(policy, **kwargs)
 
 
-def run_synthetic_experiment(policy_name: str, **kwargs):
+def run_synthetic_experiment(policy=None, **kwargs):
     """LinUCB vs the exactly-linear env (Theorem 1/2 validation).
     See :func:`repro.engine.driver.run_synthetic_experiment`."""
-    return _engine().run_synthetic_experiment(policy_name, **kwargs)
+    return _engine().run_synthetic_experiment(policy, **kwargs)
 
 
-def run_synthetic_experiment_sweep(policy_name: str, seeds, **kwargs):
+def run_synthetic_experiment_sweep(policy=None, seeds=None, **kwargs):
     """Vmapped / device-sharded multi-seed synthetic sweep; (S, T) curves.
     See :func:`repro.engine.driver.run_synthetic_experiment_sweep`."""
-    return _engine().run_synthetic_experiment_sweep(policy_name, seeds,
-                                                    **kwargs)
+    return _engine().run_synthetic_experiment_sweep(policy, seeds, **kwargs)
 
 
 def sublinearity_slope(cum_regret: np.ndarray, burn_in: int = 50) -> float:

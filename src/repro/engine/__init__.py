@@ -42,17 +42,26 @@ reproduces the legacy in-memory arrays bit-for-bit;
 transfers and appends per-chunk ``.npz`` shards under ``results/`` so
 T ≫ 10⁶ experiments hold O(chunk) host log memory. Every sink sees
 byte-identical appends, so sink choice can never change results.
+
+Aggregation is streaming too: :mod:`repro.engine.aggregate` folds chunk
+logs (live via :class:`~repro.engine.aggregate.ReducerSink`, or offline
+shard-by-shard via :func:`~repro.engine.aggregate.summarize_shards`) into
+the Table-level statistics the benchmarks report, without ever
+materializing (T, H) arrays.
 """
+from repro.engine.aggregate import (ReducerSink, StreamingSummary,
+                                    summarize_shards)
 from repro.engine.driver import (fold_observations, run_pool_experiment,
                                  run_pool_experiment_sweep,
                                  run_pool_multistream,
                                  run_synthetic_experiment,
                                  run_synthetic_experiment_sweep)
-from repro.engine.sink import LogSink, MemorySink, NpyChunkSink
+from repro.engine.sink import LogSink, MemorySink, NpyChunkSink, iter_shards
 
 __all__ = [
-    "LogSink", "MemorySink", "NpyChunkSink", "fold_observations",
+    "LogSink", "MemorySink", "NpyChunkSink", "ReducerSink",
+    "StreamingSummary", "fold_observations", "iter_shards",
     "run_pool_experiment", "run_pool_experiment_sweep",
     "run_pool_multistream", "run_synthetic_experiment",
-    "run_synthetic_experiment_sweep",
+    "run_synthetic_experiment_sweep", "summarize_shards",
 ]

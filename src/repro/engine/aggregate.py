@@ -1,0 +1,154 @@
+"""Streaming aggregation over the engine's chunk logs.
+
+The benchmark tables only need O(1) summary statistics — accuracy, the
+per-position success decomposition (paper Table 3), average steps/cost,
+total regret — yet the legacy path materialized full ``(T, H)`` arrays
+(``MemorySink`` → :class:`~repro.core.router.ExperimentResult`) or loaded
+them back wholesale via :meth:`~repro.engine.sink.NpyChunkSink.load`.
+This module folds those statistics chunk-by-chunk instead, in O(chunk)
+host memory however large T grows:
+
+* :class:`StreamingSummary` — the reducer. ``update(chunk_dict)`` folds
+  one ``{field: (n, …) array}`` bundle (a sink append, or one ``.npz``
+  shard); the accessors mirror the :class:`ExperimentResult` API
+  (``accuracy``, ``accuracy_by_position()``, ``avg_steps``, ``summary()``
+  …) and agree with it up to float accumulation order.
+* :class:`ReducerSink` — a :class:`~repro.engine.sink.LogSink` feeding a
+  reducer straight from a driver, so a benchmark run never holds more
+  than one chunk of logs anywhere (no disk round-trip either).
+* :func:`summarize_shards` — fold a finalized
+  :class:`~repro.engine.sink.NpyChunkSink` directory shard-by-shard (the
+  offline spelling; replaces ``NpyChunkSink.load()`` + full-array math
+  for table aggregation).
+
+Multi-stream chunk logs (leading ``(n, B, H)``) fold too — stream rounds
+are flattened into the round axis, matching what
+``run_pool_multistream`` returns as a flattened ``ExperimentResult``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+import numpy as np
+
+from repro.engine import sink as sink_mod
+
+
+class StreamingSummary:
+    """Fold pool-experiment chunk logs into Table-level statistics.
+
+    Accepts bundles with ``rewards``/``arms``/``costs`` (``regrets``
+    optional) whose leading axis is the round axis and trailing axis is
+    the step axis; any middle axes (the multi-stream ``B``) are flattened
+    into rounds.
+    """
+
+    def __init__(self) -> None:
+        self.rounds = 0
+        self._success_by_pos: Optional[np.ndarray] = None  # (H,) counts
+        self._steps_sum = 0.0
+        self._cost_sum = 0.0
+        self._regret_sum = 0.0
+
+    # -- folding ----------------------------------------------------------
+
+    def update(self, chunk: Mapping[str, Any]) -> "StreamingSummary":
+        """Fold one chunk bundle; returns self (reduce-style chaining)."""
+        rewards = np.asarray(chunk["rewards"])
+        arms = np.asarray(chunk["arms"])
+        h = rewards.shape[-1]
+        rewards = rewards.reshape(-1, h)
+        arms = arms.reshape(-1, h)
+        if self._success_by_pos is None:
+            self._success_by_pos = np.zeros((h,), np.int64)
+        elif self._success_by_pos.shape[0] != h:
+            raise ValueError(f"step-axis mismatch: saw H={h} after "
+                             f"H={self._success_by_pos.shape[0]}")
+        hit = rewards > 0.5
+        solved = hit.any(axis=1)
+        first = np.argmax(hit, axis=1)
+        self._success_by_pos += np.bincount(first[solved], minlength=h)
+        self._steps_sum += float((arms >= 0).sum())
+        self._cost_sum += float(np.asarray(chunk["costs"],
+                                           np.float64).sum())
+        if "regrets" in chunk:
+            self._regret_sum += float(np.asarray(chunk["regrets"],
+                                                 np.float64).sum())
+        self.rounds += rewards.shape[0]
+        return self
+
+    # -- accessors (mirror ExperimentResult) ------------------------------
+
+    def _by_pos(self) -> np.ndarray:
+        if self._success_by_pos is None:
+            raise ValueError("no chunks folded yet")
+        return self._success_by_pos
+
+    @property
+    def accuracy(self) -> float:
+        return float(self._by_pos().sum() / max(self.rounds, 1))
+
+    def accuracy_by_position(self) -> np.ndarray:
+        """Fraction of rounds solved exactly at step h (paper Table 3)."""
+        return self._by_pos() / max(self.rounds, 1)
+
+    @property
+    def first_step_accuracy(self) -> float:
+        return float(self.accuracy_by_position()[0])
+
+    @property
+    def avg_steps(self) -> float:
+        return self._steps_sum / max(self.rounds, 1)
+
+    @property
+    def avg_cost(self) -> float:
+        """Mean cost per round (== ``cost_per_round.mean()``)."""
+        return self._cost_sum / max(self.rounds, 1)
+
+    @property
+    def total_regret(self) -> float:
+        return self._regret_sum
+
+    def positional_utility(self, gamma: float = 0.8) -> float:
+        """Σ γ^h · P(solved at step h) — Table 3's discounted utility."""
+        by_pos = self.accuracy_by_position()
+        return float(sum(gamma ** i * v for i, v in enumerate(by_pos)))
+
+    def summary(self) -> Dict[str, float]:
+        """Same keys as :meth:`ExperimentResult.summary`."""
+        return {
+            "accuracy": self.accuracy,
+            "avg_steps": self.avg_steps,
+            "avg_cost": self.avg_cost,
+            "first_step_accuracy": self.first_step_accuracy,
+            "total_regret": self.total_regret,
+        }
+
+
+class ReducerSink(sink_mod.LogSink):
+    """Feed a :class:`StreamingSummary` straight from a driver.
+
+    ``finalize()`` returns the reducer — benchmark aggregation without
+    ever materializing (T, H) arrays in host memory or on disk.
+    """
+
+    def __init__(self, reducer: Optional[StreamingSummary] = None) -> None:
+        self.reducer = reducer if reducer is not None else StreamingSummary()
+
+    def append(self, arrays: Mapping[str, Any], n: int) -> None:
+        self.reducer.update({k: np.asarray(v)[:n] for k, v in
+                             arrays.items()})
+
+    def finalize(self) -> StreamingSummary:
+        return self.reducer
+
+
+def summarize_shards(directory: str,
+                     reducer: Optional[StreamingSummary] = None
+                     ) -> StreamingSummary:
+    """Fold a finalized :class:`NpyChunkSink` directory one shard at a
+    time (O(shard) memory — the T ≫ 10⁶ aggregation path)."""
+    reducer = reducer if reducer is not None else StreamingSummary()
+    for shard in sink_mod.iter_shards(directory):
+        reducer.update(shard)
+    return reducer

@@ -66,9 +66,10 @@ import numpy as np
 
 from repro.core import budget as budget_mod, env as env_mod
 from repro.core import linucb
+from repro.core import policy as policy_mod
+from repro.core.policy import PolicyAdapter, PolicySpec
 from repro.core.router import (DEFAULT_CHUNK_SIZE, DISPATCH_MODES,
-                               ExperimentResult, PolicyAdapter, RoundLog,
-                               make_policy)
+                               ExperimentResult, RoundLog)
 from repro.engine import shard as shard_mod
 from repro.engine import sink as sink_mod
 
@@ -228,21 +229,24 @@ def _chunk_indices(rounds: int, chunk: int):
 # ---------------------------------------------------------------------------
 # Jitted driver programs (cached on their static configuration)
 # ---------------------------------------------------------------------------
-# ``seed`` only reaches compiled code through the 'random' policy's closure,
-# so it is normalized out of the key for every other policy. ``backend``
-# (the resolved linucb backend) is read at trace time inside the policy
-# math, so it must be part of every cache key — otherwise set_backend()
-# after a first run would be silently ignored by the cached programs.
+# Every cache is keyed on the full hashable ``PolicySpec`` — NOT the name
+# string — so two differently-configured same-name policies (e.g. two
+# ``positional_linucb`` specs with different gammas) can never collide on
+# a compiled program. ``seed`` only reaches compiled code through the
+# closures of seed-consuming selects ('random', EpsilonMix), so it is
+# normalized out of the key for every other spec. ``backend`` (the
+# resolved linucb backend) is read at trace time inside the policy math,
+# so it must be part of every cache key — otherwise set_backend() after a
+# first run would be silently ignored by the cached programs.
 
 @functools.lru_cache(maxsize=128)
-def _jitted_pool_drivers(policy_name: str, env: env_mod.CalibratedPoolEnv,
+def _jitted_pool_drivers(spec: PolicySpec, env: env_mod.CalibratedPoolEnv,
                          alpha: float, lam: float, horizon_t: int,
                          c_max: float, seed_key: int, budget_jitter: float,
                          dataset: Optional[int], backend: str):
     ds_arg = None if dataset is None else jnp.int32(dataset)
-    policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
-                         lam=lam, horizon_t=horizon_t, c_max=c_max,
-                         seed=seed_key)
+    policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
+                        horizon_t=horizon_t, c_max=c_max, seed=seed_key)
     round_fn = jax.jit(functools.partial(
         _pool_round, policy, env, budget_jitter=budget_jitter,
         dataset=ds_arg))
@@ -261,18 +265,21 @@ def _jitted_voting_drivers(env: env_mod.CalibratedPoolEnv,
     return round_fn, chunk_fn
 
 
-def _pool_sweep_chunk_callable(policy_name: str,
+def _pool_sweep_chunk_callable(spec: PolicySpec,
                                env: env_mod.CalibratedPoolEnv, alpha: float,
                                lam: float, horizon_t: int, c_max: float,
                                budget_jitter: float, dataset: Optional[int]):
     """The UNjitted vmapped sweep chunk — shared by the single-device jit
-    path and the shard_map path (which splits its seed axis per device)."""
+    path and the shard_map path (which splits its seed axis per device).
+
+    The policy is built INSIDE the vmapped function with the traced
+    per-seed int (uncached ``spec.build`` — seed-consuming selects close
+    over the tracer, everything else ignores it)."""
     ds_arg = None if dataset is None else jnp.int32(dataset)
 
     def chunk_fn(seed, params_s, state, kround, table_row, ts):
-        policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
-                             lam=lam, horizon_t=horizon_t, c_max=c_max,
-                             seed=seed)
+        policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
+                            horizon_t=horizon_t, c_max=c_max, seed=seed)
         return _pool_chunk(policy, env, params_s, state, kround, table_row,
                            ts, budget_jitter=budget_jitter, dataset=ds_arg)
 
@@ -280,12 +287,12 @@ def _pool_sweep_chunk_callable(policy_name: str,
 
 
 @functools.lru_cache(maxsize=128)
-def _jitted_pool_sweep_chunk(policy_name: str,
+def _jitted_pool_sweep_chunk(spec: PolicySpec,
                              env: env_mod.CalibratedPoolEnv, alpha: float,
                              lam: float, horizon_t: int, c_max: float,
                              budget_jitter: float, dataset: Optional[int],
                              backend: str, num_devices: int = 1):
-    vchunk = _pool_sweep_chunk_callable(policy_name, env, alpha, lam,
+    vchunk = _pool_sweep_chunk_callable(spec, env, alpha, lam,
                                         horizon_t, c_max, budget_jitter,
                                         dataset)
     if num_devices == 1:
@@ -443,7 +450,7 @@ class _RowBuffer:
 # Pool-environment driver
 # ---------------------------------------------------------------------------
 
-def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
+def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
                         seed: int = 0,
                         env: Optional[env_mod.CalibratedPoolEnv] = None,
                         base_budget=1e-3,
@@ -453,7 +460,8 @@ def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
                         dispatch: str = "scan",
                         chunk_size: int = DEFAULT_CHUNK_SIZE,
                         sink: Optional[sink_mod.LogSink] = None):
-    """Play ``policy_name`` for ``rounds`` user queries.
+    """Play ``policy`` (name string or ``PolicySpec``) for ``rounds`` user
+    queries. ``policy_name=`` is the deprecated keyword spelling.
 
     With the default ``sink=None`` the logs land in a
     :class:`~repro.engine.sink.MemorySink` and an
@@ -462,6 +470,7 @@ def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
     elsewhere (e.g. :class:`~repro.engine.sink.NpyChunkSink` for T ≫ 10⁶
     disk-backed runs); the return value is then ``sink.finalize()``.
     """
+    spec = policy_mod.resolve_policy_arg(policy, policy_name)
     env = env or env_mod.CalibratedPoolEnv()
     if dispatch not in DISPATCH_MODES:
         raise ValueError(f"unknown dispatch {dispatch!r} "
@@ -474,13 +483,13 @@ def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
     kenv, kround = jax.random.split(key)
     params = env.make(kenv)
 
-    budgeted = policy_name in ("budget_linucb", "knapsack")
+    budgeted = spec.budgeted
     T = rounds
     chunk = max(1, min(chunk_size, T))
     return_result = sink is None
     out_sink = sink if sink is not None else sink_mod.MemorySink()
 
-    if policy_name == "voting":
+    if spec.name == "voting":
         round_fn, chunk_fn = _jitted_voting_drivers(env, dataset)
         if dispatch == "per_round":
             buf = _RowBuffer(out_sink, chunk)
@@ -497,8 +506,8 @@ def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
         return _result_from_logs(out) if return_result else out
 
     policy, round_fn, chunk_fn = _jitted_pool_drivers(
-        policy_name, env, alpha, lam, rounds * env.horizon, _pool_c_max(env),
-        seed if policy_name == "random" else 0, budget_jitter, dataset,
+        spec, env, alpha, lam, rounds * env.horizon, _pool_c_max(env),
+        seed if spec.select_uses_seed else 0, budget_jitter, dataset,
         linucb.resolved_backend())
     state = policy.init()
     table_j = _pool_budget_table(base_budget, env.num_datasets, budgeted)
@@ -524,8 +533,8 @@ def run_pool_experiment(policy_name: str, *, rounds: int = 1000,
 # Vmapped / sharded multi-seed sweep (pool env)
 # ---------------------------------------------------------------------------
 
-def run_pool_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
-                              rounds: int = 1000,
+def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
+                              policy_name=None, rounds: int = 1000,
                               env: Optional[env_mod.CalibratedPoolEnv] = None,
                               base_budget=1e-3,
                               budget_jitter: float = 0.05,
@@ -551,10 +560,11 @@ def run_pool_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
     Returns one :class:`ExperimentResult` per seed, matching what
     ``run_pool_experiment(seed=s)`` produces.
     """
+    spec = policy_mod.resolve_policy_arg(policy, policy_name)
     env = env or env_mod.CalibratedPoolEnv()
     seeds = [int(s) for s in seeds]
     S, T, H = len(seeds), rounds, env.horizon
-    budgeted = policy_name in ("budget_linucb", "knapsack")
+    budgeted = spec.budgeted
     chunk = max(1, min(chunk_size, T))
 
     ndev = shard_mod.resolve_device_count(shard, S)
@@ -570,7 +580,7 @@ def run_pool_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
     budgets = np.zeros((Sr, T), np.float32)
     datasets = np.zeros((Sr, T), np.int32)
 
-    if policy_name == "voting":
+    if spec.name == "voting":
         vchunk, mesh = _jitted_voting_sweep_chunk(env, dataset, ndev)
         if mesh is not None:
             params, krounds = shard_mod.place_seed_args(mesh,
@@ -592,15 +602,15 @@ def run_pool_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
         table = jnp.concatenate([table, jnp.repeat(table[-1:], pad, axis=0)])
     seeds_arr = jnp.asarray(run_seeds, jnp.int32)
 
-    vchunk, mesh = _jitted_pool_sweep_chunk(policy_name, env, alpha, lam,
+    vchunk, mesh = _jitted_pool_sweep_chunk(spec, env, alpha, lam,
                                             rounds * env.horizon,
                                             _pool_c_max(env), budget_jitter,
                                             dataset,
                                             linucb.resolved_backend(), ndev)
     state = _broadcast_state(
-        make_policy(policy_name, env.num_arms, env.dim, alpha=alpha, lam=lam,
-                    horizon_t=rounds * env.horizon, c_max=_pool_c_max(env),
-                    seed=run_seeds[0]).init(), Sr)
+        spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
+                   horizon_t=rounds * env.horizon, c_max=_pool_c_max(env),
+                   seed=run_seeds[0]).init(), Sr)
     if mesh is not None:
         seeds_arr, params, state, krounds, table = shard_mod.place_seed_args(
             mesh, [seeds_arr, params, state, krounds, table])
@@ -716,16 +726,15 @@ def _stream_play(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_multistream_chunk(policy_name: str,
+def _jitted_multistream_chunk(spec: PolicySpec,
                               env: env_mod.CalibratedPoolEnv, alpha: float,
                               lam: float, horizon_t: int, c_max: float,
                               seed_key: int, budget_jitter: float,
                               dataset: Optional[int], streams: int,
                               num_devices: int, backend: str):
     ds_arg = None if dataset is None else jnp.int32(dataset)
-    policy = make_policy(policy_name, env.num_arms, env.dim, alpha=alpha,
-                         lam=lam, horizon_t=horizon_t, c_max=c_max,
-                         seed=seed_key)
+    policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
+                        horizon_t=horizon_t, c_max=c_max, seed=seed_key)
     play = functools.partial(_stream_play, policy, env, budget_jitter,
                              ds_arg)
     if num_devices > 1:
@@ -753,7 +762,8 @@ def _jitted_multistream_chunk(policy_name: str,
     return policy, jax.jit(chunk_fn)
 
 
-def run_pool_multistream(policy_name: str, *, rounds: int = 1000,
+def run_pool_multistream(policy=None, *, policy_name=None,
+                         rounds: int = 1000,
                          streams: int = 8, seed: int = 0,
                          env: Optional[env_mod.CalibratedPoolEnv] = None,
                          base_budget=1e-3, budget_jitter: float = 0.05,
@@ -778,8 +788,9 @@ def run_pool_multistream(policy_name: str, *, rounds: int = 1000,
     round-major (round t's B streams are consecutive), or
     ``sink.finalize()`` when a custom sink is passed ((T, B, …) arrays).
     """
+    spec = policy_mod.resolve_policy_arg(policy, policy_name)
     env = env or env_mod.CalibratedPoolEnv()
-    if policy_name == "voting":
+    if spec.name == "voting":
         raise ValueError("voting is stateless — multi-stream batching does "
                          "not apply; use run_pool_experiment")
     if streams < 1:
@@ -789,7 +800,7 @@ def run_pool_multistream(policy_name: str, *, rounds: int = 1000,
     key = jax.random.PRNGKey(seed)
     kenv, kround = jax.random.split(key)
     params = env.make(kenv)
-    budgeted = policy_name in ("budget_linucb", "knapsack")
+    budgeted = spec.budgeted
     T = rounds
     chunk = max(1, min(chunk_size, T))
 
@@ -802,11 +813,11 @@ def run_pool_multistream(policy_name: str, *, rounds: int = 1000,
             f"shard={shard!r} maps {streams} streams onto {ndev} devices "
             f"but streams must be a multiple of the device count; pass "
             f"shard='auto' or a divisible stream width")
-    policy, chunk_fn = _jitted_multistream_chunk(
-        policy_name, env, alpha, lam, rounds * streams * env.horizon,
-        _pool_c_max(env), seed if policy_name == "random" else 0,
+    policy_ad, chunk_fn = _jitted_multistream_chunk(
+        spec, env, alpha, lam, rounds * streams * env.horizon,
+        _pool_c_max(env), seed if spec.select_uses_seed else 0,
         budget_jitter, dataset, streams, ndev, linucb.resolved_backend())
-    state = policy.init()
+    state = policy_ad.init()
     table = _pool_budget_table(base_budget, env.num_datasets, budgeted)
 
     return_result = sink is None
@@ -892,10 +903,27 @@ def _synthetic_chunk(env: env_mod.SyntheticLinearEnv, cfg, budgeted: bool,
     return jax.lax.scan(body, state, ts)
 
 
-def _synthetic_policy_init(policy_name: str, num_arms: int, dim: int,
+def _resolve_synthetic_spec(policy, policy_name) -> PolicySpec:
+    """The synthetic driver bypasses the adapter API, so a spec's
+    combinator transforms cannot be honored — fail loudly instead of
+    silently dropping them (spec alpha/lam args ARE honored by the
+    callers; other builder args don't apply to the direct math)."""
+    spec = policy_mod.resolve_policy_arg(policy, policy_name)
+    if spec.transforms:
+        raise ValueError(
+            "the synthetic driver runs the greedy/budget math directly "
+            "(no policy adapter) — combinator transforms are not "
+            "supported here; use the pool drivers")
+    return spec
+
+
+def _synthetic_policy_init(spec: PolicySpec, num_arms: int, dim: int,
                            alpha: float, lam: float, rounds: int,
                            horizon: int):
-    budgeted = policy_name == "budget_linucb"
+    """The synthetic driver bypasses the adapter API (it calls the
+    linucb/budget math directly — Theorem 1/2 validation); budget_linucb
+    runs the §5.1 variant, every other spec runs plain greedy LinUCB."""
+    budgeted = spec.name == "budget_linucb"
     if budgeted:
         cfg = budget_mod.BudgetConfig(num_arms, dim, alpha, lam,
                                       horizon_t=rounds * horizon, c_max=2.0)
@@ -905,12 +933,12 @@ def _synthetic_policy_init(policy_name: str, num_arms: int, dim: int,
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_synthetic_drivers(policy_name: str,
+def _jitted_synthetic_drivers(spec: PolicySpec,
                               env: env_mod.SyntheticLinearEnv, alpha: float,
                               lam: float, rounds: int, backend: str,
                               num_devices: int = 1):
     cfg, budgeted, _ = _synthetic_policy_init(
-        policy_name, env.num_arms, env.dim, alpha, lam, rounds, env.horizon)
+        spec, env.num_arms, env.dim, alpha, lam, rounds, env.horizon)
     round_fn = jax.jit(functools.partial(_synthetic_round, env, cfg,
                                          budgeted))
     chunk_fn = jax.jit(functools.partial(_synthetic_chunk, env, cfg,
@@ -926,7 +954,8 @@ def _jitted_synthetic_drivers(policy_name: str,
     return round_fn, chunk_fn, jax.jit(fn), mesh
 
 
-def run_synthetic_experiment(policy_name: str, *, rounds: int = 2000,
+def run_synthetic_experiment(policy=None, *, policy_name=None,
+                             rounds: int = 2000,
                              num_arms: int = 6, dim: int = 16,
                              horizon: int = 4, seed: int = 0,
                              noise_sd: float = 0.1,
@@ -937,7 +966,15 @@ def run_synthetic_experiment(policy_name: str, *, rounds: int = 2000,
                              sink: Optional[sink_mod.LogSink] = None):
     """LinUCB vs the exactly-linear env; returns cumulative regret curves
     (or ``sink.finalize()`` when a custom sink consumes the
-    ``per_round_regret`` chunks)."""
+    ``per_round_regret`` chunks).
+
+    The synthetic driver runs the greedy/budget math directly (no
+    adapter): spec name ``budget_linucb`` selects the §5.1 variant,
+    anything else runs greedy LinUCB; spec ``alpha``/``lam`` args
+    override the kwargs, and combinator transforms are rejected."""
+    spec = _resolve_synthetic_spec(policy, policy_name)
+    alpha = float(spec.kwargs.get("alpha", alpha))
+    lam = float(spec.kwargs.get("lam", lam))
     if dispatch not in DISPATCH_MODES:
         raise ValueError(f"unknown dispatch {dispatch!r} "
                          f"(choose from {DISPATCH_MODES})")
@@ -950,9 +987,9 @@ def run_synthetic_experiment(policy_name: str, *, rounds: int = 2000,
     kenv, kround = jax.random.split(key)
     params = env.make(kenv)
     _, _, state = _synthetic_policy_init(
-        policy_name, num_arms, dim, alpha, lam, rounds, horizon)
+        spec, num_arms, dim, alpha, lam, rounds, horizon)
     round_fn, chunk_fn, _, _ = _jitted_synthetic_drivers(
-        policy_name, env, alpha, lam, rounds, linucb.resolved_backend())
+        spec, env, alpha, lam, rounds, linucb.resolved_backend())
 
     return_result = sink is None
     out_sink = sink if sink is not None else sink_mod.MemorySink()
@@ -977,7 +1014,8 @@ def run_synthetic_experiment(policy_name: str, *, rounds: int = 2000,
             "cumulative_regret": np.cumsum(per_round)}
 
 
-def run_synthetic_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
+def run_synthetic_experiment_sweep(policy=None, seeds: Sequence[int] = None,
+                                   *, policy_name=None,
                                    rounds: int = 2000, num_arms: int = 6,
                                    dim: int = 16, horizon: int = 4,
                                    noise_sd: float = 0.1,
@@ -987,7 +1025,11 @@ def run_synthetic_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
                                    shard: shard_mod.ShardArg = "auto"
                                    ) -> Dict[str, np.ndarray]:
     """Vmapped (optionally device-sharded) multi-seed synthetic sweep;
-    regret curves shaped (S, T)."""
+    regret curves shaped (S, T). Spec handling as in
+    :func:`run_synthetic_experiment` (no adapter; transforms rejected)."""
+    spec = _resolve_synthetic_spec(policy, policy_name)
+    alpha = float(spec.kwargs.get("alpha", alpha))
+    lam = float(spec.kwargs.get("lam", lam))
     env = env_mod.SyntheticLinearEnv(num_arms=num_arms, dim=dim,
                                      noise_sd=noise_sd, horizon=horizon)
     seeds = [int(s) for s in seeds]
@@ -999,12 +1041,12 @@ def run_synthetic_experiment_sweep(policy_name: str, seeds: Sequence[int], *,
 
     params, krounds = _stack_seed_setup(env, run_seeds)
     _, _, state0 = _synthetic_policy_init(
-        policy_name, num_arms, dim, alpha, lam, rounds, horizon)
+        spec, num_arms, dim, alpha, lam, rounds, horizon)
     state = _broadcast_state(state0, Sr)
 
     chunk = max(1, min(chunk_size, rounds))
     _, _, vchunk, mesh = _jitted_synthetic_drivers(
-        policy_name, env, alpha, lam, rounds, linucb.resolved_backend(),
+        spec, env, alpha, lam, rounds, linucb.resolved_backend(),
         ndev)
     if mesh is not None:
         params, state, krounds = shard_mod.place_seed_args(

@@ -115,13 +115,26 @@ class NpyChunkSink(LogSink):
 
     @staticmethod
     def load(directory: str) -> Dict[str, np.ndarray]:
-        """Reassemble ``{field: (T, …)}`` from a finalized shard directory."""
-        with open(os.path.join(directory, MANIFEST_NAME)) as f:
-            manifest = json.load(f)
-        parts: Dict[str, List[np.ndarray]] = {k: [] for k in
-                                              manifest["fields"]}
-        for name in manifest["shards"]:
-            with np.load(os.path.join(directory, name)) as shard:
-                for k in manifest["fields"]:
-                    parts[k].append(shard[k])
+        """Reassemble ``{field: (T, …)}`` from a finalized shard directory.
+
+        Materializes the FULL arrays — tests and small offline analysis
+        only. Streaming consumers (the benchmark aggregations) should
+        iterate :func:`iter_shards` or use
+        :func:`repro.engine.aggregate.summarize_shards` instead."""
+        parts: Dict[str, List[np.ndarray]] = {}
+        for shard in iter_shards(directory):
+            for k, v in shard.items():
+                parts.setdefault(k, []).append(v)
         return {k: np.concatenate(v) for k, v in parts.items()}
+
+
+def iter_shards(directory: str):
+    """Yield one ``{field: np.ndarray}`` dict per shard, in round order.
+
+    O(shard) memory — the streaming access path to a finalized
+    :class:`NpyChunkSink` directory."""
+    with open(os.path.join(directory, MANIFEST_NAME)) as f:
+        manifest = json.load(f)
+    for name in manifest["shards"]:
+        with np.load(os.path.join(directory, name)) as shard:
+            yield {k: shard[k] for k in manifest["fields"]}

@@ -29,12 +29,20 @@ kernel path on CPU).
 
 Policies
 --------
-``policy=`` accepts any name from ``core.router.POLICIES``: greedy LinUCB
+``policy=`` accepts any registered policy — a name string from
+``core.policy.available_policies()`` or a full
+:class:`~repro.core.policy.PolicySpec` (combinators included, e.g.
+``PolicySpec.from_name("positional_linucb", gamma=0.9)``): greedy LinUCB
 (default), budget-aware LinUCB or knapsack planning (both consume the
 per-request ``remaining`` budgets passed to :meth:`BanditScheduler.route`),
-or the paper's baselines. Non-greedy policies route through
+the positionally-aware variant (consumes the per-request ``steps``), or
+the paper's baselines. Non-plain-greedy policies route through
 ``router.policy_route_batch`` — plan/select vmapped over the request
 batch against the shared read-only state.
+
+Compiled routing/update programs are cached at module level keyed on
+``(spec, scale, backend)`` — two schedulers with the same spec share
+programs; two differently-configured same-name specs can never collide.
 
 This is the deployment face of the framework: ``examples/serve_multi_llm.py``
 drives it end-to-end with real (reduced) JAX models as arms.
@@ -42,15 +50,17 @@ drives it end-to-end with real (reduced) JAX models as arms.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 import warnings
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import linucb, router
+from repro.core import policy as policy_mod
 from repro.engine import driver as engine_driver
 from repro.serving.engine import Engine
 
@@ -81,12 +91,61 @@ class Response:
     latency_s: float
 
 
+@functools.lru_cache(maxsize=128)
+def _scheduler_programs(spec: policy_mod.PolicySpec, num_arms: int,
+                        dim: int, alpha: float, lam: float, horizon_t: int,
+                        c_max: float):
+    """Jitted route/update/update_batch programs for one policy spec.
+
+    Cached at module level on the FULL hashable spec (+ the build scale),
+    with the backend a static jit argument — so compiled programs are
+    keyed on ``(spec, backend)``, shared across scheduler instances, and
+    two differently-configured same-name specs compile distinct programs
+    (the legacy name-string keying collided them).
+    """
+    policy = policy_mod.build_policy(spec, num_arms, dim, alpha=alpha,
+                                     lam=lam, horizon_t=horizon_t,
+                                     c_max=c_max)
+    plain_greedy = spec.name == "greedy_linucb" and not spec.transforms
+    alpha_eff = float(spec.kwargs.get("alpha", alpha))
+
+    def route_fn(state, xs, steps, remaining, *, backend: str):
+        with linucb.backend_scope(backend):
+            if plain_greedy:
+                # the scoring hot loop: one batched (B,d)@(d,K·d) GEMM /
+                # fused Pallas kernel straight off the block state
+                scores = linucb.ucb_scores(state, xs, alpha_eff)
+                return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+            return router.policy_route_batch(policy, state, xs,
+                                             steps, remaining)
+
+    def update_fn(state, arm, x, reward, cost, *, backend: str):
+        with linucb.backend_scope(backend):
+            return policy.update(state, jnp.int32(0), arm, x, reward,
+                                 cost, jnp.asarray(True))
+
+    def update_batch_fn(state, arms, xs, rewards, costs, *, backend: str):
+        # the engine's multi-stream posterior fold — linucb.batch_update
+        # (selected-block Sherman–Morrison kernel under a pallas backend)
+        # for LinUCB-family states, generic scan fold otherwise
+        with linucb.backend_scope(backend):
+            return engine_driver.fold_observations(
+                policy, state, arms, xs, rewards, costs,
+                jnp.ones(arms.shape, jnp.float32))
+
+    return (policy,
+            jax.jit(route_fn, static_argnames=("backend",)),
+            jax.jit(update_fn, static_argnames=("backend",)),
+            jax.jit(update_batch_fn, static_argnames=("backend",)))
+
+
 class BanditScheduler:
     """Routes request batches across the arm pool with a bandit policy."""
 
     def __init__(self, arms: Sequence[ArmSpec], dim: int = 384,
                  alpha: float = 0.675, lam: float = 0.45,
-                 max_new_tokens: int = 16, policy: str = "greedy_linucb",
+                 max_new_tokens: int = 16,
+                 policy: Union[str, policy_mod.PolicySpec] = "greedy_linucb",
                  backend: Optional[str] = None, horizon_t: int = 100_000,
                  use_kernels: Optional[bool] = None):
         """``backend``: pin this scheduler's routing to one linucb backend
@@ -111,44 +170,13 @@ class BanditScheduler:
                                        alpha=alpha, lam=lam)
         self.max_new_tokens = max_new_tokens
         self._backend_override = backend
-        self._policy_name = policy
+        self.spec = policy_mod.as_spec(policy)
         c_max = max((a.cost_per_token for a in self.arms), default=1.0) \
             * max_new_tokens
-        self._policy = router.make_policy(policy, len(self.arms), dim,
-                                          alpha=alpha, lam=lam,
-                                          horizon_t=horizon_t, c_max=c_max)
+        (self._policy, self._route, self._update,
+         self._update_batch) = _scheduler_programs(
+            self.spec, len(self.arms), dim, alpha, lam, horizon_t, c_max)
         self.state = self._policy.init()
-        self._route = jax.jit(self._route_fn, static_argnames=("backend",))
-        self._update = jax.jit(self._update_fn, static_argnames=("backend",))
-        self._update_batch = jax.jit(self._update_batch_fn,
-                                     static_argnames=("backend",))
-
-    # -- jitted hot paths (one compiled program per backend name) ---------
-
-    def _route_fn(self, state, xs, steps, remaining, *, backend: str):
-        with linucb.backend_scope(backend):
-            if self._policy_name == "greedy_linucb":
-                # the scoring hot loop: one batched (B,d)@(d,K·d) GEMM /
-                # fused Pallas kernel straight off the block state
-                scores = linucb.ucb_scores(state, xs, self.cfg.alpha)
-                return jnp.argmax(scores, axis=-1).astype(jnp.int32)
-            return router.policy_route_batch(self._policy, state, xs,
-                                             steps, remaining)
-
-    def _update_fn(self, state, arm, x, reward, cost, *, backend: str):
-        with linucb.backend_scope(backend):
-            return self._policy.update(state, jnp.int32(0), arm, x, reward,
-                                       cost, jnp.asarray(True))
-
-    def _update_batch_fn(self, state, arms, xs, rewards, costs, *,
-                         backend: str):
-        # the engine's multi-stream posterior fold — linucb.batch_update
-        # (selected-block Sherman–Morrison kernel under a pallas backend)
-        # for LinUCB-family states, generic scan fold otherwise
-        with linucb.backend_scope(backend):
-            return engine_driver.fold_observations(
-                self._policy, state, arms, xs, rewards, costs,
-                jnp.ones(arms.shape, jnp.float32))
 
     def _backend(self) -> str:
         return self._backend_override or linucb.resolved_backend()

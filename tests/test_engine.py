@@ -16,7 +16,8 @@ import pytest
 
 from repro.core import env as env_mod
 from repro.core import router
-from repro.engine import LogSink, MemorySink, NpyChunkSink
+from repro.engine import (LogSink, MemorySink, NpyChunkSink, ReducerSink,
+                          StreamingSummary, iter_shards, summarize_shards)
 from repro.engine import driver as engine_driver
 from repro.engine import shard as shard_mod
 
@@ -137,6 +138,66 @@ class TestSinks:
         out = router.run_pool_experiment("greedy_linucb", rounds=20, seed=0,
                                          env=ENV32, chunk_size=8, sink=sink)
         assert out == [(set(FIELDS), 8), (set(FIELDS), 8), (set(FIELDS), 4)]
+
+
+class TestStreamingAggregate:
+    """The streaming reducer must agree with the full-array
+    ExperimentResult statistics (up to float accumulation order) while
+    holding only one chunk at a time."""
+
+    def test_reducer_sink_matches_experiment_result(self):
+        res = router.run_pool_experiment("budget_linucb", rounds=50, seed=3,
+                                         env=ENV32, chunk_size=16)
+        summ = router.run_pool_experiment("budget_linucb", rounds=50, seed=3,
+                                          env=ENV32, chunk_size=16,
+                                          sink=ReducerSink())
+        assert isinstance(summ, StreamingSummary)
+        assert summ.rounds == 50
+        want = res.summary()
+        got = summ.summary()
+        assert set(got) == set(want)
+        for k, v in want.items():
+            assert got[k] == pytest.approx(v, rel=1e-5, abs=1e-7), k
+        np.testing.assert_allclose(summ.accuracy_by_position(),
+                                   res.accuracy_by_position(), atol=1e-12)
+        assert summ.avg_cost == pytest.approx(
+            float(res.cost_per_round.mean()), rel=1e-5)
+
+    def test_summarize_shards_matches_memory(self, tmp_path):
+        res = router.run_pool_experiment("greedy_linucb", rounds=40, seed=1,
+                                         env=ENV32, chunk_size=16)
+        router.run_pool_experiment("greedy_linucb", rounds=40, seed=1,
+                                   env=ENV32, chunk_size=16,
+                                   sink=NpyChunkSink(str(tmp_path)))
+        summ = summarize_shards(str(tmp_path))
+        assert summ.rounds == 40
+        for k, v in res.summary().items():
+            assert summ.summary()[k] == pytest.approx(v, rel=1e-5,
+                                                      abs=1e-7), k
+
+    def test_iter_shards_streams_in_order(self, tmp_path):
+        router.run_pool_experiment("greedy_linucb", rounds=40, seed=0,
+                                   env=ENV32, chunk_size=16,
+                                   sink=NpyChunkSink(str(tmp_path)))
+        sizes = [s["arms"].shape[0] for s in iter_shards(str(tmp_path))]
+        assert sizes == [16, 16, 8]
+        loaded = NpyChunkSink.load(str(tmp_path))
+        assert loaded["arms"].shape == (40, ENV32.horizon)
+
+    def test_multistream_chunks_fold(self, tmp_path):
+        """(n, B, H) multi-stream shards flatten into the round axis,
+        matching the flattened ExperimentResult."""
+        res = router.run_pool_multistream("greedy_linucb", rounds=10,
+                                          streams=4, seed=2, env=ENV32,
+                                          chunk_size=4)
+        router.run_pool_multistream("greedy_linucb", rounds=10, streams=4,
+                                    seed=2, env=ENV32, chunk_size=4,
+                                    sink=NpyChunkSink(str(tmp_path)))
+        summ = summarize_shards(str(tmp_path))
+        assert summ.rounds == 40
+        assert summ.accuracy == pytest.approx(res.accuracy)
+        np.testing.assert_allclose(summ.accuracy_by_position(),
+                                   res.accuracy_by_position(), atol=1e-12)
 
 
 class TestShardedSweep:
@@ -306,7 +367,7 @@ class TestFoldObservations:
     def test_matches_sequential_updates(self):
         import jax.numpy as jnp
         from repro.core import linucb
-        policy = router.make_policy("greedy_linucb", 4, 16)
+        policy = router.PolicySpec.from_name("greedy_linucb").build(4, 16)
         state = policy.init()
         key = jax.random.PRNGKey(0)
         arms = jnp.array([0, 2, 0, 3], jnp.int32)
