@@ -1,5 +1,12 @@
-"""Shared benchmark plumbing: run policies on the calibrated pool env,
-cache results as JSON, time everything."""
+"""Shared benchmark plumbing: run (environment, policy) spec pairs,
+cache results as JSON, time everything.
+
+The tables iterate over explicit ``(EnvSpec, PolicySpec)`` pairs
+(:func:`spec_pairs` / :data:`TABLE_CONFIGS`) instead of hardcoded name
+strings — adding a policy or pointing a table at another registered
+environment is a one-line config change. Name strings still work
+everywhere (they normalize through the same specs).
+"""
 from __future__ import annotations
 
 import json
@@ -12,6 +19,7 @@ import numpy as np
 from repro.core import env as env_mod
 from repro.core import policy as policy_mod
 from repro.core import router
+from repro.core.scenario import EnvSpec
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
 ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "800"))
@@ -22,6 +30,39 @@ SEEDS = int(os.environ.get("REPRO_BENCH_SEEDS", "3"))
 OUR_POLICIES = ("greedy_linucb", "budget_linucb", "knapsack")
 BASELINES = ("metallm", "mixllm", "voting", "random")
 FIXED = tuple(f"fixed:{k}" for k in range(len(env_mod.ARM_NAMES)))
+
+POOL_SPEC = EnvSpec.from_name("calibrated_pool")
+PIPELINE_SPEC = EnvSpec.from_name("pipeline")
+
+
+def spec_pairs(*policies, env: EnvSpec = POOL_SPEC):
+    """Normalize policy names/specs into ``(EnvSpec, PolicySpec)`` pairs."""
+    return tuple((env, policy_mod.as_spec(p)) for p in policies)
+
+
+# What Table 1/2 iterates: every candidate LLM, every baseline router,
+# and the paper's three policies, all on the Tables-1/2-calibrated pool.
+TABLE_CONFIGS = spec_pairs(*(FIXED + BASELINES + OUR_POLICIES))
+
+
+def policy_label(policy) -> str:
+    """Human-readable row label (``fixed:k`` → the arm's LLM name)."""
+    spec = policy_mod.as_spec(policy)
+    if spec.name == "fixed":
+        return env_mod.ARM_NAMES[int(spec.kwargs["arm"])]
+    return spec.label
+
+
+def dataset_streams(env: EnvSpec = POOL_SPEC):
+    """``(index, label)`` pairs for the env's dataset streams — the pool
+    env's paper benchmark names, generic ``stream<i>`` labels otherwise
+    (the per-dataset helpers iterate THIS, not the pool's DATASETS, so
+    pointing a table at a one-stream env runs one stream, not four
+    mislabeled copies)."""
+    if env.name == "calibrated_pool":
+        return list(enumerate(env_mod.DATASETS))
+    n = env.make_env().num_datasets
+    return [(i, f"stream{i}") for i in range(n)]
 
 
 def ensure_dir() -> str:
@@ -46,44 +87,53 @@ def median_secs(fn, reps: int = 3) -> float:
 _GREEDY_CACHE: Dict[tuple, object] = {}
 
 
-def greedy_reference(dataset: int, seed: int = 0):
-    """Cached greedy-LinUCB run per (dataset, seed) — both a Table-1 row
-    and the budget reference (paper: per-query budget = greedy's avg cost
-    ±5%). Keyed on the seed too, so non-zero-seed budgeted runs never
-    inherit another seed's budget."""
-    key = (dataset, seed)
+def greedy_reference(dataset: int, seed: int = 0, env: EnvSpec = POOL_SPEC):
+    """Cached greedy-LinUCB run per (env, dataset, seed) — both a Table-1
+    row and the budget reference (paper: per-query budget = greedy's avg
+    cost ±5%). Keyed on the seed too, so non-zero-seed budgeted runs
+    never inherit another seed's budget."""
+    key = (env, dataset, seed)
     if key not in _GREEDY_CACHE:
         _GREEDY_CACHE[key] = router.run_pool_experiment(
-            "greedy_linucb", rounds=ROUNDS, seed=seed, dataset=dataset)
+            "greedy_linucb", rounds=ROUNDS, seed=seed, dataset=dataset,
+            env=env)
     return _GREEDY_CACHE[key]
 
 
-def dataset_budget(dataset: int, seed: int = 0) -> float:
-    return float(greedy_reference(dataset, seed).cost_per_round.mean())
+def dataset_budget(dataset: int, seed: int = 0,
+                   env: EnvSpec = POOL_SPEC) -> float:
+    return float(greedy_reference(dataset, seed, env)
+                 .cost_per_round.mean())
 
 
-def run_policy(name: str, *, rounds: int = None, dataset: Optional[int] = None,
-               base_budget=None, seed: int = 0, streamed: bool = False):
-    """One run; ``streamed=True`` folds chunk logs through the engine's
-    streaming reducer (``repro.engine.ReducerSink``) — host memory stays
-    O(chunk) and the result is a :class:`repro.engine.StreamingSummary`
-    instead of an :class:`ExperimentResult` (budgets then come from the
-    streamed greedy reference too)."""
+def run_policy(name, *, rounds: int = None, dataset: Optional[int] = None,
+               base_budget=None, seed: int = 0, streamed: bool = False,
+               env: EnvSpec = POOL_SPEC, reducer=None):
+    """One run of a policy (name or spec) on ``env`` (an EnvSpec);
+    ``streamed=True`` folds chunk logs through the engine's streaming
+    reducer (``repro.engine.ReducerSink``) — host memory stays O(chunk)
+    and the result is the reducer (a
+    :class:`repro.engine.StreamingSummary`, or ``reducer`` when given —
+    e.g. a :class:`repro.engine.StreamingHistogram`) instead of an
+    :class:`ExperimentResult` (budgets then come from the streamed
+    greedy reference too)."""
     from repro.engine import ReducerSink
     if base_budget is None and policy_mod.as_spec(name).budgeted:
-        budget_of = ((lambda i: greedy_reference_streamed(i, seed).avg_cost)
-                     if streamed else (lambda i: dataset_budget(i, seed)))
-        if dataset is None:
+        budget_of = ((lambda i: greedy_reference_streamed(i, seed,
+                                                          env).avg_cost)
+                     if streamed else
+                     (lambda i: dataset_budget(i, seed, env)))
+        num_ds = env.make_env().num_datasets
+        if dataset is None and num_ds > 1:
             base_budget = np.asarray(
-                [budget_of(i) for i in range(len(env_mod.DATASETS))],
-                np.float32)
+                [budget_of(i) for i in range(num_ds)], np.float32)
         else:
             base_budget = budget_of(dataset)
     t0 = time.perf_counter()
     res = router.run_pool_experiment(
-        name, rounds=rounds or ROUNDS, seed=seed, dataset=dataset,
+        name, rounds=rounds or ROUNDS, seed=seed, dataset=dataset, env=env,
         base_budget=base_budget if base_budget is not None else 1e-3,
-        sink=ReducerSink() if streamed else None)
+        sink=ReducerSink(reducer) if streamed else None)
     dt = time.perf_counter() - t0
     return res, dt
 
@@ -93,17 +143,18 @@ def run_policy(name: str, *, rounds: int = None, dataset: Optional[int] = None,
 _GREEDY_STREAM_CACHE: Dict[tuple, object] = {}
 
 
-def greedy_reference_streamed(dataset: int, seed: int = 0):
+def greedy_reference_streamed(dataset: int, seed: int = 0,
+                              env: EnvSpec = POOL_SPEC):
     """Streamed greedy-LinUCB reference: an
     :class:`repro.engine.StreamingSummary` folded chunk-by-chunk from the
     driver — doubles as a Table row and the budget reference
     (``avg_cost`` == the paper's greedy avg per-query cost protocol)."""
     from repro.engine import ReducerSink
-    key = (dataset, seed)
+    key = (env, dataset, seed)
     if key not in _GREEDY_STREAM_CACHE:
         _GREEDY_STREAM_CACHE[key] = router.run_pool_experiment(
             "greedy_linucb", rounds=ROUNDS, seed=seed, dataset=dataset,
-            sink=ReducerSink())
+            env=env, sink=ReducerSink())
     return _GREEDY_STREAM_CACHE[key]
 
 
@@ -116,69 +167,83 @@ def run_policy_streamed(name, **kwargs):
 _GREEDY_SWEEP_CACHE: Dict[tuple, list] = {}
 
 
-def greedy_reference_sweep(dataset: int, seeds=None):
+def greedy_reference_sweep(dataset: int, seeds=None,
+                           env: EnvSpec = POOL_SPEC):
     """Multi-seed greedy-LinUCB reference runs for one dataset (cached).
 
     One vmapped program for all seeds; doubles as the Table-1 row and the
     per-seed budget reference (paper: budget = greedy's avg cost ±5%)."""
     seeds = tuple(range(SEEDS)) if seeds is None else tuple(seeds)
-    key = (dataset, seeds)
+    key = (env, dataset, seeds)
     if key not in _GREEDY_SWEEP_CACHE:
         _GREEDY_SWEEP_CACHE[key] = router.run_pool_experiment_sweep(
-            "greedy_linucb", list(seeds), rounds=ROUNDS, dataset=dataset)
+            "greedy_linucb", list(seeds), rounds=ROUNDS, dataset=dataset,
+            env=env)
     return _GREEDY_SWEEP_CACHE[key]
 
 
-def dataset_budgets_sweep(dataset: int, seeds=None) -> np.ndarray:
+def dataset_budgets_sweep(dataset: int, seeds=None,
+                          env: EnvSpec = POOL_SPEC) -> np.ndarray:
     """(S,) per-seed budgets: each seed's greedy reference mean cost."""
     return np.asarray([float(res.cost_per_round.mean())
-                       for res in greedy_reference_sweep(dataset, seeds)],
+                       for res in greedy_reference_sweep(dataset, seeds,
+                                                         env)],
                       np.float32)
 
 
-def run_policy_sweep(name: str, *, seeds=None, rounds: int = None,
+def run_policy_sweep(name, *, seeds=None, rounds: int = None,
                      dataset: Optional[int] = None, base_budget=None,
-                     alpha: float = 0.675):
+                     alpha: float = 0.675, env: EnvSpec = POOL_SPEC):
     """Vmapped multi-seed replications; returns (results_per_seed, secs).
 
     Budgeted policies default to the paper protocol budget — each seed's
     own greedy-LinUCB average cost per query on that dataset."""
     seeds = list(range(SEEDS)) if seeds is None else list(seeds)
     if base_budget is None and policy_mod.as_spec(name).budgeted:
-        if dataset is None:
+        num_ds = env.make_env().num_datasets
+        if dataset is None and num_ds > 1:
             base_budget = np.stack(
-                [dataset_budgets_sweep(i, seeds)
-                 for i in range(len(env_mod.DATASETS))], axis=1)  # (S, D)
+                [dataset_budgets_sweep(i, seeds, env)
+                 for i in range(num_ds)], axis=1)  # (S, D)
         else:
             # (S, 1): per-seed budgets (1-D means per-dataset to the sweep)
-            base_budget = dataset_budgets_sweep(dataset, seeds)[:, None]
+            base_budget = dataset_budgets_sweep(dataset, seeds,
+                                                env)[:, None]
     t0 = time.perf_counter()
     res = router.run_pool_experiment_sweep(
-        name, seeds, rounds=rounds or ROUNDS, dataset=dataset,
+        name, seeds, rounds=rounds or ROUNDS, dataset=dataset, env=env,
         base_budget=base_budget if base_budget is not None else 1e-3,
         alpha=alpha)
     return res, time.perf_counter() - t0
 
 
-def run_policy_sweep_per_dataset(name: str, *, seeds=None):
+def _is_greedy(name) -> bool:
+    spec = policy_mod.as_spec(name)
+    return spec.name == "greedy_linucb" and not spec.transforms \
+        and not spec.args
+
+
+def run_policy_sweep_per_dataset(name, *, seeds=None,
+                                 env: EnvSpec = POOL_SPEC):
     """Paper protocol (one stream per benchmark dataset) × SEEDS seeds."""
     out = {}
     total = 0.0
     seeds = list(range(SEEDS)) if seeds is None else list(seeds)
-    for i, ds in enumerate(env_mod.DATASETS):
-        if name == "greedy_linucb":
+    for i, ds in dataset_streams(env):
+        if _is_greedy(name):
             t0 = time.perf_counter()
-            res = greedy_reference_sweep(i, seeds)
+            res = greedy_reference_sweep(i, seeds, env)
             dt = time.perf_counter() - t0   # ~0 on later (cached) calls
         else:
-            res, dt = run_policy_sweep(name, seeds=seeds, dataset=i)
+            res, dt = run_policy_sweep(name, seeds=seeds, dataset=i,
+                                       env=env)
         out[ds] = res
         total += dt
     return out, total
 
 
-def run_policy_per_dataset(name: str, *, seed: int = 0,
-                           streamed: bool = False):
+def run_policy_per_dataset(name, *, seed: int = 0, streamed: bool = False,
+                           env: EnvSpec = POOL_SPEC):
     """Paper protocol: each benchmark dataset is its own stream (per-arm
     cost distributions are dataset-specific, matching Assumption 5).
 
@@ -188,16 +253,17 @@ def run_policy_per_dataset(name: str, *, seed: int = 0,
     (same accessor names for the Table-level statistics)."""
     out = {}
     total = 0.0
-    for i, ds in enumerate(env_mod.DATASETS):
+    for i, ds in dataset_streams(env):
         if streamed:
-            if name == "greedy_linucb":
-                res, dt = greedy_reference_streamed(i, seed), 0.0
+            if _is_greedy(name):
+                res, dt = greedy_reference_streamed(i, seed, env), 0.0
             else:
-                res, dt = run_policy_streamed(name, dataset=i, seed=seed)
-        elif name == "greedy_linucb":
-            res, dt = greedy_reference(i, seed), 0.0
+                res, dt = run_policy_streamed(name, dataset=i, seed=seed,
+                                              env=env)
+        elif _is_greedy(name):
+            res, dt = greedy_reference(i, seed, env), 0.0
         else:
-            res, dt = run_policy(name, dataset=i, seed=seed)
+            res, dt = run_policy(name, dataset=i, seed=seed, env=env)
         out[ds] = res
         total += dt
     return out, total

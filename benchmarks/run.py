@@ -1,5 +1,11 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
+Table rows are spec-driven: each table module iterates a list of
+``(EnvSpec, PolicySpec)`` pairs (``common.TABLE_CONFIGS`` /
+``common.spec_pairs``) rather than hardcoded name strings, so adding a
+policy or re-pointing a table at another registered environment is a
+config edit, not a code change.
+
 Prints a ``name,us_per_call,derived`` CSV summary line per benchmark
 (us_per_call = wall time per simulated routing round or kernel call;
 derived = the headline metric of that table), plus each module's own

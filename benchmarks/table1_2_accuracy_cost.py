@@ -19,17 +19,17 @@ from repro.core import env as env_mod
 
 def run() -> Dict:
     """Every (policy, dataset) entry is the mean over ``common.SEEDS``
-    replications, run as one vmapped sweep per (policy, dataset)."""
+    replications, run as one vmapped sweep per (policy, dataset). The
+    row list is the spec-driven ``common.TABLE_CONFIGS`` —
+    ``(EnvSpec, PolicySpec)`` pairs, not hardcoded names."""
     table_acc: Dict[str, Dict[str, float]] = {}
     table_cost: Dict[str, Dict[str, float]] = {}
     table_acc_sd: Dict[str, Dict[str, float]] = {}
     timings: Dict[str, float] = {}
 
-    names = (common.FIXED + common.BASELINES + common.OUR_POLICIES)
-    for name in names:
-        per_ds, dt = common.run_policy_sweep_per_dataset(name)
-        label = (env_mod.ARM_NAMES[int(name.split(":")[1])]
-                 if name.startswith("fixed:") else name)
+    for env_spec, spec in common.TABLE_CONFIGS:
+        per_ds, dt = common.run_policy_sweep_per_dataset(spec, env=env_spec)
+        label = common.policy_label(spec)
         accs = {ds: [res.accuracy for res in sweep]
                 for ds, sweep in per_ds.items()}
         costs = {ds: [float(res.cost_per_round.mean()) for res in sweep]

@@ -21,13 +21,17 @@ from typing import Dict
 from benchmarks import common
 
 POLICIES = common.OUR_POLICIES + ("positional_linucb",)
+# spec-driven row list: (EnvSpec, PolicySpec) pairs on the pool env
+CONFIGS = common.spec_pairs(*POLICIES)
 
 
 def run() -> Dict:
     import numpy as np
     out: Dict[str, Dict] = {}
-    for name in POLICIES:
-        per_ds, dt = common.run_policy_per_dataset(name, streamed=True)
+    for env_spec, spec in CONFIGS:
+        name = common.policy_label(spec)
+        per_ds, dt = common.run_policy_per_dataset(spec, streamed=True,
+                                                   env=env_spec)
         by_pos = np.mean([res.accuracy_by_position()
                           for res in per_ds.values()], axis=0)
         acc = float(np.mean([res.accuracy for res in per_ds.values()]))

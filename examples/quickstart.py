@@ -6,6 +6,7 @@ Run: PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import router
 from repro.core.policy import PolicySpec
+from repro.core.scenario import EnvSpec
 
 
 def main():
@@ -25,6 +26,16 @@ def main():
               f"steps={s['avg_steps']:.2f}  "
               f"cost=${s['avg_cost']:.2e}  "
               f"step1={100*s['first_step_accuracy']:5.1f}%")
+
+    print("\nSame driver, different scenario — a pipeline of subtasks "
+          "(every round plays all stages; quality feeds forward):")
+    res = router.run_pool_experiment(
+        "greedy_linucb", rounds=200, seed=0,
+        env=EnvSpec.from_name("pipeline", dim=64))
+    stage_acc = (res.rewards > 0.5).mean(axis=0)
+    print("per-stage success: "
+          + "  ".join(f"s{i+1}={100*v:.0f}%"
+                      for i, v in enumerate(stage_acc)))
 
     print("\nMyopic-regret sanity check on the exactly-linear env "
           "(Theorem 1):")

@@ -7,12 +7,16 @@ Modules:
   budget     — Budget-aware LinUCB under stochastic costs (§5.1, Theorem 2)
   knapsack   — Positionally-aware knapsack heuristic (Algorithm 2)
   baselines  — MetaLLM / MixLLM / voting baselines (§6)
-  env        — black-box interaction environments (synthetic + calibrated)
-  router     — stable import surface: policy re-exports + experiment drivers
+  scenario   — composable environment API: registry, hashable EnvSpec
+               pytrees, the Scenario protocol the engine drives
+  env        — registered environments (synthetic + calibrated pool +
+               pipeline-of-subtasks)
+  router     — stable import surface: policy/env re-exports + experiment
+               drivers
   features   — query featurization (384-d, sentence-transformer stand-in)
 """
 from repro.core import (baselines, budget, env, features, knapsack, linucb,
-                        policy, router)
+                        policy, router, scenario)
 
 __all__ = ["baselines", "budget", "env", "features", "knapsack", "linucb",
-           "policy", "router"]
+           "policy", "router", "scenario"]

@@ -8,21 +8,33 @@ learner-facing contract is identical to the paper's: it observes a context
 vector, picks an arm, and receives binary feedback plus (optionally) a
 stochastic cost. It never sees ``g`` or the ground-truth parameters.
 
-Two environments:
+Three environments, all registered in the :mod:`repro.core.scenario`
+registry and implementing its uniform **Scenario protocol** (``make`` /
+``reset`` / ``step`` / ``oracle_scores`` / … over an explicit
+hidden-state pytree) so the env-generic drivers in
+:mod:`repro.engine.driver` run any of them — or any custom registered
+scenario — unchanged:
 
-* :class:`SyntheticLinearEnv` — exactly Assumptions 1–5 (linear mean
-  feedback, sub-Gaussian noise, i.i.d. costs). Used to validate Theorems
-  1–2 empirically (sublinear myopic regret).
-* :class:`CalibratedPoolEnv` — a 6-arm pool calibrated to the paper's
-  Table 1 accuracies and Table 2 costs across the four benchmarks
-  (MMLU-Pro / AIME / GPQA / Math500), with context evolution that confers
-  the measured +5%-style gain from seeing failed attempts (Appendix B) and
-  a repeat-arm penalty. Deliberately *misspecified* for the linear model,
-  like the real benchmarks.
+* :class:`SyntheticLinearEnv` (``"synthetic"``) — exactly Assumptions 1–5
+  (linear mean feedback, sub-Gaussian noise, i.i.d. costs). Used to
+  validate Theorems 1–2 empirically (sublinear myopic regret).
+* :class:`CalibratedPoolEnv` (``"calibrated_pool"``) — a 6-arm pool
+  calibrated to the paper's Table 1 accuracies and Table 2 costs across
+  the four benchmarks (MMLU-Pro / AIME / GPQA / Math500), with context
+  evolution that confers the measured +5%-style gain from seeing failed
+  attempts (Appendix B) and a repeat-arm penalty. Deliberately
+  *misspecified* for the linear model, like the real benchmarks.
+* :class:`PipelineEnv` (``"pipeline"``) — a chain of heterogeneous
+  subtasks (Atalar et al., "Neural Bandit Based Optimal LLM Selection
+  for a Pipeline of Subtasks"): step ``h`` is pipeline stage ``h``, every
+  round plays ALL stages (``stops_on_success = False``), and each stage's
+  realized output quality feeds the next stage's context.
 
 Everything is JAX-functional: env parameters are pytrees, transitions are
 pure functions of an explicit PRNG key, so whole interaction loops can be
-``lax.scan``-ed and jitted.
+``lax.scan``-ed and jitted. The env dataclasses are frozen and hashable —
+an env instance is its own materialized :class:`~repro.core.scenario.EnvSpec`
+and keys every jitted driver program.
 """
 from __future__ import annotations
 
@@ -32,6 +44,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import scenario
 
 DATASETS = ("mmlu_pro", "aime", "gpqa", "math500")
 ARM_NAMES = ("mistral-small-3.1", "phi-4", "llama-4-maverick",
@@ -73,9 +87,15 @@ class SyntheticParams(NamedTuple):
     noise_sd: jax.Array    # scalar sub-Gaussian noise level
 
 
+@scenario.register_env("synthetic")
 @dataclasses.dataclass(frozen=True)
 class SyntheticLinearEnv:
-    """Exactly-linear feedback env; ``g`` is a hidden rotation + response mix."""
+    """Exactly-linear feedback env; ``g`` is a hidden rotation + response mix.
+
+    Scenario-protocol hidden state = the context vector itself (the env
+    is memoryless beyond ``x``). The specialized Theorem-1/2 drivers
+    (``run_synthetic_*``) call ``feedback``/``cost``/``evolve`` directly;
+    the protocol's :meth:`step` composes them for the generic drivers."""
 
     num_arms: int = 6
     dim: int = 64
@@ -83,6 +103,11 @@ class SyntheticLinearEnv:
     noise_sd: float = 0.1
     binary_feedback: bool = False  # Bernoulli(⟨x,θ⟩) instead of linear+noise
     horizon: int = 4
+
+    # Scenario protocol statics (plain class attrs — not dataclass fields,
+    # so eq/hash and the spec args stay purely configuration)
+    num_datasets = 1
+    stops_on_success = True
 
     def make(self, key: jax.Array) -> SyntheticParams:
         k1, k2, k3, k4 = jax.random.split(key, 4)
@@ -102,8 +127,10 @@ class SyntheticLinearEnv:
                                cost_mean=cost,
                                noise_sd=jnp.asarray(self.noise_sd))
 
-    def reset(self, params: SyntheticParams, key: jax.Array) -> jax.Array:
-        """Fresh query context: positive-orthant unit vector."""
+    def reset(self, params: SyntheticParams, key: jax.Array,
+              dataset: jax.Array | None = None) -> jax.Array:
+        """Fresh query context: positive-orthant unit vector. ``dataset``
+        is accepted (Scenario protocol) and ignored — one stream."""
         x = jax.random.uniform(key, (self.dim,))
         return x / jnp.linalg.norm(x)
 
@@ -141,6 +168,35 @@ class SyntheticLinearEnv:
             + 0.05 * jnp.abs(jax.random.normal(k2, x.shape))
         return nxt / jnp.linalg.norm(nxt)
 
+    # -- Scenario protocol (the generic-driver surface) ---------------------
+
+    def context(self, q: jax.Array) -> jax.Array:
+        return q
+
+    def dataset_of(self, q: jax.Array) -> jax.Array:
+        return jnp.zeros((), jnp.int32)
+
+    def step(self, params: SyntheticParams, key: jax.Array, q: jax.Array,
+             arm: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Protocol step: feedback + cost draw, then the black-box ``g``
+        evolves the context — only after a failure, mirroring the paper's
+        refinement protocol (a satisfied round keeps its context)."""
+        kf, kc, kg = jax.random.split(key, 3)
+        r = self.feedback(params, kf, q, arm)
+        c = self.cost(params, kc, arm)
+        x_next = self.evolve(params, kg, q, arm, r)
+        return r, c, jnp.where(r > 0.5, q, x_next)
+
+    def oracle_scores(self, params: SyntheticParams,
+                      q: jax.Array) -> jax.Array:
+        return self.mean_reward(params, q)
+
+    def arm_costs(self, params: SyntheticParams, q: jax.Array) -> jax.Array:
+        return params.cost_mean
+
+    def max_cost(self) -> float:
+        return 2.0   # the cost clip bound in :meth:`cost`
+
 
 # ---------------------------------------------------------------------------
 # Calibrated 6-arm pool (paper Tables 1–2)
@@ -165,6 +221,7 @@ class PoolQuery(NamedTuple):
     failed: jax.Array      # (K,) bool — arms that already failed this round
 
 
+@scenario.register_env("calibrated_pool")
 @dataclasses.dataclass(frozen=True)
 class CalibratedPoolEnv:
     """6 arms calibrated to paper Tables 1–2; misspecified linear feedback."""
@@ -178,6 +235,8 @@ class CalibratedPoolEnv:
 
     num_arms: int = len(ARM_NAMES)
     num_datasets: int = len(DATASETS)
+
+    stops_on_success = True   # the paper's protocol: refine until satisfied
 
     def make(self, key: jax.Array) -> PoolParams:
         ks = jax.random.split(key, 4)
@@ -241,3 +300,159 @@ class CalibratedPoolEnv:
                          failed=failed)
         nxt = nxt._replace(x=self._context(params, nxt))
         return r, c, nxt
+
+    # -- Scenario protocol (the generic-driver surface) ---------------------
+
+    def context(self, q: PoolQuery) -> jax.Array:
+        return q.x
+
+    def dataset_of(self, q: PoolQuery) -> jax.Array:
+        return q.dataset
+
+    def oracle_scores(self, params: PoolParams, q: PoolQuery) -> jax.Array:
+        return self.success_probs(params, q)
+
+    def arm_costs(self, params: PoolParams, q: PoolQuery) -> jax.Array:
+        return params.cost[:, q.dataset]
+
+    def max_cost(self) -> float:
+        return float(TABLE2_COST.max()) * 4.0   # the step() cost clip bound
+
+
+# ---------------------------------------------------------------------------
+# Pipeline of heterogeneous subtasks (Atalar et al.)
+# ---------------------------------------------------------------------------
+
+PIPELINE_COST_SCALE = 2e-3
+
+
+class PipelineParams(NamedTuple):
+    qual: jax.Array      # (K, M) base per-(arm, stage) success probabilities
+    cost: jax.Array      # (K, M) mean per-(arm, stage) costs
+    e_stage: jax.Array   # (M, d) stage feature directions
+    e_qual: jax.Array    # (d,) carried-quality direction
+    e_diff: jax.Array    # (d,) difficulty direction
+    sens: jax.Array      # (K,) difficulty sensitivity per arm
+
+
+class PipelineState(NamedTuple):
+    """Hidden per-round state (the learner sees only ``x``)."""
+    x: jax.Array           # (d,) current context
+    stage: jax.Array       # () int — which subtask this step solves
+    quality: jax.Array     # () float in [0, 1] — previous stage's output
+    difficulty: jax.Array  # () float — round-level task difficulty
+
+
+@scenario.register_env("pipeline")
+@dataclasses.dataclass(frozen=True)
+class PipelineEnv:
+    """A chain of heterogeneous subtasks routed arm-by-arm.
+
+    Step ``h`` of a round is pipeline stage ``h`` (``stops_on_success =
+    False`` — a success moves the pipeline FORWARD instead of ending the
+    round, so every round executes all ``stages`` steps). Each stage's
+    realized output quality feeds the next stage's hidden state and
+    context: succeeding early makes later stages easier (``carry_gain``),
+    which is exactly the cross-stage coupling of Atalar et al. and an
+    instance of the paper's unstructured context evolution ``g`` — the
+    learner never sees the stage/quality bookkeeping, only ``x``.
+
+    Per-(arm, stage) base qualities are heterogeneous (each stage has its
+    own best arm) and costs grow quadratically with quality, so cheap
+    weak arms are competitive on easy stages — the cost-aware policies
+    have real signal to exploit.
+    """
+
+    num_arms: int = 6
+    stages: int = 4
+    dim: int = 384
+    diff_sd: float = 1.0
+    carry_gain: float = 0.25   # how much carried quality lifts success
+    quality_decay: float = 0.5  # EMA factor of the carried output quality
+    cost_jitter: float = 0.25
+
+    num_datasets = 1
+    stops_on_success = False   # pipelines always play every stage
+
+    @property
+    def horizon(self) -> int:
+        return self.stages
+
+    def make(self, key: jax.Array) -> PipelineParams:
+        ks = jax.random.split(key, 5)
+        k_arms, m, d = self.num_arms, self.stages, self.dim
+
+        def unit(k, shape):
+            v = jax.random.normal(k, shape)
+            return v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+
+        qual = jax.random.uniform(ks[0], (k_arms, m), minval=0.25,
+                                  maxval=0.9)
+        cost = (PIPELINE_COST_SCALE * (0.15 + qual ** 2)
+                * jax.random.uniform(ks[1], (k_arms, m), minval=0.5,
+                                     maxval=1.5))
+        return PipelineParams(
+            qual=qual,
+            cost=cost,
+            e_stage=unit(ks[2], (m, d)),
+            e_diff=unit(ks[3], (d,)),
+            e_qual=unit(ks[4], (d,)),
+            sens=jnp.linspace(0.2, 0.1, k_arms),
+        )
+
+    def _context(self, params: PipelineParams,
+                 q: PipelineState) -> jax.Array:
+        x = (params.e_stage[q.stage]
+             + 0.5 * q.quality * params.e_qual
+             + 0.3 * q.difficulty * params.e_diff)
+        return x / jnp.linalg.norm(x)
+
+    def reset(self, params: PipelineParams, key: jax.Array,
+              dataset: jax.Array | None = None) -> PipelineState:
+        """Fresh pipeline: stage 0, neutral carried quality. ``dataset``
+        is accepted (Scenario protocol) and ignored — one task stream."""
+        diff = self.diff_sd * jax.random.normal(key)
+        q = PipelineState(x=jnp.zeros((self.dim,)),
+                          stage=jnp.zeros((), jnp.int32),
+                          quality=jnp.full((), 0.5),
+                          difficulty=diff)
+        return q._replace(x=self._context(params, q))
+
+    def oracle_scores(self, params: PipelineParams,
+                      q: PipelineState) -> jax.Array:
+        """Ground-truth per-arm success probability at the current stage."""
+        p = (params.qual[:, q.stage]
+             + self.carry_gain * (q.quality - 0.5)
+             - params.sens * q.difficulty)
+        return jnp.clip(p, 0.02, 0.98)
+
+    def step(self, params: PipelineParams, key: jax.Array, q: PipelineState,
+             arm: jax.Array
+             ) -> Tuple[jax.Array, jax.Array, PipelineState]:
+        k1, k2 = jax.random.split(key)
+        p = self.oracle_scores(params, q)[arm]
+        r = jax.random.bernoulli(k1, p).astype(jnp.float32)
+        mu = params.cost[arm, q.stage]
+        c = jnp.clip(mu * (1.0 + self.cost_jitter
+                           * jax.random.truncated_normal(k2, -3.0, 3.0)),
+                     mu * 0.25, mu * 4.0)
+        quality = (self.quality_decay * q.quality
+                   + (1.0 - self.quality_decay) * r)
+        nxt = q._replace(stage=jnp.minimum(q.stage + 1, self.stages - 1),
+                         quality=quality)
+        nxt = nxt._replace(x=self._context(params, nxt))
+        return r, c, nxt
+
+    def context(self, q: PipelineState) -> jax.Array:
+        return q.x
+
+    def dataset_of(self, q: PipelineState) -> jax.Array:
+        return jnp.zeros((), jnp.int32)
+
+    def arm_costs(self, params: PipelineParams,
+                  q: PipelineState) -> jax.Array:
+        return params.cost[:, q.stage]
+
+    def max_cost(self) -> float:
+        # step() clips at 4·mu; mu ≤ SCALE · (0.15 + 0.9²) · 1.5
+        return float(PIPELINE_COST_SCALE * (0.15 + 0.9 ** 2) * 1.5 * 4.0)

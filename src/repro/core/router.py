@@ -10,16 +10,22 @@ This module is the stable import surface over two layers:
   shim — so legacy imports keep working; the batched serving entry point
   :func:`policy_route_batch` and the :class:`ExperimentResult` container
   the paper's tables are computed from stay here.
+* The ENVIRONMENT layer lives in :mod:`repro.core.scenario` (the
+  :class:`~repro.core.scenario.EnvSpec` registry + the Scenario protocol)
+  and :mod:`repro.core.env` (the registered environments). The ``run_*``
+  wrappers forward an explicit ``env=`` — an env instance, an
+  :class:`~repro.core.scenario.EnvSpec`, or (deprecated, warns) a bare
+  name string — without rebuilding the default env per call.
 * The DRIVER layer — how rounds are dispatched (chunked ``lax.scan``),
   replicated (vmapped / ``shard_map``-sharded seed sweeps), batched
   across concurrent user streams, and logged (pluggable streaming sinks)
   — lives in :mod:`repro.engine`. The ``run_*`` functions here are thin
   wrappers kept for API stability; they accept a policy name string OR a
   :class:`~repro.core.policy.PolicySpec`, and every jitted driver program
-  is keyed on ``(spec, backend)``. See ``repro/engine/__init__.py`` for
-  the round/seed/stream/device axis model and the sink protocol. Results
-  are bit-identical to the pre-engine drivers for every dispatch mode,
-  chunk size, sharding layout and sink choice.
+  is keyed on ``(env, spec, backend)``. See ``repro/engine/__init__.py``
+  for the round/seed/stream/device axis model and the sink protocol.
+  Results are bit-identical to the pre-engine drivers for every dispatch
+  mode, chunk size, sharding layout, sink choice and env spelling.
 """
 from __future__ import annotations
 
@@ -32,6 +38,8 @@ import numpy as np
 
 from repro.core.policy import (PolicyAdapter, PolicySpec, ScoreParts,  # noqa: F401 — re-exported API
                                as_spec, build_policy, make_policy)
+from repro.core.scenario import (EnvSpec, available_envs,  # noqa: F401 — re-exported API
+                                 register_env)
 
 POLICIES = ("greedy_linucb", "budget_linucb", "knapsack",
             "positional_linucb", "metallm", "mixllm", "voting", "random")
@@ -143,27 +151,33 @@ def _engine():
     return engine_driver
 
 
-def run_pool_experiment(policy=None, **kwargs):
-    """Play ``policy`` (name string or :class:`PolicySpec`) against the
-    calibrated pool env.
+def run_pool_experiment(policy=None, *, env=None, **kwargs):
+    """Play ``policy`` (name string or :class:`PolicySpec`) against
+    ``env`` — any registered Scenario (instance, :class:`EnvSpec`, or a
+    deprecated bare name string); the calibrated pool env by default
+    (resolved once per process, never rebuilt per call).
 
     See :func:`repro.engine.driver.run_pool_experiment` for all options
     (dispatch mode, chunk size, streaming ``sink=``…). Returns an
     :class:`ExperimentResult` (default sink) or ``sink.finalize()``."""
-    return _engine().run_pool_experiment(policy, **kwargs)
+    return _engine().run_pool_experiment(policy, env=env, **kwargs)
 
 
-def run_pool_experiment_sweep(policy=None, seeds=None, **kwargs):
+def run_pool_experiment_sweep(policy=None, seeds=None, *, env=None,
+                              **kwargs):
     """S replications as one vmapped / device-sharded program; one
     :class:`ExperimentResult` per seed, bit-identical to per-seed runs.
+    ``env`` as in :func:`run_pool_experiment`.
     See :func:`repro.engine.driver.run_pool_experiment_sweep`."""
-    return _engine().run_pool_experiment_sweep(policy, seeds, **kwargs)
+    return _engine().run_pool_experiment_sweep(policy, seeds, env=env,
+                                               **kwargs)
 
 
-def run_pool_multistream(policy=None, **kwargs):
+def run_pool_multistream(policy=None, *, env=None, **kwargs):
     """B concurrent user streams sharing one posterior, batched per round.
+    ``env`` as in :func:`run_pool_experiment`.
     See :func:`repro.engine.driver.run_pool_multistream`."""
-    return _engine().run_pool_multistream(policy, **kwargs)
+    return _engine().run_pool_multistream(policy, env=env, **kwargs)
 
 
 def run_synthetic_experiment(policy=None, **kwargs):

@@ -1,0 +1,321 @@
+"""Composable environment API: registry, hashable EnvSpec pytrees, the
+``Scenario`` protocol the experiment engine drives.
+
+The paper's learner contract is deliberately environment-blind: observe a
+context ``x``, pick an arm, receive reward/cost — the black-box context
+evolution ``g`` is whatever the interaction is. This module makes the
+*environment* side as open as the policy side (:mod:`repro.core.policy`):
+
+* :class:`EnvSpec` — a frozen, hashable, **static-pytree** description of
+  an environment: registry name + config args. Specs are valid ``jit``
+  static arguments and dict/cache keys; every jitted driver program is
+  keyed on ``(env, policy spec, backend)`` — and because registered envs
+  are frozen hashable dataclasses, an env instance *is* its own
+  materialized spec: two equal-config envs can never compile distinct
+  programs, two different-config same-name envs can never collide.
+* :func:`register_env` — the open registry mapping spec names to env
+  builders. Builders live next to their env classes
+  (:mod:`repro.core.env` registers ``calibrated_pool`` / ``synthetic`` /
+  ``pipeline``); new scenarios register from anywhere.
+* The **Scenario protocol** — the uniform surface the env-generic round
+  bodies in :mod:`repro.engine.driver` drive (see
+  :class:`ScenarioProtocol` below): ``make`` / ``reset`` / ``step`` /
+  ``oracle_scores`` over an explicit hidden-state pytree, plus the static
+  scale attributes (``num_arms`` / ``dim`` / ``horizon`` /
+  ``num_datasets``). Any frozen dataclass implementing it runs through
+  every driver (scan / per_round / vmapped sweep / shard_map / multi-
+  stream), sink, and registered policy without touching the engine.
+
+Spec spellings
+--------------
+``EnvSpec.from_name("calibrated_pool")`` names a registered env with its
+defaults; ``"synthetic:d=64"`` / ``"pipeline:stages=3,dim=128"`` parse
+``name:key=value,...`` config strings (``d`` is accepted as shorthand for
+``dim`` everywhere). ``spec.with_args(horizon=6)`` overrides config;
+``spec.make_env()`` materializes the (cached, canonical) env instance.
+The drivers' ``env=`` argument accepts an env instance, an
+:class:`EnvSpec`, or — deprecated, with a :class:`DeprecationWarning` and
+bit-identical routing — a bare name string.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+import warnings
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+
+# ---------------------------------------------------------------------------
+# The Scenario protocol (documentation + structural check)
+# ---------------------------------------------------------------------------
+
+#: Methods/attributes the env-generic round bodies require. An env is a
+#: frozen (hashable) dataclass with static scale attributes
+#:
+#:   ``num_arms``, ``dim``, ``horizon``, ``num_datasets``,
+#:   ``stops_on_success`` (bool: end the round at the first success —
+#:   the paper's refinement protocol — or always play all ``horizon``
+#:   steps, the pipeline-of-subtasks protocol)
+#:
+#: and pure functions over an explicit hidden-state pytree ``q`` (the
+#: learner only ever sees ``context(q)``):
+#:
+#:   ``make(key) -> params``                      env parameter pytree
+#:   ``reset(params, key, dataset=None) -> q``    fresh round state
+#:   ``context(q) -> (dim,)``                     learner-visible context
+#:   ``dataset_of(q) -> () int``                  budget-table row of q
+#:   ``step(params, key, q, arm) -> (r, c, q')``  pull arm: reward, cost,
+#:                                                evolved hidden state
+#:   ``oracle_scores(params, q) -> (K,)``         ground-truth per-arm
+#:                                                scores (regret oracle)
+#:   ``arm_costs(params, q) -> (K,)``             expected per-arm cost
+#:                                                (the voting baseline)
+#:   ``max_cost() -> float``                      static cost bound c_max
+SCENARIO_METHODS = ("make", "reset", "context", "dataset_of", "step",
+                    "oracle_scores", "arm_costs", "max_cost")
+SCENARIO_ATTRS = ("num_arms", "dim", "horizon", "num_datasets",
+                  "stops_on_success")
+
+
+def check_scenario(env: Any) -> Any:
+    """Structurally validate ``env`` against the Scenario protocol.
+
+    Returns ``env`` unchanged; raises ``TypeError`` naming every missing
+    method/attribute (so a custom env fails loudly at driver entry, not
+    deep inside a traced round body)."""
+    missing = [m for m in SCENARIO_METHODS
+               if not callable(getattr(env, m, None))]
+    missing += [a for a in SCENARIO_ATTRS if not hasattr(env, a)]
+    if missing:
+        raise TypeError(
+            f"{type(env).__name__} does not implement the Scenario "
+            f"protocol (missing {missing}); see "
+            f"repro.core.scenario.SCENARIO_METHODS")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+EnvBuilder = Callable[[Dict[str, Any]], Any]
+
+
+class EnvDef(NamedTuple):
+    builder: EnvBuilder
+
+
+_REGISTRY: Dict[str, EnvDef] = {}
+_TYPE_NAMES: Dict[type, str] = {}
+
+# Modules whose import registers the built-in environments (builders live
+# next to their env classes). Imported lazily so this module stays a leaf.
+_BUILTIN_MODULES = ("repro.core.env",)
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+    _builtins_loaded = True
+
+
+def register_env_def(name: str, builder: EnvBuilder, *,
+                     env_type: Optional[type] = None) -> None:
+    """Register ``name`` in the environment registry. ``env_type`` (when
+    given) lets :func:`spec_of` reconstruct a spec from an instance."""
+    if name in _REGISTRY:
+        raise ValueError(f"environment {name!r} is already registered")
+    _REGISTRY[name] = EnvDef(builder)
+    if env_type is not None:
+        _TYPE_NAMES[env_type] = name
+
+
+def register_env(name: str):
+    """Class decorator: register a frozen env dataclass under ``name``.
+
+    The class's constructor doubles as the builder — spec args map to
+    dataclass fields (``d`` is accepted as shorthand for ``dim``). The
+    class is validated against the Scenario protocol at first build.
+    """
+
+    def deco(cls: type) -> type:
+        def builder(args: Dict[str, Any]):
+            return check_scenario(cls(**args))
+
+        register_env_def(name, builder, env_type=cls)
+        return cls
+
+    return deco
+
+
+def available_envs() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def _canonicalize_dim(args: Dict[str, Any]) -> Dict[str, Any]:
+    """Rewrite the ``d`` shorthand onto ``dim``; a spec carrying BOTH is
+    ambiguous and rejected instead of silently preferring one."""
+    if "d" in args:
+        if "dim" in args:
+            raise ValueError(
+                f"env spec has both 'd' and 'dim' "
+                f"({args['d']!r} vs {args['dim']!r}) — 'd' is shorthand "
+                f"for 'dim', pass only one")
+        args = dict(args)
+        args["dim"] = args.pop("d")
+    return args
+
+
+def _parse_value(raw: str) -> Any:
+    for cast in (int, float):
+        try:
+            return cast(raw)
+        except ValueError:
+            pass
+    if raw in ("True", "true"):
+        return True
+    if raw in ("False", "false"):
+        return False
+    return raw
+
+
+# ---------------------------------------------------------------------------
+# EnvSpec: hashable static-pytree environment description
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """Frozen description of an environment: registry name + config args.
+
+    Registered as a STATIC pytree node (no leaves, the whole spec is aux
+    data), so a spec passes freely through ``jit``/``vmap`` closures and
+    works as a ``static_argnums`` argument or cache key. Hashability is
+    enforced at construction.
+    """
+
+    name: str
+    args: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "args",
+            tuple(sorted((str(k), v) for k, v in self.args)))
+        try:
+            hash(self.args)
+        except TypeError as e:
+            raise TypeError(
+                f"EnvSpec must be hashable (it keys every jitted driver "
+                f"program): {e}") from None
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def from_name(cls, name: str, **args) -> "EnvSpec":
+        """Parse ``"calibrated_pool"`` / ``"synthetic:d=64"``-style
+        strings (``name:key=value,...``; kwargs override parsed args)."""
+        if not isinstance(name, str):
+            raise TypeError(f"from_name takes an env string, got {name!r}")
+        if ":" in name:
+            name, _, conf = name.partition(":")
+            parsed: Dict[str, Any] = {}
+            for item in filter(None, conf.split(",")):
+                if "=" not in item:
+                    raise ValueError(
+                        f"bad env config item {item!r} (expected key=value "
+                        f"in 'name:key=value,...')")
+                k, _, v = item.partition("=")
+                parsed[k.strip()] = _parse_value(v.strip())
+            args = {**parsed, **args}
+        args = _canonicalize_dim(args)
+        _ensure_builtins()
+        if name not in _REGISTRY:
+            raise ValueError(f"unknown environment {name!r} "
+                             f"(choose from {available_envs()})")
+        return cls(name, tuple(args.items()))
+
+    def with_args(self, **args) -> "EnvSpec":
+        merged = {**dict(self.args), **args}
+        return dataclasses.replace(self, args=tuple(merged.items()))
+
+    # -- derived ----------------------------------------------------------
+
+    @property
+    def kwargs(self) -> Dict[str, Any]:
+        return dict(self.args)
+
+    @property
+    def label(self) -> str:
+        """Human-readable spelling (round-trips the string form)."""
+        if not self.args:
+            return self.name
+        conf = ",".join(f"{k}={v}" for k, v in self.args)
+        return f"{self.name}:{conf}"
+
+    def make_env(self):
+        """Materialize the (canonical, cached) env instance.
+
+        ``lru_cache``d on the spec, so equal specs return the SAME env
+        object and every jitted-program cache keyed on the env instance
+        hits across spec respellings."""
+        return _make_env_cached(self)
+
+
+@functools.lru_cache(maxsize=128)
+def _make_env_cached(spec: EnvSpec):
+    _ensure_builtins()
+    if spec.name not in _REGISTRY:
+        raise ValueError(f"unknown environment {spec.name!r} "
+                         f"(choose from {available_envs()})")
+    # specs built without from_name (with_args, direct construction) may
+    # still carry the "d" shorthand — canonicalize/reject here too
+    return _REGISTRY[spec.name].builder(_canonicalize_dim(spec.kwargs))
+
+
+def spec_of(env: Any) -> EnvSpec:
+    """Reconstruct the :class:`EnvSpec` of a registered env instance
+    (non-default dataclass fields become spec args)."""
+    _ensure_builtins()
+    name = _TYPE_NAMES.get(type(env))
+    if name is None:
+        raise TypeError(f"{type(env).__name__} is not a registered "
+                        f"environment type (register it with "
+                        f"@scenario.register_env)")
+    args = {}
+    for f in dataclasses.fields(env):
+        v = getattr(env, f.name)
+        if f.default is not dataclasses.MISSING and v == f.default:
+            continue
+        args[f.name] = v
+    return EnvSpec(name, tuple(args.items()))
+
+
+def resolve_env_arg(env: Union[None, str, EnvSpec, Any],
+                    default: Union[str, EnvSpec, None] = None):
+    """Normalize the drivers' ``env=`` argument to a Scenario instance.
+
+    Accepts an env instance (validated against the protocol), an
+    :class:`EnvSpec`, or — deprecated — a bare name string (warns, routes
+    bit-identically through :meth:`EnvSpec.from_name`). ``None`` falls
+    back to ``default``.
+    """
+    if env is None:
+        if default is None:
+            raise TypeError("missing required env argument")
+        env = default
+    if isinstance(env, str):
+        warnings.warn(
+            "passing env= as a bare name string is deprecated; pass "
+            "EnvSpec.from_name(name) (or an env instance) instead",
+            DeprecationWarning, stacklevel=3)
+        env = EnvSpec.from_name(env)
+    if isinstance(env, EnvSpec):
+        return env.make_env()
+    return check_scenario(env)

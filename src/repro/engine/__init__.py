@@ -7,6 +7,35 @@ engine. ``core.router`` keeps the public API and the policy definitions;
 everything about *how* rounds are dispatched, replicated, sharded and
 logged lives here.
 
+The env-generic round-body contract
+-----------------------------------
+The drivers are environment-generic: the round bodies in
+:mod:`repro.engine.driver` touch the environment only through the
+Scenario protocol of :mod:`repro.core.scenario` —
+
+* ``make(key)`` builds the env parameter pytree once per seed;
+* each round, ``reset(params, key, dataset)`` draws a hidden round-state
+  pytree ``q``, ``dataset_of(q)`` picks the budget-table row, and
+  ``context(q)`` is the only thing the policy ever sees;
+* each step, the policy selects on ``context(q)``,
+  ``step(params, key, q, arm)`` returns ``(reward, cost, q')``, and
+  ``oracle_scores(params, q)`` supplies the myopic-regret oracle;
+* the static ``stops_on_success`` attribute decides whether a success
+  ends the round (the paper's refinement protocol) or advances it (the
+  pipeline-of-subtasks scenario) — a Python-level branch, so the pool
+  env's compiled graphs are unchanged;
+* ``num_arms`` / ``dim`` / ``horizon`` / ``num_datasets`` /
+  ``max_cost()`` give the static scale the policy builders and budget
+  tables need; ``arm_costs(params, q)`` serves the voting baseline.
+
+Anything implementing that protocol — the built-in ``calibrated_pool`` /
+``synthetic`` / ``pipeline`` envs or a custom ``@register_env`` dataclass
+— runs through every dispatch mode (scan, per_round, vmapped sweep,
+shard_map-sharded sweep, multi-stream), every sink, and every registered
+policy. Jitted driver programs are cached per ``(env, policy spec,
+backend)``; the frozen hashable env dataclass is its own cache key, so
+same-name different-config envs can never share a compiled program.
+
 The four axes
 -------------
 * **step** ``h < H`` — adaptive refinement steps within one user round
@@ -49,8 +78,8 @@ shard-by-shard via :func:`~repro.engine.aggregate.summarize_shards`) into
 the Table-level statistics the benchmarks report, without ever
 materializing (T, H) arrays.
 """
-from repro.engine.aggregate import (ReducerSink, StreamingSummary,
-                                    summarize_shards)
+from repro.engine.aggregate import (ReducerSink, StreamingHistogram,
+                                    StreamingSummary, summarize_shards)
 from repro.engine.driver import (fold_observations, run_pool_experiment,
                                  run_pool_experiment_sweep,
                                  run_pool_multistream,
@@ -60,8 +89,8 @@ from repro.engine.sink import LogSink, MemorySink, NpyChunkSink, iter_shards
 
 __all__ = [
     "LogSink", "MemorySink", "NpyChunkSink", "ReducerSink",
-    "StreamingSummary", "fold_observations", "iter_shards",
-    "run_pool_experiment", "run_pool_experiment_sweep",
+    "StreamingHistogram", "StreamingSummary", "fold_observations",
+    "iter_shards", "run_pool_experiment", "run_pool_experiment_sweep",
     "run_pool_multistream", "run_synthetic_experiment",
     "run_synthetic_experiment_sweep", "summarize_shards",
 ]

@@ -13,9 +13,15 @@ host memory however large T grows:
   shard); the accessors mirror the :class:`ExperimentResult` API
   (``accuracy``, ``accuracy_by_position()``, ``avg_steps``, ``summary()``
   …) and agree with it up to float accumulation order.
+* :class:`StreamingHistogram` — the cost-distribution reducer behind the
+  Figure-2 budget CDF: per-round costs fold into fixed log-spaced bins
+  (approximate quantiles, exact min/max/mean) and budget adherence is
+  counted exactly per round against each round's own budget — the last
+  benchmark that materialized ``(T, H)`` arrays now streams too.
 * :class:`ReducerSink` — a :class:`~repro.engine.sink.LogSink` feeding a
-  reducer straight from a driver, so a benchmark run never holds more
-  than one chunk of logs anywhere (no disk round-trip either).
+  reducer (any object with ``update(chunk)``) straight from a driver, so
+  a benchmark run never holds more than one chunk of logs anywhere (no
+  disk round-trip either).
 * :func:`summarize_shards` — fold a finalized
   :class:`~repro.engine.sink.NpyChunkSink` directory shard-by-shard (the
   offline spelling; replaces ``NpyChunkSink.load()`` + full-array math
@@ -125,21 +131,117 @@ class StreamingSummary:
         }
 
 
-class ReducerSink(sink_mod.LogSink):
-    """Feed a :class:`StreamingSummary` straight from a driver.
+class StreamingHistogram:
+    """Fold per-round cost chunks into a fixed-bin histogram + budget
+    adherence counts, in O(bins) memory however large T grows.
 
-    ``finalize()`` returns the reducer — benchmark aggregation without
-    ever materializing (T, H) arrays in host memory or on disk.
+    Bins are log-spaced over ``[lo, hi]`` (costs are per-query dollar
+    amounts spanning decades; anything outside clips into the edge
+    bins). :meth:`quantile` interpolates the cumulative bin counts in
+    log space — approximate to a bin width, while ``within_budget_frac``
+    (each round's summed cost vs that round's OWN budget × ``slack``,
+    the Figure-2 adherence statistic), ``min``/``max`` and ``mean`` are
+    exact. Rounds whose logged budget is non-finite (unbudgeted
+    policies) are compared against :attr:`fallback_budget` — set it
+    before folding each run (e.g. to the dataset's protocol budget).
+
+    Like :class:`StreamingSummary`, ``update`` accepts any chunk bundle
+    with leading round axis and trailing step axis; middle axes (the
+    multi-stream ``B``) flatten into rounds.
     """
 
-    def __init__(self, reducer: Optional[StreamingSummary] = None) -> None:
+    def __init__(self, lo: float = 1e-7, hi: float = 10.0,
+                 bins: int = 512, slack: float = 1.05) -> None:
+        if not (0.0 < lo < hi):
+            raise ValueError(f"need 0 < lo < hi, got [{lo}, {hi}]")
+        self.edges = np.logspace(np.log10(lo), np.log10(hi), bins + 1)
+        self.counts = np.zeros((bins,), np.int64)
+        self.slack = float(slack)
+        self.fallback_budget = np.inf
+        self.rounds = 0
+        self._within = 0
+        self._sum = 0.0
+        self._min = np.inf
+        self._max = -np.inf
+
+    def update(self, chunk: Mapping[str, Any]) -> "StreamingHistogram":
+        """Fold one chunk bundle; returns self (reduce-style chaining)."""
+        costs = np.asarray(chunk["costs"], np.float64)
+        per_round = costs.reshape(-1, costs.shape[-1]).sum(axis=1)
+        budgets = np.asarray(chunk["budgets"], np.float64).reshape(-1)
+        if budgets.shape[0] != per_round.shape[0]:
+            raise ValueError(f"budgets/costs round counts disagree: "
+                             f"{budgets.shape[0]} vs {per_round.shape[0]}")
+        line = np.where(np.isfinite(budgets), budgets,
+                        self.fallback_budget)
+        self._within += int((per_round <= line * self.slack).sum())
+        self.counts += np.histogram(
+            np.clip(per_round, self.edges[0], self.edges[-1]),
+            bins=self.edges)[0]
+        self.rounds += per_round.shape[0]
+        self._sum += float(per_round.sum())
+        if per_round.size:
+            self._min = min(self._min, float(per_round.min()))
+            self._max = max(self._max, float(per_round.max()))
+        return self
+
+    # -- accessors --------------------------------------------------------
+
+    @property
+    def within_budget_frac(self) -> float:
+        return self._within / max(self.rounds, 1)
+
+    @property
+    def mean(self) -> float:
+        return self._sum / max(self.rounds, 1)
+
+    @property
+    def min(self) -> float:
+        return self._min
+
+    @property
+    def max(self) -> float:
+        return self._max
+
+    def quantile(self, q) -> np.ndarray:
+        """Approximate quantiles (scalar or array ``q`` in [0, 100]) by
+        log-interpolating the cumulative bin counts; exact at 0/100."""
+        if self.rounds == 0:
+            raise ValueError("no chunks folded yet")
+        q = np.asarray(q, np.float64)
+        cum = np.concatenate([[0], np.cumsum(self.counts)]) / self.rounds
+        centers = np.log10(self.edges)
+        vals = 10.0 ** np.interp(q / 100.0, cum, centers)
+        vals = np.clip(vals, self._min, self._max)
+        return vals if vals.ndim else float(vals)
+
+    def summary(self) -> Dict[str, float]:
+        qs = self.quantile([50, 90, 99])
+        return {
+            "within_budget_frac": self.within_budget_frac,
+            "p50": float(qs[0]), "p90": float(qs[1]), "p99": float(qs[2]),
+            "max": self.max,
+        }
+
+
+class ReducerSink(sink_mod.LogSink):
+    """Feed a streaming reducer straight from a driver.
+
+    ``reducer`` is any object with ``update(chunk_dict)``
+    (:class:`StreamingSummary` by default, :class:`StreamingHistogram`
+    for the cost-CDF benchmark, or anything custom); ``finalize()``
+    returns it — benchmark aggregation without ever materializing
+    (T, H) arrays in host memory or on disk.
+    """
+
+    def __init__(self, reducer: Optional[Any] = None) -> None:
         self.reducer = reducer if reducer is not None else StreamingSummary()
 
     def append(self, arrays: Mapping[str, Any], n: int) -> None:
         self.reducer.update({k: np.asarray(v)[:n] for k, v in
                              arrays.items()})
 
-    def finalize(self) -> StreamingSummary:
+    def finalize(self) -> Any:
         return self.reducer
 
 

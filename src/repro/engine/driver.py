@@ -1,9 +1,27 @@
 """The device-resident experiment engine (extracted from ``core.router``).
 
-Drives any ``core.router`` policy against the paper's environments and
-streams the logs out through a pluggable :class:`~repro.engine.sink.LogSink`.
-``core.router.run_*`` remain the public entry points — thin wrappers over
-the functions here — so nothing upstream changed signatures.
+Drives any ``core.router`` policy against any registered **Scenario**
+environment (:mod:`repro.core.scenario`) and streams the logs out through
+a pluggable :class:`~repro.engine.sink.LogSink`. ``core.router.run_*``
+remain the public entry points — thin wrappers over the functions here —
+so nothing upstream changed signatures.
+
+Env-generic round bodies
+------------------------
+The round bodies (:func:`_round_setup` / :func:`_scenario_step` /
+:func:`_scenario_round` and the frozen multi-stream variant) touch the
+environment ONLY through the Scenario protocol — ``reset`` / ``context``
+/ ``step`` / ``oracle_scores`` / ``dataset_of`` over an explicit
+hidden-state pytree, plus the static ``stops_on_success`` round-ending
+rule — so every driver here (chunked scan, per_round, vmapped sweep,
+shard_map-sharded sweep, multi-stream) runs the calibrated pool, the
+synthetic linear env, the pipeline-of-subtasks scenario, or any custom
+registered env without modification. ``env=`` accepts an env instance,
+an :class:`~repro.core.scenario.EnvSpec`, or (deprecated, warning) a
+bare name string. Jitted driver programs are cached on
+``(env, policy spec, backend)`` — the frozen hashable env dataclass IS
+its materialized spec, so equal-config envs share programs and
+different-config same-name envs never collide.
 
 Axes (see the package docstring for the full picture):
 
@@ -67,6 +85,7 @@ import numpy as np
 from repro.core import budget as budget_mod, env as env_mod
 from repro.core import linucb
 from repro.core import policy as policy_mod
+from repro.core import scenario as scenario_mod
 from repro.core.policy import PolicyAdapter, PolicySpec
 from repro.core.router import (DEFAULT_CHUNK_SIZE, DISPATCH_MODES,
                                ExperimentResult, RoundLog)
@@ -75,55 +94,66 @@ from repro.engine import sink as sink_mod
 
 POOL_FIELDS = ("arms", "rewards", "costs", "regrets", "budgets", "datasets")
 
+# The default environment of the ``run_pool_*`` drivers — resolved through
+# the spec cache, so the default env is materialized once per process
+# instead of rebuilt per call.
+DEFAULT_ENV_SPEC = scenario_mod.EnvSpec.from_name("calibrated_pool")
+
+
+def _resolve_env(env) -> Any:
+    return scenario_mod.resolve_env_arg(env, default=DEFAULT_ENV_SPEC)
+
 
 # ---------------------------------------------------------------------------
-# Round bodies (pool env)
+# Round bodies (env-generic: any Scenario)
 # ---------------------------------------------------------------------------
 
-def _round_setup(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
-                 params: env_mod.PoolParams, state: Any, key: jax.Array,
-                 budget_table: jax.Array, budget_jitter: float,
-                 dataset: Optional[jax.Array]):
+def _round_setup(policy: PolicyAdapter, env: Any, params: Any, state: Any,
+                 key: jax.Array, budget_table: jax.Array,
+                 budget_jitter: float, dataset: Optional[jax.Array]):
     """Shared round preamble: reset, budget draw, plan, step horizon.
 
     ``budget_table``: (num_datasets,) per-dataset base budgets (paper
     protocol: greedy LinUCB's avg per-query cost ±5%); +inf disables."""
     kq, kb, kloop = jax.random.split(key, 3)
     q0 = env.reset(params, kq, dataset)
-    round_budget = budget_table[q0.dataset] * (
+    round_budget = budget_table[env.dataset_of(q0)] * (
         1.0 + budget_jitter * jax.random.uniform(kb, minval=-1.0,
                                                  maxval=1.0))
-    plan = policy.plan(state, q0.x, round_budget)
+    plan = policy.plan(state, env.context(q0), round_budget)
     h_max = env.horizon if policy.multi_step else 1
     return q0, round_budget, plan, h_max, kloop
 
 
-def _pool_step(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
-               params: env_mod.PoolParams, plan: Any, sel_state: Any,
-               q, remaining, done, ks: jax.Array, h):
-    """One gated refinement step — the single source of truth for the
+def _scenario_step(policy: PolicyAdapter, env: Any, params: Any, plan: Any,
+                   sel_state: Any, q, remaining, done, ks: jax.Array, h):
+    """One gated scenario step — the single source of truth for the
     select/execute/regret/log math shared by the state-threading round
     body and the frozen-snapshot multi-stream body (which differ only in
-    where ``sel_state`` comes from and whether an update follows)."""
-    arm = policy.select(sel_state, plan, q.x, h, remaining)
+    where ``sel_state`` comes from and whether an update follows). The
+    env is driven purely through the Scenario protocol."""
+    arm = policy.select(sel_state, plan, env.context(q), h, remaining)
     arm = jnp.asarray(arm, jnp.int32)
     executed = (~done) & (arm >= 0)
     arm_safe = jnp.clip(arm, 0, env.num_arms - 1)
-    x_obs = q.x   # the context this step OBSERVED (pre-evolution) — what
-                  # the posterior update must consume
+    x_obs = env.context(q)   # the context this step OBSERVED (pre-
+                             # evolution) — what the posterior update
+                             # must consume
 
     r, c, q_next = env.step(params, ks, q, arm_safe)
     # myopic regret vs the best arm for the *current* context
     # (vector-subtract before indexing: keeps the expression in the
     # same fused form in every compile context — per-round jit,
     # chunked scan, vmapped sweep — so logs stay bitwise identical)
-    probs = env.success_probs(params, q)
+    probs = env.oracle_scores(params, q)
     reg = (jnp.max(probs) - probs)[arm_safe]
 
     q = jax.tree.map(lambda new, old: jnp.where(executed, new, old),
                      q_next, q)
     remaining = jnp.where(executed, remaining - c, remaining)
-    done = done | (executed & (r > 0.5)) | (~executed)
+    if env.stops_on_success:   # static: the paper's stop-when-satisfied
+        done = done | (executed & (r > 0.5))
+    done = done | (~executed)
 
     log = (jnp.where(executed, arm_safe, -1),
            jnp.where(executed, r, 0.0),
@@ -132,10 +162,10 @@ def _pool_step(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
     return arm_safe, executed, x_obs, r, c, q, remaining, done, log
 
 
-def _pool_round(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
-                params: env_mod.PoolParams, state: Any, key: jax.Array,
-                budget_table: jax.Array, budget_jitter: float,
-                dataset: Optional[jax.Array]) -> Tuple[Any, RoundLog, jax.Array]:
+def _scenario_round(policy: PolicyAdapter, env: Any, params: Any,
+                    state: Any, key: jax.Array, budget_table: jax.Array,
+                    budget_jitter: float, dataset: Optional[jax.Array]
+                    ) -> Tuple[Any, RoundLog, jax.Array]:
     """One user round: ≤H adaptive steps. Pure & jit-able."""
     q0, round_budget, plan, h_max, kloop = _round_setup(
         policy, env, params, state, key, budget_table, budget_jitter,
@@ -145,8 +175,8 @@ def _pool_round(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
         state, q, remaining, done, kh = carry
         kh, ks = jax.random.split(kh)
         arm_safe, executed, x_obs, r, c, q, remaining, done, log = \
-            _pool_step(policy, env, params, plan, state, q, remaining,
-                       done, ks, h)
+            _scenario_step(policy, env, params, plan, state, q, remaining,
+                           done, ks, h)
         # not-executed steps are gated INSIDE the update (O(d) mask),
         # never by conditionals or selects over the full policy state —
         # both would copy the (d, K·d) inverse every step
@@ -160,7 +190,7 @@ def _pool_round(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
     arms, rewards, costs, regrets = _pad_step_axis(
         env.horizon - h_max, arms, rewards, costs, regrets)
     return state, RoundLog(arms, rewards, costs, regrets, round_budget), \
-        q0.dataset
+        env.dataset_of(q0)
 
 
 def _pad_step_axis(pad: int, arms, rewards, costs, regrets):
@@ -172,10 +202,10 @@ def _pad_step_axis(pad: int, arms, rewards, costs, regrets):
     return arms, rewards, costs, regrets
 
 
-def _pool_chunk(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
-                params: env_mod.PoolParams, state: Any, kround: jax.Array,
-                budget_table: jax.Array, ts: jax.Array, *,
-                budget_jitter: float, dataset: Optional[jax.Array]):
+def _scenario_chunk(policy: PolicyAdapter, env: Any, params: Any,
+                    state: Any, kround: jax.Array, budget_table: jax.Array,
+                    ts: jax.Array, *, budget_jitter: float,
+                    dataset: Optional[jax.Array]):
     """Scan the per-round transition over a chunk of round indices.
 
     Carry = policy state; each round re-derives its key as
@@ -183,17 +213,17 @@ def _pool_chunk(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
     bitwise. Returns the final state plus stacked (chunk, …) logs."""
 
     def body(state, t):
-        state, log, ds = _pool_round(policy, env, params, state,
-                                     jax.random.fold_in(kround, t),
-                                     budget_table, budget_jitter, dataset)
+        state, log, ds = _scenario_round(policy, env, params, state,
+                                         jax.random.fold_in(kround, t),
+                                         budget_table, budget_jitter,
+                                         dataset)
         return state, (log, ds)
 
     return jax.lax.scan(body, state, ts)
 
 
-def _voting_chunk(env: env_mod.CalibratedPoolEnv, params: env_mod.PoolParams,
-                  kround: jax.Array, ts: jax.Array, *,
-                  dataset: Optional[jax.Array]):
+def _voting_chunk(env: Any, params: Any, kround: jax.Array, ts: jax.Array,
+                  *, dataset: Optional[jax.Array]):
     """Stateless voting rounds, scanned over a chunk of round indices."""
 
     def body(carry, t):
@@ -205,17 +235,18 @@ def _voting_chunk(env: env_mod.CalibratedPoolEnv, params: env_mod.PoolParams,
     return logs
 
 
-def _voting_round(env: env_mod.CalibratedPoolEnv, params: env_mod.PoolParams,
-                  key: jax.Array, dataset: Optional[jax.Array]):
-    """Majority voting: query all arms once; correct if ≥2 arms are correct."""
+def _voting_round(env: Any, params: Any, key: jax.Array,
+                  dataset: Optional[jax.Array]):
+    """Majority voting: query all arms once; correct if ≥2 arms are correct
+    (the paper's rule for the 6-arm pool, kept verbatim for any K)."""
     kq, ks = jax.random.split(key)
     q = env.reset(params, kq, dataset)
-    probs = env.success_probs(params, q)
+    probs = env.oracle_scores(params, q)
     hits = jax.random.bernoulli(ks, probs)
     reward = (hits.sum() >= 2).astype(jnp.float32)
-    cost = params.cost[:, q.dataset].sum()
+    cost = env.arm_costs(params, q).sum()
     reg = jnp.max(probs) - reward  # vs best single arm, per paper's framing
-    return reward, cost, jnp.maximum(reg, 0.0), q.dataset
+    return reward, cost, jnp.maximum(reg, 0.0), env.dataset_of(q)
 
 
 def _chunk_indices(rounds: int, chunk: int):
@@ -229,44 +260,44 @@ def _chunk_indices(rounds: int, chunk: int):
 # ---------------------------------------------------------------------------
 # Jitted driver programs (cached on their static configuration)
 # ---------------------------------------------------------------------------
-# Every cache is keyed on the full hashable ``PolicySpec`` — NOT the name
-# string — so two differently-configured same-name policies (e.g. two
-# ``positional_linucb`` specs with different gammas) can never collide on
-# a compiled program. ``seed`` only reaches compiled code through the
-# closures of seed-consuming selects ('random', EpsilonMix), so it is
-# normalized out of the key for every other spec. ``backend`` (the
-# resolved linucb backend) is read at trace time inside the policy math,
-# so it must be part of every cache key — otherwise set_backend() after a
-# first run would be silently ignored by the cached programs.
+# Every cache is keyed on the full hashable ``(env, PolicySpec)`` pair —
+# NOT name strings — so two differently-configured same-name policies
+# (e.g. two ``positional_linucb`` specs with different gammas) or envs
+# (e.g. ``pipeline`` at two dims) can never collide on a compiled
+# program; the frozen env dataclass is its own materialized EnvSpec.
+# ``seed`` only reaches compiled code through the closures of
+# seed-consuming selects ('random', EpsilonMix), so it is normalized out
+# of the key for every other spec. ``backend`` (the resolved linucb
+# backend) is read at trace time inside the policy math, so it must be
+# part of every cache key — otherwise set_backend() after a first run
+# would be silently ignored by the cached programs.
 
 @functools.lru_cache(maxsize=128)
-def _jitted_pool_drivers(spec: PolicySpec, env: env_mod.CalibratedPoolEnv,
-                         alpha: float, lam: float, horizon_t: int,
-                         c_max: float, seed_key: int, budget_jitter: float,
+def _jitted_pool_drivers(spec: PolicySpec, env: Any, alpha: float,
+                         lam: float, horizon_t: int, c_max: float,
+                         seed_key: int, budget_jitter: float,
                          dataset: Optional[int], backend: str):
     ds_arg = None if dataset is None else jnp.int32(dataset)
     policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                         horizon_t=horizon_t, c_max=c_max, seed=seed_key)
     round_fn = jax.jit(functools.partial(
-        _pool_round, policy, env, budget_jitter=budget_jitter,
+        _scenario_round, policy, env, budget_jitter=budget_jitter,
         dataset=ds_arg))
     chunk_fn = jax.jit(functools.partial(
-        _pool_chunk, policy, env, budget_jitter=budget_jitter,
+        _scenario_chunk, policy, env, budget_jitter=budget_jitter,
         dataset=ds_arg))
     return policy, round_fn, chunk_fn
 
 
 @functools.lru_cache(maxsize=32)
-def _jitted_voting_drivers(env: env_mod.CalibratedPoolEnv,
-                           dataset: Optional[int]):
+def _jitted_voting_drivers(env: Any, dataset: Optional[int]):
     ds_arg = None if dataset is None else jnp.int32(dataset)
     round_fn = jax.jit(functools.partial(_voting_round, env, dataset=ds_arg))
     chunk_fn = jax.jit(functools.partial(_voting_chunk, env, dataset=ds_arg))
     return round_fn, chunk_fn
 
 
-def _pool_sweep_chunk_callable(spec: PolicySpec,
-                               env: env_mod.CalibratedPoolEnv, alpha: float,
+def _pool_sweep_chunk_callable(spec: PolicySpec, env: Any, alpha: float,
                                lam: float, horizon_t: int, c_max: float,
                                budget_jitter: float, dataset: Optional[int]):
     """The UNjitted vmapped sweep chunk — shared by the single-device jit
@@ -280,15 +311,15 @@ def _pool_sweep_chunk_callable(spec: PolicySpec,
     def chunk_fn(seed, params_s, state, kround, table_row, ts):
         policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                             horizon_t=horizon_t, c_max=c_max, seed=seed)
-        return _pool_chunk(policy, env, params_s, state, kround, table_row,
-                           ts, budget_jitter=budget_jitter, dataset=ds_arg)
+        return _scenario_chunk(policy, env, params_s, state, kround,
+                               table_row, ts, budget_jitter=budget_jitter,
+                               dataset=ds_arg)
 
     return jax.vmap(chunk_fn, in_axes=(0, 0, 0, 0, 0, None))
 
 
 @functools.lru_cache(maxsize=128)
-def _jitted_pool_sweep_chunk(spec: PolicySpec,
-                             env: env_mod.CalibratedPoolEnv, alpha: float,
+def _jitted_pool_sweep_chunk(spec: PolicySpec, env: Any, alpha: float,
                              lam: float, horizon_t: int, c_max: float,
                              budget_jitter: float, dataset: Optional[int],
                              backend: str, num_devices: int = 1):
@@ -304,8 +335,8 @@ def _jitted_pool_sweep_chunk(spec: PolicySpec,
 
 
 @functools.lru_cache(maxsize=32)
-def _jitted_voting_sweep_chunk(env: env_mod.CalibratedPoolEnv,
-                               dataset: Optional[int], num_devices: int = 1):
+def _jitted_voting_sweep_chunk(env: Any, dataset: Optional[int],
+                               num_devices: int = 1):
     ds_arg = None if dataset is None else jnp.int32(dataset)
     vchunk = jax.vmap(functools.partial(_voting_chunk, env, dataset=ds_arg),
                       in_axes=(0, 0, None))
@@ -329,10 +360,6 @@ def _pool_budget_table(base_budget, num_datasets: int,
     else:
         table = np.full((num_datasets,), np.inf, np.float32)
     return jnp.asarray(table)
-
-
-def _pool_c_max(env: env_mod.CalibratedPoolEnv) -> float:
-    return float(env_mod.TABLE2_COST.max()) * 4.0
 
 
 def _stack_seed_setup(env, seeds: Sequence[int]):
@@ -392,7 +419,7 @@ def _result_from_logs(out: Dict[str, np.ndarray]) -> ExperimentResult:
     return ExperimentResult(*(out[f] for f in POOL_FIELDS))
 
 
-def _empty_pool_result(env: env_mod.CalibratedPoolEnv) -> ExperimentResult:
+def _empty_pool_result(env: Any) -> ExperimentResult:
     h = env.horizon
     return ExperimentResult(
         arms=np.full((0, h), -1, np.int32),
@@ -452,7 +479,7 @@ class _RowBuffer:
 
 def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
                         seed: int = 0,
-                        env: Optional[env_mod.CalibratedPoolEnv] = None,
+                        env: Any = None,
                         base_budget=1e-3,
                         budget_jitter: float = 0.05,
                         dataset: Optional[int] = None,
@@ -471,7 +498,7 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
     disk-backed runs); the return value is then ``sink.finalize()``.
     """
     spec = policy_mod.resolve_policy_arg(policy, policy_name)
-    env = env or env_mod.CalibratedPoolEnv()
+    env = _resolve_env(env)
     if dispatch not in DISPATCH_MODES:
         raise ValueError(f"unknown dispatch {dispatch!r} "
                          f"(choose from {DISPATCH_MODES})")
@@ -506,7 +533,7 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
         return _result_from_logs(out) if return_result else out
 
     policy, round_fn, chunk_fn = _jitted_pool_drivers(
-        spec, env, alpha, lam, rounds * env.horizon, _pool_c_max(env),
+        spec, env, alpha, lam, rounds * env.horizon, env.max_cost(),
         seed if spec.select_uses_seed else 0, budget_jitter, dataset,
         linucb.resolved_backend())
     state = policy.init()
@@ -535,7 +562,7 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
 
 def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
                               policy_name=None, rounds: int = 1000,
-                              env: Optional[env_mod.CalibratedPoolEnv] = None,
+                              env: Any = None,
                               base_budget=1e-3,
                               budget_jitter: float = 0.05,
                               dataset: Optional[int] = None,
@@ -561,7 +588,7 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
     ``run_pool_experiment(seed=s)`` produces.
     """
     spec = policy_mod.resolve_policy_arg(policy, policy_name)
-    env = env or env_mod.CalibratedPoolEnv()
+    env = _resolve_env(env)
     seeds = [int(s) for s in seeds]
     S, T, H = len(seeds), rounds, env.horizon
     budgeted = spec.budgeted
@@ -604,12 +631,12 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
 
     vchunk, mesh = _jitted_pool_sweep_chunk(spec, env, alpha, lam,
                                             rounds * env.horizon,
-                                            _pool_c_max(env), budget_jitter,
+                                            env.max_cost(), budget_jitter,
                                             dataset,
                                             linucb.resolved_backend(), ndev)
     state = _broadcast_state(
         spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
-                   horizon_t=rounds * env.horizon, c_max=_pool_c_max(env),
+                   horizon_t=rounds * env.horizon, c_max=env.max_cost(),
                    seed=run_seeds[0]).init(), Sr)
     if mesh is not None:
         seeds_arr, params, state, krounds, table = shard_mod.place_seed_args(
@@ -672,13 +699,13 @@ def fold_observations(policy: PolicyAdapter, state: Any, arms: jax.Array,
     return state
 
 
-def _pool_round_frozen(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
-                       params: env_mod.PoolParams, state: Any,
-                       key: jax.Array, budget_table: jax.Array,
-                       budget_jitter: float, dataset: Optional[jax.Array]):
+def _scenario_round_frozen(policy: PolicyAdapter, env: Any, params: Any,
+                           state: Any, key: jax.Array,
+                           budget_table: jax.Array, budget_jitter: float,
+                           dataset: Optional[jax.Array]):
     """One stream's round against a FROZEN policy snapshot.
 
-    Like :func:`_pool_round` but no update happens inside the round —
+    Like :func:`_scenario_round` but no update happens inside the round —
     every select sees the same state, and the executed (arm, x, r, c)
     observations come back for the round-level batched fold. Returns
     ``(RoundLog, dataset, obs)`` with obs leaves shaped (h_max, …)."""
@@ -690,8 +717,8 @@ def _pool_round_frozen(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
         q, remaining, done, kh = carry
         kh, ks = jax.random.split(kh)
         arm_safe, executed, x_obs, r, c, q, remaining, done, log = \
-            _pool_step(policy, env, params, plan, state, q, remaining,
-                       done, ks, h)
+            _scenario_step(policy, env, params, plan, state, q, remaining,
+                           done, ks, h)
         obs = (arm_safe, x_obs, r, c, executed)
         return (q, remaining, done, kh), (log, obs)
 
@@ -701,13 +728,13 @@ def _pool_round_frozen(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
     arms, rewards, costs, regrets = _pad_step_axis(
         env.horizon - h_max, arms, rewards, costs, regrets)
     return RoundLog(arms, rewards, costs, regrets, round_budget), \
-        q0.dataset, obs
+        env.dataset_of(q0), obs
 
 
-def _stream_play(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
+def _stream_play(policy: PolicyAdapter, env: Any,
                  budget_jitter: float, dataset: Optional[jax.Array],
                  skeys: jax.Array, sidx: jax.Array, state: Any,
-                 params: env_mod.PoolParams, budget_table: jax.Array):
+                 params: Any, budget_table: jax.Array):
     """vmap B frozen-state rounds over the stream axis.
 
     Each stream selects against ``policy.fork(state, b)`` — identity for
@@ -718,8 +745,9 @@ def _stream_play(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
     mesh's ``"seed"`` axis, state/params/table replicated."""
 
     def one(kk, i, st, pp, tb):
-        return _pool_round_frozen(policy, env, pp, policy.fork(st, i), kk,
-                                  tb, budget_jitter, dataset)
+        return _scenario_round_frozen(policy, env, pp,
+                                      policy.fork(st, i), kk, tb,
+                                      budget_jitter, dataset)
 
     return jax.vmap(one, in_axes=(0, 0, None, None, None))(
         skeys, sidx, state, params, budget_table)
@@ -727,7 +755,7 @@ def _stream_play(policy: PolicyAdapter, env: env_mod.CalibratedPoolEnv,
 
 @functools.lru_cache(maxsize=64)
 def _jitted_multistream_chunk(spec: PolicySpec,
-                              env: env_mod.CalibratedPoolEnv, alpha: float,
+                              env: Any, alpha: float,
                               lam: float, horizon_t: int, c_max: float,
                               seed_key: int, budget_jitter: float,
                               dataset: Optional[int], streams: int,
@@ -765,7 +793,7 @@ def _jitted_multistream_chunk(spec: PolicySpec,
 def run_pool_multistream(policy=None, *, policy_name=None,
                          rounds: int = 1000,
                          streams: int = 8, seed: int = 0,
-                         env: Optional[env_mod.CalibratedPoolEnv] = None,
+                         env: Any = None,
                          base_budget=1e-3, budget_jitter: float = 0.05,
                          dataset: Optional[int] = None,
                          alpha: float = 0.675, lam: float = 0.45,
@@ -789,7 +817,7 @@ def run_pool_multistream(policy=None, *, policy_name=None,
     ``sink.finalize()`` when a custom sink is passed ((T, B, …) arrays).
     """
     spec = policy_mod.resolve_policy_arg(policy, policy_name)
-    env = env or env_mod.CalibratedPoolEnv()
+    env = _resolve_env(env)
     if spec.name == "voting":
         raise ValueError("voting is stateless — multi-stream batching does "
                          "not apply; use run_pool_experiment")
@@ -815,7 +843,7 @@ def run_pool_multistream(policy=None, *, policy_name=None,
             f"shard='auto' or a divisible stream width")
     policy_ad, chunk_fn = _jitted_multistream_chunk(
         spec, env, alpha, lam, rounds * streams * env.horizon,
-        _pool_c_max(env), seed if spec.select_uses_seed else 0,
+        env.max_cost(), seed if spec.select_uses_seed else 0,
         budget_jitter, dataset, streams, ndev, linucb.resolved_backend())
     state = policy_ad.init()
     table = _pool_budget_table(base_budget, env.num_datasets, budgeted)

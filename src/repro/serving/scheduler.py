@@ -44,6 +44,12 @@ Compiled routing/update programs are cached at module level keyed on
 ``(spec, scale, backend)`` — two schedulers with the same spec share
 programs; two differently-configured same-name specs can never collide.
 
+Budgets can be env-spec'd: pass ``budget_env=`` (an environment instance
+or :class:`~repro.core.scenario.EnvSpec`) and :meth:`BanditScheduler.route`
+derives per-request ``remaining`` budgets from the env's cost model via
+:func:`env_budget_table` (cached on the hashable env spec) whenever the
+caller supplies none.
+
 This is the deployment face of the framework: ``examples/serve_multi_llm.py``
 drives it end-to-end with real (reduced) JAX models as arms.
 """
@@ -61,8 +67,36 @@ import numpy as np
 
 from repro.core import linucb, router
 from repro.core import policy as policy_mod
+from repro.core import scenario as scenario_mod
 from repro.engine import driver as engine_driver
 from repro.serving.engine import Engine
+
+
+@functools.lru_cache(maxsize=32)
+def env_budget_table(env: Union[str, scenario_mod.EnvSpec, object],
+                     seed: int = 0) -> np.ndarray:
+    """Per-dataset per-round budget table derived from an environment's
+    cost model (no experiment run needed).
+
+    For each of the env's dataset streams, the budget is the env's mean
+    expected per-arm cost at a fresh round state × the interaction
+    horizon — "an average arm, every step", the deployment analogue of
+    the paper's greedy-avg-cost budget protocol when no greedy reference
+    run exists yet. Cached per ``(env, seed)``: the table is keyed on the
+    hashable env spec like every other env-derived program, so two
+    schedulers over the same env share it and two differently-configured
+    envs can never collide. Returns a ``(num_datasets,)`` float32 array.
+    """
+    env = scenario_mod.resolve_env_arg(env)
+    key = jax.random.PRNGKey(seed)
+    params = env.make(key)
+    rows = []
+    for ds in range(env.num_datasets):
+        q = env.reset(params, jax.random.fold_in(key, ds),
+                      jnp.int32(ds) if env.num_datasets > 1 else None)
+        rows.append(float(jnp.mean(env.arm_costs(params, q)))
+                    * env.horizon)
+    return np.asarray(rows, np.float32)
 
 
 @dataclasses.dataclass
@@ -147,13 +181,19 @@ class BanditScheduler:
                  max_new_tokens: int = 16,
                  policy: Union[str, policy_mod.PolicySpec] = "greedy_linucb",
                  backend: Optional[str] = None, horizon_t: int = 100_000,
+                 budget_env: Union[None, scenario_mod.EnvSpec,
+                                   object] = None,
                  use_kernels: Optional[bool] = None):
         """``backend``: pin this scheduler's routing to one linucb backend
         ("ref" | "pallas" | "pallas_interpret"); ``None`` follows the
         global ``linucb.set_backend`` / ``REPRO_LINUCB_BACKEND`` switch,
-        resolved per call. ``use_kernels`` is the deprecated spelling of
-        the kernel path (True ≙ backend="pallas" on TPU,
-        "pallas_interpret" on CPU)."""
+        resolved per call. ``budget_env``: an environment (instance or
+        :class:`~repro.core.scenario.EnvSpec`) whose cost model supplies
+        default per-request budgets — :meth:`route` then derives
+        ``remaining`` from :func:`env_budget_table` (per ``datasets=``
+        row) when the caller passes none. ``use_kernels`` is the
+        deprecated spelling of the kernel path (True ≙ backend="pallas"
+        on TPU, "pallas_interpret" on CPU)."""
         if use_kernels is not None:
             warnings.warn("use_kernels is deprecated; pass backend="
                           "'pallas'/'pallas_interpret' (or set the global "
@@ -170,6 +210,8 @@ class BanditScheduler:
                                        alpha=alpha, lam=lam)
         self.max_new_tokens = max_new_tokens
         self._backend_override = backend
+        self.budget_table = (None if budget_env is None
+                             else env_budget_table(budget_env))
         self.spec = policy_mod.as_spec(policy)
         c_max = max((a.cost_per_token for a in self.arms), default=1.0) \
             * max_new_tokens
@@ -185,21 +227,31 @@ class BanditScheduler:
 
     def route(self, contexts: np.ndarray, *,
               steps: Optional[np.ndarray] = None,
-              remaining: Optional[np.ndarray] = None) -> np.ndarray:
+              remaining: Optional[np.ndarray] = None,
+              datasets: Optional[np.ndarray] = None) -> np.ndarray:
         """Batched arm selection for (B,d) request contexts.
 
         ``steps``: optional (B,) refinement step per request (multi-step
         policies); ``remaining``: optional (B,) remaining budget per
-        request (budget/knapsack policies; +inf when omitted). Returns
+        request (budget/knapsack policies). When ``remaining`` is
+        omitted, budgets fall back to the scheduler's env-derived
+        ``budget_table`` (``budget_env=``) — indexed per request by
+        ``datasets`` (row 0 when omitted) — or +inf without one. Returns
         (B,) selected arms; −1 means the policy opted out of the request.
         """
         xs = jnp.asarray(contexts, jnp.float32)
         b = xs.shape[0]
         steps_j = (jnp.zeros((b,), jnp.int32) if steps is None
                    else jnp.asarray(steps, jnp.int32))
-        rem_j = (jnp.full((b,), jnp.inf, jnp.float32) if remaining is None
-                 else jnp.broadcast_to(
-                     jnp.asarray(remaining, jnp.float32), (b,)))
+        if remaining is None and self.budget_table is not None:
+            rows = (jnp.zeros((b,), jnp.int32) if datasets is None
+                    else jnp.asarray(datasets, jnp.int32))
+            rem_j = jnp.asarray(self.budget_table)[rows]
+        else:
+            rem_j = (jnp.full((b,), jnp.inf, jnp.float32)
+                     if remaining is None
+                     else jnp.broadcast_to(
+                         jnp.asarray(remaining, jnp.float32), (b,)))
         arm = self._route(self.state, xs, steps_j, rem_j,
                           backend=self._backend())
         return np.asarray(arm)
