@@ -19,9 +19,9 @@ import sys
 import time
 
 from benchmarks import (appendix_context, bench_driver, bench_kernels,
-                        fig2_budget_cdf, fig3_budget_sensitivity,
-                        table1_2_accuracy_cost, table3_position,
-                        theorem_regret)
+                        bench_serving_faults, fig2_budget_cdf,
+                        fig3_budget_sensitivity, table1_2_accuracy_cost,
+                        table3_position, theorem_regret)
 from benchmarks import common
 
 
@@ -47,6 +47,8 @@ def main() -> None:
          lambda p: p["linucb_score_B128_K6_d384"]),
         ("bench_driver", bench_driver,
          lambda p: p["pool_d64_sweep6_greedy_linucb"]["speedup"]),
+        ("bench_serving_faults", bench_serving_faults,
+         lambda p: p["regret_ratio"]),
     ]
 
     for name, mod, derive in suites:

@@ -310,6 +310,12 @@ def batch_update(state: LinUCBState, arms: jax.Array, xs: jax.Array,
     d, kd = state.a_inv_t.shape
     k = state.b.shape[0]
     arms = jnp.asarray(arms, jnp.int32)
+    if arms.shape[0] == 0:
+        # static-shape guard: an empty fold is the identity — the
+        # selected-block kernel's gather grid has no degenerate-0 case
+        # to trace and the delayed-feedback path may legitimately flush
+        # nothing (first dropped batch of a fault-heavy round)
+        return state
     m = None if mask is None else jnp.asarray(mask, state.b.dtype)
     row_gate = jnp.ones(arms.shape, state.b.dtype) if m is None else m
     backend = resolved_backend()

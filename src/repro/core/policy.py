@@ -116,6 +116,38 @@ def select_from_parts(parts: ScoreParts) -> jax.Array:
     return jnp.where(jnp.any(parts.feasible, axis=-1), arm, -1)
 
 
+def masked_select(policy: PolicyAdapter, state: Any, plan: Any,
+                  x: jax.Array, h: jax.Array, rem: jax.Array,
+                  arm_mask: jax.Array) -> jax.Array:
+    """Select with a DYNAMIC (K,) feasibility mask composed in.
+
+    The serving runtime's graceful-degradation path: its arm-health
+    tracker quarantines sick arms by passing ``arm_mask`` through here at
+    route time. Score-decomposed policies AND the mask into
+    :attr:`ScoreParts.feasible` — the same mask :class:`BudgetGate`
+    tightens — so every registered policy (combinator stacks included)
+    inherits quarantine semantics for free, with the block-inverse
+    scoring still the one fused kernel launch. Policies whose select is
+    not score-shaped (plan-based knapsack, the stochastic baselines) get
+    their chosen arm vetoed to −1 when it is masked; the caller reroutes.
+
+    With an all-true mask the AND is the identity and the veto never
+    fires, so behavior matches the plain select — but score-decomposed
+    policies rescore via ``mean + bonus`` recomposition, which is not
+    bitwise equal to a fused score on exact ties. Callers that need the
+    legacy trace bit-for-bit (the scheduler's default path) pass no mask
+    at all instead of an all-true one.
+    """
+    if policy.score_parts is not None:
+        parts = policy.score_parts(state, plan, x, h, rem)
+        return select_from_parts(ScoreParts(
+            parts.mean, parts.bonus, parts.feasible & arm_mask))
+    arm = jnp.asarray(policy.select(state, plan, x, h, rem), jnp.int32)
+    k = arm_mask.shape[-1]
+    ok = (arm >= 0) & arm_mask[jnp.clip(arm, 0, k - 1)]
+    return jnp.where(ok, arm, -1)
+
+
 @dataclasses.dataclass(frozen=True)
 class BuildContext:
     """Runtime scale the driver/scheduler knows at build time (spec args

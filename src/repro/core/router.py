@@ -30,12 +30,13 @@ This module is the stable import surface over two layers:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policy as policy_api
 from repro.core.policy import (PolicyAdapter, PolicySpec, ScoreParts,  # noqa: F401 — re-exported API
                                as_spec, build_policy, make_policy)
 from repro.core.scenario import (EnvSpec, available_envs,  # noqa: F401 — re-exported API
@@ -115,7 +116,8 @@ class ExperimentResult:
 # ---------------------------------------------------------------------------
 
 def policy_route_batch(policy: PolicyAdapter, state: Any, xs: jax.Array,
-                       steps: jax.Array, remaining: jax.Array) -> jax.Array:
+                       steps: jax.Array, remaining: jax.Array,
+                       arm_mask: Optional[jax.Array] = None) -> jax.Array:
     """Batched request routing through a :class:`PolicyAdapter`.
 
     The serving scheduler's generic arm-selection path — one call routes a
@@ -126,6 +128,13 @@ def policy_route_batch(policy: PolicyAdapter, state: Any, xs: jax.Array,
     (+inf = unconstrained). Returns (B,) selected arms (−1 = policy opted
     out, e.g. no budget-feasible arm).
 
+    ``arm_mask``: optional (K,) bool feasibility mask shared by the whole
+    batch — the serving runtime's arm-health quarantine gate, composed
+    into every policy's select via :func:`core.policy.masked_select`
+    (score-decomposed policies AND it into ``ScoreParts.feasible``;
+    other selects get masked picks vetoed to −1). ``None`` (the default)
+    traces the exact legacy select — bit-identical routing.
+
     The policy state is shared read-only across the batch; ``plan`` and
     ``select`` are vmapped over requests, so the LinUCB scoring inside
     runs under whichever backend (``linucb.set_backend``) is in effect at
@@ -135,7 +144,11 @@ def policy_route_batch(policy: PolicyAdapter, state: Any, xs: jax.Array,
 
     def one(x, h, rem):
         plan = policy.plan(state, x, rem)
-        return jnp.asarray(policy.select(state, plan, x, h, rem), jnp.int32)
+        if arm_mask is None:
+            return jnp.asarray(policy.select(state, plan, x, h, rem),
+                               jnp.int32)
+        return policy_api.masked_select(policy, state, plan, x, h, rem,
+                                        arm_mask)
 
     return jax.vmap(one)(xs, steps, remaining)
 

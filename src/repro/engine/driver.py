@@ -678,8 +678,16 @@ def fold_observations(policy: PolicyAdapter, state: Any, arms: jax.Array,
 
     ``masks``: (B,) 0/1 row gates — masked rows contribute nothing (how
     never-executed padded steps are dropped with a static op graph).
+
+    Empty/partial-batch contract: a B = 0 batch returns the state
+    UNCHANGED without tracing any update op (the shape is static, so the
+    guard is trace-safe), and an all-masked batch is a bitwise state
+    no-op — the fault-tolerant serving loop hits both on its first
+    dropped feedback batch, and neither may perturb the posterior.
     """
     arms = jnp.asarray(arms, jnp.int32)
+    if arms.shape[0] == 0:
+        return state
     if isinstance(state, linucb.LinUCBState):
         return linucb.batch_update(state, arms, xs, rewards, mask=masks)
     if isinstance(state, budget_mod.BudgetState):

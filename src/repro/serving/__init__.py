@@ -1,3 +1,58 @@
-from repro.serving import engine, scheduler
+"""Serving layer: online routing of live traffic through the bandit.
 
-__all__ = ["engine", "scheduler"]
+* :mod:`repro.serving.scheduler` — :class:`BanditScheduler`: the
+  synchronous routing/feedback core (jitted scoring over any registered
+  policy, batched posterior folds, per-arm budget accounting).
+* :mod:`repro.serving.engine` — request/response glue for driving the
+  scheduler from an application loop.
+* :mod:`repro.serving.runtime` — the fault-tolerant async loop (below).
+* :mod:`repro.serving.faults` — seeded fault injection + bursty arrival
+  traces + a synthetic arm pool for chaos tests and benchmarks.
+
+Fault tolerance & delayed feedback
+----------------------------------
+
+:class:`~repro.serving.runtime.ServingRuntime` turns the scheduler into
+a deployment-shaped event loop that survives misbehaving arms:
+
+* **Retry** — a failed dispatch (timeout / transient error) retries the
+  same arm with capped exponential backoff and deterministic jitter
+  (:class:`~repro.serving.runtime.RetryPolicy`: ``max_attempts``,
+  ``base_delay_s``, ``mult``, ``max_delay_s``, ``jitter``), bounded by
+  the request's end-to-end deadline. When an arm's retries are exhausted
+  — or the arm is quarantined mid-backoff — the request is re-routed to
+  the best surviving arm (at most ``max_reroutes`` times) before it is
+  failed.
+* **Quarantine** — an :class:`~repro.serving.runtime.ArmHealthTracker`
+  keeps a sliding window of outcomes per arm
+  (:class:`~repro.serving.runtime.HealthConfig`: ``window``,
+  ``fail_threshold``, ``min_samples``); an arm whose failure/timeout
+  rate crosses the threshold is quarantined. The quarantine set is
+  composed into the UCB feasibility mask — the same mask ``BudgetGate``
+  tightens — via ``scheduler.route(arm_mask=…)``, so EVERY registered
+  policy inherits degradation for free. Quarantined arms are probed
+  with one real request per backoff interval (``probe_interval_s`` ×
+  ``probe_backoff``, capped at ``max_probe_interval_s``); a successful
+  probe re-admits the arm with a cleared window.
+* **Fallback** — a request whose policy opts out (−1) or that exhausts
+  its arms falls back to the cheapest surviving arm; if every arm is
+  quarantined, the runtime routes over the full pool rather than drop
+  traffic (counted as ``mask_bypass``).
+* **Delayed feedback** — rewards arrive late and out of order into a
+  device-resident :class:`~repro.serving.runtime.FeedbackRing` and fold
+  into the posterior through the mask-gated batched update; feedback
+  that never arrives is masked OUT of the fold (missing data), never
+  folded as zero reward. ``report.lost_feedback == 0`` is the loop's
+  conservation invariant: everything that arrives is folded.
+
+Chaos is reproducible: every fault, retry-jitter and reward draw derives
+from ``np.random.SeedSequence`` keyed on the
+:class:`~repro.serving.faults.FaultSpec` seed and the (arm, uid,
+attempt) coordinates — see :mod:`repro.serving.faults` for the knobs
+(``timeout_rate``, ``error_rate``, ``outages`` windows,
+``drop_feedback_rate``, latency spikes). ``examples/serve_faulty.py``
+runs the full story end to end.
+"""
+from repro.serving import engine, faults, runtime, scheduler
+
+__all__ = ["engine", "faults", "runtime", "scheduler"]

@@ -1,0 +1,262 @@
+"""Deterministic seeded fault injection for the serving runtime.
+
+Real arms (black-box LLM endpoints) time out, fail transiently, go down
+for whole windows, and return their feedback seconds late — the paper's
+live-deployment setting that the synchronous scheduler tests never
+exercise. This module wraps any arm callable in a seeded fault layer so
+the fault-tolerant runtime (:mod:`repro.serving.runtime`) can be driven,
+tested, and benchmarked under REPRODUCIBLE chaos: every draw derives
+from ``np.random.SeedSequence((seed, arm, uid, attempt))``, so a fault
+schedule is a pure function of the spec — two runs with the same spec
+and trace see byte-identical faults, retries included (a retry is a new
+``attempt`` and re-draws its own fate).
+
+Knobs (:class:`FaultSpec`, all per-arm — scalars broadcast):
+
+* ``timeout_rate`` — probability a call never answers inside the
+  runtime's dispatch timeout (detected at ``timeout_s``, not at the
+  call's true latency).
+* ``error_rate`` — probability of a fast transient error (connection
+  reset / 5xx), detected after a short error latency.
+* ``outages`` — ``(arm, t0, t1)`` windows during which EVERY call to
+  that arm times out: a dead host, the graceful-degradation scenario
+  (quarantine → reroute → probe → re-admission).
+* ``base_latency_s`` / ``latency_jitter`` / ``spike_rate`` /
+  ``spike_mult`` — healthy service latency and heavy-tail spikes (a
+  spiked call can exceed the dispatch timeout and be observed as a
+  timeout even with ``timeout_rate = 0``).
+* ``feedback_delay_s`` / ``drop_feedback_rate`` — reward feedback
+  arrives exponentially late (hence out of order across requests) or
+  never. Dropped feedback must be MASKED out of the posterior fold, not
+  folded as zero reward — the runtime's ring buffer owns that contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+PerArm = Union[float, Tuple[float, ...]]
+
+OK = "ok"
+TIMEOUT = "timeout"
+ERROR = "error"
+
+
+def _per_arm(val: PerArm, num_arms: int, name: str) -> np.ndarray:
+    arr = np.broadcast_to(np.asarray(val, np.float64), (num_arms,))
+    if np.any(arr < 0.0):
+        raise ValueError(f"{name} must be non-negative, got {val!r}")
+    return arr.copy()
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded per-arm fault schedule (hashable; scalars broadcast to K).
+
+    The default spec injects nothing — wrapping arms in a default
+    ``FaultSpec`` is behaviourally a no-op apart from the (deterministic)
+    latency model, so the no-fault benchmark baseline runs through the
+    SAME code path as the chaos runs.
+    """
+
+    seed: int = 0
+    timeout_rate: PerArm = 0.0
+    error_rate: PerArm = 0.0
+    drop_feedback_rate: PerArm = 0.0
+    base_latency_s: PerArm = 0.02
+    latency_jitter: float = 0.5      # ± fraction of base, uniform
+    spike_rate: PerArm = 0.0         # P[latency × spike_mult]
+    spike_mult: float = 10.0
+    error_latency_s: float = 0.005   # transient errors fail fast
+    feedback_delay_s: PerArm = 0.05  # mean of the exponential reward lag
+    outages: Tuple[Tuple[int, float, float], ...] = ()  # (arm, t0, t1)
+
+    def __post_init__(self):
+        for knob in ("timeout_rate", "error_rate", "drop_feedback_rate"):
+            arr = np.atleast_1d(np.asarray(getattr(self, knob), np.float64))
+            if np.any((arr < 0.0) | (arr > 1.0)):
+                raise ValueError(f"{knob} must lie in [0, 1], "
+                                 f"got {getattr(self, knob)!r}")
+        for win in self.outages:
+            arm, t0, t1 = win
+            if t1 <= t0:
+                raise ValueError(f"outage window {win!r} is empty "
+                                 f"(t1 must exceed t0)")
+
+    def in_outage(self, arm: int, now: float) -> bool:
+        return any(a == arm and t0 <= now < t1 for a, t0, t1 in self.outages)
+
+
+class ArmOutcome(NamedTuple):
+    """One drawn fate for one (arm, uid, attempt) call."""
+
+    status: str              # OK | TIMEOUT | ERROR
+    latency_s: float         # service latency (OK) or failure-detect lag
+    feedback_delay_s: float  # reward lag after the response lands
+    feedback_dropped: bool   # reward never arrives (mask it, don't zero it)
+
+
+class FaultInjector:
+    """Draws deterministic :class:`ArmOutcome`\\ s from a :class:`FaultSpec`.
+
+    Stateless apart from the spec: the draw for ``(arm, uid, attempt)``
+    never depends on call order, so replaying a trace — or retrying the
+    same request — reproduces the schedule exactly.
+    """
+
+    def __init__(self, spec: FaultSpec, num_arms: int) -> None:
+        self.spec = spec
+        self.num_arms = num_arms
+        self._timeout = _per_arm(spec.timeout_rate, num_arms, "timeout_rate")
+        self._error = _per_arm(spec.error_rate, num_arms, "error_rate")
+        self._drop = _per_arm(spec.drop_feedback_rate, num_arms,
+                              "drop_feedback_rate")
+        self._base_lat = _per_arm(spec.base_latency_s, num_arms,
+                                  "base_latency_s")
+        self._spike = _per_arm(spec.spike_rate, num_arms, "spike_rate")
+        self._fb_delay = _per_arm(spec.feedback_delay_s, num_arms,
+                                  "feedback_delay_s")
+
+    def rng(self, *entropy: int) -> np.random.Generator:
+        """A generator keyed on (spec seed, \\*entropy) — the runtime uses
+        this for every auxiliary draw (retry jitter, rewards) so the whole
+        serving loop is one deterministic function of the spec."""
+        return np.random.default_rng(
+            np.random.SeedSequence((abs(int(self.spec.seed)),)
+                                   + tuple(abs(int(e)) for e in entropy)))
+
+    def draw(self, arm: int, uid: int, attempt: int,
+             now: float) -> ArmOutcome:
+        spec = self.spec
+        rng = self.rng(1, arm, uid, attempt)
+        u_fate, u_lat, u_spike, u_drop = rng.random(4)
+        fb_delay = float(rng.exponential(self._fb_delay[arm]))
+        dropped = bool(u_drop < self._drop[arm])
+
+        if spec.in_outage(arm, now):
+            # dead host: unresponsive for the whole window — the caller
+            # observes it at its dispatch timeout, never sooner
+            return ArmOutcome(TIMEOUT, math.inf, fb_delay, dropped)
+        if u_fate < self._error[arm]:
+            return ArmOutcome(ERROR, float(spec.error_latency_s),
+                              fb_delay, dropped)
+        if u_fate < self._error[arm] + self._timeout[arm]:
+            return ArmOutcome(TIMEOUT, math.inf, fb_delay, dropped)
+
+        lat = self._base_lat[arm] * (
+            1.0 + spec.latency_jitter * (2.0 * u_lat - 1.0))
+        if u_spike < self._spike[arm]:
+            lat *= spec.spike_mult
+        return ArmOutcome(OK, float(max(lat, 1e-6)), fb_delay, dropped)
+
+
+# ---------------------------------------------------------------------------
+# Bursty arrival process (trace replay for the serving benchmarks)
+# ---------------------------------------------------------------------------
+
+def bursty_arrivals(*, t_end: float, rate: float, burst_rate: float = None,
+                    burst_dwell_s: float = 5.0, calm_dwell_s: float = 20.0,
+                    seed: int = 0) -> np.ndarray:
+    """Markov-modulated Poisson arrival times on [0, t_end).
+
+    Two states — calm (``rate`` arrivals/s) and burst (``burst_rate``,
+    default 8×) — with exponential dwell times. The return is a sorted
+    float64 array of arrival times: the trace-replay workload for the
+    fault benchmarks, deterministic in ``seed`` so fault and no-fault
+    runs see MATCHED traffic.
+    """
+    if burst_rate is None:
+        burst_rate = 8.0 * rate
+    if rate <= 0 or burst_rate <= 0 or t_end <= 0:
+        raise ValueError("rate, burst_rate and t_end must be positive")
+    rng = np.random.default_rng(np.random.SeedSequence((abs(int(seed)), 2)))
+    times = []
+    t, bursting = 0.0, False
+    while t < t_end:
+        dwell = float(rng.exponential(
+            burst_dwell_s if bursting else calm_dwell_s))
+        seg_end = min(t + dwell, t_end)
+        lam = burst_rate if bursting else rate
+        # Poisson arrivals inside the segment: exponential gaps
+        tt = t + float(rng.exponential(1.0 / lam))
+        while tt < seg_end:
+            times.append(tt)
+            tt += float(rng.exponential(1.0 / lam))
+        t, bursting = seg_end, not bursting
+    return np.asarray(times, np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic arm pool (reward substrate for fault tests/benchmarks)
+# ---------------------------------------------------------------------------
+
+class SyntheticArmPool:
+    """K black-box arms with a shared linear-logistic quality model.
+
+    Arm ``k`` answers a ``(d,)`` context ``x`` correctly with probability
+    ``sigmoid(⟨x, w_k⟩)``; per-arm costs are fixed. The pool exposes the
+    ``oracle`` the regret accounting needs (expected per-arm reward) and
+    the per-arm callables the runtime dispatches to — the minimal
+    stand-in for a served model pool with a KNOWN best arm per context.
+    """
+
+    def __init__(self, num_arms: int, dim: int, *, seed: int = 0,
+                 costs: Optional[Sequence[float]] = None,
+                 scale: float = 3.0) -> None:
+        rng = np.random.default_rng(np.random.SeedSequence((abs(int(seed)),
+                                                            3)))
+        w = rng.standard_normal((num_arms, dim))
+        self.weights = (scale * w / np.linalg.norm(w, axis=1,
+                                                   keepdims=True)
+                        ).astype(np.float32)
+        self.costs = (np.linspace(1.0, 2.0, num_arms).astype(np.float32)
+                      * 1e-4 if costs is None
+                      else np.asarray(costs, np.float32))
+        self.num_arms, self.dim = num_arms, dim
+
+    def oracle(self, context: np.ndarray) -> np.ndarray:
+        """(K,) expected reward per arm for one context."""
+        z = self.weights @ np.asarray(context, np.float32)
+        return 1.0 / (1.0 + np.exp(-z))
+
+    def best_arm_overall(self, contexts: np.ndarray) -> int:
+        """The arm with the highest mean oracle reward over a context
+        batch — the natural target for an outage-window stress test."""
+        z = np.asarray(contexts, np.float32) @ self.weights.T
+        return int(np.argmax(np.mean(1.0 / (1.0 + np.exp(-z)), axis=0)))
+
+    def arm_fn(self, arm: int) -> Callable:
+        """The arm's callable: ``(context, rng) -> (reward, cost)``."""
+        def call(context: np.ndarray, rng: np.random.Generator):
+            p = float(self.oracle(context)[arm])
+            return float(rng.random() < p), float(self.costs[arm])
+        return call
+
+    def arm_fns(self):
+        return [self.arm_fn(k) for k in range(self.num_arms)]
+
+    def contexts(self, n: int, *, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(np.random.SeedSequence((abs(int(seed)),
+                                                            4)))
+        x = rng.standard_normal((n, self.dim)).astype(np.float32)
+        return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+    def warmup(self, scheduler, n: int = 256, *, seed: int = 100) -> None:
+        """Fold ``n`` offline (arm, context, reward) observations into the
+        scheduler's posterior — round-robin arms, Bernoulli(oracle)
+        rewards — so a serving run starts from a warm routing policy
+        (the realistic deployment shape: offline data precedes live
+        traffic, and the outage stress actually hits the learned-best
+        arm)."""
+        rng = np.random.default_rng(np.random.SeedSequence((abs(int(seed)),
+                                                            6)))
+        xs = self.contexts(n, seed=seed + 1)
+        arms = np.arange(n, dtype=np.int32) % self.num_arms
+        probs = 1.0 / (1.0 + np.exp(-(xs @ self.weights.T)))
+        rewards = (rng.random(n) < probs[np.arange(n), arms]
+                   ).astype(np.float32)
+        costs = self.costs[arms].astype(np.float32)
+        scheduler.feedback_batch(arms, xs, rewards, costs)

@@ -1,0 +1,726 @@
+"""Fault-tolerant async serving loop: the deployment face of the paper.
+
+The scheduler (:mod:`repro.serving.scheduler`) assumes every routed call
+succeeds instantly and feedback arrives synchronously, in order. Real
+arms time out, fail transiently, go down for whole windows, and return
+rewards seconds late. This module is the event-driven runtime that
+closes the gap:
+
+* **Admission control / backpressure** — a bounded queue; submissions
+  beyond ``max_queue`` are rejected (counted), never silently dropped.
+* **Continuous batching** — waiting requests are accumulated and routed
+  through the scheduler's EXISTING jitted scoring path in fixed-width
+  batches (padded to ``max_batch`` so one compiled program serves every
+  fill level).
+* **Delayed feedback** — rewards land in a device-resident
+  :class:`FeedbackRing` whenever they arrive, late and out-of-order
+  included, and fold through the mask-gated
+  ``fold_observations`` → ``linucb.batch_update`` selected-block kernel
+  (one compiled fold per ring flush). Feedback that never arrives is
+  MASKED out of the fold — a dropped reward is missing data, not zero
+  reward.
+* **Retry / backoff / deadlines** — failed dispatches retry with capped
+  exponential backoff and deterministic jitter, under a per-request
+  deadline; requests that exhaust an arm's retries are re-routed to the
+  best surviving arm.
+* **Graceful arm degradation** — a sliding-window health tracker
+  quarantines arms whose failure/timeout rate crosses a threshold. The
+  quarantine composes into the UCB feasibility mask (the same mask
+  ``BudgetGate`` uses, via :func:`core.policy.masked_select`), so every
+  registered policy inherits it for free; the bandit keeps routing on
+  its (stale) posteriors over the surviving arms — the frozen-snapshot
+  staleness regime already priced at ~1.0× regret for small widths.
+  Quarantined arms are probed for re-admission on a backoff schedule.
+
+Everything is driven by a **virtual-clock event loop** over a seeded
+:class:`~repro.serving.faults.FaultSpec`, so chaos runs are exactly
+reproducible: the same spec and trace produce the same retries, the same
+quarantine windows, and the same folded posterior, byte for byte.
+Wall-clock is only measured (routing latency, sustained throughput),
+never used for control flow.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import heapq
+import itertools
+import math
+import time
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Set, Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import faults as faults_mod
+from repro.serving.faults import ERROR, OK, TIMEOUT, FaultInjector, FaultSpec
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff with deterministic jitter.
+
+    Attempt ``a`` (1-based) against one arm waits
+    ``min(base · mult^(a−1), max) · (1 ± jitter·u)`` before relaunching;
+    after ``max_attempts`` the request is re-routed to a surviving arm
+    (at most ``max_reroutes`` times) before failing.
+    """
+
+    max_attempts: int = 3
+    base_delay_s: float = 0.05
+    mult: float = 2.0
+    max_delay_s: float = 1.0
+    jitter: float = 0.25
+    max_reroutes: int = 2
+
+    def delay(self, attempt: int, u: float) -> float:
+        base = min(self.base_delay_s * self.mult ** (attempt - 1),
+                   self.max_delay_s)
+        return base * (1.0 + self.jitter * (2.0 * u - 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Sliding-window arm-health policy (quarantine / probe / re-admit)."""
+
+    window: int = 24            # outcomes per arm in the sliding window
+    fail_threshold: float = 0.5  # quarantine at ≥ this failure rate …
+    min_samples: int = 6         # … once the window holds this many
+    probe_interval_s: float = 1.0
+    probe_backoff: float = 2.0   # interval multiplier per failed probe
+    max_probe_interval_s: float = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    max_queue: int = 512         # admission bound (backpressure)
+    max_batch: int = 64          # continuous-batch width per routing call
+    batch_window_s: float = 0.0  # accumulate arrivals this long per batch
+    timeout_s: float = 0.25      # per-dispatch timeout (failure detection)
+    deadline_s: float = 8.0      # default per-request end-to-end deadline
+    ring_capacity: int = 128     # feedback ring slots per fold
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
+
+
+# ---------------------------------------------------------------------------
+# Requests / results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeRequest:
+    uid: int
+    context: np.ndarray               # (d,) routing features
+    arrival_s: float = 0.0
+    deadline_s: Optional[float] = None  # None → RuntimeConfig.deadline_s
+
+
+@dataclasses.dataclass
+class ServedResult:
+    uid: int
+    arm: int
+    reward: float
+    cost: float
+    latency_s: float        # end-to-end virtual latency (queue + retries)
+    attempts: int
+    rerouted: bool
+    probe: bool
+
+
+@dataclasses.dataclass
+class FailedRequest:
+    uid: int
+    reason: str             # "deadline" | "exhausted" | "no_feasible_arm"
+    time_s: float
+    attempts: int
+
+
+class HealthEvent(NamedTuple):
+    time_s: float
+    arm: int
+    kind: str               # "quarantine" | "probe" | "readmit"
+
+
+# ---------------------------------------------------------------------------
+# Arm-health tracker
+# ---------------------------------------------------------------------------
+
+class ArmHealthTracker:
+    """Sliding-window failure rates → quarantine → probe → re-admission.
+
+    ``mask()`` is the (K,) bool feasibility gate the runtime passes to
+    ``scheduler.route(arm_mask=…)`` — quarantined arms are masked out of
+    every policy's feasible set. A quarantined arm is probed (one real
+    request) once per backoff interval; a successful probe re-admits it
+    with a cleared window, a failed one doubles the wait.
+    """
+
+    def __init__(self, num_arms: int, cfg: HealthConfig) -> None:
+        self.cfg = cfg
+        self.num_arms = num_arms
+        self._window = [collections.deque(maxlen=cfg.window)
+                        for _ in range(num_arms)]
+        self._quarantined = np.zeros(num_arms, bool)
+        self._probing = np.zeros(num_arms, bool)
+        self._next_probe = np.full(num_arms, math.inf)
+        self._interval = np.full(num_arms, cfg.probe_interval_s)
+        self.events: List[HealthEvent] = []
+
+    def mask(self) -> np.ndarray:
+        return ~self._quarantined
+
+    def is_healthy(self, arm: int) -> bool:
+        return not self._quarantined[arm]
+
+    def failure_rate(self, arm: int) -> float:
+        w = self._window[arm]
+        return 1.0 - (sum(w) / len(w)) if w else 0.0
+
+    def record(self, arm: int, ok: bool, now: float) -> None:
+        if self._quarantined[arm]:
+            # stray completions of pre-quarantine dispatches don't
+            # re-judge a quarantined arm; probes own its fate
+            return
+        self._window[arm].append(bool(ok))
+        w = self._window[arm]
+        if (len(w) >= self.cfg.min_samples
+                and self.failure_rate(arm) >= self.cfg.fail_threshold):
+            self._quarantined[arm] = True
+            self._interval[arm] = self.cfg.probe_interval_s
+            self._next_probe[arm] = now + self._interval[arm]
+            self.events.append(HealthEvent(now, arm, "quarantine"))
+
+    def probes_due(self, now: float) -> List[int]:
+        return [a for a in range(self.num_arms)
+                if self._quarantined[a] and not self._probing[a]
+                and now >= self._next_probe[a]]
+
+    def start_probe(self, arm: int, now: float) -> None:
+        self._probing[arm] = True
+        self.events.append(HealthEvent(now, arm, "probe"))
+
+    def record_probe(self, arm: int, ok: bool, now: float) -> None:
+        self._probing[arm] = False
+        if ok:
+            self._quarantined[arm] = False
+            self._window[arm].clear()
+            self._next_probe[arm] = math.inf
+            self.events.append(HealthEvent(now, arm, "readmit"))
+        else:
+            self._interval[arm] = min(
+                self._interval[arm] * self.cfg.probe_backoff,
+                self.cfg.max_probe_interval_s)
+            self._next_probe[arm] = now + self._interval[arm]
+
+    def kind_events(self, kind: str) -> List[HealthEvent]:
+        return [e for e in self.events if e.kind == kind]
+
+
+# ---------------------------------------------------------------------------
+# Device-resident feedback ring
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def _ring_push_program(capacity: int, dim: int):
+    """One jitted slot write per (capacity, dim) — buffers are donated so
+    XLA updates them in place; the ring never round-trips to host."""
+
+    def push(arms, xs, rs, cs, mask, idx, arm, x, r, c):
+        return (arms.at[idx].set(arm), xs.at[idx].set(x),
+                rs.at[idx].set(r), cs.at[idx].set(c),
+                mask.at[idx].set(1.0))
+
+    return jax.jit(push, donate_argnums=(0, 1, 2, 3, 4))
+
+
+class FeedbackRing:
+    """Fixed-capacity device-resident buffer for delayed reward feedback.
+
+    Arrivals (late and out-of-order included) are written into the next
+    slot; when the ring fills — or the loop drains — the whole buffer
+    folds into the posterior through ``fold_fn`` with the slot mask as
+    the row gate, so unfilled/expired slots contribute NOTHING (missing
+    feedback is masked out, never folded as zero reward) and one
+    compiled fold program serves every fill level.
+    """
+
+    def __init__(self, capacity: int, dim: int,
+                 fold_fn: Callable[..., None]) -> None:
+        if capacity < 1:
+            raise ValueError(f"ring capacity must be ≥ 1, got {capacity}")
+        self.capacity, self.dim = int(capacity), int(dim)
+        self._fold = fold_fn
+        self.folded = 0
+        self.flushes = 0
+        self._alloc()
+
+    def _alloc(self) -> None:
+        self._arms = jnp.zeros((self.capacity,), jnp.int32)
+        self._xs = jnp.zeros((self.capacity, self.dim), jnp.float32)
+        self._rs = jnp.zeros((self.capacity,), jnp.float32)
+        self._cs = jnp.zeros((self.capacity,), jnp.float32)
+        self._mask = jnp.zeros((self.capacity,), jnp.float32)
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def push(self, arm: int, x: np.ndarray, reward: float,
+             cost: float) -> None:
+        w = _ring_push_program(self.capacity, self.dim)
+        (self._arms, self._xs, self._rs, self._cs, self._mask) = w(
+            self._arms, self._xs, self._rs, self._cs, self._mask,
+            jnp.int32(self._n), jnp.int32(arm),
+            jnp.asarray(x, jnp.float32), jnp.float32(reward),
+            jnp.float32(cost))
+        self._n += 1
+        if self._n == self.capacity:
+            self.flush()
+
+    def flush(self) -> int:
+        """Fold the buffered feedback (mask-gated) and reset; returns the
+        number of real observations folded."""
+        if self._n == 0:
+            return 0
+        n = self._n
+        self._fold(self._arms, self._xs, self._rs, self._cs, self._mask)
+        self.folded += n
+        self.flushes += 1
+        self._alloc()
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+@dataclasses.dataclass
+class RuntimeReport:
+    admitted: int
+    rejected: int
+    served: List[ServedResult]
+    failed: List[FailedRequest]
+    feedback_emitted: int
+    feedback_arrived: int
+    feedback_dropped: int
+    feedback_folded: int
+    fallback_routed: int
+    rerouted: int
+    mask_bypass: int
+    health_events: List[HealthEvent]
+    latencies_s: np.ndarray      # per served request, virtual end-to-end
+    route_wall_s: np.ndarray     # per routing dispatch, real wall-clock
+    regret: float                # oracle regret (failed = full regret)
+    regret_served: float
+    wall_s: float
+
+    @property
+    def drained(self) -> bool:
+        """Every admitted request reached a terminal state."""
+        return len(self.served) + len(self.failed) == self.admitted
+
+    @property
+    def lost_feedback(self) -> int:
+        """Arrived-but-never-folded feedback (must be zero)."""
+        return self.feedback_arrived - self.feedback_folded
+
+    def summary(self) -> Dict[str, Any]:
+        served = len(self.served)
+        return {
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "served": served,
+            "failed": len(self.failed),
+            "drained": self.drained,
+            "lost_feedback": self.lost_feedback,
+            "feedback": {"emitted": self.feedback_emitted,
+                         "arrived": self.feedback_arrived,
+                         "dropped": self.feedback_dropped,
+                         "folded": self.feedback_folded},
+            "fallback_routed": self.fallback_routed,
+            "rerouted": self.rerouted,
+            "mask_bypass": self.mask_bypass,
+            "quarantines": len([e for e in self.health_events
+                                if e.kind == "quarantine"]),
+            "readmissions": len([e for e in self.health_events
+                                 if e.kind == "readmit"]),
+            "latency_p50_s": _pct(self.latencies_s, 50),
+            "latency_p99_s": _pct(self.latencies_s, 99),
+            "route_p50_ms": _pct(self.route_wall_s, 50) * 1e3,
+            "route_p99_ms": _pct(self.route_wall_s, 99) * 1e3,
+            "regret": self.regret,
+            "regret_served": self.regret_served,
+            "wall_s": self.wall_s,
+            "user_rounds_per_s": served / self.wall_s if self.wall_s else 0.0,
+        }
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Ticket:
+    """In-flight bookkeeping for one admitted request."""
+
+    req: ServeRequest
+    arm: int = -1
+    arm_attempts: int = 0     # attempts against the current arm
+    total_attempts: int = 0   # across arms (keys the fault draws)
+    reroutes: int = 0
+    tried: Set[int] = dataclasses.field(default_factory=set)
+    probe: bool = False
+    outcome: Optional[faults_mod.ArmOutcome] = None
+    done: bool = False
+
+
+_ARRIVAL, _DISPATCH, _COMPLETE, _FEEDBACK, _RETRY = range(5)
+
+
+class ServingRuntime:
+    """Event-driven fault-tolerant serving loop over a BanditScheduler.
+
+    ``scheduler`` routes (any registered policy; its feasibility mask is
+    how quarantine composes in) and owns the posterior; ``arm_fns`` are
+    the K arm callables ``(context, rng) -> (reward, cost)``; ``faults``
+    wraps them in the seeded injection layer (default: no faults).
+    ``oracle`` (optional) maps a context to (K,) expected rewards for
+    regret accounting — failed requests are charged FULL regret.
+
+    Typical use::
+
+        rt = ServingRuntime(scheduler, pool.arm_fns(),
+                            faults=FaultSpec(timeout_rate=0.2))
+        rt.submit_trace(contexts, arrival_times)
+        report = rt.run()
+        assert report.drained and report.lost_feedback == 0
+    """
+
+    def __init__(self, scheduler, arm_fns: Sequence[Callable], *,
+                 faults: Optional[FaultSpec] = None,
+                 config: Optional[RuntimeConfig] = None,
+                 oracle: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+                 arm_costs: Optional[Sequence[float]] = None) -> None:
+        self.scheduler = scheduler
+        self.arm_fns = list(arm_fns)
+        self.num_arms = len(self.arm_fns)
+        if self.num_arms != len(scheduler.arms):
+            raise ValueError(
+                f"{self.num_arms} arm callables for a scheduler with "
+                f"{len(scheduler.arms)} arms")
+        self.cfg = config if config is not None else RuntimeConfig()
+        self.injector = FaultInjector(faults if faults is not None
+                                      else FaultSpec(), self.num_arms)
+        self.health = ArmHealthTracker(self.num_arms, self.cfg.health)
+        self.ring = FeedbackRing(self.cfg.ring_capacity,
+                                 scheduler.cfg.dim, self._fold)
+        self.oracle = oracle
+        self.arm_costs = np.asarray(
+            [a.cost_per_token for a in scheduler.arms]
+            if arm_costs is None else arm_costs, np.float64)
+
+        self._heap: List[Tuple[float, int, int, Any]] = []
+        self._seq = itertools.count()
+        self._waiting: collections.deque = collections.deque()
+        self._tickets: Dict[int, _Ticket] = {}
+        self._dispatch_pending = False
+        self._now = 0.0
+        self._uid = itertools.count()
+
+        self.admitted = 0
+        self.rejected = 0
+        self.served: List[ServedResult] = []
+        self.failed: List[FailedRequest] = []
+        self.feedback_emitted = 0
+        self.feedback_arrived = 0
+        self.feedback_dropped = 0
+        self.fallback_routed = 0
+        self.rerouted = 0
+        self.mask_bypass = 0
+        self.regret = 0.0
+        self.regret_served = 0.0
+        self._latencies: List[float] = []
+        self._route_wall: List[float] = []
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, context: np.ndarray, *, at: float = 0.0,
+               uid: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Schedule one request arrival at virtual time ``at``; returns
+        its uid. Admission control happens at arrival time."""
+        uid = next(self._uid) if uid is None else uid
+        req = ServeRequest(uid, np.asarray(context, np.float32),
+                           arrival_s=float(at), deadline_s=deadline_s)
+        self._push(float(at), _ARRIVAL, req)
+        return uid
+
+    def submit_trace(self, contexts: np.ndarray,
+                     times: Sequence[float]) -> List[int]:
+        """Replay a whole arrival trace (the bursty-workload entry)."""
+        if len(contexts) != len(times):
+            raise ValueError("contexts and times must align")
+        return [self.submit(x, at=t) for x, t in zip(contexts, times)]
+
+    # -- event machinery --------------------------------------------------
+
+    def _push(self, t: float, kind: int, payload: Any) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def run(self, until: Optional[float] = None) -> RuntimeReport:
+        """Drain the event loop (to ``until``, or fully), flush the ring,
+        and return the report."""
+        handlers = {_ARRIVAL: self._on_arrival,
+                    _DISPATCH: self._on_dispatch,
+                    _COMPLETE: self._on_complete,
+                    _FEEDBACK: self._on_feedback,
+                    _RETRY: self._on_retry}
+        t0 = time.perf_counter()
+        while self._heap and (until is None or self._heap[0][0] <= until):
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self._now = t
+            handlers[kind](payload)
+        self.ring.flush()
+        wall = time.perf_counter() - t0
+        return RuntimeReport(
+            admitted=self.admitted, rejected=self.rejected,
+            served=self.served, failed=self.failed,
+            feedback_emitted=self.feedback_emitted,
+            feedback_arrived=self.feedback_arrived,
+            feedback_dropped=self.feedback_dropped,
+            feedback_folded=self.ring.folded,
+            fallback_routed=self.fallback_routed, rerouted=self.rerouted,
+            mask_bypass=self.mask_bypass,
+            health_events=list(self.health.events),
+            latencies_s=np.asarray(self._latencies, np.float64),
+            route_wall_s=np.asarray(self._route_wall, np.float64),
+            regret=self.regret, regret_served=self.regret_served,
+            wall_s=wall)
+
+    # -- handlers ---------------------------------------------------------
+
+    def _on_arrival(self, req: ServeRequest) -> None:
+        if len(self._waiting) >= self.cfg.max_queue:
+            self.rejected += 1          # backpressure: loud, not lossy
+            return
+        self.admitted += 1
+        self._tickets[req.uid] = _Ticket(req)
+        self._waiting.append(req.uid)
+        if not self._dispatch_pending:
+            self._dispatch_pending = True
+            self._push(self._now + self.cfg.batch_window_s, _DISPATCH, None)
+
+    def _on_dispatch(self, _payload: Any) -> None:
+        self._dispatch_pending = False
+        while self._waiting:
+            batch = [self._waiting.popleft()
+                     for _ in range(min(self.cfg.max_batch,
+                                        len(self._waiting)))]
+            self._route_and_launch(batch)
+
+    def _route_batch(self, contexts: np.ndarray,
+                     mask: np.ndarray) -> np.ndarray:
+        """One padded routing dispatch through the scheduler's jitted
+        scoring path; wall-clock recorded for the latency percentiles."""
+        b = contexts.shape[0]
+        width = self.cfg.max_batch if b > 1 else 1
+        padded = np.zeros((width, contexts.shape[1]), np.float32)
+        padded[:b] = contexts
+        t0 = time.perf_counter()
+        arms = self.scheduler.route(padded, arm_mask=mask)
+        self._route_wall.append(time.perf_counter() - t0)
+        return np.asarray(arms)[:b]
+
+    def _route_and_launch(self, uids: List[int]) -> None:
+        now = self._now
+        mask = self.health.mask()
+        if not mask.any():
+            # total degradation: every arm quarantined. Serve anyway over
+            # the full pool (stale posteriors beat dropping traffic) and
+            # count the bypass loudly.
+            mask = np.ones(self.num_arms, bool)
+            self.mask_bypass += 1
+        contexts = np.stack([self._tickets[u].req.context for u in uids])
+        arms = self._route_batch(contexts, mask)
+
+        # probe assignment: steal one request per due probe
+        probe_for: Dict[int, int] = {}
+        for arm in self.health.probes_due(now):
+            for u, a in zip(uids, arms):
+                if u not in probe_for and a != arm:
+                    probe_for[u] = arm
+                    self.health.start_probe(arm, now)
+                    break
+
+        for uid, arm in zip(uids, arms):
+            t = self._tickets[uid]
+            if uid in probe_for:
+                t.probe = True
+                arm = probe_for[uid]
+            elif arm < 0:
+                arm = self._fallback_arm(mask, t.tried)
+                if arm < 0:
+                    self._fail(t, "no_feasible_arm")
+                    continue
+                self.fallback_routed += 1
+            t.arm = int(arm)
+            t.arm_attempts = 1
+            self._launch(t)
+
+    def _fallback_arm(self, mask: np.ndarray, tried: Set[int]) -> int:
+        """Cheapest surviving (then cheapest untried-at-all) arm."""
+        for candidates in (mask & ~self._tried_mask(tried),
+                           ~self._tried_mask(tried)):
+            if candidates.any():
+                costs = np.where(candidates, self.arm_costs, np.inf)
+                return int(np.argmin(costs))
+        return -1
+
+    def _tried_mask(self, tried: Set[int]) -> np.ndarray:
+        m = np.zeros(self.num_arms, bool)
+        for a in tried:
+            m[a] = True
+        return m
+
+    def _launch(self, t: _Ticket) -> None:
+        now = self._now
+        t.total_attempts += 1
+        out = self.injector.draw(t.arm, t.req.uid, t.total_attempts, now)
+        t.outcome = out
+        if out.status == OK and out.latency_s <= self.cfg.timeout_s:
+            self._push(now + out.latency_s, _COMPLETE, (t.req.uid, OK))
+        elif out.status == ERROR:
+            self._push(now + out.latency_s, _COMPLETE, (t.req.uid, ERROR))
+        else:
+            # declared timeout, outage, or an ok-but-spiked call slower
+            # than the dispatch timeout: observed at timeout_s, not at
+            # the call's true latency
+            self._push(now + self.cfg.timeout_s, _COMPLETE,
+                       (t.req.uid, TIMEOUT))
+
+    def _on_complete(self, payload: Tuple[int, str]) -> None:
+        uid, status = payload
+        t = self._tickets[uid]
+        if t.done:
+            return
+        now, ok = self._now, status == OK
+        if t.probe:
+            self.health.record_probe(t.arm, ok, now)
+            t.probe = False
+        else:
+            self.health.record(t.arm, ok, now)
+        if ok:
+            self._serve(t)
+        else:
+            self._handle_failure(t)
+
+    def _serve(self, t: _Ticket) -> None:
+        now, uid = self._now, t.req.uid
+        rng = self.injector.rng(5, uid, t.arm, t.total_attempts)
+        reward, cost = self.arm_fns[t.arm](t.req.context, rng)
+        latency = now - t.req.arrival_s
+        self.served.append(ServedResult(
+            uid=uid, arm=t.arm, reward=float(reward), cost=float(cost),
+            latency_s=latency, attempts=t.total_attempts,
+            rerouted=t.reroutes > 0, probe=False))
+        self._latencies.append(latency)
+        if self.oracle is not None:
+            probs = self.oracle(t.req.context)
+            r = float(np.max(probs) - probs[t.arm])
+            self.regret += r
+            self.regret_served += r
+        self.feedback_emitted += 1
+        if t.outcome.feedback_dropped:
+            # the reward never reaches us: it is MASKED out of the fold
+            # (the ring slot is simply never written) — not zero-folded
+            self.feedback_dropped += 1
+        else:
+            self._push(now + t.outcome.feedback_delay_s, _FEEDBACK,
+                       (uid, t.arm, t.req.context, float(reward),
+                        float(cost)))
+        t.done = True
+
+    def _deadline(self, t: _Ticket) -> float:
+        limit = (t.req.deadline_s if t.req.deadline_s is not None
+                 else self.cfg.deadline_s)
+        return t.req.arrival_s + limit
+
+    def _handle_failure(self, t: _Ticket) -> None:
+        now, uid = self._now, t.req.uid
+        deadline = self._deadline(t)
+        if now >= deadline:
+            self._fail(t, "deadline")
+            return
+        r = self.cfg.retry
+        if t.arm_attempts < r.max_attempts and self.health.is_healthy(t.arm):
+            u = float(self.injector.rng(6, uid, t.total_attempts).random())
+            delay = r.delay(t.arm_attempts, u)
+            if now + delay < deadline:
+                t.arm_attempts += 1
+                self._push(now + delay, _RETRY, uid)
+                return
+        self._exhaust_and_reroute(t)
+
+    def _exhaust_and_reroute(self, t: _Ticket) -> None:
+        """Retries exhausted (or the arm died): move to a surviving arm."""
+        now = self._now
+        t.tried.add(t.arm)
+        if t.reroutes >= self.cfg.retry.max_reroutes:
+            self._fail(t, "exhausted")
+            return
+        mask = self.health.mask() & ~self._tried_mask(t.tried)
+        if mask.any():
+            arm = int(self._route_batch(t.req.context[None], mask)[0])
+            if arm < 0:
+                arm = self._fallback_arm(mask, t.tried)
+        else:
+            arm = self._fallback_arm(np.ones(self.num_arms, bool), t.tried)
+        if arm < 0:
+            self._fail(t, "exhausted")
+            return
+        t.arm, t.arm_attempts, t.reroutes = arm, 1, t.reroutes + 1
+        self.rerouted += 1
+        self._launch(t)
+
+    def _on_retry(self, uid: int) -> None:
+        t = self._tickets[uid]
+        if t.done:
+            return
+        if not self.health.is_healthy(t.arm):
+            # the arm was quarantined while we backed off — don't burn
+            # the remaining deadline on a known-dead arm
+            self._exhaust_and_reroute(t)
+        else:
+            self._launch(t)
+
+    def _fail(self, t: _Ticket, reason: str) -> None:
+        self.failed.append(FailedRequest(t.req.uid, reason, self._now,
+                                         t.total_attempts))
+        if self.oracle is not None:
+            # a failed request is charged FULL regret: the user got
+            # nothing, the oracle would have served the best arm
+            self.regret += float(np.max(self.oracle(t.req.context)))
+        t.done = True
+
+    def _on_feedback(self, payload) -> None:
+        uid, arm, x, reward, cost = payload
+        self.feedback_arrived += 1
+        self.ring.push(arm, x, reward, cost)
+
+    # -- posterior fold ---------------------------------------------------
+
+    def _fold(self, arms, xs, rewards, costs, mask) -> None:
+        """Ring flush target: the scheduler's mask-gated batched fold
+        (``fold_observations`` → selected-block ``batch_update``)."""
+        self.scheduler.feedback_batch(arms, xs, rewards, costs, mask=mask)

@@ -143,32 +143,46 @@ def _scheduler_programs(spec: policy_mod.PolicySpec, num_arms: int,
     plain_greedy = spec.name == "greedy_linucb" and not spec.transforms
     alpha_eff = float(spec.kwargs.get("alpha", alpha))
 
-    def route_fn(state, xs, steps, remaining, *, backend: str):
+    def route_fn(state, xs, steps, remaining, arm_mask, *, backend: str,
+                 masked: bool):
+        # ``masked`` is a STATIC flag: the unmasked program traces the
+        # exact legacy select (bit-identical routing); only callers that
+        # actually pass an arm-health mask (the fault-tolerant runtime)
+        # pay for the mask composition — and get a distinct compiled
+        # program, keyed on the flag.
         with linucb.backend_scope(backend):
             if plain_greedy:
                 # the scoring hot loop: one batched (B,d)@(d,K·d) GEMM /
                 # fused Pallas kernel straight off the block state
                 scores = linucb.ucb_scores(state, xs, alpha_eff)
-                return jnp.argmax(scores, axis=-1).astype(jnp.int32)
-            return router.policy_route_batch(policy, state, xs,
-                                             steps, remaining)
+                if not masked:
+                    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+                gated = jnp.where(arm_mask[None, :], scores, -jnp.inf)
+                arm = jnp.argmax(gated, axis=-1).astype(jnp.int32)
+                return jnp.where(jnp.any(arm_mask), arm, -1)
+            return router.policy_route_batch(
+                policy, state, xs, steps, remaining,
+                arm_mask=arm_mask if masked else None)
 
     def update_fn(state, arm, x, reward, cost, *, backend: str):
         with linucb.backend_scope(backend):
             return policy.update(state, jnp.int32(0), arm, x, reward,
                                  cost, jnp.asarray(True))
 
-    def update_batch_fn(state, arms, xs, rewards, costs, *, backend: str):
+    def update_batch_fn(state, arms, xs, rewards, costs, masks, *,
+                        backend: str):
         # the engine's multi-stream posterior fold — linucb.batch_update
         # (selected-block Sherman–Morrison kernel under a pallas backend)
-        # for LinUCB-family states, generic scan fold otherwise
+        # for LinUCB-family states, generic scan fold otherwise. ``masks``
+        # row-gates the fold: masked rows (dropped/late feedback slots)
+        # contribute NOTHING — missing feedback is masked out, never
+        # folded as zero reward.
         with linucb.backend_scope(backend):
             return engine_driver.fold_observations(
-                policy, state, arms, xs, rewards, costs,
-                jnp.ones(arms.shape, jnp.float32))
+                policy, state, arms, xs, rewards, costs, masks)
 
     return (policy,
-            jax.jit(route_fn, static_argnames=("backend",)),
+            jax.jit(route_fn, static_argnames=("backend", "masked")),
             jax.jit(update_fn, static_argnames=("backend",)),
             jax.jit(update_batch_fn, static_argnames=("backend",)))
 
@@ -228,7 +242,8 @@ class BanditScheduler:
     def route(self, contexts: np.ndarray, *,
               steps: Optional[np.ndarray] = None,
               remaining: Optional[np.ndarray] = None,
-              datasets: Optional[np.ndarray] = None) -> np.ndarray:
+              datasets: Optional[np.ndarray] = None,
+              arm_mask: Optional[np.ndarray] = None) -> np.ndarray:
         """Batched arm selection for (B,d) request contexts.
 
         ``steps``: optional (B,) refinement step per request (multi-step
@@ -236,8 +251,13 @@ class BanditScheduler:
         request (budget/knapsack policies). When ``remaining`` is
         omitted, budgets fall back to the scheduler's env-derived
         ``budget_table`` (``budget_env=``) — indexed per request by
-        ``datasets`` (row 0 when omitted) — or +inf without one. Returns
-        (B,) selected arms; −1 means the policy opted out of the request.
+        ``datasets`` (row 0 when omitted) — or +inf without one.
+        ``arm_mask``: optional (K,) bool feasibility mask — the serving
+        runtime's arm-health quarantine gate, ANDed into every policy's
+        feasibility (the same mask ``BudgetGate`` uses); ``None`` routes
+        through the exact legacy (unmasked) compiled program. Returns
+        (B,) selected arms; −1 means the policy opted out of the request
+        (budget-infeasible, or every arm masked).
         """
         xs = jnp.asarray(contexts, jnp.float32)
         b = xs.shape[0]
@@ -252,8 +272,11 @@ class BanditScheduler:
                      if remaining is None
                      else jnp.broadcast_to(
                          jnp.asarray(remaining, jnp.float32), (b,)))
-        arm = self._route(self.state, xs, steps_j, rem_j,
-                          backend=self._backend())
+        masked = arm_mask is not None
+        mask_j = (jnp.ones((len(self.arms),), bool) if not masked
+                  else jnp.asarray(arm_mask, bool))
+        arm = self._route(self.state, xs, steps_j, rem_j, mask_j,
+                          backend=self._backend(), masked=masked)
         return np.asarray(arm)
 
     def feedback(self, arm: int, context: np.ndarray, reward: float,
@@ -265,7 +288,7 @@ class BanditScheduler:
                                   backend=self._backend())
 
     def feedback_batch(self, arms, contexts: np.ndarray, rewards,
-                       costs=None) -> None:
+                       costs=None, mask=None) -> None:
         """Fold a whole routed batch back into the policy state at once.
 
         One dispatch through the SAME batched posterior fold the
@@ -276,13 +299,32 @@ class BanditScheduler:
         the arm blocks this batch actually routed to. ``arms``: (B,)
         selected arms; ``contexts``: (B, d); ``rewards`` / ``costs``:
         (B,) (costs default to 0).
+
+        ``mask``: optional (B,) 0/1 row gate — the delayed-feedback
+        contract. Rows whose feedback never arrived (dropped, expired)
+        keep ``mask = 0`` and contribute NOTHING to the posterior; they
+        are never folded as zero reward. The serving runtime's feedback
+        ring flushes fixed-capacity batches through this gate so one
+        compiled program serves every fill level.
+
+        An empty batch (B = 0) — or one whose rows are all masked — is a
+        safe no-op: the first dropped batch of a fault-heavy round must
+        not trace a degenerate program or touch the state.
         """
-        arms_j = jnp.asarray(arms, jnp.int32)
+        arms_np = np.asarray(arms, np.int32)
+        if arms_np.shape[0] == 0:
+            return
+        m_np = None if mask is None else np.asarray(mask, np.float32)
+        if m_np is not None and not m_np.any():
+            return
+        arms_j = jnp.asarray(arms_np)
         xs = jnp.asarray(contexts, jnp.float32)
         rs = jnp.asarray(rewards, jnp.float32)
         cs = (jnp.zeros(arms_j.shape, jnp.float32) if costs is None
               else jnp.asarray(costs, jnp.float32))
-        self.state = self._update_batch(self.state, arms_j, xs, rs, cs,
+        ms = (jnp.ones(arms_j.shape, jnp.float32) if m_np is None
+              else jnp.asarray(m_np))
+        self.state = self._update_batch(self.state, arms_j, xs, rs, cs, ms,
                                         backend=self._backend())
 
     def serve(self, requests: Sequence[Request], *,

@@ -1,0 +1,423 @@
+"""Fault-tolerant serving loop tests: delayed feedback, fault injection,
+retry/backoff, quarantine → probe → re-admission, and the mask-gated
+posterior-fold contracts (empty/masked no-ops, order-invariance)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import linucb
+from repro.core.policy import PolicySpec
+from repro.serving import scheduler as sched_mod
+from repro.serving.faults import (ERROR, OK, TIMEOUT, FaultInjector,
+                                  FaultSpec, SyntheticArmPool,
+                                  bursty_arrivals)
+from repro.serving.runtime import (ArmHealthTracker, FeedbackRing,
+                                   HealthConfig, RetryPolicy,
+                                   RuntimeConfig, ServingRuntime)
+from repro.serving.scheduler import ArmSpec, BanditScheduler
+
+K, D = 4, 8
+
+
+def _pool(num_arms=K, dim=D, seed=1):
+    return SyntheticArmPool(num_arms, dim, seed=seed)
+
+
+def _scheduler(pool, policy="greedy_linucb", backend=None):
+    arms = [ArmSpec(f"a{k}", None, float(pool.costs[k]))
+            for k in range(pool.num_arms)]
+    return BanditScheduler(arms, dim=pool.dim, alpha=1.0, policy=policy,
+                           backend=backend)
+
+
+def _runtime(pool, spec, *, scheduler=None, warm=True, **cfg_kw):
+    scheduler = scheduler or _scheduler(pool)
+    cfg_kw.setdefault("max_batch", 16)
+    cfg_kw.setdefault("ring_capacity", 8)
+    cfg_kw.setdefault("timeout_s", 0.25)
+    cfg_kw.setdefault("deadline_s", 8.0)
+    cfg_kw.setdefault("retry", RetryPolicy(max_attempts=3,
+                                           base_delay_s=0.05,
+                                           max_delay_s=0.5))
+    cfg_kw.setdefault("health", HealthConfig(window=12, fail_threshold=0.6,
+                                             min_samples=4,
+                                             probe_interval_s=0.5))
+    rt = ServingRuntime(scheduler, pool.arm_fns(), faults=spec,
+                        config=RuntimeConfig(**cfg_kw), oracle=pool.oracle)
+    if warm:
+        pool.warmup(scheduler, 256)
+    return rt
+
+
+def _trace(pool, t_end=12.0, rate=8.0, seed=11):
+    times = bursty_arrivals(t_end=t_end, rate=rate, seed=seed)
+    return pool.contexts(len(times), seed=5), times
+
+
+# ---------------------------------------------------------------------------
+# Fault injection + arrival process
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_deterministic_per_coordinates():
+    spec = FaultSpec(seed=3, timeout_rate=0.3, error_rate=0.2,
+                     drop_feedback_rate=0.4)
+    a, b = FaultInjector(spec, K), FaultInjector(spec, K)
+    draws_a = [a.draw(u % K, u, t, 0.0) for u in range(40)
+               for t in range(3)]
+    draws_b = [b.draw(u % K, u, t, 0.0) for u in range(40)
+               for t in range(3)]
+    assert draws_a == draws_b          # schedule is pure in the spec
+    # a retry is a fresh attempt coordinate — re-draws its own fate
+    assert len({(d.status, d.latency_s) for d in draws_a}) > 1
+
+
+def test_fault_spec_outage_and_validation():
+    spec = FaultSpec(outages=((2, 1.0, 3.0),))
+    inj = FaultInjector(spec, K)
+    assert inj.draw(2, 0, 0, 2.0).status == TIMEOUT
+    assert inj.draw(2, 0, 0, 3.5).status == OK
+    assert inj.draw(1, 0, 0, 2.0).status == OK
+    with pytest.raises(ValueError):
+        FaultSpec(timeout_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(error_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultSpec(outages=((0, 5.0, 5.0),))
+
+
+def test_bursty_arrivals_sorted_and_deterministic():
+    a = bursty_arrivals(t_end=30.0, rate=5.0, seed=9)
+    b = bursty_arrivals(t_end=30.0, rate=5.0, seed=9)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) > 0).all()
+    assert a[0] >= 0.0 and a[-1] < 30.0
+    assert len(bursty_arrivals(t_end=30.0, rate=5.0, seed=10)) != 0
+
+
+def test_retry_policy_backoff_capped_and_jittered():
+    r = RetryPolicy(max_attempts=5, base_delay_s=0.1, mult=2.0,
+                    max_delay_s=0.4, jitter=0.5)
+    assert r.delay(1, 0.5) == pytest.approx(0.1)
+    assert r.delay(2, 0.5) == pytest.approx(0.2)
+    assert r.delay(4, 0.5) == pytest.approx(0.4)   # capped
+    assert r.delay(10, 0.5) == pytest.approx(0.4)
+    assert r.delay(1, 0.0) == pytest.approx(0.05)  # −jitter
+    assert r.delay(1, 1.0) == pytest.approx(0.15)  # +jitter
+
+
+# ---------------------------------------------------------------------------
+# Arm-health tracker (quarantine → probe → re-admission)
+# ---------------------------------------------------------------------------
+
+def test_health_tracker_quarantine_probe_readmit_cycle():
+    cfg = HealthConfig(window=8, fail_threshold=0.5, min_samples=4,
+                       probe_interval_s=1.0, probe_backoff=2.0,
+                       max_probe_interval_s=3.0)
+    h = ArmHealthTracker(2, cfg)
+    for _ in range(3):
+        h.record(0, False, now=0.0)
+    assert h.mask().all()              # below min_samples: still healthy
+    h.record(0, False, now=0.5)
+    assert not h.is_healthy(0) and h.is_healthy(1)
+    assert h.probes_due(1.0) == []     # first probe only after interval
+    assert h.probes_due(1.5) == [0]
+    h.start_probe(0, 1.5)
+    assert h.probes_due(1.6) == []     # in-flight probe is exclusive
+    h.record_probe(0, False, 1.6)      # failed probe: interval doubles
+    assert h.probes_due(2.5) == []
+    assert h.probes_due(3.7) == [0]
+    h.start_probe(0, 3.7)
+    h.record_probe(0, True, 3.8)       # success: re-admitted, window clear
+    assert h.is_healthy(0)
+    assert [e.kind for e in h.events] == ["quarantine", "probe", "probe",
+                                          "readmit"]
+    h.record(0, True, 4.0)             # old failures don't linger
+    assert h.is_healthy(0)
+
+
+def test_health_tracker_ignores_stale_completions_while_quarantined():
+    h = ArmHealthTracker(1, HealthConfig(window=4, fail_threshold=0.5,
+                                         min_samples=2))
+    h.record(0, False, 0.0)
+    h.record(0, False, 0.1)
+    assert not h.is_healthy(0)
+    h.record(0, True, 0.2)             # pre-quarantine straggler lands late
+    assert not h.is_healthy(0)         # only a probe can re-admit
+
+
+# ---------------------------------------------------------------------------
+# Feedback ring
+# ---------------------------------------------------------------------------
+
+def test_feedback_ring_flush_at_capacity_and_mask_gating():
+    calls = []
+
+    def fold(arms, xs, rs, cs, mask):
+        calls.append((np.asarray(arms), np.asarray(xs), np.asarray(rs),
+                      np.asarray(cs), np.asarray(mask)))
+
+    ring = FeedbackRing(4, D, fold)
+    for i in range(4):
+        ring.push(i % K, np.full(D, float(i), np.float32), float(i), 0.1)
+    assert len(calls) == 1             # auto-flush at capacity
+    arms, xs, rs, _, mask = calls[0]
+    np.testing.assert_array_equal(arms, np.arange(4) % K)
+    np.testing.assert_array_equal(mask, np.ones(4))
+    assert len(ring) == 0 and ring.folded == 4
+
+    ring.push(1, np.ones(D, np.float32), 1.0, 0.1)
+    assert ring.flush() == 1           # partial flush: tail slots masked 0
+    _, _, _, _, mask = calls[1]
+    np.testing.assert_array_equal(mask, [1.0, 0.0, 0.0, 0.0])
+    assert ring.flush() == 0           # empty flush never calls fold
+    assert len(calls) == 2
+
+
+# ---------------------------------------------------------------------------
+# Masked routing (quarantine gate through every policy)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["greedy_linucb", "budget_linucb",
+                                    "knapsack"])
+def test_route_arm_mask_excludes_quarantined_arms(policy):
+    pool = _pool()
+    s = _scheduler(pool, policy=policy)
+    pool.warmup(s, 256)
+    xs = pool.contexts(16, seed=2)
+    rem = np.full(16, 1e3, np.float32)
+    base = np.asarray(s.route(xs, remaining=rem))
+    assert (base >= 0).all()
+    banned = int(np.bincount(base, minlength=K).argmax())
+    mask = np.ones(K, bool)
+    mask[banned] = False
+    routed = np.asarray(s.route(xs, remaining=rem, arm_mask=mask))
+    assert (routed != banned).all()
+    # a policy may veto (−1) when its planned arm is quarantined — the
+    # runtime then falls back — but it must never pick the masked arm,
+    # and routing must not collapse to all-veto
+    assert (routed >= 0).any()
+
+
+def test_route_all_masked_opts_out():
+    pool = _pool()
+    s = _scheduler(pool)
+    pool.warmup(s, 128)
+    xs = pool.contexts(5, seed=2)
+    routed = np.asarray(s.route(xs, arm_mask=np.zeros(K, bool)))
+    np.testing.assert_array_equal(routed, -np.ones(5, np.int32))
+
+
+def test_route_full_mask_matches_unmasked():
+    pool = _pool()
+    s = _scheduler(pool)
+    pool.warmup(s, 256)
+    xs = pool.contexts(32, seed=4)
+    np.testing.assert_array_equal(
+        np.asarray(s.route(xs)),
+        np.asarray(s.route(xs, arm_mask=np.ones(K, bool))))
+
+
+# ---------------------------------------------------------------------------
+# feedback_batch / fold no-op contracts (delayed-feedback safety)
+# ---------------------------------------------------------------------------
+
+def _states_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.a_inv_t),
+                                  np.asarray(b.a_inv_t))
+    np.testing.assert_array_equal(np.asarray(a.b), np.asarray(b.b))
+    np.testing.assert_array_equal(np.asarray(a.counts),
+                                  np.asarray(b.counts))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_feedback_batch_empty_and_all_masked_are_noops(backend):
+    pool = _pool()
+    s = _scheduler(pool, backend=backend)
+    pool.warmup(s, 64)
+    before = s.state
+    s.feedback_batch(np.zeros((0,), np.int32), np.zeros((0, D), np.float32),
+                     np.zeros((0,), np.float32))
+    _states_equal(before, s.state)
+    s.feedback_batch(np.array([0, 1]), pool.contexts(2, seed=1),
+                     np.array([1.0, 0.0], np.float32),
+                     mask=np.zeros(2, np.float32))
+    _states_equal(before, s.state)
+    # and a partially-masked batch folds ONLY the live rows
+    xs = pool.contexts(2, seed=1)
+    s.feedback_batch(np.array([0, 1]), xs,
+                     np.array([1.0, 0.0], np.float32),
+                     mask=np.array([1.0, 0.0], np.float32))
+    ref = _scheduler(pool, backend=backend)
+    pool.warmup(ref, 64)
+    ref.feedback_batch(np.array([0]), xs[:1],
+                       np.array([1.0], np.float32))
+    np.testing.assert_allclose(np.asarray(s.state.counts),
+                               np.asarray(ref.state.counts))
+
+
+def test_fold_observations_empty_batch_is_identity():
+    from repro.engine import driver as engine_driver
+    pool = _pool()
+    s = _scheduler(pool)
+    pool.warmup(s, 64)
+    folded = engine_driver.fold_observations(
+        s._policy, s.state, jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0, D), jnp.float32), jnp.zeros((0,), jnp.float32),
+        jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.float32))
+    _states_equal(s.state, folded)
+
+
+def test_linucb_batch_update_empty_is_identity():
+    cfg = linucb.LinUCBConfig(num_arms=K, dim=D, alpha=1.0, lam=1.0)
+    state = linucb.init(cfg)
+    out = linucb.batch_update(state, jnp.zeros((0,), jnp.int32),
+                              jnp.zeros((0, D), jnp.float32),
+                              jnp.zeros((0,), jnp.float32))
+    _states_equal(state, out)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-program cache: bounded, shared across respellings, eviction-safe
+# ---------------------------------------------------------------------------
+
+def test_scheduler_program_caches_are_bounded():
+    assert sched_mod._scheduler_programs.cache_parameters()["maxsize"] \
+        is not None
+    assert sched_mod.env_budget_table.cache_parameters()["maxsize"] \
+        is not None
+
+
+def test_program_cache_shared_across_spec_respellings():
+    pool = _pool()
+    _scheduler(pool, policy="greedy_linucb")
+    size_before = sched_mod._scheduler_programs.cache_info().currsize
+    hits_before = sched_mod._scheduler_programs.cache_info().hits
+    _scheduler(pool, policy=PolicySpec.from_name("greedy_linucb"))
+    info = sched_mod._scheduler_programs.cache_info()
+    assert info.currsize == size_before    # respelling added no entry
+    assert info.hits == hits_before + 1
+
+
+def test_program_cache_eviction_does_not_corrupt_routing():
+    pool = _pool()
+    s = _scheduler(pool)
+    pool.warmup(s, 128)
+    xs = pool.contexts(8, seed=6)
+    before = np.asarray(s.route(xs))
+    sched_mod._scheduler_programs.cache_clear()   # worst-case eviction
+    after = np.asarray(s.route(xs))               # held refs keep working
+    np.testing.assert_array_equal(before, after)
+    s2 = _scheduler(pool)                          # recompiles fresh
+    pool.warmup(s2, 128)
+    np.testing.assert_array_equal(before, np.asarray(s2.route(xs)))
+
+
+# ---------------------------------------------------------------------------
+# Runtime end-to-end
+# ---------------------------------------------------------------------------
+
+def test_runtime_drains_cleanly_without_faults():
+    pool = _pool()
+    rt = _runtime(pool, FaultSpec(seed=7))
+    xs, times = _trace(pool, t_end=6.0)
+    rt.submit_trace(xs, times)
+    rep = rt.run()
+    assert rep.drained and rep.admitted == len(times)
+    assert len(rep.failed) == 0 and rep.rejected == 0
+    assert rep.lost_feedback == 0
+    assert rep.feedback_arrived == rep.feedback_emitted == len(times)
+    assert (rep.latencies_s > 0).all()
+    assert not rt.health.events        # nothing to degrade
+
+
+def test_runtime_acceptance_under_seeded_faults():
+    """The acceptance scenario: 20% timeouts + a full outage window on
+    the learned-best arm. The loop must drain every admitted request
+    with zero lost feedback, quarantine AND re-admit the outage arm, and
+    keep regret ≤ 1.5× the no-fault baseline at matched traffic."""
+    pool = _pool()
+    xs, times = _trace(pool, t_end=20.0, rate=8.0)
+    best = pool.best_arm_overall(xs)
+    chaos = FaultSpec(seed=7, timeout_rate=0.2, error_rate=0.05,
+                      drop_feedback_rate=0.1,
+                      outages=((best, 4.0, 12.0),))
+
+    reports = {}
+    for label, spec in (("no_fault", FaultSpec(seed=7)),
+                        ("chaos", chaos)):
+        rt = _runtime(pool, spec)
+        rt.submit_trace(xs, times)
+        reports[label] = rt.run()
+
+    rep = reports["chaos"]
+    assert rep.drained, "loop must drain every admitted request"
+    assert rep.lost_feedback == 0, "arrived feedback must all fold"
+    assert rep.feedback_arrived + rep.feedback_dropped \
+        == rep.feedback_emitted
+    outage_kinds = {e.kind for e in rep.health_events if e.arm == best}
+    assert "quarantine" in outage_kinds, "outage arm never quarantined"
+    assert "readmit" in outage_kinds, "outage arm never re-admitted"
+    ratio = rep.regret / max(reports["no_fault"].regret, 1e-9)
+    assert ratio <= 1.5, f"regret under faults {ratio:.2f}x > 1.5x"
+
+
+def test_runtime_replay_is_deterministic():
+    pool = _pool()
+    xs, times = _trace(pool, t_end=8.0)
+    spec = FaultSpec(seed=13, timeout_rate=0.25, error_rate=0.1,
+                     drop_feedback_rate=0.2)
+
+    def play():
+        rt = _runtime(pool, spec)
+        rt.submit_trace(xs, times)
+        return rt.run()
+
+    a, b = play(), play()
+    assert [(r.uid, r.arm, r.attempts) for r in a.served] \
+        == [(r.uid, r.arm, r.attempts) for r in b.served]
+    assert a.health_events == b.health_events
+    assert a.regret == b.regret
+    np.testing.assert_array_equal(a.latencies_s, b.latencies_s)
+
+
+def test_runtime_backpressure_rejects_over_capacity():
+    pool = _pool()
+    rt = _runtime(pool, FaultSpec(seed=7), max_queue=4)
+    xs = pool.contexts(50, seed=2)
+    rt.submit_trace(xs, np.zeros(50))  # one instantaneous burst
+    rep = rt.run()
+    assert rep.admitted == 4 and rep.rejected == 46
+    assert rep.drained                 # everything admitted still served
+    assert len(rep.served) == 4
+
+
+def test_runtime_deadline_fails_requests_when_pool_is_down():
+    pool = _pool()
+    dead = tuple((k, 0.0, 1e9) for k in range(K))  # every arm dark
+    rt = _runtime(pool, FaultSpec(seed=7, outages=dead), deadline_s=1.5)
+    xs = pool.contexts(6, seed=2)
+    rt.submit_trace(xs, np.linspace(0, 0.5, 6))
+    rep = rt.run()
+    assert rep.drained and len(rep.served) == 0
+    assert len(rep.failed) == 6
+    assert {f.reason for f in rep.failed} <= {"deadline", "exhausted"}
+    assert rep.feedback_emitted == 0 and rep.lost_feedback == 0
+    # full regret charged for every failed request
+    assert rep.regret == pytest.approx(
+        sum(float(np.max(pool.oracle(x))) for x in xs))
+
+
+def test_runtime_reroutes_around_single_dead_arm():
+    pool = _pool()
+    xs = pool.contexts(64, seed=2)
+    best = pool.best_arm_overall(xs)
+    rt = _runtime(pool, FaultSpec(seed=7, outages=((best, 0.0, 1e9),)))
+    rt.submit_trace(xs, np.linspace(0, 8.0, 64))
+    rep = rt.run()
+    assert rep.drained
+    served_arms = {r.arm for r in rep.served}
+    assert best not in served_arms     # dead arm never serves
+    assert len(rep.served) >= 60       # survivors absorb the traffic
+    assert any(e.kind == "quarantine" and e.arm == best
+               for e in rep.health_events)

@@ -1,0 +1,88 @@
+"""Property tests (hypothesis): the delayed-feedback fold contract.
+
+Folding a permuted, duplicated-then-masked, or partially-dropped
+observation batch yields the same posterior as the in-order synchronous
+fold — the invariant the serving runtime's feedback ring relies on for
+late, re-delivered, and lost rewards."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import linucb
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+def _fold_case(seed, b):
+    rng = np.random.default_rng(seed)
+    cfg = linucb.LinUCBConfig(num_arms=3, dim=4, alpha=1.0, lam=0.7)
+    state = linucb.init(cfg)
+    arms = rng.integers(0, 3, b).astype(np.int32)
+    xs = rng.standard_normal((b, 4)).astype(np.float32)
+    rs = rng.random(b).astype(np.float32)
+    return rng, state, arms, xs, rs
+
+
+def _assert_close(a, b, tol=3e-4):
+    np.testing.assert_allclose(np.asarray(a.a_inv_t),
+                               np.asarray(b.a_inv_t), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(a.b), np.asarray(b.b),
+                               rtol=tol, atol=tol)
+    np.testing.assert_array_equal(np.asarray(a.counts),
+                                  np.asarray(b.counts))
+
+
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 10))
+@settings(**SETTINGS)
+def test_fold_permutation_matches_in_order_fold(seed, b):
+    """Out-of-order arrival (a permuted batch) folds to the same
+    posterior as the in-order synchronous fold."""
+    rng, state, arms, xs, rs = _fold_case(seed, b)
+    in_order = linucb.batch_update(state, arms, xs, rs)
+    perm = rng.permutation(b)
+    shuffled = linucb.batch_update(state, arms[perm], xs[perm], rs[perm])
+    _assert_close(in_order, shuffled)
+
+
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 10))
+@settings(**SETTINGS)
+def test_fold_matches_sequential_updates(seed, b):
+    """The batched fold equals B synchronous rank-1 updates in order."""
+    _, state, arms, xs, rs = _fold_case(seed, b)
+    batched = linucb.batch_update(state, arms, xs, rs)
+    seq = state
+    for a, x, r in zip(arms, xs, rs):
+        seq = linucb.update(seq, jnp.int32(a), jnp.asarray(x),
+                            jnp.float32(r))
+    _assert_close(batched, seq)
+
+
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_fold_duplicated_then_masked_matches_plain_fold(seed, b):
+    """At-least-once feedback delivery: re-delivered rows masked out on
+    the second copy fold to the plain single-delivery posterior."""
+    rng, state, arms, xs, rs = _fold_case(seed, b)
+    plain = linucb.batch_update(state, arms, xs, rs)
+    idx = np.repeat(np.arange(b), 2)       # a,a,b,b,… duplicated inline
+    mask = np.tile(np.array([1.0, 0.0], np.float32), b)
+    deduped = linucb.batch_update(state, arms[idx], xs[idx], rs[idx],
+                                  mask=mask)
+    _assert_close(plain, deduped)
+
+
+@given(seed=st.integers(0, 2**16), b=st.integers(2, 10))
+@settings(**SETTINGS)
+def test_fold_partially_dropped_matches_fold_of_survivors(seed, b):
+    """Dropped feedback masked out of the fold equals folding only the
+    survivors — missing rewards never fold as zero reward."""
+    rng, state, arms, xs, rs = _fold_case(seed, b)
+    keep = rng.random(b) < 0.6
+    masked = linucb.batch_update(state, arms, xs, rs,
+                                 mask=keep.astype(np.float32))
+    survivors = linucb.batch_update(state, arms[keep], xs[keep], rs[keep])
+    _assert_close(masked, survivors)
