@@ -1,0 +1,166 @@
+"""Per-user posterior store benchmark: population scaling + the cohort
+prior's cold-start payoff.
+
+Two tables into ``bench_user_store.json``:
+
+* **Population scaling** — sustained user-rounds/s of the multi-stream
+  engine at d=64 as the user population grows, U ∈ {1, 64, 1024}
+  (``run_pool_multistream(users=U)``): U=1 is the shared-posterior
+  baseline; U>1 swaps the batched fold for the user-gridded pool fold
+  (``linucb.pool_batch_update`` — the scalar-prefetched selected-block
+  Sherman–Morrison kernel on the pallas backend) and gathers each
+  stream's user posterior per round. The table records how much the
+  per-user axis costs relative to the shared posterior at matched
+  traffic.
+* **Cold-start regret, cohort vs flat prior** — a
+  :class:`repro.serving.state_store.UserStateStore` serves a warmup
+  population, then a wave of NEVER-SEEN users arrives; their regret over
+  their first requests is measured under the hierarchical cohort
+  warm-start against an identical run whose new users get the flat
+  ``λ⁻¹I`` prior. Same seeds, same traffic, same arms — the only
+  difference is the admission prior, so the gap is the hierarchical
+  layer's payoff.
+
+Claims checked by ``benchmarks.run``: every multistream config sustains
+positive throughput, routing under U=1024 stays within a sanity factor
+of U=1, and the cohort prior's cold-start regret does not exceed the
+flat prior's (the hierarchical prior can only help a homogeneous-taste
+population).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_user_store``
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import env as env_mod
+from repro.core import linucb, router
+from repro.serving.faults import SyntheticArmPool
+from repro.serving.state_store import UserStateStore
+
+DIM = 64
+USER_GRID = (1, 64, 1024)
+STREAMS = int(os.environ.get("REPRO_BENCH_STORE_STREAMS", "32"))
+MS_ROUNDS = int(os.environ.get("REPRO_BENCH_STORE_ROUNDS", "64"))
+
+NUM_ARMS = 6
+WARM_USERS, WARM_REQS = 24, 480
+COLD_USERS, COLD_REQS_EACH = 16, 4
+CAPACITY = 16
+SLOWDOWN_BOUND = 25.0   # U=1024 routing ≤ this × slower than U=1
+
+
+def _multistream_throughput() -> Dict[str, Dict[str, float]]:
+    env64 = env_mod.CalibratedPoolEnv(dim=DIM)
+    out = {}
+    for users in USER_GRID:
+        run = lambda: router.run_pool_multistream(
+            "greedy_linucb", rounds=MS_ROUNDS, streams=STREAMS,
+            users=users, env=env64, chunk_size=16)
+        run()                                      # warm the jit cache
+        secs = common.median_secs(run)
+        out[f"U{users}"] = {
+            "users": users,
+            "streams": STREAMS,
+            "rounds": MS_ROUNDS,
+            "wall_s": secs,
+            "user_rounds_per_s": MS_ROUNDS * STREAMS / secs,
+        }
+    return out
+
+
+def _cold_start_regret() -> Dict[str, Dict[str, float]]:
+    """Identical warmup + cold-user traffic under both admission priors."""
+    pool = SyntheticArmPool(NUM_ARMS, DIM, seed=3)
+    rng = np.random.default_rng(17)
+    warm_uids = rng.integers(0, WARM_USERS, WARM_REQS)
+    warm_ctx = pool.contexts(WARM_REQS, seed=23)
+    cold_ctx = pool.contexts(COLD_USERS * COLD_REQS_EACH, seed=29)
+    cold_uids = np.repeat(np.arange(WARM_USERS,
+                                    WARM_USERS + COLD_USERS),
+                          COLD_REQS_EACH)
+    arm_fns = pool.arm_fns()
+
+    out = {}
+    for label, cohort in (("cohort_prior", True), ("flat_prior", False)):
+        cfg = linucb.LinUCBConfig(num_arms=NUM_ARMS, dim=DIM, alpha=1.0)
+        store = UserStateStore(cfg, CAPACITY, cohort_prior=cohort)
+        # warmup population: the cohort posterior learns the pool's
+        # global preference structure from every member's feedback
+        for lo in range(0, WARM_REQS, CAPACITY):
+            uids = warm_uids[lo:lo + CAPACITY]
+            xs = warm_ctx[lo:lo + CAPACITY]
+            arms = store.route(uids, xs)
+            rewards = [arm_fns[a](x, np.random.default_rng(
+                (lo + i) * 7 + a))[0] for i, (a, x) in
+                enumerate(zip(arms, xs))]
+            store.fold(uids, arms, xs, np.asarray(rewards, np.float32))
+        # cold wave: never-seen users; charge oracle regret per request
+        regret, t0 = 0.0, time.perf_counter()
+        for i in range(len(cold_uids)):
+            uid, x = int(cold_uids[i]), cold_ctx[i]
+            arm = int(store.route([uid], x[None])[0])
+            probs = pool.oracle(x)
+            regret += float(np.max(probs) - probs[arm])
+            reward = arm_fns[arm](x, np.random.default_rng(i * 13 + arm))[0]
+            store.fold([uid], [arm], x[None],
+                       np.asarray([reward], np.float32))
+        out[label] = {
+            "cold_users": COLD_USERS,
+            "requests_per_user": COLD_REQS_EACH,
+            "cold_start_regret": regret,
+            "regret_per_request": regret / len(cold_uids),
+            "wall_s": time.perf_counter() - t0,
+            "evictions": store.evictions,
+            "restores": store.restores,
+        }
+    return out
+
+
+def run() -> Tuple[Dict, Dict]:
+    throughput = _multistream_throughput()
+    cold = _cold_start_regret()
+    payload = {"dim": DIM, "throughput": throughput, "cold_start": cold,
+               "slowdown_bound": SLOWDOWN_BOUND}
+
+    r1 = throughput["U1"]["user_rounds_per_s"]
+    r1024 = throughput["U1024"]["user_rounds_per_s"]
+    cohort = cold["cohort_prior"]["cold_start_regret"]
+    flat = cold["flat_prior"]["cold_start_regret"]
+    payload["cold_start_regret_ratio"] = cohort / max(flat, 1e-9)
+    claims = {
+        "all_configs_positive_throughput": all(
+            v["user_rounds_per_s"] > 0 for v in throughput.values()),
+        "u1024_within_slowdown_bound": r1024 * SLOWDOWN_BOUND >= r1,
+        "cohort_prior_no_worse_than_flat": cohort <= flat,
+    }
+    return payload, claims
+
+
+def main():
+    payload, claims = run()
+    common.save_json("bench_user_store", payload)
+    print("\n=== Per-user posterior store (d=64) ===")
+    for k, v in payload["throughput"].items():
+        print(f"multistream {k:6s} {v['user_rounds_per_s']:10.0f} "
+              f"user-rounds/s  ({v['wall_s']:.3f}s for "
+              f"{v['rounds']}x{v['streams']} rounds)")
+    for k, v in payload["cold_start"].items():
+        print(f"cold-start {k:13s} regret {v['cold_start_regret']:.3f} "
+              f"({v['regret_per_request']:.4f}/req, "
+              f"evictions {v['evictions']}, restores {v['restores']})")
+    print(f"cohort/flat cold-start regret ratio = "
+          f"{payload['cold_start_regret_ratio']:.3f}")
+    print("claims:", claims)
+    return payload, claims
+
+
+if __name__ == "__main__":
+    _, _claims = main()
+    if not all(_claims.values()):
+        raise SystemExit(1)

@@ -19,9 +19,10 @@ import sys
 import time
 
 from benchmarks import (appendix_context, bench_driver, bench_kernels,
-                        bench_serving_faults, fig2_budget_cdf,
-                        fig3_budget_sensitivity, table1_2_accuracy_cost,
-                        table3_position, theorem_regret)
+                        bench_serving_faults, bench_user_store,
+                        fig2_budget_cdf, fig3_budget_sensitivity,
+                        table1_2_accuracy_cost, table3_position,
+                        theorem_regret)
 from benchmarks import common
 
 
@@ -49,11 +50,18 @@ def main() -> None:
          lambda p: p["pool_d64_sweep6_greedy_linucb"]["speedup"]),
         ("bench_serving_faults", bench_serving_faults,
          lambda p: p["regret_ratio"]),
+        ("bench_user_store", bench_user_store,
+         lambda p: p["cold_start_regret_ratio"]),
     ]
 
     for name, mod, derive in suites:
         t0 = time.perf_counter()
         payload, claims = mod.main()
+        # every suite's full payload lands under its SUITE name — the
+        # modules' own save_json calls use assorted short names
+        # (table1_2, table3, …), so the harness writes the canonical
+        # per-suite files results/benchmarks/<suite>.json itself
+        common.save_json(name, payload)
         dt = time.perf_counter() - t0
         # per-round (or per-call) time in µs
         rounds = common.ROUNDS if not name.startswith("bench") else 1

@@ -343,6 +343,195 @@ def batch_update(state: LinUCBState, arms: jax.Array, xs: jax.Array,
     return LinUCBState(a_inv_t=a_inv_t, b=b, theta=theta, counts=counts)
 
 
+# -- per-user posterior pool (the (U, d, K·d) state stack) ------------------
+
+class PosteriorPool(NamedTuple):
+    """U stacked per-user LinUCB posteriors, kernel-native layout.
+
+    ``a_inv_t`` stacks every user's ``(d, K·d)`` block matrix along a
+    leading user axis — ``a_inv_t[u]`` is exactly user u's
+    ``LinUCBState.a_inv_t`` — so the user-gridded Pallas kernels
+    (``kernels.linucb_score.linucb_score_pool`` /
+    ``kernels.sherman_morrison.sherman_morrison_pool_selected``) address
+    block ``(u, k)`` directly via scalar-prefetched (user, arm)
+    coordinates, and a U=1 pool is a zero-copy view of the single-user
+    state (see :func:`pool_ucb_scores` / :func:`pool_batch_update`,
+    which delegate to the single-posterior code paths at U=1 —
+    bitwise-identical by construction).
+
+    This is the *device-resident* representation: U is a pool capacity
+    (the serving state store's window, or the engine's user axis), not
+    the total user population — cold users live evicted on host
+    (``serving.state_store``).
+    """
+
+    a_inv_t: jax.Array  # (U, d, K·d) — [u] block k = user u's A_k⁻¹
+    b: jax.Array        # (U, K, d)
+    theta: jax.Array    # (U, K, d)
+    counts: jax.Array   # (U, K)
+
+    @property
+    def num_users(self) -> int:
+        return self.b.shape[0]
+
+    @property
+    def num_arms(self) -> int:
+        return self.b.shape[1]
+
+
+def init_pool(cfg: LinUCBConfig, num_users: int,
+              prior: Optional[LinUCBState] = None) -> PosteriorPool:
+    """U fresh users, each starting from ``prior`` (default: flat
+    :func:`init`). Passing a cohort posterior as ``prior`` is the
+    hierarchical warm-start (``serving.state_store``)."""
+    st = init(cfg) if prior is None else prior
+    rep = lambda leaf: jnp.tile(leaf[None], (num_users,) + (1,) * leaf.ndim)
+    return PosteriorPool(a_inv_t=rep(st.a_inv_t), b=rep(st.b),
+                         theta=rep(st.theta), counts=rep(st.counts))
+
+
+def user_state(pool: PosteriorPool, u) -> LinUCBState:
+    """User u's posterior as a single-user state (gather; traced u ok)."""
+    take = lambda leaf: jax.lax.dynamic_index_in_dim(leaf, u, 0,
+                                                     keepdims=False)
+    return LinUCBState(a_inv_t=take(pool.a_inv_t), b=take(pool.b),
+                       theta=take(pool.theta), counts=take(pool.counts))
+
+
+def set_user_state(pool: PosteriorPool, u, state: LinUCBState
+                   ) -> PosteriorPool:
+    """Write a single-user state into slot u (scatter; traced u ok)."""
+    put = lambda leaf, v: jax.lax.dynamic_update_index_in_dim(
+        leaf, v.astype(leaf.dtype), u, 0)
+    return PosteriorPool(a_inv_t=put(pool.a_inv_t, state.a_inv_t),
+                         b=put(pool.b, state.b),
+                         theta=put(pool.theta, state.theta),
+                         counts=put(pool.counts, state.counts))
+
+
+def pool_ucb_scores(pool: PosteriorPool, users: jax.Array, x: jax.Array,
+                    alpha: float) -> jax.Array:
+    """Per-user LinUCB index: row b is scored against ``users[b]``'s
+    posterior. x: (B, d); users: (B,) int → (B, K).
+
+    U=1 delegates to :func:`ucb_scores` on the squeezed state — the
+    same compiled math as the single-posterior path, so a 1-user pool
+    is bitwise-identical to the legacy scheduler/drivers. For U>1 the
+    ref backend gathers each row's user blocks; the pallas backend runs
+    the user-gridded kernel (scalar-prefetched user ids, no gather
+    materialized).
+    """
+    xb = jnp.atleast_2d(x)
+    if pool.num_users == 1:
+        return ucb_scores(user_state(pool, 0), xb, alpha)
+    users = jnp.asarray(users, jnp.int32)
+    backend = resolved_backend()
+    if backend == "ref":
+        d = xb.shape[1]
+        k = pool.num_arms
+        mean = jnp.einsum("bd,bkd->bk", xb, pool.theta[users])
+        xa = jnp.einsum("bd,bdm->bm", xb,
+                        pool.a_inv_t[users]).reshape(-1, k, d)
+        quad = jnp.sum(xa * xb[:, None, :], axis=-1)
+        return mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
+    from repro.kernels import linucb_score as _ls
+    return _ls.linucb_score_pool(xb, users, pool.theta, pool.a_inv_t,
+                                 float(alpha),
+                                 interpret=backend == "pallas_interpret")
+
+
+def pool_select(pool: PosteriorPool, users: jax.Array, x: jax.Array,
+                alpha: float) -> jax.Array:
+    """Greedy per-user argmax over the pool UCB index."""
+    return jnp.argmax(pool_ucb_scores(pool, users, x, alpha), axis=-1)
+
+
+def pool_batch_update(pool: PosteriorPool, users: jax.Array,
+                      arms: jax.Array, xs: jax.Array, rewards: jax.Array,
+                      mask: Optional[jax.Array] = None) -> PosteriorPool:
+    """Fold a batch of (user, arm, x, r) observations into the pool.
+
+    Semantically identical to applying :func:`update` per row to each
+    row's user state, in batch order — :func:`batch_update` with the
+    selected-block fold generalized to (user, arm) pairs. ``mask``:
+    optional (B,) 0/1 row gate (masked rows are bitwise no-ops).
+
+    U=1 delegates to :func:`batch_update` (bitwise-identical to the
+    single-posterior fold). For U>1 the ref backend runs the same
+    row-scan fold as ``_fold_rows_blocked`` with the dynamic slice
+    extended over the user axis — per-user sequences are bit-identical
+    to single-user folds of that user's rows — and the pallas backend
+    routes through ``sherman_morrison_pool_selected``. ``b`` / ``counts``
+    are dual-index scatter-adds; θ is recomputed only for routed rows
+    (every row writing a touched (user, arm) pair writes the same final
+    A⁻¹b, untouched pairs write back the cached value — a no-op).
+    """
+    arms = jnp.asarray(arms, jnp.int32)
+    if arms.shape[0] == 0:
+        return pool  # static-shape guard, as in batch_update
+    if pool.num_users == 1:
+        st = batch_update(user_state(pool, 0), arms, xs, rewards, mask)
+        return PosteriorPool(*(leaf[None] for leaf in st))
+    users = jnp.asarray(users, jnp.int32)
+    d = pool.a_inv_t.shape[1]
+    k = pool.num_arms
+    m = None if mask is None else jnp.asarray(mask, pool.b.dtype)
+    row_gate = jnp.ones(arms.shape, pool.b.dtype) if m is None else m
+    backend = resolved_backend()
+    if backend == "ref":
+        a_pool = _fold_rows_pool(pool.a_inv_t, xs, users, arms, row_gate)
+    else:
+        from repro.kernels import sherman_morrison as _sm
+        a_pool = _sm.sherman_morrison_pool_selected(
+            pool.a_inv_t, xs, users, arms, row_mask=m,
+            interpret=backend == "pallas_interpret")
+    b = pool.b.at[users, arms].add((rewards * row_gate)[:, None] * xs)
+    pulls = jnp.zeros((pool.num_users, k),
+                      pool.b.dtype).at[users, arms].add(row_gate)
+    counts = pool.counts + pulls.astype(jnp.int32)
+    # θ only for the routed rows: gather each row's post-fold (d,d)
+    # block and new b, one matvec per row, scatter back. Duplicate
+    # (user, arm) rows all write the same final A⁻¹b; rows of fully
+    # masked pairs write back the cached θ — a bitwise no-op.
+    blk = lambda u, a: jax.lax.dynamic_slice(a_pool, (u, 0, a * d),
+                                             (1, d, d))[0]
+    blocks = jax.vmap(blk)(users, arms)                       # (B, d, d)
+    theta_rows = jnp.einsum("bij,bj->bi", blocks, b[users, arms])
+    touched_row = pulls[users, arms] > 0
+    write = jnp.where(touched_row[:, None], theta_rows,
+                      pool.theta[users, arms])
+    theta = pool.theta.at[users, arms].set(write)
+    return PosteriorPool(a_inv_t=a_pool, b=b, theta=theta, counts=counts)
+
+
+def _fold_rows_pool(a_pool: jax.Array, xs: jax.Array, users: jax.Array,
+                    arms: jax.Array, gates: jax.Array) -> jax.Array:
+    """Row-scan Sherman–Morrison fold on the (U, d, K·d) pool (ref).
+
+    Exactly ``_fold_rows_blocked`` with the slice carrying a user
+    coordinate: each row gathers its user's (d, K·d) block matrix,
+    applies the full-width-GEMM-then-slice update, and scatters it back
+    — so per-user update sequences are bit-identical to the single-user
+    fold applied to that user's rows in order."""
+    _, d, _ = a_pool.shape
+
+    def body(a, row):
+        x, u, arm, g = row
+        au = jax.lax.dynamic_index_in_dim(a, u, 0, keepdims=False)
+        col = arm * d
+        ax = jax.lax.dynamic_slice(x @ au, (col,), (d,))
+        denom = 1.0 + x @ ax
+        delta = g * (jnp.outer(ax, ax) / denom)
+        block = jax.lax.dynamic_slice(au, (0, col), (d, d))
+        au = jax.lax.dynamic_update_slice(au, block - delta, (0, col))
+        return jax.lax.dynamic_update_index_in_dim(a, au, u, 0), None
+
+    out, _ = jax.lax.scan(body, a_pool,
+                          (xs, jnp.asarray(users, jnp.int32),
+                           jnp.asarray(arms, jnp.int32), gates))
+    return out
+
+
 # -- policy registration (see core.policy for the spec/registry API) --------
 
 @policy_mod.register_policy("greedy_linucb")

@@ -36,7 +36,7 @@ policy. Jitted driver programs are cached per ``(env, policy spec,
 backend)``; the frozen hashable env dataclass is its own cache key, so
 same-name different-config envs can never share a compiled program.
 
-The four axes
+The five axes
 -------------
 * **step** ``h < H`` — adaptive refinement steps within one user round
   (the paper's context evolution). A ``lax.scan`` inside the round body.
@@ -55,10 +55,26 @@ The four axes
   ``linucb.batch_update`` (the selected-block Sherman–Morrison kernel),
   amortizing the (d, K·d) inverse traffic across the batch. The stream
   axis shards over the same bandit mesh, with the posterior replicated.
+* **user** ``u < U`` — per-user posteriors
+  (``run_pool_multistream(users=U)`` / ``run_pool_experiment_sweep(
+  users=U)``). Multi-stream: the policy state grows a leading (U, …)
+  user axis (LinUCB-family states become a
+  ``core.linucb.PosteriorPool``), round t maps stream b to user
+  ``(t·B + b) mod U``, each stream selects against its own user's
+  frozen posterior, and observations fold back per (user, arm) block
+  through ``driver.fold_observations_pool`` (the user-gridded
+  Sherman–Morrison kernel). Sweep: each seed crosses with U independent
+  per-user experiments sharing the seed's env draw. Either way the user
+  axis rides the existing mesh sharding — gathered per-stream states
+  (multi-stream) or flattened (seed, user) rows (sweep) split over the
+  ``"seed"`` mesh axis; ``users=1`` is bit-identical to the
+  pre-user-axis engine.
 
 Seed and stream are both *replication* axes and share the mesh axis name
 ``"seed"``; the difference is what is replicated (whole experiments vs.
-rounds against a shared posterior).
+rounds against a shared posterior). The user axis is a *statefulness*
+axis layered on either: it changes which posterior a round touches, not
+how rounds are dispatched.
 
 Log sinks
 ---------
@@ -80,7 +96,8 @@ materializing (T, H) arrays.
 """
 from repro.engine.aggregate import (ReducerSink, StreamingHistogram,
                                     StreamingSummary, summarize_shards)
-from repro.engine.driver import (fold_observations, run_pool_experiment,
+from repro.engine.driver import (fold_observations, fold_observations_pool,
+                                 run_pool_experiment,
                                  run_pool_experiment_sweep,
                                  run_pool_multistream,
                                  run_synthetic_experiment,
@@ -90,7 +107,8 @@ from repro.engine.sink import LogSink, MemorySink, NpyChunkSink, iter_shards
 __all__ = [
     "LogSink", "MemorySink", "NpyChunkSink", "ReducerSink",
     "StreamingHistogram", "StreamingSummary", "fold_observations",
-    "iter_shards", "run_pool_experiment", "run_pool_experiment_sweep",
-    "run_pool_multistream", "run_synthetic_experiment",
-    "run_synthetic_experiment_sweep", "summarize_shards",
+    "fold_observations_pool", "iter_shards", "run_pool_experiment",
+    "run_pool_experiment_sweep", "run_pool_multistream",
+    "run_synthetic_experiment", "run_synthetic_experiment_sweep",
+    "summarize_shards",
 ]

@@ -562,6 +562,7 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
 
 def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
                               policy_name=None, rounds: int = 1000,
+                              users: int = 1,
                               env: Any = None,
                               base_budget=1e-3,
                               budget_jitter: float = 0.05,
@@ -570,22 +571,30 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
                               chunk_size: int = DEFAULT_CHUNK_SIZE,
                               shard: shard_mod.ShardArg = "auto"
                               ) -> List[ExperimentResult]:
-    """Run ``len(seeds)`` replications as ONE vmapped (optionally
+    """Run ``len(seeds) × users`` replications as ONE vmapped (optionally
     device-sharded) program.
 
-    The chunked scan of :func:`run_pool_experiment` gains a leading seed
-    axis via ``jax.vmap``: policy states, env params, PRNG keys and the
-    budget table all carry an (S, …) batch dimension, so S-seed sweeps
-    cost one dispatch per chunk instead of S. ``shard`` lays that axis
-    over the devices of ``launch.mesh.make_bandit_mesh`` with
-    ``shard_map`` (``"auto"``: largest divisor of S ≤ device count —
-    plain vmap when 1; ``True``: all devices, padding S with repeats of
-    the last seed whose results are discarded; ``False``/``"none"``:
-    single-device vmap). Sharded and unsharded sweeps are bit-identical.
-    ``base_budget`` broadcasts from scalar / (D,) per-dataset / (S,1)
-    per-seed / (S,D) to per-seed per-dataset budgets.
-    Returns one :class:`ExperimentResult` per seed, matching what
-    ``run_pool_experiment(seed=s)`` produces.
+    The chunked scan of :func:`run_pool_experiment` gains a leading
+    replication axis via ``jax.vmap``: policy states, env params, PRNG
+    keys and the budget table all carry an (S·U, …) batch dimension, so
+    sweeps cost one dispatch per chunk instead of S·U. ``users > 1``
+    crosses each seed with U independent per-user experiments — the env
+    draw is shared within a seed (every user of seed s faces the same
+    arm pool) while each (seed, user) row gets its own posterior and its
+    own round-key stream (``fold_in(kround_s, u)``); the flattened
+    (seed, user) axis is what shards, so the user axis splits over the
+    mesh alongside the seeds. ``users=1`` is bit-identical to the
+    pre-user-axis sweep. ``shard`` lays the replication axis over the
+    devices of ``launch.mesh.make_bandit_mesh`` with ``shard_map``
+    (``"auto"``: largest divisor of S·U ≤ device count — plain vmap when
+    1; ``True``: all devices, padding with repeats of the last row whose
+    results are discarded; ``False``/``"none"``: single-device vmap).
+    Sharded and unsharded sweeps are bit-identical. ``base_budget``
+    broadcasts from scalar / (D,) per-dataset / (S,1) per-seed / (S,D)
+    to per-seed per-dataset budgets (users of one seed share budgets).
+    Returns one :class:`ExperimentResult` per (seed, user) row,
+    seed-major (seed s's U users are consecutive); with ``users=1`` that
+    is one result per seed, matching ``run_pool_experiment(seed=s)``.
     """
     spec = policy_mod.resolve_policy_arg(policy, policy_name)
     env = _resolve_env(env)
@@ -593,19 +602,37 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
     S, T, H = len(seeds), rounds, env.horizon
     budgeted = spec.budgeted
     chunk = max(1, min(chunk_size, T))
+    if users < 1:
+        raise ValueError(f"users must be ≥ 1, got {users}")
+    if users > 1 and spec.name == "voting":
+        raise ValueError("voting is stateless — a per-user axis does not "
+                         "apply; run it with users=1")
 
-    ndev = shard_mod.resolve_device_count(shard, S)
-    pad = shard_mod.pad_batch(S, ndev)
-    run_seeds = seeds + seeds[-1:] * pad
-    Sr = S + pad
+    # replication rows = (seed, user) pairs, seed-major; pad repeats the
+    # last row (results discarded) so the axis divides the mesh
+    R = S * users
+    ndev = shard_mod.resolve_device_count(shard, R)
+    pad = shard_mod.pad_batch(R, ndev)
+    pos = [i // users for i in range(R)]       # row → seed position
+    uids = [i % users for i in range(R)]       # row → user id
+    pos += pos[-1:] * pad
+    uids += uids[-1:] * pad
+    Rr = R + pad
 
-    params, krounds = _stack_seed_setup(env, run_seeds)
-    arms = np.full((Sr, T, H), -1, np.int32)
-    rewards = np.zeros((Sr, T, H), np.float32)
-    costs = np.zeros((Sr, T, H), np.float32)
-    regrets = np.zeros((Sr, T, H), np.float32)
-    budgets = np.zeros((Sr, T), np.float32)
-    datasets = np.zeros((Sr, T), np.int32)
+    params_u, krounds_u = _stack_seed_setup(env, seeds)
+    sel = jnp.asarray(pos, jnp.int32)
+    params = jax.tree.map(lambda l: l[sel], params_u)
+    krounds = krounds_u[sel]
+    if users > 1:
+        # one independent round-key stream per (seed, user) row
+        krounds = jax.vmap(jax.random.fold_in)(
+            krounds, jnp.asarray(uids, jnp.uint32))
+    arms = np.full((Rr, T, H), -1, np.int32)
+    rewards = np.zeros((Rr, T, H), np.float32)
+    costs = np.zeros((Rr, T, H), np.float32)
+    regrets = np.zeros((Rr, T, H), np.float32)
+    budgets = np.zeros((Rr, T), np.float32)
+    datasets = np.zeros((Rr, T), np.int32)
 
     if spec.name == "voting":
         vchunk, mesh = _jitted_voting_sweep_chunk(env, dataset, ndev)
@@ -621,13 +648,12 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
         arms[:, :, 0] = env.num_arms
         budgets[:] = np.inf
         return _split_sweep_result(arms, rewards, costs, regrets, budgets,
-                                   datasets, S)
+                                   datasets, R)
 
-    # validate against the caller's S, then pad rows to the run width
+    # validate against the caller's S, then gather to (seed, user) rows
     table = _sweep_budget_table(base_budget, S, env.num_datasets, budgeted)
-    if pad:
-        table = jnp.concatenate([table, jnp.repeat(table[-1:], pad, axis=0)])
-    seeds_arr = jnp.asarray(run_seeds, jnp.int32)
+    table = table[sel]
+    seeds_arr = jnp.asarray([seeds[p] for p in pos], jnp.int32)
 
     vchunk, mesh = _jitted_pool_sweep_chunk(spec, env, alpha, lam,
                                             rounds * env.horizon,
@@ -637,7 +663,7 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
     state = _broadcast_state(
         spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                    horizon_t=rounds * env.horizon, c_max=env.max_cost(),
-                   seed=run_seeds[0]).init(), Sr)
+                   seed=seeds[0]).init(), Rr)
     if mesh is not None:
         seeds_arr, params, state, krounds, table = shard_mod.place_seed_args(
             mesh, [seeds_arr, params, state, krounds, table])
@@ -652,7 +678,7 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
         budgets[:, lo:lo + n] = np.asarray(log.budget)[:, :n]
         datasets[:, lo:lo + n] = np.asarray(ds)[:, :n]
     return _split_sweep_result(arms, rewards, costs, regrets, budgets,
-                               datasets, S)
+                               datasets, R)
 
 
 # ---------------------------------------------------------------------------
@@ -704,6 +730,67 @@ def fold_observations(policy: PolicyAdapter, state: Any, arms: jax.Array,
         return policy.update(s, jnp.int32(0), a, x, r, c, m), None
 
     state, _ = jax.lax.scan(body, state, (arms, xs, rewards, costs, masks))
+    return state
+
+
+def fold_observations_pool(policy: PolicyAdapter, state: Any,
+                           users: jax.Array, arms: jax.Array,
+                           xs: jax.Array, rewards: jax.Array,
+                           costs: jax.Array, masks: jax.Array) -> Any:
+    """Per-user analog of :func:`fold_observations`.
+
+    ``state`` is a user-stacked policy state — every leaf carries a
+    leading ``(U, …)`` user axis — and ``users`` maps each observation
+    row to its user. Row order within a (user, arm) pair is preserved
+    (the fold kernels are sequential within a pair), so results match a
+    per-user sequential fold.
+
+    * LinUCB-family stacked states ARE a
+      :class:`~repro.core.linucb.PosteriorPool` (same leaves, same
+      order) — they fold through ``linucb.pool_batch_update``: one
+      user-gridded selected-block Sherman–Morrison launch touching only
+      the (user, arm) blocks the batch routed.
+    * Budget states do the same for the bandit pool plus
+      ``(U, K)``-indexed scatter-adds of the cost statistics.
+    * Anything else falls back to a ``lax.scan`` of gather-user →
+      ``policy.update`` → scatter-user (identical semantics, sequential).
+
+    The empty / all-masked contracts of :func:`fold_observations` hold
+    row-for-row: masked rows perturb nothing, B = 0 returns the state
+    untouched.
+    """
+    arms = jnp.asarray(arms, jnp.int32)
+    if arms.shape[0] == 0:
+        return state
+    users = jnp.asarray(users, jnp.int32)
+    if isinstance(state, linucb.LinUCBState):
+        pool = linucb.pool_batch_update(linucb.PosteriorPool(*state),
+                                        users, arms, xs, rewards,
+                                        mask=masks)
+        return linucb.LinUCBState(*pool)
+    if isinstance(state, budget_mod.BudgetState):
+        m = jnp.asarray(masks, state.cost_sum.dtype)
+        pool = linucb.pool_batch_update(
+            linucb.PosteriorPool(*state.bandit), users, arms, xs, rewards,
+            mask=masks)
+        return budget_mod.BudgetState(
+            bandit=linucb.LinUCBState(*pool),
+            cost_sum=state.cost_sum.at[users, arms].add(m * costs),
+            cost_count=state.cost_count.at[users, arms].add(m),
+        )
+
+    def body(s, obs):
+        u, a, x, r, c, m = obs
+        su = jax.tree.map(
+            lambda l: jax.lax.dynamic_index_in_dim(l, u, keepdims=False), s)
+        su = policy.update(su, jnp.int32(0), a, x, r, c, m)
+        s = jax.tree.map(
+            lambda l, ln: jax.lax.dynamic_update_index_in_dim(l, ln, u, 0),
+            s, su)
+        return s, None
+
+    state, _ = jax.lax.scan(body, state,
+                            (users, arms, xs, rewards, costs, masks))
     return state
 
 
@@ -761,46 +848,101 @@ def _stream_play(policy: PolicyAdapter, env: Any,
         skeys, sidx, state, params, budget_table)
 
 
+def _stream_play_users(policy: PolicyAdapter, env: Any,
+                       budget_jitter: float, dataset: Optional[jax.Array],
+                       skeys: jax.Array, sidx: jax.Array,
+                       stream_states: Any, params: Any,
+                       budget_table: jax.Array):
+    """Per-user variant of :func:`_stream_play`: each stream plays
+    against ITS OWN user's posterior snapshot (pre-gathered along the
+    stream axis), so the states ride the stream sharding — the user axis
+    splits over the bandit mesh's ``"seed"`` axis alongside the streams
+    while params/table stay replicated."""
+
+    def one(kk, i, st, pp, tb):
+        return _scenario_round_frozen(policy, env, pp,
+                                      policy.fork(st, i), kk, tb,
+                                      budget_jitter, dataset)
+
+    return jax.vmap(one, in_axes=(0, 0, 0, None, None))(
+        skeys, sidx, stream_states, params, budget_table)
+
+
 @functools.lru_cache(maxsize=64)
 def _jitted_multistream_chunk(spec: PolicySpec,
                               env: Any, alpha: float,
                               lam: float, horizon_t: int, c_max: float,
                               seed_key: int, budget_jitter: float,
                               dataset: Optional[int], streams: int,
-                              num_devices: int, backend: str):
+                              num_devices: int, backend: str,
+                              users: int = 1):
     ds_arg = None if dataset is None else jnp.int32(dataset)
     policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                         horizon_t=horizon_t, c_max=c_max, seed=seed_key)
-    play = functools.partial(_stream_play, policy, env, budget_jitter,
+    if users == 1:
+        play = functools.partial(_stream_play, policy, env, budget_jitter,
+                                 ds_arg)
+        if num_devices > 1:
+            play, _ = shard_mod.shard_vmapped(play, num_devices,
+                                              num_seed_args=2,
+                                              num_broadcast_args=3)
+
+        def chunk_fn(params, state, kround, table, ts):
+            sidx = jnp.arange(streams)
+
+            def body(state, t):
+                rkey = jax.random.fold_in(kround, t)
+                skeys = jax.vmap(lambda i: jax.random.fold_in(rkey, i))(sidx)
+                log, ds, obs = play(skeys, sidx, state, params, table)
+                arms_o, xs_o, rs_o, cs_o, ex_o = obs    # (B, h), (B, h, d)…
+                bh = arms_o.shape[0] * arms_o.shape[1]
+                state = fold_observations(
+                    policy, state, arms_o.reshape(bh),
+                    xs_o.reshape(bh, xs_o.shape[-1]), rs_o.reshape(bh),
+                    cs_o.reshape(bh), ex_o.reshape(bh).astype(jnp.float32))
+                return state, (log, ds)
+
+            return jax.lax.scan(body, state, ts)
+
+        return policy, jax.jit(chunk_fn)
+
+    # users > 1: the state carries a leading (U, …) user axis; round t
+    # assigns stream b to user (t·B + b) mod U — a round-rotating map, so
+    # every user plays every ⌈U/B⌉ rounds and consecutive rounds touch
+    # disjoint user windows when B divides U.
+    play = functools.partial(_stream_play_users, policy, env, budget_jitter,
                              ds_arg)
     if num_devices > 1:
         play, _ = shard_mod.shard_vmapped(play, num_devices,
-                                          num_seed_args=2,
-                                          num_broadcast_args=3)
+                                          num_seed_args=3,
+                                          num_broadcast_args=2)
 
-    def chunk_fn(params, state, kround, table, ts):
+    def chunk_fn_users(params, state, kround, table, ts):
         sidx = jnp.arange(streams)
 
         def body(state, t):
             rkey = jax.random.fold_in(kround, t)
             skeys = jax.vmap(lambda i: jax.random.fold_in(rkey, i))(sidx)
-            log, ds, obs = play(skeys, sidx, state, params, table)
-            arms_o, xs_o, rs_o, cs_o, ex_o = obs        # (B, h), (B, h, d)…
-            bh = arms_o.shape[0] * arms_o.shape[1]
-            state = fold_observations(
-                policy, state, arms_o.reshape(bh),
-                xs_o.reshape(bh, xs_o.shape[-1]), rs_o.reshape(bh),
-                cs_o.reshape(bh), ex_o.reshape(bh).astype(jnp.float32))
+            su = ((t * streams + sidx) % users).astype(jnp.int32)
+            stream_states = jax.tree.map(lambda l: l[su], state)
+            log, ds, obs = play(skeys, sidx, stream_states, params, table)
+            arms_o, xs_o, rs_o, cs_o, ex_o = obs
+            b, h = arms_o.shape
+            state = fold_observations_pool(
+                policy, state, jnp.repeat(su, h), arms_o.reshape(b * h),
+                xs_o.reshape(b * h, xs_o.shape[-1]), rs_o.reshape(b * h),
+                cs_o.reshape(b * h), ex_o.reshape(b * h).astype(jnp.float32))
             return state, (log, ds)
 
         return jax.lax.scan(body, state, ts)
 
-    return policy, jax.jit(chunk_fn)
+    return policy, jax.jit(chunk_fn_users)
 
 
 def run_pool_multistream(policy=None, *, policy_name=None,
                          rounds: int = 1000,
                          streams: int = 8, seed: int = 0,
+                         users: int = 1,
                          env: Any = None,
                          base_budget=1e-3, budget_jitter: float = 0.05,
                          dataset: Optional[int] = None,
@@ -808,17 +950,30 @@ def run_pool_multistream(policy=None, *, policy_name=None,
                          chunk_size: int = DEFAULT_CHUNK_SIZE,
                          shard: shard_mod.ShardArg = "none",
                          sink: Optional[sink_mod.LogSink] = None):
-    """``rounds`` dispatches of ``streams`` concurrent user rounds sharing
-    one posterior — T·B user rounds total.
+    """``rounds`` dispatches of ``streams`` concurrent user rounds over a
+    population of ``users`` posteriors — T·B user rounds total.
 
-    Each dispatched round plays B independent streams against a frozen
-    policy snapshot and folds every executed observation through
+    With the default ``users=1`` every stream shares ONE posterior: each
+    dispatched round plays B independent streams against a frozen policy
+    snapshot and folds every executed observation through
     :func:`fold_observations` (``linucb.batch_update`` → selected-block
     Sherman–Morrison kernel for LinUCB-family policies). This amortizes
     the (d, K·d) inverse traffic over B streams — the production regime
-    for many-concurrent-user serving studies. ``shard`` splits the
-    stream-play over devices (state replicated; the fold runs on the
-    gathered observations).
+    for many-concurrent-user serving studies.
+
+    ``users > 1`` personalizes: the policy state gains a leading (U, …)
+    user axis (LinUCB-family states become a
+    :class:`~repro.core.linucb.PosteriorPool`), round t assigns stream b
+    to user ``(t·B + b) mod U``, each stream selects against its own
+    user's frozen posterior, and the fold scatters back per (user, arm)
+    block through :func:`fold_observations_pool` (the user-gridded
+    Sherman–Morrison kernel on the pallas backend). ``users=1`` is
+    bit-identical to the pre-user-axis driver.
+
+    ``shard`` splits the stream-play over devices (params replicated;
+    with ``users > 1`` each stream's gathered user state rides the
+    stream shards, so the user axis splits over the mesh alongside the
+    streams).
 
     Returns an :class:`ExperimentResult` with T·B rounds flattened
     round-major (round t's B streams are consecutive), or
@@ -831,6 +986,8 @@ def run_pool_multistream(policy=None, *, policy_name=None,
                          "not apply; use run_pool_experiment")
     if streams < 1:
         raise ValueError(f"streams must be ≥ 1, got {streams}")
+    if users < 1:
+        raise ValueError(f"users must be ≥ 1, got {users}")
     if rounds == 0 and sink is None:
         return _empty_pool_result(env)
     key = jax.random.PRNGKey(seed)
@@ -852,8 +1009,11 @@ def run_pool_multistream(policy=None, *, policy_name=None,
     policy_ad, chunk_fn = _jitted_multistream_chunk(
         spec, env, alpha, lam, rounds * streams * env.horizon,
         env.max_cost(), seed if spec.select_uses_seed else 0,
-        budget_jitter, dataset, streams, ndev, linucb.resolved_backend())
+        budget_jitter, dataset, streams, ndev, linucb.resolved_backend(),
+        users)
     state = policy_ad.init()
+    if users > 1:
+        state = _broadcast_state(state, users)
     table = _pool_budget_table(base_budget, env.num_datasets, budgeted)
 
     return_result = sink is None

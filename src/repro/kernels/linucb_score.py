@@ -32,6 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_B = 128
 
@@ -91,3 +92,57 @@ def linucb_score(x: jax.Array, theta: jax.Array, a_inv: jax.Array,
     from repro.kernels.ref import pack_block
     return linucb_score_blocked(x, theta, pack_block(a_inv), alpha,
                                 block_b=block_b, interpret=interpret)
+
+
+def _pool_kernel(u_ref, x_ref, theta_ref, a_inv_ref, o_ref, *, alpha: float):
+    del u_ref  # consumed by the BlockSpec index maps
+    x = x_ref[...].astype(jnp.float32)              # (1, d)
+    a_inv = a_inv_ref[0].astype(jnp.float32)        # (d, d) — user's block
+    theta = theta_ref[0, 0].astype(jnp.float32)     # (d,)
+    mean = jnp.sum(x[0] * theta)
+    xa = x @ a_inv                                  # (1, d)
+    quad = jnp.sum(xa * x)
+    score = mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
+    o_ref[...] = score.reshape(1, 1).astype(o_ref.dtype)
+
+
+def linucb_score_pool(x: jax.Array, users: jax.Array, theta_pool: jax.Array,
+                      a_inv_pool: jax.Array, alpha: float, *,
+                      interpret: bool = False) -> jax.Array:
+    """User-gridded scoring against the ``(U, d, K·d)`` posterior pool.
+
+    x: (B,d); users: (B,) int — row b's user; theta_pool: (U,K,d);
+    a_inv_pool: (U, d, K·d) — user u's column block k = that user's
+    A_k⁻¹ → scores (B,K) float32.
+
+    The single-user kernel's arm grid generalizes over the leading user
+    axis: grid (B, K), and the user id rides in as a scalar-prefetch
+    operand so the BlockSpec index maps DMA exactly request b's user
+    blocks — ``(u[b], 0, k)`` into the pool — with no (B, d, K·d) gather
+    ever materialized. Per-(request, arm) granularity replaces the
+    single-posterior kernel's (BB=128, K) tiling: each request may hit a
+    different user's blocks, so there is no shared (d,d) tile to batch
+    over. The U=1 pool is served by ``linucb_score_blocked`` (identical
+    math, tiled) via ``core.linucb.pool_ucb_scores``.
+    """
+    b, d = x.shape
+    u, k, _ = theta_pool.shape
+    if a_inv_pool.shape != (u, d, k * d):
+        raise ValueError(f"a_inv_pool must be (U, d, K·d)=({u}, {d}, "
+                         f"{k * d}), got {a_inv_pool.shape}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, u_ref: (i, 0)),
+            pl.BlockSpec((1, 1, d), lambda i, j, u_ref: (u_ref[i], j, 0)),
+            pl.BlockSpec((1, d, d), lambda i, j, u_ref: (u_ref[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, u_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, alpha=alpha),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(users, jnp.int32), x, theta_pool, a_inv_pool)

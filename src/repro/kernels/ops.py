@@ -41,6 +41,19 @@ def linucb_score(x, theta, a_inv, alpha: float):
     return _ls.linucb_score(x, theta, a_inv, alpha, interpret=INTERPRET)
 
 
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def linucb_score_pool(x, users, theta_pool, a_inv_pool, alpha: float):
+    return _ls.linucb_score_pool(x, users, theta_pool, a_inv_pool, alpha,
+                                 interpret=INTERPRET)
+
+
+@jax.jit
+def sherman_morrison_pool_selected(a_inv_pool, xs, users, arms,
+                                   row_mask=None):
+    return _sm.sherman_morrison_pool_selected(a_inv_pool, xs, users, arms,
+                                              row_mask, interpret=INTERPRET)
+
+
 @jax.jit
 def sherman_morrison_arm(a_inv_t, x, arm, mask):
     return _sm.sherman_morrison_arm(a_inv_t, x, arm, mask,

@@ -110,6 +110,50 @@ def sherman_morrison_batch_selected_ref(a_inv_t: jax.Array, xs: jax.Array,
     return sherman_morrison_batch_blocked_ref(a_inv_t, xs, mask)
 
 
+def linucb_score_pool_ref(x: jax.Array, users: jax.Array,
+                          theta_pool: jax.Array, a_inv_pool: jax.Array,
+                          alpha: float) -> jax.Array:
+    """User-gridded scoring oracle: each request row is scored against its
+    own user's posterior via the single-user blocked oracle.
+
+    x: (B,d); users: (B,) int; theta_pool: (U,K,d);
+    a_inv_pool: (U, d, K·d) → (B, K)."""
+
+    def one(xr, u):
+        return linucb_score_blocked_ref(xr[None, :], theta_pool[u],
+                                        a_inv_pool[u], alpha)[0]
+
+    return jax.vmap(one)(x, jnp.asarray(users, jnp.int32))
+
+
+def sherman_morrison_pool_selected_ref(a_inv_pool: jax.Array, xs: jax.Array,
+                                       users: jax.Array, arms: jax.Array,
+                                       row_mask: Optional[jax.Array] = None
+                                       ) -> jax.Array:
+    """Oracle for the pool selected-block fold: B rank-1 updates applied
+    in batch order, each confined to its row's (user, arm) block.
+
+    a_inv_pool: (U, d, K·d); xs: (B, d); users/arms: (B,) int;
+    row_mask: optional (B,) float gate → updated (U, d, K·d)."""
+    _, d, kd = a_inv_pool.shape
+    k = kd // d
+    gates = (jnp.ones(xs.shape[:1], jnp.float32) if row_mask is None
+             else jnp.asarray(row_mask, jnp.float32))
+
+    def fold(pool, inp):
+        x, u, arm, g = inp
+        au = jax.lax.dynamic_index_in_dim(pool, u, 0, keepdims=False)
+        onehot = jax.nn.one_hot(arm, k, dtype=jnp.float32) * g
+        au2 = pack_block(sherman_morrison_ref(unpack_block(au), x, onehot))
+        return jax.lax.dynamic_update_index_in_dim(pool, au2, u, 0), None
+
+    out, _ = jax.lax.scan(
+        fold, a_inv_pool,
+        (xs, jnp.asarray(users, jnp.int32), jnp.asarray(arms, jnp.int32),
+         gates))
+    return out
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True,
                         window: Optional[int] = None) -> jax.Array:

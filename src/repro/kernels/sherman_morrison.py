@@ -214,6 +214,91 @@ def sherman_morrison_batch_selected(a_inv_t: jax.Array, xs: jax.Array,
     )(sel, a_inv_t, xs, mask)
 
 
+def _pool_selected_kernel(su_ref, sa_ref, a_ref, xs_ref, mask_ref, o_ref):
+    """Fold the mask-selected batch rows into ONE routed (user, arm) block.
+
+    Same sequential fold as ``_batch_kernel``; the block refs carry a
+    leading unit user axis ((1, d, d)) addressed by the two prefetched
+    coordinate lists."""
+    del su_ref, sa_ref  # consumed by the BlockSpec index maps
+    d = a_ref.shape[1]
+    a = a_ref[0].astype(jnp.float32)                # (d, d)
+    xs = xs_ref[...].astype(jnp.float32)            # (B, d)
+    m = mask_ref[0].astype(jnp.float32)             # (B,)
+
+    def fold(i, a):
+        x = jax.lax.dynamic_slice_in_dim(xs, i, 1)  # (1, d)
+        ax = x @ a                                  # (1, d)
+        denom = 1.0 + jnp.sum(ax * x)
+        delta = (ax.reshape(d, 1) @ ax) / denom     # (d, d)
+        return a - m[i] * delta
+
+    out = jax.lax.fori_loop(0, xs.shape[0], fold, a)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def sherman_morrison_pool_selected(a_inv_pool: jax.Array, xs: jax.Array,
+                                   users: jax.Array, arms: jax.Array,
+                                   row_mask: jax.Array | None = None, *,
+                                   interpret: bool = False) -> jax.Array:
+    """Batched fold over the (U, d, K·d) pool, visiting only ROUTED
+    (user, arm) blocks.
+
+    a_inv_pool: (U, d, K·d) — user u's column block k = that user's
+    A_k⁻¹; xs: (B, d); users/arms: (B,) int — row b's routed pair;
+    row_mask: optional (B,) float gate (0 drops row b).
+
+    The single-posterior selected-block gather generalizes directly:
+    block identity is the flat pair id ``user·K + arm``, the grid is
+    (G,) with G = min(B, U·K), and TWO scalar-prefetch operands (the
+    distinct routed pairs' user and arm coordinates, routed pairs first,
+    padded with distinct untouched pairs whose all-zero fold masks are a
+    bitwise no-op write) drive the index maps — so two grid programs
+    never touch the same block, at most B blocks DMA, and
+    ``input_output_aliases`` leaves every unvisited user's state
+    untouched. The U·K pair histogram is cheap because U here is the
+    device-resident pool capacity (the state store's window), not the
+    full user population.
+    """
+    u, d, kd = a_inv_pool.shape
+    k = kd // d
+    b = xs.shape[0]
+    users = jnp.asarray(users, jnp.int32)
+    arms = jnp.asarray(arms, jnp.int32)
+    pairs = users * k + arms                        # (B,) flat block ids
+    g = min(b, u * k)
+    if g == u * k:
+        # every (user, arm) block is visited anyway — no gather to compute
+        sel = jnp.arange(u * k, dtype=jnp.int32)
+    else:
+        # distinct routed pairs first (ascending), then untouched pairs
+        counts = jnp.zeros((u * k,), jnp.int32).at[pairs].add(1)
+        sel = jnp.argsort(counts == 0, stable=True).astype(jnp.int32)[:g]
+    sel_u = sel // k
+    sel_a = sel % k
+    mask = (pairs[None, :] == sel[:, None]).astype(jnp.float32)  # (G, B)
+    if row_mask is not None:
+        mask = mask * jnp.asarray(row_mask, jnp.float32)[None, :]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda i, su, sa: (su[i], 0, sa[i])),
+            pl.BlockSpec((b, d), lambda i, su, sa: (0, 0)),
+            pl.BlockSpec((1, b), lambda i, su, sa: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d, d), lambda i, su, sa: (su[i], 0, sa[i])),
+    )
+    return pl.pallas_call(
+        _pool_selected_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((u, d, kd), a_inv_pool.dtype),
+        input_output_aliases={2: 0},    # pool buffer passes through
+        interpret=interpret,
+    )(sel_u, sel_a, a_inv_pool, xs, mask)
+
+
 def sherman_morrison(a_inv: jax.Array, x: jax.Array, mask: jax.Array, *,
                      interpret: bool = False) -> jax.Array:
     """(K,d,d) wrapper: masked rank-1 update of every flagged arm.

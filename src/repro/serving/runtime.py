@@ -120,6 +120,7 @@ class ServeRequest:
     context: np.ndarray               # (d,) routing features
     arrival_s: float = 0.0
     deadline_s: Optional[float] = None  # None → RuntimeConfig.deadline_s
+    user_id: int = 0                  # per-user routing key (state store)
 
 
 @dataclasses.dataclass
@@ -252,11 +253,17 @@ class FeedbackRing:
     """
 
     def __init__(self, capacity: int, dim: int,
-                 fold_fn: Callable[..., None]) -> None:
+                 fold_fn: Callable[..., None], *,
+                 track_users: bool = False) -> None:
+        """``track_users=True`` grows each slot by the pushing request's
+        external user id and appends a (capacity,) user-id array as a
+        sixth ``fold_fn`` argument — the per-user serving path, where the
+        flush folds each row into ITS user's pool state."""
         if capacity < 1:
             raise ValueError(f"ring capacity must be ≥ 1, got {capacity}")
         self.capacity, self.dim = int(capacity), int(dim)
         self._fold = fold_fn
+        self.track_users = track_users
         self.folded = 0
         self.flushes = 0
         self._alloc()
@@ -267,19 +274,23 @@ class FeedbackRing:
         self._rs = jnp.zeros((self.capacity,), jnp.float32)
         self._cs = jnp.zeros((self.capacity,), jnp.float32)
         self._mask = jnp.zeros((self.capacity,), jnp.float32)
+        # user ids stay host-side: they key the state store's residency
+        # lookup (a host dict), never a device computation
+        self._users = np.zeros((self.capacity,), np.int64)
         self._n = 0
 
     def __len__(self) -> int:
         return self._n
 
     def push(self, arm: int, x: np.ndarray, reward: float,
-             cost: float) -> None:
+             cost: float, user_id: int = 0) -> None:
         w = _ring_push_program(self.capacity, self.dim)
         (self._arms, self._xs, self._rs, self._cs, self._mask) = w(
             self._arms, self._xs, self._rs, self._cs, self._mask,
             jnp.int32(self._n), jnp.int32(arm),
             jnp.asarray(x, jnp.float32), jnp.float32(reward),
             jnp.float32(cost))
+        self._users[self._n] = int(user_id)
         self._n += 1
         if self._n == self.capacity:
             self.flush()
@@ -290,7 +301,16 @@ class FeedbackRing:
         if self._n == 0:
             return 0
         n = self._n
-        self._fold(self._arms, self._xs, self._rs, self._cs, self._mask)
+        if self.track_users:
+            # unfilled tail slots carry the first filled slot's user id:
+            # their mask row-gates them to a no-op, and an already-admitted
+            # user never perturbs the store's LRU residency
+            users = np.where(np.arange(self.capacity) < n,
+                             self._users, self._users[0])
+            self._fold(self._arms, self._xs, self._rs, self._cs,
+                       self._mask, users)
+        else:
+            self._fold(self._arms, self._xs, self._rs, self._cs, self._mask)
         self.folded += n
         self.flushes += 1
         self._alloc()
@@ -423,8 +443,13 @@ class ServingRuntime:
         self.injector = FaultInjector(faults if faults is not None
                                       else FaultSpec(), self.num_arms)
         self.health = ArmHealthTracker(self.num_arms, self.cfg.health)
+        # a scheduler with a per-user state store keys every route/fold
+        # by request user_id; the ring then carries user ids through the
+        # delayed-feedback path so late rewards land in the right user
+        self._per_user = getattr(scheduler, "state_store", None) is not None
         self.ring = FeedbackRing(self.cfg.ring_capacity,
-                                 scheduler.cfg.dim, self._fold)
+                                 scheduler.cfg.dim, self._fold,
+                                 track_users=self._per_user)
         self.oracle = oracle
         self.arm_costs = np.asarray(
             [a.cost_per_token for a in scheduler.arms]
@@ -457,21 +482,31 @@ class ServingRuntime:
 
     def submit(self, context: np.ndarray, *, at: float = 0.0,
                uid: Optional[int] = None,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               user_id: int = 0) -> int:
         """Schedule one request arrival at virtual time ``at``; returns
-        its uid. Admission control happens at arrival time."""
+        its uid. Admission control happens at arrival time. ``user_id``
+        keys per-user routing when the scheduler carries a state store
+        (anonymous traffic defaults to user 0)."""
         uid = next(self._uid) if uid is None else uid
         req = ServeRequest(uid, np.asarray(context, np.float32),
-                           arrival_s=float(at), deadline_s=deadline_s)
+                           arrival_s=float(at), deadline_s=deadline_s,
+                           user_id=int(user_id))
         self._push(float(at), _ARRIVAL, req)
         return uid
 
-    def submit_trace(self, contexts: np.ndarray,
-                     times: Sequence[float]) -> List[int]:
-        """Replay a whole arrival trace (the bursty-workload entry)."""
+    def submit_trace(self, contexts: np.ndarray, times: Sequence[float],
+                     user_ids: Optional[Sequence[int]] = None) -> List[int]:
+        """Replay a whole arrival trace (the bursty-workload entry).
+        ``user_ids``: optional per-arrival user key (default user 0)."""
         if len(contexts) != len(times):
             raise ValueError("contexts and times must align")
-        return [self.submit(x, at=t) for x, t in zip(contexts, times)]
+        if user_ids is None:
+            user_ids = np.zeros(len(times), np.int64)
+        elif len(user_ids) != len(times):
+            raise ValueError("user_ids and times must align")
+        return [self.submit(x, at=t, user_id=int(u))
+                for x, t, u in zip(contexts, times, user_ids)]
 
     # -- event machinery --------------------------------------------------
 
@@ -529,16 +564,25 @@ class ServingRuntime:
                                         len(self._waiting)))]
             self._route_and_launch(batch)
 
-    def _route_batch(self, contexts: np.ndarray,
-                     mask: np.ndarray) -> np.ndarray:
+    def _route_batch(self, contexts: np.ndarray, mask: np.ndarray,
+                     user_ids: Optional[np.ndarray] = None) -> np.ndarray:
         """One padded routing dispatch through the scheduler's jitted
-        scoring path; wall-clock recorded for the latency percentiles."""
+        scoring path; wall-clock recorded for the latency percentiles.
+        With a per-user scheduler, padding rows reuse row 0's user id —
+        an already-looked-up user, so padding never perturbs the state
+        store's LRU residency."""
         b = contexts.shape[0]
         width = self.cfg.max_batch if b > 1 else 1
         padded = np.zeros((width, contexts.shape[1]), np.float32)
         padded[:b] = contexts
+        kwargs = {}
+        if self._per_user:
+            uids = (np.zeros(b, np.int64) if user_ids is None
+                    else np.asarray(user_ids))
+            kwargs["user_ids"] = np.where(np.arange(width) < b,
+                                          np.resize(uids, width), uids[0])
         t0 = time.perf_counter()
-        arms = self.scheduler.route(padded, arm_mask=mask)
+        arms = self.scheduler.route(padded, arm_mask=mask, **kwargs)
         self._route_wall.append(time.perf_counter() - t0)
         return np.asarray(arms)[:b]
 
@@ -552,7 +596,9 @@ class ServingRuntime:
             mask = np.ones(self.num_arms, bool)
             self.mask_bypass += 1
         contexts = np.stack([self._tickets[u].req.context for u in uids])
-        arms = self._route_batch(contexts, mask)
+        users = np.asarray([self._tickets[u].req.user_id for u in uids],
+                           np.int64)
+        arms = self._route_batch(contexts, mask, users)
 
         # probe assignment: steal one request per due probe
         probe_for: Dict[int, int] = {}
@@ -648,7 +694,7 @@ class ServingRuntime:
         else:
             self._push(now + t.outcome.feedback_delay_s, _FEEDBACK,
                        (uid, t.arm, t.req.context, float(reward),
-                        float(cost)))
+                        float(cost), t.req.user_id))
         t.done = True
 
     def _deadline(self, t: _Ticket) -> float:
@@ -681,7 +727,9 @@ class ServingRuntime:
             return
         mask = self.health.mask() & ~self._tried_mask(t.tried)
         if mask.any():
-            arm = int(self._route_batch(t.req.context[None], mask)[0])
+            arm = int(self._route_batch(
+                t.req.context[None], mask,
+                np.asarray([t.req.user_id], np.int64))[0])
             if arm < 0:
                 arm = self._fallback_arm(mask, t.tried)
         else:
@@ -714,13 +762,15 @@ class ServingRuntime:
         t.done = True
 
     def _on_feedback(self, payload) -> None:
-        uid, arm, x, reward, cost = payload
+        uid, arm, x, reward, cost, user_id = payload
         self.feedback_arrived += 1
-        self.ring.push(arm, x, reward, cost)
+        self.ring.push(arm, x, reward, cost, user_id=user_id)
 
     # -- posterior fold ---------------------------------------------------
 
-    def _fold(self, arms, xs, rewards, costs, mask) -> None:
+    def _fold(self, arms, xs, rewards, costs, mask, users=None) -> None:
         """Ring flush target: the scheduler's mask-gated batched fold
-        (``fold_observations`` → selected-block ``batch_update``)."""
-        self.scheduler.feedback_batch(arms, xs, rewards, costs, mask=mask)
+        (``fold_observations`` → selected-block ``batch_update``; with a
+        state store, the pool fold into each row's user + the cohort)."""
+        self.scheduler.feedback_batch(arms, xs, rewards, costs, mask=mask,
+                                      user_ids=users)

@@ -70,6 +70,7 @@ from repro.core import policy as policy_mod
 from repro.core import scenario as scenario_mod
 from repro.engine import driver as engine_driver
 from repro.serving.engine import Engine
+from repro.serving.state_store import UserStateStore
 
 
 @functools.lru_cache(maxsize=32)
@@ -197,6 +198,7 @@ class BanditScheduler:
                  backend: Optional[str] = None, horizon_t: int = 100_000,
                  budget_env: Union[None, scenario_mod.EnvSpec,
                                    object] = None,
+                 state_store: Optional[UserStateStore] = None,
                  use_kernels: Optional[bool] = None):
         """``backend``: pin this scheduler's routing to one linucb backend
         ("ref" | "pallas" | "pallas_interpret"); ``None`` follows the
@@ -205,9 +207,16 @@ class BanditScheduler:
         :class:`~repro.core.scenario.EnvSpec`) whose cost model supplies
         default per-request budgets — :meth:`route` then derives
         ``remaining`` from :func:`env_budget_table` (per ``datasets=``
-        row) when the caller passes none. ``use_kernels`` is the
-        deprecated spelling of the kernel path (True ≙ backend="pallas"
-        on TPU, "pallas_interpret" on CPU)."""
+        row) when the caller passes none. ``state_store``: a
+        :class:`~repro.serving.state_store.UserStateStore` switches the
+        scheduler to PER-USER posteriors — :meth:`route` /
+        :meth:`feedback_batch` then key every request by ``user_ids``
+        (default user 0), scoring and folding against each user's pool
+        blocks instead of the shared ``self.state``; requires the plain
+        ``greedy_linucb`` policy (per-user state pooling is defined for
+        the LinUCB posterior). ``use_kernels`` is the deprecated
+        spelling of the kernel path (True ≙ backend="pallas" on TPU,
+        "pallas_interpret" on CPU)."""
         if use_kernels is not None:
             warnings.warn("use_kernels is deprecated; pass backend="
                           "'pallas'/'pallas_interpret' (or set the global "
@@ -233,6 +242,20 @@ class BanditScheduler:
          self._update_batch) = _scheduler_programs(
             self.spec, len(self.arms), dim, alpha, lam, horizon_t, c_max)
         self.state = self._policy.init()
+        self.state_store = state_store
+        if state_store is not None:
+            if not (self.spec.name == "greedy_linucb"
+                    and not self.spec.transforms):
+                raise ValueError(
+                    "state_store= requires the plain greedy_linucb policy "
+                    f"(got {self.spec.name!r}); per-user pooling is "
+                    "defined for the LinUCB posterior")
+            if (state_store.cfg.num_arms, state_store.cfg.dim) != \
+                    (len(self.arms), dim):
+                raise ValueError(
+                    f"state_store cfg (K={state_store.cfg.num_arms}, "
+                    f"d={state_store.cfg.dim}) does not match scheduler "
+                    f"(K={len(self.arms)}, d={dim})")
 
     def _backend(self) -> str:
         return self._backend_override or linucb.resolved_backend()
@@ -243,7 +266,8 @@ class BanditScheduler:
               steps: Optional[np.ndarray] = None,
               remaining: Optional[np.ndarray] = None,
               datasets: Optional[np.ndarray] = None,
-              arm_mask: Optional[np.ndarray] = None) -> np.ndarray:
+              arm_mask: Optional[np.ndarray] = None,
+              user_ids: Optional[np.ndarray] = None) -> np.ndarray:
         """Batched arm selection for (B,d) request contexts.
 
         ``steps``: optional (B,) refinement step per request (multi-step
@@ -258,9 +282,23 @@ class BanditScheduler:
         through the exact legacy (unmasked) compiled program. Returns
         (B,) selected arms; −1 means the policy opted out of the request
         (budget-infeasible, or every arm masked).
+
+        ``user_ids``: optional (B,) external user id per request. With a
+        ``state_store`` each row is scored against ITS user's posterior
+        (the store admits/restores users as needed — the user-gridded
+        pool path); omitted ids default to user 0, so a store-backed
+        scheduler serving one anonymous user is the single-posterior
+        path. Passing ``user_ids`` without a store is an error.
         """
         xs = jnp.asarray(contexts, jnp.float32)
         b = xs.shape[0]
+        if self.state_store is not None:
+            uids = (np.zeros((b,), np.int64) if user_ids is None
+                    else np.asarray(user_ids).reshape(-1))
+            return self.state_store.route(uids, xs, arm_mask=arm_mask,
+                                          backend=self._backend())
+        if user_ids is not None:
+            raise ValueError("user_ids= requires a scheduler state_store")
         steps_j = (jnp.zeros((b,), jnp.int32) if steps is None
                    else jnp.asarray(steps, jnp.int32))
         if remaining is None and self.budget_table is not None:
@@ -280,15 +318,27 @@ class BanditScheduler:
         return np.asarray(arm)
 
     def feedback(self, arm: int, context: np.ndarray, reward: float,
-                 cost: float = 0.0) -> None:
-        """Fold one observation back into the policy state."""
+                 cost: float = 0.0,
+                 user_id: Optional[int] = None) -> None:
+        """Fold one observation back into the policy state (with a
+        ``state_store``: into ``user_id``'s posterior, default user 0)."""
+        if self.state_store is not None:
+            self.state_store.fold(
+                [0 if user_id is None else int(user_id)],
+                np.asarray([arm], np.int32),
+                jnp.asarray(context, jnp.float32)[None, :],
+                jnp.asarray([reward], jnp.float32),
+                backend=self._backend())
+            return
+        if user_id is not None:
+            raise ValueError("user_id= requires a scheduler state_store")
         self.state = self._update(self.state, jnp.int32(arm),
                                   jnp.asarray(context, jnp.float32),
                                   jnp.float32(reward), jnp.float32(cost),
                                   backend=self._backend())
 
     def feedback_batch(self, arms, contexts: np.ndarray, rewards,
-                       costs=None, mask=None) -> None:
+                       costs=None, mask=None, user_ids=None) -> None:
         """Fold a whole routed batch back into the policy state at once.
 
         One dispatch through the SAME batched posterior fold the
@@ -310,6 +360,10 @@ class BanditScheduler:
         An empty batch (B = 0) — or one whose rows are all masked — is a
         safe no-op: the first dropped batch of a fault-heavy round must
         not trace a degenerate program or touch the state.
+
+        ``user_ids``: optional (B,) — with a ``state_store``, row b
+        folds into user b's posterior (and the cohort posterior) through
+        the pool's mask-gated batched update; defaults to user 0.
         """
         arms_np = np.asarray(arms, np.int32)
         if arms_np.shape[0] == 0:
@@ -317,6 +371,23 @@ class BanditScheduler:
         m_np = None if mask is None else np.asarray(mask, np.float32)
         if m_np is not None and not m_np.any():
             return
+        if self.state_store is not None:
+            uids = (np.zeros((arms_np.shape[0],), np.int64)
+                    if user_ids is None
+                    else np.asarray(user_ids).reshape(-1))
+            if m_np is not None:
+                # masked rows' user ids must not perturb store residency:
+                # remap them to the first live row's (already admitted)
+                # user — their zero gate makes the fold row a no-op
+                live = m_np > 0
+                uids = np.where(live, uids, uids[int(np.argmax(live))])
+            self.state_store.fold(uids, arms_np,
+                                  jnp.asarray(contexts, jnp.float32),
+                                  jnp.asarray(rewards, jnp.float32),
+                                  mask=m_np, backend=self._backend())
+            return
+        if user_ids is not None:
+            raise ValueError("user_ids= requires a scheduler state_store")
         arms_j = jnp.asarray(arms_np)
         xs = jnp.asarray(contexts, jnp.float32)
         rs = jnp.asarray(rewards, jnp.float32)

@@ -1,0 +1,266 @@
+"""Per-user posterior state store: device-resident pool, LRU eviction,
+hierarchical cohort prior.
+
+``core.linucb.PosteriorPool`` stacks U per-user LinUCB posteriors on
+device; this module owns the *residency* problem around it — production
+has millions of users but the device pool holds a fixed-capacity window:
+
+* **Fixed-capacity device residency.** ``UserStateStore`` maps external
+  user ids to pool slots. :meth:`UserStateStore.lookup` admits unseen
+  users and returns each request row's slot; the user-gridded kernels
+  then gather exactly those users' ``(d, d)`` blocks (scalar-prefetched
+  (user, arm) coordinates — see ``kernels.sherman_morrison``).
+* **LRU eviction to host.** When the pool is full, the least-recently
+  routed user's state is serialized with ``training.checkpoint.dumps``
+  (raw-byte msgpack — the round-trip is bit-exact) and parked on host;
+  re-admission restores it with :func:`~repro.training.checkpoint.loads`.
+  Routing decisions for a user are therefore IDENTICAL whether their
+  state stayed device-resident or took an evict→restore round trip —
+  the invariant the seeded tests pin.
+* **Hierarchical cohort prior.** A cohort-level posterior is folded from
+  every member's observations alongside the per-user folds. A user never
+  seen before warm-starts from the cohort posterior instead of the flat
+  ``λ⁻¹I`` prior — the statistical payoff measured in
+  ``benchmarks/bench_user_store.py`` (cold-start regret vs. flat prior).
+
+The jitted score/route/fold programs live at module level keyed on
+``(alpha, backend)`` (the scheduler convention): the scheduler's
+per-user path and standalone store users share compiled programs.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.core import linucb
+from repro.training import checkpoint
+
+
+@functools.lru_cache(maxsize=32)
+def _store_programs(alpha: float):
+    """Jitted pool route/fold programs, shared across store instances."""
+
+    def route_fn(pool, slots, xs, arm_mask, *, backend: str, masked: bool):
+        with linucb.backend_scope(backend):
+            scores = linucb.pool_ucb_scores(pool, slots, xs, alpha)
+            if not masked:
+                return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+            gated = jnp.where(arm_mask[None, :], scores, -jnp.inf)
+            arm = jnp.argmax(gated, axis=-1).astype(jnp.int32)
+            return jnp.where(jnp.any(arm_mask), arm, -1)
+
+    def fold_fn(pool, cohort, slots, arms, xs, rewards, masks, *,
+                backend: str):
+        with linucb.backend_scope(backend):
+            pool = linucb.pool_batch_update(pool, slots, arms, xs, rewards,
+                                            mask=masks)
+            # the hierarchical layer: the cohort posterior learns from
+            # every member's observations through the same mask-gated fold
+            cohort = linucb.batch_update(cohort, arms, xs, rewards,
+                                         mask=masks)
+        return pool, cohort
+
+    return (jax.jit(route_fn, static_argnames=("backend", "masked")),
+            jax.jit(fold_fn, static_argnames=("backend",)))
+
+
+class UserStateStore:
+    """Fixed-capacity device pool of per-user posteriors with LRU
+    eviction to host and a cohort warm-start prior.
+
+    ``capacity`` is the device-resident window U of the underlying
+    :class:`~repro.core.linucb.PosteriorPool`; the total user population
+    is unbounded (cold users live as checkpoint bytes on host, or under
+    ``spill_dir`` on disk). ``cohort_prior=False`` gives every new user
+    the flat ``λ⁻¹I`` prior instead — the baseline the benchmark table
+    compares against.
+    """
+
+    def __init__(self, cfg: linucb.LinUCBConfig, capacity: int, *,
+                 cohort_prior: bool = True,
+                 spill_dir: Optional[str] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.cohort_prior = cohort_prior
+        self.spill_dir = spill_dir
+        self.pool = linucb.init_pool(cfg, capacity)
+        self.cohort = linucb.init(cfg)
+        self._template = linucb.init(cfg)      # loads() structure skeleton
+        self._slots: "OrderedDict[int, int]" = OrderedDict()  # LRU order
+        self._free = list(range(capacity - 1, -1, -1))
+        self._host: Dict[int, bytes] = {}
+        self.evictions = 0
+        self.restores = 0
+        self.cold_starts = 0
+
+    # -- residency ---------------------------------------------------------
+
+    @property
+    def resident_users(self) -> list:
+        """User ids currently device-resident, LRU → MRU order."""
+        return list(self._slots)
+
+    def lookup(self, user_ids: Sequence[int]) -> np.ndarray:
+        """Pool slot per request row, admitting users as needed.
+
+        Unseen users are admitted with the cohort (or flat) prior; users
+        previously evicted are restored bit-exact from their host
+        checkpoint bytes. Admission evicts the least-recently-used
+        resident NOT part of this batch, so a batch may reference at
+        most ``capacity`` distinct users.
+        """
+        uids = [int(u) for u in np.asarray(user_ids).reshape(-1)]
+        batch_users = dict.fromkeys(uids)      # distinct, order-preserving
+        if len(batch_users) > self.capacity:
+            raise ValueError(
+                f"batch references {len(batch_users)} distinct users; "
+                f"store capacity is {self.capacity}")
+        for uid in batch_users:
+            if uid in self._slots:
+                self._slots.move_to_end(uid)
+            else:
+                self._admit(uid, protected=batch_users.keys())
+        return np.asarray([self._slots[u] for u in uids], np.int32)
+
+    def _admit(self, uid: int, protected) -> None:
+        if self._free:
+            slot = self._free.pop()
+        else:
+            victim = next(u for u in self._slots if u not in protected)
+            slot = self._slots.pop(victim)
+            blob = checkpoint.dumps(linucb.user_state(self.pool, slot))
+            if self.spill_dir is not None:
+                os.makedirs(self.spill_dir, exist_ok=True)
+                path = os.path.join(self.spill_dir, f"user_{victim}.msgpack")
+                with open(path, "wb") as f:
+                    f.write(blob)
+            self._host[victim] = blob
+            self.evictions += 1
+        if uid in self._host:
+            state = checkpoint.loads(self._host.pop(uid), self._template)
+            self.restores += 1
+        elif self.cohort_prior:
+            state = self.cohort                # hierarchical warm start
+            self.cold_starts += 1
+        else:
+            state = self._template             # flat λ⁻¹I prior
+            self.cold_starts += 1
+        self.pool = linucb.set_user_state(self.pool, slot, state)
+        self._slots[uid] = slot
+
+    # -- routing / feedback ------------------------------------------------
+
+    def _spans_by_capacity(self, uids: Sequence[int]):
+        """Contiguous row spans each referencing ≤ capacity distinct
+        users — a batch over more users than the device window (e.g. a
+        feedback-ring flush spanning many cold users) is processed as
+        sequential sub-batches, preserving row order."""
+        spans, start, seen = [], 0, set()
+        for i, u in enumerate(uids):
+            if u not in seen:
+                if len(seen) == self.capacity:
+                    spans.append((start, i))
+                    start, seen = i, set()
+                seen.add(u)
+        spans.append((start, len(uids)))
+        return spans
+
+    def route(self, user_ids: Sequence[int], contexts, *,
+              arm_mask=None, backend: Optional[str] = None) -> np.ndarray:
+        """Per-user greedy UCB routing for a (B, d) batch. Batches over
+        more than ``capacity`` distinct users route in sub-batches."""
+        uids = [int(u) for u in np.asarray(user_ids).reshape(-1)]
+        xs = np.asarray(contexts, np.float32)
+        masked = arm_mask is not None
+        mask_j = (jnp.ones((self.cfg.num_arms,), bool) if not masked
+                  else jnp.asarray(arm_mask, bool))
+        route_fn, _ = _store_programs(float(self.cfg.alpha))
+        be = backend or linucb.resolved_backend()
+        out = []
+        for lo, hi in self._spans_by_capacity(uids):
+            slots = self.lookup(uids[lo:hi])
+            out.append(np.asarray(route_fn(
+                self.pool, jnp.asarray(slots), jnp.asarray(xs[lo:hi]),
+                mask_j, backend=be, masked=masked)))
+        return np.concatenate(out) if len(out) > 1 else out[0]
+
+    def fold(self, user_ids: Sequence[int], arms, contexts, rewards,
+             mask=None, *, backend: Optional[str] = None) -> None:
+        """Fold a routed batch into each row's user state AND the cohort.
+
+        ``mask``: optional (B,) 0/1 row gate (the delayed-feedback
+        contract — masked rows contribute nothing anywhere). Batches
+        referencing more than ``capacity`` distinct users fold as
+        sequential sub-batches in row order — same semantics as the
+        row-sequential update contract.
+        """
+        arms_np = np.asarray(arms, np.int32)
+        if arms_np.shape[0] == 0:
+            return
+        m_np = None if mask is None else np.asarray(mask, np.float32)
+        if m_np is not None and not m_np.any():
+            return
+        uids = [int(u) for u in np.asarray(user_ids).reshape(-1)]
+        xs = jnp.asarray(contexts, jnp.float32)
+        rs = jnp.asarray(rewards, jnp.float32)
+        ms = (jnp.ones(arms_np.shape, jnp.float32) if m_np is None
+              else jnp.asarray(m_np))
+        _, fold_fn = _store_programs(float(self.cfg.alpha))
+        be = backend or linucb.resolved_backend()
+        for lo, hi in self._spans_by_capacity(uids):
+            slots = self.lookup(uids[lo:hi])   # re-admits if evicted since
+            self.pool, self.cohort = fold_fn(
+                self.pool, self.cohort, jnp.asarray(slots),
+                jnp.asarray(arms_np[lo:hi]), xs[lo:hi], rs[lo:hi],
+                ms[lo:hi], backend=be)
+
+    def user_posterior(self, uid: int) -> linucb.LinUCBState:
+        """A user's current posterior, wherever it lives (device or host)."""
+        if uid in self._slots:
+            return linucb.user_state(self.pool, self._slots[uid])
+        if uid in self._host:
+            return checkpoint.loads(self._host[uid], self._template)
+        raise KeyError(f"user {uid} has never been admitted")
+
+    # -- checkpoint / restore ---------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Checkpoint the whole store (pool + cohort + host blobs + LRU
+        map) — an msgpack envelope around ``checkpoint.dumps`` payloads,
+        so a restore round-trips every posterior bit-exact."""
+        payload = {
+            b"pool": checkpoint.dumps(self.pool),
+            b"cohort": checkpoint.dumps(self.cohort),
+            b"resident": [[u, s] for u, s in self._slots.items()],
+            b"free": list(self._free),
+            b"host": {u: blob for u, blob in self._host.items()},
+            b"counters": [self.evictions, self.restores, self.cold_starts],
+        }
+        tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(payload))
+        os.replace(tmp, path)
+
+    def load(self, path: str) -> None:
+        """Restore a :meth:`save` checkpoint into this store (same cfg /
+        capacity required — leaf validation fails loudly otherwise)."""
+        with open(path, "rb") as f:
+            payload = msgpack.unpackb(f.read(), strict_map_key=False)
+        self.pool = checkpoint.loads(payload[b"pool"], self.pool)
+        self.cohort = checkpoint.loads(payload[b"cohort"], self.cohort)
+        self._slots = OrderedDict((int(u), int(s))
+                                  for u, s in payload[b"resident"])
+        self._free = [int(s) for s in payload[b"free"]]
+        self._host = {int(u): blob for u, blob in payload[b"host"].items()}
+        self.evictions, self.restores, self.cold_starts = \
+            (int(c) for c in payload[b"counters"])

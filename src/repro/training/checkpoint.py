@@ -28,22 +28,24 @@ def _unpack_leaf(d: dict) -> np.ndarray:
                          ).reshape(d[b"shape"])
 
 
-def save(path: str, tree: Any) -> None:
-    leaves, treedef = jax.tree.flatten(tree)
+def dumps(tree: Any) -> bytes:
+    """Serialize a pytree of arrays to bytes (the :func:`save` payload).
+
+    Raw-byte array encoding — a :func:`loads` round-trip is bit-exact,
+    which is what lets ``serving.state_store`` evict user posteriors to
+    host and restore them with identical routing behavior.
+    """
+    leaves, _ = jax.tree.flatten(tree)
     payload = {b"n": len(leaves),
                b"leaves": [_pack_leaf(l) for l in leaves]}
-    tmp = path + ".tmp"
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload))
-    os.replace(tmp, path)   # atomic
+    return msgpack.packb(payload)
 
 
-def restore(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs)."""
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read())
+def loads(data: bytes, like: Any) -> Any:
+    """Deserialize :func:`dumps` bytes into the structure of ``like``
+    (a pytree of arrays or ShapeDtypeStructs). Validates leaf count and
+    per-leaf shape so a mismatched config fails loudly."""
+    payload = msgpack.unpackb(data)
     leaves, treedef = jax.tree.flatten(like)
     stored = payload[b"leaves"]
     if len(stored) != len(leaves):
@@ -56,3 +58,19 @@ def restore(path: str, like: Any) -> Any:
             raise ValueError(f"shape mismatch: {arr.shape} vs {ref.shape}")
         out.append(jnp.asarray(arr, dtype=ref.dtype))
     return treedef.unflatten(out)
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(dumps(tree))
+    os.replace(tmp, path)   # atomic
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    return loads(data, like)

@@ -1,0 +1,519 @@
+"""Per-user posterior store: pool core/kernels, the engine's user axis,
+the serving store's residency invariants, and checkpoint round-trips.
+
+The tentpole contracts pinned here:
+
+* the U=1 pool path is BITWISE identical to the single-posterior code it
+  generalizes (pool scoring/fold delegation, capacity-1 store-backed
+  scheduler vs the plain scheduler, ``users=1`` drivers);
+* the user-gridded Pallas kernels match the per-user reference oracles;
+* routing decisions for a user are identical whether their state stayed
+  device-resident or took an LRU evict → host checkpoint → restore round
+  trip (``training.checkpoint`` raw-byte serialization is bit-exact);
+* the sharded user axis is bit-identical to the single-device vmap
+  (exercised for real on the multi-device CI leg).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import linucb
+from repro.core import policy as policy_mod
+from repro.engine import driver
+from repro.kernels import ops, ref
+from repro.serving.scheduler import ArmSpec, BanditScheduler
+from repro.serving.state_store import UserStateStore
+from repro.training import checkpoint
+
+BACKENDS = ["ref", "pallas_interpret"]
+
+
+def _assert_trees_equal(a, b, exact=True, tol=2e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=tol, rtol=tol)
+
+
+def _warmed_pool(key, cfg, num_users, steps=10):
+    """A pool with distinct per-user posteriors (seeded random folds)."""
+    pool = linucb.init_pool(cfg, num_users)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 1 << 30)))
+    for u in range(num_users):
+        st = linucb.user_state(pool, u)
+        for t in range(steps):
+            x = jnp.asarray(rng.normal(size=(cfg.dim,)), jnp.float32)
+            st = linucb.update(st, jnp.int32(rng.integers(cfg.num_arms)),
+                               x, jnp.float32(rng.random()))
+        pool = linucb.set_user_state(pool, u, st)
+    return pool
+
+
+class TestPosteriorPoolCore:
+    CFG = linucb.LinUCBConfig(num_arms=4, dim=16, alpha=0.7, lam=0.5)
+
+    def test_init_pool_tiles_single_state(self):
+        pool = linucb.init_pool(self.CFG, 3)
+        st = linucb.init(self.CFG)
+        assert pool.num_users == 3 and pool.num_arms == 4
+        for u in range(3):
+            _assert_trees_equal(linucb.user_state(pool, u), st)
+
+    def test_user_state_roundtrip(self):
+        pool = _warmed_pool(jax.random.PRNGKey(0), self.CFG, 3)
+        st = linucb.user_state(pool, 1)
+        pool2 = linucb.set_user_state(pool, 1, st)
+        _assert_trees_equal(pool, pool2)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_pool_scores_match_per_user(self, backend):
+        pool = _warmed_pool(jax.random.PRNGKey(1), self.CFG, 3)
+        rng = np.random.default_rng(2)
+        users = jnp.asarray(rng.integers(0, 3, 9), jnp.int32)
+        xs = jnp.asarray(rng.normal(size=(9, 16)), jnp.float32)
+        with linucb.backend_scope(backend):
+            got = linucb.pool_ucb_scores(pool, users, xs, 0.7)
+        for i in range(9):
+            want = linucb.ucb_scores(
+                linucb.user_state(pool, int(users[i])), xs[i][None], 0.7)[0]
+            np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                       atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_pool_batch_update_per_user_parity(self, backend):
+        pool = _warmed_pool(jax.random.PRNGKey(3), self.CFG, 3)
+        rng = np.random.default_rng(4)
+        B = 12
+        users = jnp.asarray(rng.integers(0, 3, B), jnp.int32)
+        arms = jnp.asarray(rng.integers(0, 4, B), jnp.int32)
+        xs = jnp.asarray(rng.normal(size=(B, 16)), jnp.float32)
+        rs = jnp.asarray(rng.random(B), jnp.float32)
+        ms = jnp.asarray(rng.integers(0, 2, B), jnp.float32)
+        with linucb.backend_scope(backend):
+            out = linucb.pool_batch_update(pool, users, arms, xs, rs,
+                                           mask=ms)
+        for u in range(3):
+            idx = np.where(np.asarray(users) == u)[0]
+            want = linucb.batch_update(linucb.user_state(pool, u),
+                                       arms[idx], xs[idx], rs[idx],
+                                       mask=ms[idx])
+            _assert_trees_equal(linucb.user_state(out, u), want,
+                                exact=False)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_u1_pool_bitwise_delegates(self, backend):
+        """The U=1 pool is a VIEW of the single-posterior math: scoring
+        and folding are bitwise what ucb_scores/batch_update produce."""
+        pool = _warmed_pool(jax.random.PRNGKey(5), self.CFG, 1)
+        st = linucb.user_state(pool, 0)
+        rng = np.random.default_rng(6)
+        B = 7
+        users = jnp.zeros((B,), jnp.int32)
+        arms = jnp.asarray(rng.integers(0, 4, B), jnp.int32)
+        xs = jnp.asarray(rng.normal(size=(B, 16)), jnp.float32)
+        rs = jnp.asarray(rng.random(B), jnp.float32)
+        with linucb.backend_scope(backend):
+            scores = linucb.pool_ucb_scores(pool, users, xs, 0.7)
+            want_scores = linucb.ucb_scores(st, xs, 0.7)
+            folded = linucb.pool_batch_update(pool, users, arms, xs, rs)
+            want_fold = linucb.batch_update(st, arms, xs, rs)
+        np.testing.assert_array_equal(np.asarray(scores),
+                                      np.asarray(want_scores))
+        _assert_trees_equal(linucb.user_state(folded, 0), want_fold)
+
+    def test_pool_select_argmax(self):
+        pool = _warmed_pool(jax.random.PRNGKey(7), self.CFG, 2)
+        rng = np.random.default_rng(8)
+        users = jnp.asarray([0, 1, 0], jnp.int32)
+        xs = jnp.asarray(rng.normal(size=(3, 16)), jnp.float32)
+        arms = linucb.pool_select(pool, users, xs, 0.7)
+        scores = linucb.pool_ucb_scores(pool, users, xs, 0.7)
+        np.testing.assert_array_equal(np.asarray(arms),
+                                      np.argmax(np.asarray(scores), -1))
+
+
+class TestPoolKernelsVsOracle:
+    """User-gridded Pallas kernels (interpret mode) vs per-user refs."""
+
+    def _setup(self, seed, u=3, k=4, d=16, b=10):
+        cfg = linucb.LinUCBConfig(num_arms=k, dim=d, alpha=0.7)
+        pool = _warmed_pool(jax.random.PRNGKey(seed), cfg, u)
+        rng = np.random.default_rng(seed + 100)
+        users = jnp.asarray(rng.integers(0, u, b), jnp.int32)
+        arms = jnp.asarray(rng.integers(0, k, b), jnp.int32)
+        xs = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+        theta_pool = pool.theta
+        return pool, users, arms, xs, theta_pool
+
+    def test_score_pool_kernel(self):
+        pool, users, _, xs, theta = self._setup(0)
+        from repro.kernels.linucb_score import linucb_score_pool
+        got = linucb_score_pool(xs, users, theta, pool.a_inv_t, 0.7,
+                                interpret=True)
+        want = ref.linucb_score_pool_ref(xs, users, theta, pool.a_inv_t,
+                                         0.7)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+    @pytest.mark.parametrize("masked", [False, True])
+    def test_sherman_morrison_pool_kernel(self, masked):
+        pool, users, arms, xs, _ = self._setup(1)
+        from repro.kernels.sherman_morrison import \
+            sherman_morrison_pool_selected
+        rng = np.random.default_rng(9)
+        mask = (jnp.asarray(rng.integers(0, 2, len(users)), jnp.float32)
+                if masked else None)
+        got = sherman_morrison_pool_selected(pool.a_inv_t, xs, users, arms,
+                                             row_mask=mask, interpret=True)
+        want = ref.sherman_morrison_pool_selected_ref(pool.a_inv_t, xs,
+                                                      users, arms,
+                                                      row_mask=mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_sherman_morrison_pool_duplicate_pairs(self):
+        """Many rows hitting ONE (user, arm) pair fold sequentially."""
+        pool, _, _, xs, _ = self._setup(2)
+        from repro.kernels.sherman_morrison import \
+            sherman_morrison_pool_selected
+        users = jnp.ones((xs.shape[0],), jnp.int32)
+        arms = jnp.full((xs.shape[0],), 2, jnp.int32)
+        got = sherman_morrison_pool_selected(pool.a_inv_t, xs, users, arms,
+                                             interpret=True)
+        want = ref.sherman_morrison_pool_selected_ref(pool.a_inv_t, xs,
+                                                      users, arms)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+
+class TestFoldObservationsPool:
+    """The engine's per-user fold vs per-user sequential reference."""
+
+    POLICIES = ["greedy_linucb", "budget_linucb", "random", "metallm"]
+
+    def _obs(self, seed, k, d, b, u):
+        rng = np.random.default_rng(seed)
+        return (jnp.asarray(rng.integers(0, u, b), jnp.int32),
+                jnp.asarray(rng.integers(0, k, b), jnp.int32),
+                jnp.asarray(rng.normal(size=(b, d)), jnp.float32),
+                jnp.asarray(rng.random(b), jnp.float32),
+                jnp.asarray(rng.random(b), jnp.float32),
+                jnp.asarray(rng.integers(0, 2, b), jnp.float32))
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_u1_bitwise_matches_flat_fold(self, policy):
+        K, d = 3, 8
+        spec = policy_mod.as_spec(policy)
+        pol = spec.build(K, d, alpha=0.7, lam=0.5, horizon_t=100,
+                         c_max=1.0, seed=0)
+        st = pol.init()
+        stacked = jax.tree.map(lambda l: jnp.asarray(l)[None], st)
+        users, arms, xs, rs, cs, ms = self._obs(0, K, d, 9, 1)
+        got = driver.fold_observations_pool(pol, stacked, users, arms, xs,
+                                            rs, cs, ms)
+        want = driver.fold_observations(pol, st, arms, xs, rs, cs, ms)
+        _assert_trees_equal(jax.tree.map(lambda l: l[0], got), want)
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_per_user_parity(self, policy):
+        K, d, U = 3, 8, 3
+        spec = policy_mod.as_spec(policy)
+        pol = spec.build(K, d, alpha=0.7, lam=0.5, horizon_t=100,
+                         c_max=1.0, seed=0)
+        st = pol.init()
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(jnp.asarray(l),
+                                       (U,) + jnp.asarray(l).shape), st)
+        users, arms, xs, rs, cs, ms = self._obs(1, K, d, 12, U)
+        got = driver.fold_observations_pool(pol, stacked, users, arms, xs,
+                                            rs, cs, ms)
+        for u in range(U):
+            idx = np.where(np.asarray(users) == u)[0]
+            want = driver.fold_observations(pol, st, arms[idx], xs[idx],
+                                            rs[idx], cs[idx], ms[idx])
+            _assert_trees_equal(jax.tree.map(lambda l: l[u], got), want,
+                                exact=False)
+
+    def test_empty_and_all_masked_are_noops(self):
+        K, d, U = 3, 8, 2
+        pol = policy_mod.as_spec("greedy_linucb").build(
+            K, d, alpha=0.7, lam=0.5, horizon_t=100, c_max=1.0, seed=0)
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(jnp.asarray(l),
+                                       (U,) + jnp.asarray(l).shape),
+            pol.init())
+        e = jnp.zeros((0,))
+        out = driver.fold_observations_pool(
+            pol, stacked, e.astype(jnp.int32), e.astype(jnp.int32),
+            jnp.zeros((0, d)), e, e, e)
+        _assert_trees_equal(out, stacked)
+        users, arms, xs, rs, cs, _ = self._obs(2, K, d, 6, U)
+        out = driver.fold_observations_pool(pol, stacked, users, arms, xs,
+                                            rs, cs, jnp.zeros((6,)))
+        _assert_trees_equal(out, stacked)
+
+
+class TestMultistreamUserAxis:
+    def test_users1_matches_default(self):
+        a = driver.run_pool_multistream(policy="greedy_linucb", rounds=4,
+                                        streams=3, seed=2, chunk_size=2)
+        b = driver.run_pool_multistream(policy="greedy_linucb", rounds=4,
+                                        streams=3, seed=2, users=1,
+                                        chunk_size=2)
+        np.testing.assert_array_equal(np.asarray(a.arms),
+                                      np.asarray(b.arms))
+        np.testing.assert_array_equal(np.asarray(a.rewards),
+                                      np.asarray(b.rewards))
+
+    def test_users_axis_chunk_invariant(self):
+        a = driver.run_pool_multistream(policy="greedy_linucb", rounds=6,
+                                        streams=4, seed=1, users=3,
+                                        chunk_size=2)
+        b = driver.run_pool_multistream(policy="greedy_linucb", rounds=6,
+                                        streams=4, seed=1, users=3,
+                                        chunk_size=6)
+        for f in ("arms", "rewards", "costs", "regrets"):
+            np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                          np.asarray(getattr(b, f)))
+
+    @pytest.mark.parametrize("policy", ["budget_linucb", "random"])
+    def test_users_axis_runs_policies(self, policy):
+        r = driver.run_pool_multistream(policy=policy, rounds=4, streams=3,
+                                        seed=0, users=2, chunk_size=2)
+        assert np.asarray(r.arms).shape[0] == 12
+
+    def test_users_validation(self):
+        with pytest.raises(ValueError, match="users"):
+            driver.run_pool_multistream(policy="greedy_linucb", rounds=2,
+                                        streams=2, users=0)
+
+
+class TestSweepUserAxis:
+    def test_users1_matches_per_seed_runs(self):
+        sw = driver.run_pool_experiment_sweep("greedy_linucb", [0, 1],
+                                              rounds=4, users=1,
+                                              shard="none")
+        for s, res in zip([0, 1], sw):
+            one = driver.run_pool_experiment("greedy_linucb", rounds=4,
+                                             seed=s)
+            np.testing.assert_array_equal(np.asarray(res.arms),
+                                          np.asarray(one.arms))
+
+    def test_users_axis_shapes_and_streams(self):
+        sw = driver.run_pool_experiment_sweep("greedy_linucb", [0, 1],
+                                              rounds=4, users=3,
+                                              shard="none")
+        assert len(sw) == 6
+        # users of one seed see different round keys → different traces
+        assert any(
+            not np.array_equal(np.asarray(sw[0].arms),
+                               np.asarray(sw[u].arms)) for u in (1, 2))
+
+    def test_voting_rejects_users(self):
+        with pytest.raises(ValueError, match="stateless"):
+            driver.run_pool_experiment_sweep("voting", [0], rounds=2,
+                                             users=2)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device mesh")
+class TestUserAxisShardParity:
+    """The 8-host-device CI leg: U-axis sharded == single-device vmap."""
+
+    def test_multistream_users_shard_parity(self):
+        kw = dict(policy="greedy_linucb", rounds=4,
+                  streams=len(jax.devices()), seed=5, users=4,
+                  chunk_size=2)
+        a = driver.run_pool_multistream(shard="none", **kw)
+        b = driver.run_pool_multistream(shard="auto", **kw)
+        for f in ("arms", "rewards", "costs", "regrets"):
+            np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                          np.asarray(getattr(b, f)))
+
+    def test_sweep_users_shard_parity(self):
+        kw = dict(seeds=[0, 1], rounds=3, users=4)
+        a = driver.run_pool_experiment_sweep("greedy_linucb", shard="none",
+                                             **kw)
+        b = driver.run_pool_experiment_sweep("greedy_linucb", shard="auto",
+                                             **kw)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x.arms),
+                                          np.asarray(y.arms))
+            np.testing.assert_array_equal(np.asarray(x.rewards),
+                                          np.asarray(y.rewards))
+
+
+def _arms(k):
+    return [ArmSpec(f"llm-{i}", None, 1e-5 * (i + 1)) for i in range(k)]
+
+
+class TestUserStateStore:
+    K, D = 3, 12
+
+    def _cfg(self, **kw):
+        return linucb.LinUCBConfig(num_arms=self.K, dim=self.D, alpha=0.8,
+                                   **kw)
+
+    def _traffic(self, seed, n, users):
+        rng = np.random.default_rng(seed)
+        return (rng.integers(0, users, n),
+                rng.normal(size=(n, self.D)).astype(np.float32),
+                rng.random(n).astype(np.float32))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_capacity1_store_bitwise_vs_plain_scheduler(self, backend):
+        """One user in a capacity-1 store == the single-posterior
+        scheduler, arm for arm and bit for bit."""
+        store = UserStateStore(self._cfg(), capacity=1)
+        with_store = BanditScheduler(_arms(self.K), dim=self.D, alpha=0.8,
+                                     state_store=store, backend=backend)
+        plain = BanditScheduler(_arms(self.K), dim=self.D, alpha=0.8,
+                                backend=backend)
+        for r in range(3):
+            _, xs, rewards = self._traffic(r, 5, 1)
+            a = with_store.route(xs)
+            b = plain.route(xs)
+            np.testing.assert_array_equal(a, b)
+            with_store.feedback_batch(a, xs, rewards)
+            plain.feedback_batch(b, xs, rewards)
+        _assert_trees_equal(store.user_posterior(0), plain.state)
+
+    def test_eviction_restore_routing_invariant(self):
+        """Routing for a user is identical whether their posterior stayed
+        device-resident or was LRU-evicted to host bytes and restored."""
+        uids, xs, rewards = self._traffic(0, 24, 1)
+        uids[:] = 7                       # one tracked user
+        quiet = UserStateStore(self._cfg(), capacity=4)
+        churn = UserStateStore(self._cfg(), capacity=4)
+        rng = np.random.default_rng(1)
+        for i in range(0, 24, 4):
+            a = quiet.route(uids[i:i + 4], xs[i:i + 4])
+            b = churn.route(uids[i:i + 4], xs[i:i + 4])
+            np.testing.assert_array_equal(a, b)
+            quiet.fold(uids[i:i + 4], a, xs[i:i + 4], rewards[i:i + 4])
+            churn.fold(uids[i:i + 4], b, xs[i:i + 4], rewards[i:i + 4])
+            # churn: stampede of other users forces user 7 off-device
+            other_u = rng.integers(100, 200, 8)
+            other_x = rng.normal(size=(8, self.D)).astype(np.float32)
+            oa = churn.route(other_u, other_x)
+            churn.fold(other_u, oa, other_x,
+                       rng.random(8).astype(np.float32))
+        assert churn.evictions > 0 and churn.restores > 0
+        assert quiet.evictions == 0
+        _assert_trees_equal(quiet.user_posterior(7),
+                            churn.user_posterior(7))
+
+    def test_cohort_prior_warm_start(self):
+        store = UserStateStore(self._cfg(), capacity=4, cohort_prior=True)
+        uids, xs, rewards = self._traffic(2, 8, 2)
+        arms = store.route(uids, xs)
+        store.fold(uids, arms, xs, rewards)
+        # a new user inherits the cohort posterior (not the flat prior)
+        store.route([55], xs[:1])
+        _assert_trees_equal(store.user_posterior(55), store.cohort)
+        flat = UserStateStore(self._cfg(), capacity=4, cohort_prior=False)
+        arms = flat.route(uids, xs)
+        flat.fold(uids, arms, xs, rewards)
+        flat.route([55], xs[:1])
+        _assert_trees_equal(flat.user_posterior(55),
+                            linucb.init(self._cfg()))
+
+    def test_batch_wider_than_capacity_chunks(self):
+        store = UserStateStore(self._cfg(), capacity=4)
+        uids, xs, rewards = self._traffic(3, 20, 20)
+        uids = np.arange(20)              # 20 distinct users, capacity 4
+        arms = store.route(uids, xs)
+        assert arms.shape == (20,)
+        store.fold(uids, arms, xs, rewards)
+        assert store.evictions > 0
+        with pytest.raises(ValueError, match="distinct users"):
+            store.lookup(np.arange(5))
+
+    def test_save_load_roundtrip_bitwise(self, tmp_path):
+        store = UserStateStore(self._cfg(), capacity=3)
+        uids, xs, rewards = self._traffic(4, 18, 9)
+        arms = store.route(uids, xs)
+        store.fold(uids, arms, xs, rewards)
+        path = os.path.join(tmp_path, "store.msgpack")
+        store.save(path)
+        fresh = UserStateStore(self._cfg(), capacity=3)
+        fresh.load(path)
+        _assert_trees_equal(fresh.pool, store.pool)
+        _assert_trees_equal(fresh.cohort, store.cohort)
+        assert fresh.resident_users == store.resident_users
+        for u in set(uids.tolist()):
+            _assert_trees_equal(fresh.user_posterior(int(u)),
+                                store.user_posterior(int(u)))
+        # and routing continues identically
+        _, xs2, _ = self._traffic(5, 6, 9)
+        np.testing.assert_array_equal(store.route(uids[:6], xs2),
+                                      fresh.route(uids[:6], xs2))
+
+    def test_unknown_user_raises(self):
+        store = UserStateStore(self._cfg(), capacity=2)
+        with pytest.raises(KeyError):
+            store.user_posterior(99)
+
+    def test_scheduler_store_validation(self):
+        store = UserStateStore(self._cfg(), capacity=2)
+        with pytest.raises(ValueError, match="greedy_linucb"):
+            BanditScheduler(_arms(self.K), dim=self.D,
+                            policy="budget_linucb", state_store=store)
+        with pytest.raises(ValueError, match="does not match"):
+            BanditScheduler(_arms(self.K), dim=self.D + 4,
+                            state_store=store)
+        plain = BanditScheduler(_arms(self.K), dim=self.D)
+        with pytest.raises(ValueError, match="state_store"):
+            plain.route(np.zeros((2, self.D), np.float32),
+                        user_ids=np.asarray([0, 1]))
+
+
+class TestCheckpointRoundTrip:
+    """``training.checkpoint`` byte-level API — what eviction rides on."""
+
+    def test_dumps_loads_preserves_dtype_and_shape(self):
+        tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "n": np.asarray([3], np.int32),
+                "flag": np.asarray([True, False])}
+        out = checkpoint.loads(checkpoint.dumps(tree), tree)
+        for k in tree:
+            got = np.asarray(out[k])
+            assert got.dtype == tree[k].dtype and got.shape == tree[k].shape
+            np.testing.assert_array_equal(got, tree[k])
+
+    def test_linucb_state_bit_exact(self):
+        cfg = linucb.LinUCBConfig(num_arms=3, dim=8)
+        st = linucb.init(cfg)
+        rng = np.random.default_rng(0)
+        for t in range(5):
+            st = linucb.update(
+                st, jnp.int32(rng.integers(3)),
+                jnp.asarray(rng.normal(size=(8,)), jnp.float32),
+                jnp.float32(rng.random()))
+        out = checkpoint.loads(checkpoint.dumps(st), st)
+        _assert_trees_equal(out, st)
+
+    def test_leaf_count_mismatch_raises(self):
+        blob = checkpoint.dumps({"a": np.zeros(3)})
+        with pytest.raises(ValueError, match="leaves"):
+            checkpoint.loads(blob, {"a": np.zeros(3), "b": np.zeros(3)})
+
+    def test_shape_mismatch_raises(self):
+        blob = checkpoint.dumps({"a": np.zeros((3,))})
+        with pytest.raises(ValueError, match="shape"):
+            checkpoint.loads(blob, {"a": np.zeros((4,))})
+
+    def test_save_restore_file_roundtrip(self, tmp_path):
+        cfg = linucb.LinUCBConfig(num_arms=2, dim=4)
+        pool = linucb.init_pool(cfg, 3)
+        path = os.path.join(tmp_path, "pool.msgpack")
+        checkpoint.save(path, pool)
+        out = checkpoint.restore(path, pool)
+        _assert_trees_equal(out, pool)
