@@ -1,0 +1,173 @@
+"""Fused round mega-kernel benchmark: one launch vs three per decision.
+
+The sequential LinUCB decision loop is launch-bound at small d: each
+round dispatches the blocked score kernel, an XLA argmax, and the
+selected-arm Sherman–Morrison kernel — three dispatches whose combined
+FLOPs take microseconds. ``kernels.fused_round`` collapses the whole
+round into ONE ``pallas_call``. This suite times exactly that contrast
+on the driver's state shapes:
+
+* ``round_d64`` / ``round_d384`` — the per-decision latency of the
+  three-launch sequence (score → argmax → update, one jitted dispatch
+  each, the serving-loop shape) vs the fused single launch, at the
+  dispatch-bound d=64 regime and the paper shape d=384. The headline
+  claim: ≥ 2× rounds/s at d=64.
+* ``driver_scan_d64`` — the end-to-end scan driver
+  (``run_pool_experiment``) with ``fuse_rounds=`` off/on, plus a bitwise
+  parity check of the full result logs. Inside one scanned XLA program
+  the CPU interpret backend amortizes launches away, so this entry
+  records throughput and parity rather than a speedup claim — per-launch
+  overhead is what real TPU dispatch pays, and the round_* entries are
+  its proxy.
+
+All timings are warm; results land in results/benchmarks via
+``common.save_json`` (→ ``bench_fused.json``).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import env as env_mod
+from repro.core import linucb
+from repro.engine import driver
+from repro.kernels import fused_round, linucb_score, sherman_morrison
+
+ROUNDS = 2000
+NUM_ARMS = 6
+RESULT_FIELDS = ("arms", "rewards", "costs", "regrets", "budgets",
+                 "datasets")
+
+
+def _warm_state(d: int, seed: int = 0) -> linucb.LinUCBState:
+    cfg = linucb.LinUCBConfig(num_arms=NUM_ARMS, dim=d)
+    s = linucb.init(cfg)
+    key = jax.random.PRNGKey(seed)
+    for i in range(2 * NUM_ARMS):
+        kx, kr, key = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (d,)) / np.sqrt(d)
+        s = linucb.update(s, jnp.int32(i % NUM_ARMS), x,
+                          jax.random.bernoulli(kr).astype(jnp.float32))
+    return s
+
+
+def _dispatch_loop(fn, state, x, n: int) -> float:
+    """Seconds for ``n`` sequential dispatches of one decision round."""
+    out = fn(state.a_inv_t, state.theta, x)
+    jax.block_until_ready(out[0])
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(state.a_inv_t, state.theta, x)
+    jax.block_until_ready(out[0])
+    return time.perf_counter() - t0
+
+
+def _round_compare(d: int) -> Dict[str, float]:
+    """Three-launch vs fused-single-launch per-decision latency at d."""
+    k = NUM_ARMS
+    state = _warm_state(d)
+    x = jax.random.normal(jax.random.PRNGKey(7), (d,)) / np.sqrt(d)
+    feas = jnp.ones((k,), jnp.int32)
+    lower = jnp.ones((k,), jnp.float32)
+    mean_ext = jnp.zeros((k,), jnp.float32)
+    interp = jax.default_backend() != "tpu"
+
+    score_j = jax.jit(functools.partial(
+        linucb_score.linucb_score_blocked, alpha=0.675, interpret=interp))
+    argmax_j = jax.jit(
+        lambda sc: jnp.argmax(sc, axis=-1).astype(jnp.int32))
+    sm_j = jax.jit(functools.partial(
+        sherman_morrison.sherman_morrison_arm, interpret=interp))
+    fused_j = jax.jit(functools.partial(
+        fused_round.fused_round_step, alpha=0.675, recompose=False,
+        interpret=interp))
+
+    def three_launch(a_inv_t, theta, xv):
+        scores = score_j(xv[None], theta, a_inv_t)
+        arm = argmax_j(scores)[0]
+        a_new, ax = sm_j(a_inv_t, xv, arm, jnp.float32(1.0))
+        return a_new, arm, ax
+
+    def one_launch(a_inv_t, theta, xv):
+        return fused_j(a_inv_t, theta, xv, feas, lower, mean_ext,
+                       jnp.float32(1.0), jnp.float32(1.0))
+
+    three_s = common.median_secs(
+        lambda: _dispatch_loop(three_launch, state, x, ROUNDS))
+    fused_s = common.median_secs(
+        lambda: _dispatch_loop(one_launch, state, x, ROUNDS))
+    return {
+        "three_launch_s": three_s,
+        "fused_s": fused_s,
+        "three_launch_rounds_per_s": ROUNDS / three_s,
+        "fused_rounds_per_s": ROUNDS / fused_s,
+        "speedup": three_s / fused_s,
+    }
+
+
+def _driver_compare() -> Dict[str, object]:
+    """End-to-end scan driver with ``fuse_rounds=`` off/on + parity."""
+    env64 = env_mod.CalibratedPoolEnv(dim=64)
+    backend = "pallas" if jax.default_backend() == "tpu" \
+        else "pallas_interpret"
+    with linucb.backend_scope(backend):
+        runs = {}
+        for fuse in (False, True):
+            run = lambda: driver.run_pool_experiment(
+                "greedy_linucb", rounds=ROUNDS, env=env64,
+                fuse_rounds=fuse)
+            run()                       # warm the jitted driver
+            runs[fuse] = (common.median_secs(run), run())
+        (unfused_s, res_a), (fused_s, res_b) = runs[False], runs[True]
+    parity = all(np.array_equal(getattr(res_a, f), getattr(res_b, f))
+                 for f in RESULT_FIELDS)
+    return {
+        "backend": backend,
+        "unfused_s": unfused_s,
+        "fused_s": fused_s,
+        "unfused_rounds_per_s": ROUNDS / unfused_s,
+        "fused_rounds_per_s": ROUNDS / fused_s,
+        "ratio": unfused_s / fused_s,
+        "bitwise_parity": parity,
+    }
+
+
+def run() -> Dict:
+    out: Dict[str, object] = {"rounds": ROUNDS, "num_arms": NUM_ARMS}
+    out["round_d64"] = _round_compare(64)
+    out["round_d384"] = _round_compare(384)
+    out["driver_scan_d64"] = _driver_compare()
+    common.save_json("bench_fused", out)
+    return out
+
+
+def main():
+    out = run()
+    print("\n=== Fused round: one launch vs three per decision ===")
+    for key in ("round_d64", "round_d384"):
+        v = out[key]
+        print(f"{key}: {v['fused_rounds_per_s']:.0f} rounds/s fused vs "
+              f"{v['three_launch_rounds_per_s']:.0f} three-launch "
+              f"({v['speedup']:.2f}x)")
+    dv = out["driver_scan_d64"]
+    print(f"driver_scan_d64[{dv['backend']}]: "
+          f"{dv['fused_rounds_per_s']:.0f} rounds/s fused vs "
+          f"{dv['unfused_rounds_per_s']:.0f} unfused "
+          f"(parity={dv['bitwise_parity']})")
+    claims = {
+        "fused_2x_at_d64": out["round_d64"]["speedup"] >= 2.0,
+        "fused_faster_at_d384": out["round_d384"]["speedup"] > 1.0,
+        "driver_bitwise_parity": bool(dv["bitwise_parity"]),
+    }
+    print("claims:", claims)
+    return out, claims
+
+
+if __name__ == "__main__":
+    main()

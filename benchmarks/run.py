@@ -18,11 +18,11 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (appendix_context, bench_driver, bench_kernels,
-                        bench_serving_faults, bench_user_store,
-                        fig2_budget_cdf, fig3_budget_sensitivity,
-                        table1_2_accuracy_cost, table3_position,
-                        theorem_regret)
+from benchmarks import (appendix_context, bench_driver, bench_fused,
+                        bench_kernels, bench_serving_faults,
+                        bench_user_store, fig2_budget_cdf,
+                        fig3_budget_sensitivity, table1_2_accuracy_cost,
+                        table3_position, theorem_regret)
 from benchmarks import common
 
 
@@ -48,6 +48,8 @@ def main() -> None:
          lambda p: p["linucb_score_B128_K6_d384"]),
         ("bench_driver", bench_driver,
          lambda p: p["pool_d64_sweep6_greedy_linucb"]["speedup"]),
+        ("bench_fused", bench_fused,
+         lambda p: p["round_d64"]["speedup"]),
         ("bench_serving_faults", bench_serving_faults,
          lambda p: p["regret_ratio"]),
         ("bench_user_store", bench_user_store,

@@ -1,0 +1,224 @@
+"""Policy bridge for the fused round kernel (``kernels.fused_round``).
+
+The fused kernel collapses score→select→update into one launch, but it
+can only fuse what it can express as operands: a per-arm score
+denominator (``lower``), a feasibility mask, an external exploitation
+mean and a bonus scale. This module maps a :class:`~repro.core.policy.
+PolicySpec` onto those operands — replicating, op for op, exactly what
+the spec's adapter computes on the three-launch path, so the fused and
+unfused drivers produce bitwise-identical selections and posteriors.
+
+Supported specs (the LinUCB family whose hot loop the kernel fuses):
+
+* ``greedy_linucb`` — lower ≡ 1, all arms feasible;
+* ``budget_linucb`` — ``lower = max(ĉ−β, ε)`` and the cold-start
+  feasibility rule of ``budget.select``;
+* ``positional_linucb`` (greedy or budget base) — the
+  :class:`PositionalWeight` bonus scale ``w = 1 − γ^(h+1)``;
+* any of the above wrapped in :class:`PositionalWeight` (at most one —
+  the kernel applies a single scale; a second would change float
+  association) and/or :class:`BudgetGate` transforms (feasibility ANDs
+  compose exactly).
+
+Whenever any combinator is attached (or the base is positional), the
+spec's select is the ``select_from_parts`` recomposition ``mean +
+w·bonus`` rather than the raw index — the bridge switches the kernel to
+``recompose=True`` and feeds it the SAME ``linucb.mean_scores`` einsum
+the parts path uses, keeping parity bitwise. Everything else —
+plan-based policies, stochastic selects (:class:`EpsilonMix`,
+:class:`CostTieBreak`), unknown bases — raises :class:`ValueError`:
+``fuse_rounds=`` is a loud opt-in, not a best-effort fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import budget as budget_mod
+from repro.core import linucb
+from repro.core import policy as policy_mod
+
+_SUPPORTED = ("greedy_linucb", "budget_linucb", "positional_linucb")
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPolicy:
+    """The fused-round view of a policy: operand builders + state plumbing.
+
+    ``inputs(state, plan, x, h, remaining, recompose=…)`` returns the
+    kernel operands ``(feasible int32 (K,), lower (K,), mean_ext (K,),
+    w ())`` — ``recompose`` defaults to the build-time flag and is
+    overridden to True by the masked serving route (which must match
+    ``masked_select``'s parts recomposition);
+    ``bandit_of`` projects the policy state onto the
+    :class:`~repro.core.linucb.LinUCBState` the kernel updates;
+    ``finish`` folds the kernel result plus the observed reward/cost
+    back into the full policy state (the reward-dependent tail).
+    """
+
+    name: str
+    alpha: float
+    recompose: bool
+    inputs: Callable
+    bandit_of: Callable
+    finish: Callable
+
+    def step(self, state, plan, x, h, remaining, gate):
+        """One fused launch: returns ``(a_inv_t_new, arm, ax)`` with the
+        signed arm (−1 = no feasible arm; the round does not execute)."""
+        feasible, lower, mean_ext, w = self.inputs(state, plan, x, h,
+                                                   remaining)
+        return linucb.fused_step(self.bandit_of(state), x, feasible, lower,
+                                 mean_ext, w, gate, self.alpha,
+                                 recompose=self.recompose)
+
+    def select(self, state, plan, x, h, remaining, arm_mask=None):
+        """Selection-only fused launch (frozen-snapshot / serving route
+        paths): same signed-arm contract as the adapter's ``select``.
+
+        ``arm_mask`` composes a dynamic (K,) quarantine mask in — the
+        fused twin of :func:`~repro.core.policy.masked_select`, which
+        rescored via the (mean, bonus) parts recomposition; the kernel is
+        switched to ``recompose=True`` accordingly so masked routing
+        stays bitwise against the unfused masked program."""
+        recompose = self.recompose if arm_mask is None else True
+        feasible, lower, mean_ext, w = self.inputs(state, plan, x, h,
+                                                   remaining,
+                                                   recompose=recompose)
+        if arm_mask is not None:
+            feasible = feasible * jnp.asarray(arm_mask, feasible.dtype)
+        return linucb.fused_select(self.bandit_of(state), x, feasible,
+                                   lower, mean_ext, w, self.alpha,
+                                   recompose=recompose)
+
+
+def supports_fusion(spec) -> bool:
+    """Whether :func:`build_fused` accepts this spec (no side effects)."""
+    try:
+        build_fused(policy_mod.as_spec(spec), 1, 1)
+        return True
+    except ValueError:
+        return False
+
+
+def build_fused(spec, num_arms: int, dim: int, *, alpha: float = 0.675,
+                lam: float = 0.45, horizon_t: int = 10_000,
+                c_max: float = 1.0) -> FusedPolicy:
+    """Build the fused-round bridge for ``spec`` at a concrete scale.
+
+    Mirrors :meth:`PolicySpec.build`'s arg handling (spec args override
+    the context kwargs) and raises :class:`ValueError` for any spec whose
+    selection the kernel cannot express.
+    """
+    spec = policy_mod.as_spec(spec)
+    if spec.name not in _SUPPORTED:
+        raise ValueError(
+            f"fuse_rounds only supports the LinUCB family {_SUPPORTED}, "
+            f"got {spec.name!r}")
+    kw = spec.kwargs
+    alpha = float(kw.pop("alpha", alpha))
+    lam = float(kw.pop("lam", lam))
+    horizon_t = int(kw.pop("horizon_t", horizon_t))
+    c_max = float(kw.pop("c_max", c_max))
+
+    # resolve the base family + the positional sugar
+    gammas = []
+    base_name = spec.name
+    if spec.name == "positional_linucb":
+        gamma = float(kw.pop("gamma", 0.8))
+        base_name = kw.pop("base", "greedy_linucb")
+        if base_name not in ("greedy_linucb", "budget_linucb"):
+            raise ValueError(f"positional_linucb base must be a LinUCB "
+                             f"adapter, got {base_name!r}")
+        if not 0.0 <= gamma < 1.0:
+            raise ValueError(f"gamma must be in [0, 1), got {gamma}")
+        gammas.append(gamma)
+    if kw:
+        raise ValueError(f"unknown policy args {sorted(kw)!r} for fused "
+                         f"{spec.name!r}")
+
+    gates = []
+    for t in spec.transforms:
+        if isinstance(t, policy_mod.PositionalWeight):
+            g = float(t.gamma)
+            if not 0.0 <= g < 1.0:
+                raise ValueError(f"gamma must be in [0, 1), got {g}")
+            gammas.append(g)
+        elif isinstance(t, policy_mod.BudgetGate):
+            if t.costs is None and base_name != "budget_linucb":
+                raise ValueError(
+                    f"BudgetGate over {base_name!r} needs static costs= "
+                    f"(its state tracks no cost statistics)")
+            gates.append((None if t.costs is None
+                          else jnp.asarray(t.costs, jnp.float32),
+                          float(t.slack)))
+        else:
+            raise ValueError(
+                f"fuse_rounds cannot express {type(t).__name__} (its "
+                f"select is not a shaped-score argmax); run unfused")
+    if len(gammas) > 1:
+        raise ValueError(
+            "fuse_rounds supports at most one PositionalWeight scale "
+            "(a second would change the bonus float association)")
+    # any combinator (or the positional base) means the adapter selects
+    # via the (mean, bonus) recomposition, not the raw index
+    recompose = bool(gammas or gates or spec.transforms)
+    gamma: Optional[float] = gammas[0] if gammas else None
+    budgeted = base_name == "budget_linucb"
+    bcfg = (budget_mod.BudgetConfig(num_arms, dim, alpha, lam,
+                                    horizon_t=horizon_t, c_max=c_max)
+            if budgeted else None)
+
+    def inputs(state, plan, x, h, remaining, recompose=recompose):
+        del plan  # the whole family plans with no_plan
+        if budgeted:
+            c_hat, beta = budget_mod.cost_estimates(state, bcfg)
+            lower = jnp.maximum(c_hat - beta, bcfg.eps)
+            if recompose:      # budget.score_parts' feasibility
+                feasible = ((c_hat <= remaining)
+                            | (state.cost_count == 0))
+            else:              # budget.select via budget.scores
+                feasible = ((c_hat <= jnp.asarray(remaining)[..., None])
+                            | (state.cost_count == 0))
+            bandit = state.bandit
+        else:
+            lower = jnp.ones((num_arms,), jnp.float32)
+            feasible = jnp.ones((num_arms,), bool)
+            bandit = state
+        for static_costs, slack in gates:
+            if static_costs is not None:
+                c_g, known = static_costs, jnp.ones_like(static_costs,
+                                                         bool)
+            else:
+                c_g, known = policy_mod._empirical_costs(state)
+            feasible = feasible & ((c_g <= slack * remaining) | ~known)
+        mean_ext = (linucb.mean_scores(bandit, x) if recompose
+                    else jnp.zeros((num_arms,), jnp.float32))
+        w = (jnp.float32(1.0) if gamma is None
+             else 1.0 - jnp.power(gamma, jnp.asarray(h, jnp.float32) + 1.0))
+        return feasible.astype(jnp.int32), lower, mean_ext, w
+
+    if budgeted:
+        bandit_of = lambda s: s.bandit
+
+        def finish(state, a_new, ax, arm, x, reward, cost, executed):
+            m = jnp.asarray(executed, state.cost_sum.dtype)
+            return budget_mod.BudgetState(
+                bandit=linucb.fused_update_finish(
+                    state.bandit, a_new, ax, arm, x, reward, executed),
+                cost_sum=state.cost_sum.at[arm].add(m * cost),
+                cost_count=state.cost_count.at[arm].add(m),
+            )
+    else:
+        bandit_of = lambda s: s
+
+        def finish(state, a_new, ax, arm, x, reward, cost, executed):
+            del cost
+            return linucb.fused_update_finish(state, a_new, ax, arm, x,
+                                              reward, executed)
+
+    return FusedPolicy(name=spec.name, alpha=alpha, recompose=recompose,
+                       inputs=inputs, bandit_of=bandit_of, finish=finish)

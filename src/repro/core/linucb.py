@@ -242,11 +242,22 @@ def update(state: LinUCBState, arm: jax.Array, x: jax.Array,
         a_inv_t, ax = _sm.sherman_morrison_arm(
             state.a_inv_t, x, arm, gate,
             interpret=backend == "pallas_interpret")
-        denom = 1.0 + x @ ax
-    # θ_k incrementally, in O(d):  A⁻¹_new b_new
-    #   = (A⁻¹ − axaxᵀ/denom)(b + r·x)
-    #   = θ_old + r·ax − ax·(⟨ax,b⟩ + r·⟨ax,x⟩)/denom
-    # using the cached invariant θ_old = A⁻¹b — no (d,d) matvec needed.
+    return _update_tail(state, arm, x, reward, mask, m, a_inv_t, ax)
+
+
+def _update_tail(state: LinUCBState, arm: jax.Array, x: jax.Array,
+                 reward: jax.Array, mask, m, a_inv_t: jax.Array,
+                 ax: jax.Array) -> LinUCBState:
+    """The O(d) θ/b/counts tail of :func:`update`, shared with the
+    fused-round path (``fused_update_finish``) — given the already
+    updated inverse and ``ax = A_arm⁻¹x`` on the PRE-update inverse.
+
+    θ_k incrementally, in O(d):  A⁻¹_new b_new
+      = (A⁻¹ − axaxᵀ/denom)(b + r·x)
+      = θ_old + r·ax − ax·(⟨ax,b⟩ + r·⟨ax,x⟩)/denom
+    using the cached invariant θ_old = A⁻¹b — no (d,d) matvec needed.
+    """
+    denom = 1.0 + x @ ax
     b_arm = state.b[arm]
     scale = (ax @ b_arm + reward * (x @ ax)) / denom
     dtheta = reward * ax - scale * ax
@@ -259,6 +270,110 @@ def update(state: LinUCBState, arm: jax.Array, x: jax.Array,
     theta = state.theta.at[arm].add(dtheta)
     counts = state.counts.at[arm].add(one)
     return LinUCBState(a_inv_t=a_inv_t, b=b, theta=theta, counts=counts)
+
+
+# -- fused round step (single-launch score→select→update) -------------------
+
+def fused_step(state: LinUCBState, x: jax.Array, feasible: jax.Array,
+               lower: jax.Array, mean_ext: jax.Array, w: jax.Array,
+               gate: jax.Array, alpha: float, *, recompose: bool = False):
+    """One decision step in a single kernel launch: shaped UCB scores,
+    the feasibility-masked argmax, and the selected arm's Sherman–
+    Morrison inverse update (gated by ``gate·(arm ≥ 0)``), all inside
+    ONE ``pallas_call`` (``kernels.fused_round``).
+
+    Returns ``(a_inv_t_new, arm, ax)``: the updated block inverse, the
+    signed selected arm (−1 = no feasible arm) and ``ax = A_arm⁻¹x`` on
+    the pre-update inverse. Callers finish the reward-dependent O(d)
+    θ/b/counts tail with :func:`fused_update_finish` once the reward is
+    observed — the inverse update is reward-independent, which is what
+    makes the pre-reward fusion exact.
+
+    On the ``ref`` backend there are no kernel launches to fuse; the
+    pure-jnp oracle (``kernels.ref.fused_round_step_ref``) runs instead
+    (semantically equal, not bitwise vs the kernels). The engine/serving
+    ``fuse_rounds=`` switches therefore treat ``ref`` as a no-op and
+    keep their normal path.
+    """
+    backend = resolved_backend()
+    if backend == "ref":
+        from repro.kernels import ref as _ref
+        return _ref.fused_round_step_ref(
+            state.a_inv_t, state.theta, x, feasible, lower, mean_ext, w,
+            gate, float(alpha), recompose=recompose)
+    from repro.kernels import fused_round as _fr
+    return _fr.fused_round_step(
+        state.a_inv_t, state.theta, x, feasible, lower, mean_ext, w, gate,
+        float(alpha), recompose=recompose,
+        interpret=backend == "pallas_interpret")
+
+
+def fused_update_finish(state: LinUCBState, a_inv_t_new: jax.Array,
+                        ax: jax.Array, arm: jax.Array, x: jax.Array,
+                        reward: jax.Array,
+                        mask: Optional[jax.Array] = None) -> LinUCBState:
+    """Finish a :func:`fused_step` once the reward is known: the same
+    O(d) θ/b/counts tail :func:`update` runs after its inverse kernel —
+    bitwise-identical posteriors by construction (shared code)."""
+    m = None if mask is None else jnp.asarray(mask, state.b.dtype)
+    return _update_tail(state, arm, x, reward, mask, m, a_inv_t_new, ax)
+
+
+def fused_select(state: LinUCBState, x: jax.Array, feasible: jax.Array,
+                 lower: jax.Array, mean_ext: jax.Array, w: jax.Array,
+                 alpha: float, *, recompose: bool = False) -> jax.Array:
+    """Selection-only fused launch (no state update): shaped scores and
+    the in-kernel masked argmax for a (B, d) batch — the serving route /
+    frozen-snapshot multi-stream path. x may be (d,) (returns a scalar
+    signed arm) or (B, d) (returns (B,)). ``mean_ext`` matches x's
+    leading shape ((K,) or (B, K))."""
+    squeezed = x.ndim == 1
+    xb = jnp.atleast_2d(x)
+    me = jnp.asarray(mean_ext, jnp.float32).reshape(xb.shape[0], -1)
+    backend = resolved_backend()
+    if backend == "ref":
+        from repro.kernels import ref as _ref
+        arms = _ref.fused_select_ref(xb, state.theta, state.a_inv_t,
+                                     feasible, lower, me, w, float(alpha),
+                                     recompose=recompose)
+    else:
+        from repro.kernels import fused_round as _fr
+        arms = _fr.fused_select(xb, state.theta, state.a_inv_t, feasible,
+                                lower, me, w, float(alpha),
+                                recompose=recompose,
+                                interpret=backend == "pallas_interpret")
+    return arms[0] if squeezed else arms
+
+
+def pool_fused_select(pool: "PosteriorPool", users: jax.Array,
+                      x: jax.Array, feasible: jax.Array,
+                      alpha: float) -> jax.Array:
+    """Greedy per-user route with the masked argmax fused into the pool
+    score kernel — :func:`pool_ucb_scores` + gated argmax in ONE launch.
+
+    x: (B, d); users: (B,); feasible: (K,) shared arm mask → (B,) int32
+    signed arms. U=1 delegates to :func:`fused_select` on the squeezed
+    state (same compiled math as the single-posterior path, mirroring
+    :func:`pool_ucb_scores`).
+    """
+    xb = jnp.atleast_2d(x)
+    if pool.num_users == 1:
+        k = pool.num_arms
+        return fused_select(user_state(pool, 0), xb, feasible,
+                            jnp.ones((k,), jnp.float32),
+                            jnp.zeros((xb.shape[0], k), jnp.float32),
+                            jnp.float32(1.0), alpha)
+    users = jnp.asarray(users, jnp.int32)
+    backend = resolved_backend()
+    if backend == "ref":
+        from repro.kernels import ref as _ref
+        return _ref.fused_select_pool_ref(xb, users, pool.theta,
+                                          pool.a_inv_t, feasible,
+                                          float(alpha))
+    from repro.kernels import fused_round as _fr
+    return _fr.fused_select_pool(xb, users, pool.theta, pool.a_inv_t,
+                                 feasible, float(alpha),
+                                 interpret=backend == "pallas_interpret")
 
 
 def _fold_rows_blocked(a_inv_t: jax.Array, xs: jax.Array, arms: jax.Array,

@@ -76,6 +76,22 @@ rounds against a shared posterior). The user axis is a *statefulness*
 axis layered on either: it changes which posterior a round touches, not
 how rounds are dispatched.
 
+The fused round switch
+----------------------
+Every LinUCB-family driver entry point (``run_pool_experiment``,
+``run_pool_experiment_sweep``, ``run_pool_multistream``) takes
+``fuse_rounds=True``: the round body then runs through the
+single-launch fused kernel (:mod:`repro.kernels.fused_round`) — UCB
+scoring over the (d, K·d) block inverses, the feasibility-masked
+argmax, and the selected arm's Sherman–Morrison update in ONE
+``pallas_call`` per decision instead of three launches. Logs and
+posteriors stay bitwise identical: the inverse update is
+reward-independent, so the kernel runs before ``env.step`` and the
+O(d) reward tail folds in after (``linucb.fused_update_finish``).
+Jitted program caches key on the flag alongside the backend; policies
+the kernel cannot express raise ``ValueError`` (loud opt-in, no
+silent fallback); the pure-JAX ``ref`` backend ignores the flag.
+
 Log sinks
 ---------
 Drivers never materialize (T, …) host arrays themselves — each dispatched

@@ -83,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import budget as budget_mod, env as env_mod
+from repro.core import fused as fused_mod
 from repro.core import linucb
 from repro.core import policy as policy_mod
 from repro.core import scenario as scenario_mod
@@ -126,13 +127,20 @@ def _round_setup(policy: PolicyAdapter, env: Any, params: Any, state: Any,
 
 
 def _scenario_step(policy: PolicyAdapter, env: Any, params: Any, plan: Any,
-                   sel_state: Any, q, remaining, done, ks: jax.Array, h):
+                   sel_state: Any, q, remaining, done, ks: jax.Array, h,
+                   fused=None):
     """One gated scenario step — the single source of truth for the
     select/execute/regret/log math shared by the state-threading round
     body and the frozen-snapshot multi-stream body (which differ only in
     where ``sel_state`` comes from and whether an update follows). The
-    env is driven purely through the Scenario protocol."""
-    arm = policy.select(sel_state, plan, env.context(q), h, remaining)
+    env is driven purely through the Scenario protocol. ``fused`` routes
+    the selection through the fused select kernel (same signed-arm
+    contract, one launch) — used by the frozen-snapshot paths, whose
+    update is deferred to the round-level fold."""
+    if fused is not None:
+        arm = fused.select(sel_state, plan, env.context(q), h, remaining)
+    else:
+        arm = policy.select(sel_state, plan, env.context(q), h, remaining)
     arm = jnp.asarray(arm, jnp.int32)
     executed = (~done) & (arm >= 0)
     arm_safe = jnp.clip(arm, 0, env.num_arms - 1)
@@ -162,11 +170,52 @@ def _scenario_step(policy: PolicyAdapter, env: Any, params: Any, plan: Any,
     return arm_safe, executed, x_obs, r, c, q, remaining, done, log
 
 
+def _scenario_step_fused(fused, env: Any, params: Any, plan: Any,
+                         state: Any, q, remaining, done, ks: jax.Array, h):
+    """Fused-round analog of :func:`_scenario_step` PLUS the posterior
+    update: one ``pallas_call`` computes the scores, reduces the
+    feasibility-masked argmax and applies the selected-arm
+    Sherman–Morrison inverse update in place, then the reward-dependent
+    O(d) θ/b/counts tail folds the env feedback in. Every env / regret /
+    log op is kept verbatim from :func:`_scenario_step` so the fused
+    driver's logs and posteriors stay bitwise identical."""
+    x_obs = env.context(q)
+    gate = jnp.where(done, 0.0, 1.0)   # ``~done``: the update-mask half
+                                       # the kernel cannot see (arm < 0
+                                       # is masked inside the kernel)
+    a_new, arm, ax = fused.step(state, plan, x_obs, h, remaining, gate)
+    arm = jnp.asarray(arm, jnp.int32)
+    executed = (~done) & (arm >= 0)
+    arm_safe = jnp.clip(arm, 0, env.num_arms - 1)
+
+    r, c, q_next = env.step(params, ks, q, arm_safe)
+    probs = env.oracle_scores(params, q)
+    reg = (jnp.max(probs) - probs)[arm_safe]
+
+    q = jax.tree.map(lambda new, old: jnp.where(executed, new, old),
+                     q_next, q)
+    remaining = jnp.where(executed, remaining - c, remaining)
+    if env.stops_on_success:
+        done = done | (executed & (r > 0.5))
+    done = done | (~executed)
+
+    state = fused.finish(state, a_new, ax, arm_safe, x_obs, r, c, executed)
+    log = (jnp.where(executed, arm_safe, -1),
+           jnp.where(executed, r, 0.0),
+           jnp.where(executed, c, 0.0),
+           jnp.where(executed, reg, 0.0))
+    return state, q, remaining, done, log
+
+
 def _scenario_round(policy: PolicyAdapter, env: Any, params: Any,
                     state: Any, key: jax.Array, budget_table: jax.Array,
-                    budget_jitter: float, dataset: Optional[jax.Array]
-                    ) -> Tuple[Any, RoundLog, jax.Array]:
-    """One user round: ≤H adaptive steps. Pure & jit-able."""
+                    budget_jitter: float, dataset: Optional[jax.Array],
+                    fused=None) -> Tuple[Any, RoundLog, jax.Array]:
+    """One user round: ≤H adaptive steps. Pure & jit-able.
+
+    ``fused`` (a :class:`~repro.core.fused.FusedPolicy`, static) swaps
+    the select+update pair for the single-launch fused round body —
+    bitwise-identical logs and state by construction."""
     q0, round_budget, plan, h_max, kloop = _round_setup(
         policy, env, params, state, key, budget_table, budget_jitter,
         dataset)
@@ -174,6 +223,10 @@ def _scenario_round(policy: PolicyAdapter, env: Any, params: Any,
     def step_fn(carry, h):
         state, q, remaining, done, kh = carry
         kh, ks = jax.random.split(kh)
+        if fused is not None:
+            state, q, remaining, done, log = _scenario_step_fused(
+                fused, env, params, plan, state, q, remaining, done, ks, h)
+            return (state, q, remaining, done, kh), log
         arm_safe, executed, x_obs, r, c, q, remaining, done, log = \
             _scenario_step(policy, env, params, plan, state, q, remaining,
                            done, ks, h)
@@ -205,7 +258,7 @@ def _pad_step_axis(pad: int, arms, rewards, costs, regrets):
 def _scenario_chunk(policy: PolicyAdapter, env: Any, params: Any,
                     state: Any, kround: jax.Array, budget_table: jax.Array,
                     ts: jax.Array, *, budget_jitter: float,
-                    dataset: Optional[jax.Array]):
+                    dataset: Optional[jax.Array], fused=None):
     """Scan the per-round transition over a chunk of round indices.
 
     Carry = policy state; each round re-derives its key as
@@ -216,7 +269,7 @@ def _scenario_chunk(policy: PolicyAdapter, env: Any, params: Any,
         state, log, ds = _scenario_round(policy, env, params, state,
                                          jax.random.fold_in(kround, t),
                                          budget_table, budget_jitter,
-                                         dataset)
+                                         dataset, fused=fused)
         return state, (log, ds)
 
     return jax.lax.scan(body, state, ts)
@@ -272,20 +325,38 @@ def _chunk_indices(rounds: int, chunk: int):
 # part of every cache key — otherwise set_backend() after a first run
 # would be silently ignored by the cached programs.
 
+def _build_fused(spec: PolicySpec, env: Any, alpha: float, lam: float,
+                 horizon_t: int, c_max: float, backend: str,
+                 fuse_rounds: bool):
+    """Resolve ``fuse_rounds=`` to a FusedPolicy (or None).
+
+    The pure-JAX ``ref`` backend has no launches to fuse, so the flag is
+    a documented no-op there (keeps A/B runs bitwise against the ref
+    baseline); on the pallas backends an unsupported spec raises — the
+    switch is a loud opt-in, never a silent fallback."""
+    if not fuse_rounds or backend == "ref":
+        return None
+    return fused_mod.build_fused(spec, env.num_arms, env.dim, alpha=alpha,
+                                 lam=lam, horizon_t=horizon_t, c_max=c_max)
+
+
 @functools.lru_cache(maxsize=128)
 def _jitted_pool_drivers(spec: PolicySpec, env: Any, alpha: float,
                          lam: float, horizon_t: int, c_max: float,
                          seed_key: int, budget_jitter: float,
-                         dataset: Optional[int], backend: str):
+                         dataset: Optional[int], backend: str,
+                         fuse_rounds: bool = False):
     ds_arg = None if dataset is None else jnp.int32(dataset)
     policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                         horizon_t=horizon_t, c_max=c_max, seed=seed_key)
+    fused = _build_fused(spec, env, alpha, lam, horizon_t, c_max, backend,
+                         fuse_rounds)
     round_fn = jax.jit(functools.partial(
         _scenario_round, policy, env, budget_jitter=budget_jitter,
-        dataset=ds_arg))
+        dataset=ds_arg, fused=fused))
     chunk_fn = jax.jit(functools.partial(
         _scenario_chunk, policy, env, budget_jitter=budget_jitter,
-        dataset=ds_arg))
+        dataset=ds_arg, fused=fused))
     return policy, round_fn, chunk_fn
 
 
@@ -299,13 +370,16 @@ def _jitted_voting_drivers(env: Any, dataset: Optional[int]):
 
 def _pool_sweep_chunk_callable(spec: PolicySpec, env: Any, alpha: float,
                                lam: float, horizon_t: int, c_max: float,
-                               budget_jitter: float, dataset: Optional[int]):
+                               budget_jitter: float, dataset: Optional[int],
+                               fused=None):
     """The UNjitted vmapped sweep chunk — shared by the single-device jit
     path and the shard_map path (which splits its seed axis per device).
 
     The policy is built INSIDE the vmapped function with the traced
     per-seed int (uncached ``spec.build`` — seed-consuming selects close
-    over the tracer, everything else ignores it)."""
+    over the tracer, everything else ignores it). ``fused`` is seed-free
+    (the whole fusable family ignores the seed), so one bridge serves
+    every seed row."""
     ds_arg = None if dataset is None else jnp.int32(dataset)
 
     def chunk_fn(seed, params_s, state, kround, table_row, ts):
@@ -313,7 +387,7 @@ def _pool_sweep_chunk_callable(spec: PolicySpec, env: Any, alpha: float,
                             horizon_t=horizon_t, c_max=c_max, seed=seed)
         return _scenario_chunk(policy, env, params_s, state, kround,
                                table_row, ts, budget_jitter=budget_jitter,
-                               dataset=ds_arg)
+                               dataset=ds_arg, fused=fused)
 
     return jax.vmap(chunk_fn, in_axes=(0, 0, 0, 0, 0, None))
 
@@ -322,10 +396,13 @@ def _pool_sweep_chunk_callable(spec: PolicySpec, env: Any, alpha: float,
 def _jitted_pool_sweep_chunk(spec: PolicySpec, env: Any, alpha: float,
                              lam: float, horizon_t: int, c_max: float,
                              budget_jitter: float, dataset: Optional[int],
-                             backend: str, num_devices: int = 1):
+                             backend: str, num_devices: int = 1,
+                             fuse_rounds: bool = False):
+    fused = _build_fused(spec, env, alpha, lam, horizon_t, c_max, backend,
+                         fuse_rounds)
     vchunk = _pool_sweep_chunk_callable(spec, env, alpha, lam,
                                         horizon_t, c_max, budget_jitter,
-                                        dataset)
+                                        dataset, fused=fused)
     if num_devices == 1:
         return jax.jit(vchunk), None
     fn, mesh = shard_mod.shard_vmapped(vchunk, num_devices,
@@ -486,6 +563,7 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
                         alpha: float = 0.675, lam: float = 0.45,
                         dispatch: str = "scan",
                         chunk_size: int = DEFAULT_CHUNK_SIZE,
+                        fuse_rounds: bool = False,
                         sink: Optional[sink_mod.LogSink] = None):
     """Play ``policy`` (name string or ``PolicySpec``) for ``rounds`` user
     queries. ``policy_name=`` is the deprecated keyword spelling.
@@ -496,12 +574,21 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
     contract, bit-identical). Pass any other sink to stream chunk logs
     elsewhere (e.g. :class:`~repro.engine.sink.NpyChunkSink` for T ≫ 10⁶
     disk-backed runs); the return value is then ``sink.finalize()``.
+
+    ``fuse_rounds=True`` runs the LinUCB-family hot loop through the
+    single-launch fused round kernel (``kernels.fused_round``): one
+    ``pallas_call`` per step instead of three, with bitwise-identical
+    logs and posteriors. Unsupported policies raise :class:`ValueError`;
+    on the pure-JAX ``ref`` backend the flag is a no-op.
     """
     spec = policy_mod.resolve_policy_arg(policy, policy_name)
     env = _resolve_env(env)
     if dispatch not in DISPATCH_MODES:
         raise ValueError(f"unknown dispatch {dispatch!r} "
                          f"(choose from {DISPATCH_MODES})")
+    if fuse_rounds and spec.name == "voting":
+        raise ValueError("voting has no bandit hot loop to fuse; run it "
+                         "with fuse_rounds=False")
     if rounds == 0 and sink is None:
         # legacy contract: empty result, no compile (MemorySink cannot
         # infer field shapes from zero appends)
@@ -535,7 +622,7 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
     policy, round_fn, chunk_fn = _jitted_pool_drivers(
         spec, env, alpha, lam, rounds * env.horizon, env.max_cost(),
         seed if spec.select_uses_seed else 0, budget_jitter, dataset,
-        linucb.resolved_backend())
+        linucb.resolved_backend(), fuse_rounds)
     state = policy.init()
     table_j = _pool_budget_table(base_budget, env.num_datasets, budgeted)
 
@@ -569,6 +656,7 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
                               dataset: Optional[int] = None,
                               alpha: float = 0.675, lam: float = 0.45,
                               chunk_size: int = DEFAULT_CHUNK_SIZE,
+                              fuse_rounds: bool = False,
                               shard: shard_mod.ShardArg = "auto"
                               ) -> List[ExperimentResult]:
     """Run ``len(seeds) × users`` replications as ONE vmapped (optionally
@@ -607,6 +695,9 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
     if users > 1 and spec.name == "voting":
         raise ValueError("voting is stateless — a per-user axis does not "
                          "apply; run it with users=1")
+    if fuse_rounds and spec.name == "voting":
+        raise ValueError("voting has no bandit hot loop to fuse; run it "
+                         "with fuse_rounds=False")
 
     # replication rows = (seed, user) pairs, seed-major; pad repeats the
     # last row (results discarded) so the axis divides the mesh
@@ -659,7 +750,8 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
                                             rounds * env.horizon,
                                             env.max_cost(), budget_jitter,
                                             dataset,
-                                            linucb.resolved_backend(), ndev)
+                                            linucb.resolved_backend(), ndev,
+                                            fuse_rounds)
     state = _broadcast_state(
         spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                    horizon_t=rounds * env.horizon, c_max=env.max_cost(),
@@ -797,7 +889,7 @@ def fold_observations_pool(policy: PolicyAdapter, state: Any,
 def _scenario_round_frozen(policy: PolicyAdapter, env: Any, params: Any,
                            state: Any, key: jax.Array,
                            budget_table: jax.Array, budget_jitter: float,
-                           dataset: Optional[jax.Array]):
+                           dataset: Optional[jax.Array], fused=None):
     """One stream's round against a FROZEN policy snapshot.
 
     Like :func:`_scenario_round` but no update happens inside the round —
@@ -813,7 +905,7 @@ def _scenario_round_frozen(policy: PolicyAdapter, env: Any, params: Any,
         kh, ks = jax.random.split(kh)
         arm_safe, executed, x_obs, r, c, q, remaining, done, log = \
             _scenario_step(policy, env, params, plan, state, q, remaining,
-                           done, ks, h)
+                           done, ks, h, fused=fused)
         obs = (arm_safe, x_obs, r, c, executed)
         return (q, remaining, done, kh), (log, obs)
 
@@ -829,7 +921,7 @@ def _scenario_round_frozen(policy: PolicyAdapter, env: Any, params: Any,
 def _stream_play(policy: PolicyAdapter, env: Any,
                  budget_jitter: float, dataset: Optional[jax.Array],
                  skeys: jax.Array, sidx: jax.Array, state: Any,
-                 params: Any, budget_table: jax.Array):
+                 params: Any, budget_table: jax.Array, *, fused=None):
     """vmap B frozen-state rounds over the stream axis.
 
     Each stream selects against ``policy.fork(state, b)`` — identity for
@@ -842,7 +934,7 @@ def _stream_play(policy: PolicyAdapter, env: Any,
     def one(kk, i, st, pp, tb):
         return _scenario_round_frozen(policy, env, pp,
                                       policy.fork(st, i), kk, tb,
-                                      budget_jitter, dataset)
+                                      budget_jitter, dataset, fused=fused)
 
     return jax.vmap(one, in_axes=(0, 0, None, None, None))(
         skeys, sidx, state, params, budget_table)
@@ -852,7 +944,7 @@ def _stream_play_users(policy: PolicyAdapter, env: Any,
                        budget_jitter: float, dataset: Optional[jax.Array],
                        skeys: jax.Array, sidx: jax.Array,
                        stream_states: Any, params: Any,
-                       budget_table: jax.Array):
+                       budget_table: jax.Array, *, fused=None):
     """Per-user variant of :func:`_stream_play`: each stream plays
     against ITS OWN user's posterior snapshot (pre-gathered along the
     stream axis), so the states ride the stream sharding — the user axis
@@ -862,7 +954,7 @@ def _stream_play_users(policy: PolicyAdapter, env: Any,
     def one(kk, i, st, pp, tb):
         return _scenario_round_frozen(policy, env, pp,
                                       policy.fork(st, i), kk, tb,
-                                      budget_jitter, dataset)
+                                      budget_jitter, dataset, fused=fused)
 
     return jax.vmap(one, in_axes=(0, 0, 0, None, None))(
         skeys, sidx, stream_states, params, budget_table)
@@ -875,13 +967,15 @@ def _jitted_multistream_chunk(spec: PolicySpec,
                               seed_key: int, budget_jitter: float,
                               dataset: Optional[int], streams: int,
                               num_devices: int, backend: str,
-                              users: int = 1):
+                              users: int = 1, fuse_rounds: bool = False):
     ds_arg = None if dataset is None else jnp.int32(dataset)
     policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                         horizon_t=horizon_t, c_max=c_max, seed=seed_key)
+    fused = _build_fused(spec, env, alpha, lam, horizon_t, c_max, backend,
+                         fuse_rounds)
     if users == 1:
         play = functools.partial(_stream_play, policy, env, budget_jitter,
-                                 ds_arg)
+                                 ds_arg, fused=fused)
         if num_devices > 1:
             play, _ = shard_mod.shard_vmapped(play, num_devices,
                                               num_seed_args=2,
@@ -911,7 +1005,7 @@ def _jitted_multistream_chunk(spec: PolicySpec,
     # every user plays every ⌈U/B⌉ rounds and consecutive rounds touch
     # disjoint user windows when B divides U.
     play = functools.partial(_stream_play_users, policy, env, budget_jitter,
-                             ds_arg)
+                             ds_arg, fused=fused)
     if num_devices > 1:
         play, _ = shard_mod.shard_vmapped(play, num_devices,
                                           num_seed_args=3,
@@ -948,6 +1042,7 @@ def run_pool_multistream(policy=None, *, policy_name=None,
                          dataset: Optional[int] = None,
                          alpha: float = 0.675, lam: float = 0.45,
                          chunk_size: int = DEFAULT_CHUNK_SIZE,
+                         fuse_rounds: bool = False,
                          shard: shard_mod.ShardArg = "none",
                          sink: Optional[sink_mod.LogSink] = None):
     """``rounds`` dispatches of ``streams`` concurrent user rounds over a
@@ -1010,7 +1105,7 @@ def run_pool_multistream(policy=None, *, policy_name=None,
         spec, env, alpha, lam, rounds * streams * env.horizon,
         env.max_cost(), seed if spec.select_uses_seed else 0,
         budget_jitter, dataset, streams, ndev, linucb.resolved_backend(),
-        users)
+        users, fuse_rounds)
     state = policy_ad.init()
     if users > 1:
         state = _broadcast_state(state, users)

@@ -1,0 +1,344 @@
+"""Pallas TPU kernel: fused score→select→update round step, native block
+layout.
+
+The sequential LinUCB loop is launch-bound at small d: every step
+dispatches a score kernel over the (d, K·d) block inverses, an XLA
+argmax, and the selected-arm Sherman–Morrison kernel — three dispatches
+whose combined FLOPs take microseconds. All three pieces share the block
+layout, so this module collapses one whole decision step into ONE
+``pallas_call``:
+
+1. **score** — per arm k, the exact op sequence of
+   ``linucb_score.{_kernel,_pool_kernel}``: ``mean = x·θ_k``,
+   ``xa = x @ A_k⁻¹``, ``quad = Σ xa·x``,
+   ``total = mean + α·√max(quad, 0)``. The policy layer's score shaping
+   rides in as operands — a per-arm denominator ``lower`` (budget-aware
+   cost normalization; all-ones for greedy) and, under ``recompose=``,
+   the (mean, bonus) recomposition ``mean/lower + w·(total/lower −
+   mean/lower)`` that ``policy.select_from_parts`` computes for
+   combinator-wrapped policies (``w`` is :class:`PositionalWeight`'s
+   bonus scale; the exploitation mean arrives as the ``mean_ext``
+   operand so it is the SAME einsum value ``linucb.mean_scores``
+   produces — parity is bitwise, not just close).
+2. **select** — a feasibility-masked running argmax over the K arms,
+   reduced inside the kernel. ``feasible`` is a scalar-prefetch int mask,
+   so :class:`BudgetGate` / serving quarantine masks compose without
+   touching the kernel; the running maximum replicates ``jnp.argmax``
+   exactly (first-max-wins ties, index 0 when every arm is masked) and
+   the returned arm is signed: −1 when no arm is feasible.
+3. **update** — the selected arm's Sherman–Morrison rank-1 update, in
+   place via ``input_output_aliases``. The per-arm ``xa`` computed for
+   scoring IS ``A_k⁻¹x`` (the state is symmetric), so the update reuses
+   the selected arm's score matvec — no extra GEMM — and applies exactly
+   ``sherman_morrison._arm_kernel``'s ops: ``denom = 1 + Σ ax·x``,
+   ``Δ = axᵀax / denom``, selected block ``← A⁻¹ − m·Δ`` (``m`` gates
+   not-executed steps off, like the three-launch path), every other
+   block written back untouched.
+
+The Sherman–Morrison inverse update is reward-independent, so the fused
+kernel needs no reward operand: the driver runs ``env.step`` AFTER the
+kernel with the selected arm and finishes the O(d) θ/b/counts tail
+outside (``linucb.fused_update_finish``), exactly as the three-launch
+path does with ``sherman_morrison_arm``'s returned ``ax``.
+
+``fused_select`` is the selection-only batched variant (serving route /
+frozen multi-stream snapshots — no update; B rows tile like
+``linucb_score_blocked``), and ``fused_select_pool`` grids it over the
+``(U, d, K·d)`` posterior pool with scalar-prefetched user ids (the
+per-user serving route of ``serving.state_store``).
+
+d=384 = 3×128 keeps every static block slice lane-aligned; small-d
+shapes (the dispatch-bound d=64 benchmark regime) run through interpret
+mode on CPU, where alignment is moot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_B = 128
+
+
+def _score_one(x, blk, theta_k, lower_k, mean_ext_k, w, *, alpha: float,
+               recompose: bool):
+    """One arm's shaped score for a (BB, d) context tile.
+
+    Replicates ``linucb_score._kernel``'s per-arm ops on the tile, then
+    the policy layer's shaping: plain ``total / lower`` or the
+    ``select_from_parts`` recomposition ``m + w·(t − m)`` (greedy's
+    lower≡1.0 divides out bitwise). Returns ``(score (BB,), xa (BB, d))``.
+    """
+    mean = x @ theta_k                              # (BB,)
+    xa = x @ blk                                    # (BB, d)  MXU
+    quad = jnp.sum(xa * x, axis=-1)                 # (BB,)
+    total = mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
+    if recompose:
+        m_part = mean_ext_k / lower_k
+        t_part = total / lower_k
+        score = m_part + w * (t_part - m_part)
+    else:
+        score = total / lower_k
+    return score, xa
+
+
+def _masked_running_argmax(j, feas_j, score, best, arm, any_f):
+    """One step of the in-kernel argmax; replicates ``jnp.argmax`` over
+    ``where(feasible, scores, −inf)``: strict ``>`` keeps the first
+    maximum, and the init (best=−inf, arm=0) yields index 0 when every
+    arm is masked — exactly what argmax returns on an all-−inf row."""
+    masked = jnp.where(feas_j, score, -jnp.inf)
+    upd = masked > best
+    best = jnp.where(upd, masked, best)
+    arm = jnp.where(upd, jnp.int32(j), arm)
+    return best, arm, any_f | feas_j
+
+
+def _round_kernel(feas_ref, a_ref, x_ref, theta_ref, lower_ref, mean_ref,
+                  w_ref, gate_ref, o_ref, arm_ref, ax_ref, *, alpha: float,
+                  num_arms: int, recompose: bool):
+    d = a_ref.shape[0]
+    a_full = a_ref[...].astype(jnp.float32)         # (d, K·d) — whole state
+    x = x_ref[...].astype(jnp.float32)              # (1, d)
+    lower = lower_ref[...].astype(jnp.float32)      # (1, K)
+    mean_ext = mean_ref[...].astype(jnp.float32)    # (1, K)
+    w = w_ref[0, 0].astype(jnp.float32)
+    gate = gate_ref[0, 0].astype(jnp.float32)
+
+    best = jnp.full((1,), -jnp.inf, jnp.float32)
+    arm = jnp.zeros((1,), jnp.int32)
+    any_f = jnp.zeros((1,), bool)
+    xas = []
+    for j in range(num_arms):                       # static unroll over K
+        blk = a_full[:, j * d:(j + 1) * d]          # (d, d) — arm j's A⁻¹
+        theta_j = theta_ref[j].astype(jnp.float32)  # (d,)
+        score, xa = _score_one(x, blk, theta_j, lower[:, j], mean_ext[:, j],
+                               w, alpha=alpha, recompose=recompose)
+        best, arm, any_f = _masked_running_argmax(j, feas_ref[j] > 0, score,
+                                                  best, arm, any_f)
+        xas.append(xa)
+
+    # the selected arm's score matvec IS A⁻¹x (symmetric state) — gather
+    # it from the per-arm registers instead of re-running the GEMM
+    ax = xas[0]
+    for j in range(1, num_arms):
+        ax = jnp.where(arm[0] == j, xas[j], ax)     # (1, d)
+
+    # infeasible rounds don't execute: the write gate is (policy
+    # executed)·(step gate), exactly the three-launch path's mask
+    m = gate * jnp.where(any_f[0], 1.0, 0.0)
+    denom = 1.0 + jnp.sum(ax * x)
+    delta = (ax.reshape(d, 1) @ ax) / denom         # (d, d) MXU outer prod
+    blocks = []
+    for j in range(num_arms):
+        blk = a_full[:, j * d:(j + 1) * d]
+        # selected block gets the _arm_kernel write (a − m·Δ, even at
+        # m=0); every other block is written back UNTOUCHED — bitwise
+        # what input_output_aliases leaves behind on the three-launch path
+        blocks.append(jnp.where(arm[0] == j, blk - m * delta, blk))
+    o_ref[...] = jnp.concatenate(blocks, axis=1).astype(o_ref.dtype)
+    arm_ref[...] = jnp.where(any_f, arm, -1).reshape(1, 1)
+    ax_ref[...] = ax.astype(ax_ref.dtype)
+
+
+def fused_round_step(a_inv_t: jax.Array, theta: jax.Array, x: jax.Array,
+                     feasible: jax.Array, lower: jax.Array,
+                     mean_ext: jax.Array, w: jax.Array, gate: jax.Array,
+                     alpha: float, *, recompose: bool = False,
+                     interpret: bool = False):
+    """One decision step — score, mask-argmax and rank-1 update — in ONE
+    ``pallas_call``.
+
+    a_inv_t: (d, K·d) block state (column block k = A_k⁻¹; updated in
+    place via ``input_output_aliases``); theta: (K, d); x: (d,);
+    feasible: (K,) int/bool mask (scalar-prefetch); lower: (K,) score
+    denominator (ones for greedy); mean_ext: (K,) exploitation means
+    (``linucb.mean_scores`` — only read under ``recompose=True``);
+    w: () bonus scale; gate: () float step gate (0 = round already done:
+    the state write is gated off, the arm still reported).
+
+    Returns ``(a_inv_t_new, arm, ax)`` — ``arm`` () int32, −1 when no
+    arm is feasible; ``ax = A_sel⁻¹ x`` on the PRE-update inverse, for
+    the caller's O(d) θ tail (``linucb.fused_update_finish``).
+    """
+    d, kd = a_inv_t.shape
+    k = kd // d
+    if theta.shape != (k, d):
+        raise ValueError(f"theta must be (K, d)=({k}, {d}), "
+                         f"got {theta.shape}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((d, kd), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((k, d), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((1, k), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((1, k), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, feas_ref: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, kd), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, feas_ref: (0, 0)),
+        ],
+    )
+    out, arm, ax = pl.pallas_call(
+        functools.partial(_round_kernel, alpha=float(alpha), num_arms=k,
+                          recompose=recompose),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((d, kd), a_inv_t.dtype),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((1, d), jnp.float32)],
+        input_output_aliases={1: 0},    # a_inv_t buffer passes through
+        interpret=interpret,
+    )(jnp.asarray(feasible, jnp.int32), a_inv_t, x.reshape(1, d), theta,
+      jnp.asarray(lower, jnp.float32).reshape(1, k),
+      jnp.asarray(mean_ext, jnp.float32).reshape(1, k),
+      jnp.asarray(w, jnp.float32).reshape(1, 1),
+      jnp.asarray(gate, jnp.float32).reshape(1, 1))
+    return out, arm[0, 0], ax[0]
+
+
+def _select_kernel(feas_ref, x_ref, theta_ref, a_ref, lower_ref, mean_ref,
+                   w_ref, o_ref, *, alpha: float, num_arms: int,
+                   recompose: bool):
+    d = x_ref.shape[1]
+    x = x_ref[...].astype(jnp.float32)              # (BB, d)
+    a_full = a_ref[...].astype(jnp.float32)         # (d, K·d)
+    lower = lower_ref[...].astype(jnp.float32)      # (1, K)
+    mean_ext = mean_ref[...].astype(jnp.float32)    # (BB, K)
+    w = w_ref[0, 0].astype(jnp.float32)
+
+    bb = x.shape[0]
+    best = jnp.full((bb,), -jnp.inf, jnp.float32)
+    arm = jnp.zeros((bb,), jnp.int32)
+    any_f = jnp.zeros((bb,), bool)
+    for j in range(num_arms):
+        blk = a_full[:, j * d:(j + 1) * d]
+        theta_j = theta_ref[j].astype(jnp.float32)
+        score, _ = _score_one(x, blk, theta_j, lower[:, j], mean_ext[:, j],
+                              w, alpha=alpha, recompose=recompose)
+        best, arm, any_f = _masked_running_argmax(j, feas_ref[j] > 0, score,
+                                                  best, arm, any_f)
+    o_ref[...] = jnp.where(any_f, arm, -1)[:, None]
+
+
+def fused_select(x: jax.Array, theta: jax.Array, a_inv_t: jax.Array,
+                 feasible: jax.Array, lower: jax.Array, mean_ext: jax.Array,
+                 w: jax.Array, alpha: float, *, recompose: bool = False,
+                 block_b: int = DEFAULT_BLOCK_B,
+                 interpret: bool = False) -> jax.Array:
+    """Batched score + in-kernel mask-argmax — the selection 2/3 of the
+    fused step, for paths that must not update (serving route, frozen
+    multi-stream snapshots).
+
+    x: (B, d); theta: (K, d); a_inv_t: (d, K·d); feasible: (K,) shared
+    mask (scalar-prefetch); lower: (K,); mean_ext: (B, K); w: ().
+    Returns (B,) int32 signed arms (−1 when nothing is feasible — equal
+    to a plain argmax whenever the mask is all-ones). Tiles B like
+    ``linucb_score_blocked`` so scores match that kernel bitwise.
+    """
+    b, d = x.shape
+    k = theta.shape[0]
+    if a_inv_t.shape != (d, k * d):
+        raise ValueError(f"a_inv_t must be (d, K·d)=({d}, {k * d}), "
+                         f"got {a_inv_t.shape}")
+    mean_ext = jnp.asarray(mean_ext, jnp.float32).reshape(b, k)
+    block_b = min(block_b, b)
+    pad = (-b) % block_b
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        mean_ext = jnp.pad(mean_ext, ((0, pad), (0, 0)))
+    nb = (b + pad) // block_b
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, feas_ref: (i, 0)),
+            pl.BlockSpec((k, d), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((d, k * d), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((1, k), lambda i, feas_ref: (0, 0)),
+            pl.BlockSpec((block_b, k), lambda i, feas_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, feas_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, feas_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_select_kernel, alpha=float(alpha), num_arms=k,
+                          recompose=recompose),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b + pad, 1), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(feasible, jnp.int32), x, theta, a_inv_t,
+      jnp.asarray(lower, jnp.float32).reshape(1, k), mean_ext,
+      jnp.asarray(w, jnp.float32).reshape(1, 1))
+    return out[:b, 0]
+
+
+def _select_pool_kernel(u_ref, feas_ref, x_ref, theta_ref, a_ref, o_ref, *,
+                        alpha: float, num_arms: int):
+    del u_ref  # consumed by the BlockSpec index maps
+    d = x_ref.shape[1]
+    x = x_ref[...].astype(jnp.float32)              # (1, d)
+    a_full = a_ref[0].astype(jnp.float32)           # (d, K·d) — user's state
+
+    best = jnp.full((1,), -jnp.inf, jnp.float32)
+    arm = jnp.zeros((1,), jnp.int32)
+    any_f = jnp.zeros((1,), bool)
+    for j in range(num_arms):
+        blk = a_full[:, j * d:(j + 1) * d]
+        theta_j = theta_ref[0, j].astype(jnp.float32)
+        # the pool score kernel's exact ops (linucb_score._pool_kernel):
+        # elementwise-mul reduction for the mean, full-reduce quad
+        mean = jnp.sum(x[0] * theta_j)
+        xa = x @ blk                                # (1, d)
+        quad = jnp.sum(xa * x)
+        score = (mean + alpha * jnp.sqrt(jnp.maximum(quad, 0.0))).reshape(1)
+        best, arm, any_f = _masked_running_argmax(j, feas_ref[j] > 0, score,
+                                                  best, arm, any_f)
+    o_ref[...] = jnp.where(any_f, arm, -1).reshape(1, 1)
+
+
+def fused_select_pool(x: jax.Array, users: jax.Array, theta_pool: jax.Array,
+                      a_inv_pool: jax.Array, feasible: jax.Array,
+                      alpha: float, *, interpret: bool = False) -> jax.Array:
+    """Per-user greedy route with the argmax fused into the score kernel.
+
+    x: (B, d); users: (B,) int — row b's pool slot (scalar-prefetch, as
+    in ``linucb_score_pool``); theta_pool: (U, K, d); a_inv_pool:
+    (U, d, K·d); feasible: (K,) shared arm mask. Returns (B,) int32
+    signed arms. Row b's user blocks DMA straight out of the pool —
+    no (B, d, K·d) gather, no (B, K) score round-trip to an XLA argmax.
+    """
+    b, d = x.shape
+    u, k, _ = theta_pool.shape
+    if a_inv_pool.shape != (u, d, k * d):
+        raise ValueError(f"a_inv_pool must be (U, d, K·d)=({u}, {d}, "
+                         f"{k * d}), got {a_inv_pool.shape}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, u_ref, feas_ref: (i, 0)),
+            pl.BlockSpec((1, k, d), lambda i, u_ref, feas_ref:
+                         (u_ref[i], 0, 0)),
+            pl.BlockSpec((1, d, k * d), lambda i, u_ref, feas_ref:
+                         (u_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, u_ref, feas_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_select_pool_kernel, alpha=float(alpha),
+                          num_arms=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(users, jnp.int32), jnp.asarray(feasible, jnp.int32), x,
+      theta_pool, a_inv_pool)
+    return out[:, 0]

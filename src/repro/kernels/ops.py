@@ -23,6 +23,7 @@ from typing import Optional
 import jax
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_round as _fr
 from repro.kernels import linucb_score as _ls
 from repro.kernels import sherman_morrison as _sm
 
@@ -80,6 +81,29 @@ def sherman_morrison(a_inv, x, mask):
 @jax.jit
 def sherman_morrison_batch(a_inv, xs, mask):
     return _sm.sherman_morrison_batch(a_inv, xs, mask, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "recompose"))
+def fused_round_step(a_inv_t, theta, x, feasible, lower, mean_ext, w, gate,
+                     alpha: float, recompose: bool = False):
+    return _fr.fused_round_step(a_inv_t, theta, x, feasible, lower,
+                                mean_ext, w, gate, alpha,
+                                recompose=recompose, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "recompose"))
+def fused_select(x, theta, a_inv_t, feasible, lower, mean_ext, w,
+                 alpha: float, recompose: bool = False):
+    return _fr.fused_select(x, theta, a_inv_t, feasible, lower, mean_ext,
+                            w, alpha, recompose=recompose,
+                            interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def fused_select_pool(x, users, theta_pool, a_inv_pool, feasible,
+                      alpha: float):
+    return _fr.fused_select_pool(x, users, theta_pool, a_inv_pool, feasible,
+                                 alpha, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window",

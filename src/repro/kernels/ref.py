@@ -177,3 +177,67 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqc,bckd->bkgqd", p, vf)
     return jnp.moveaxis(o, 3, 1).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _fused_scores_ref(x: jax.Array, theta: jax.Array, a_inv_t: jax.Array,
+                      lower: jax.Array, mean_ext: jax.Array, w: jax.Array,
+                      alpha: float, recompose: bool) -> jax.Array:
+    """Shaped selection scores of the fused-round kernels: the raw UCB
+    index divided by ``lower`` (budget cost-normalization; ones for
+    greedy), or — under ``recompose`` — the ``select_from_parts``
+    recomposition ``m + w·(t − m)`` over the externally supplied
+    exploitation mean. x: (B, d) → (B, K)."""
+    total = linucb_score_blocked_ref(x, theta, a_inv_t, alpha)
+    lower = jnp.asarray(lower, jnp.float32)
+    if recompose:
+        m = jnp.asarray(mean_ext, jnp.float32) / lower
+        t = total / lower
+        return m + jnp.asarray(w, jnp.float32) * (t - m)
+    return total / lower
+
+
+def fused_select_ref(x: jax.Array, theta: jax.Array, a_inv_t: jax.Array,
+                     feasible: jax.Array, lower: jax.Array,
+                     mean_ext: jax.Array, w: jax.Array, alpha: float, *,
+                     recompose: bool = False) -> jax.Array:
+    """Oracle for ``fused_round.fused_select``: shaped scores, then the
+    feasibility-masked argmax with the signed −1 opt-out. x: (B, d);
+    feasible: (K,); mean_ext: (B, K) → (B,) int32."""
+    scores = _fused_scores_ref(x, theta, a_inv_t, lower, mean_ext, w,
+                               alpha, recompose)
+    feas = jnp.asarray(feasible, bool)
+    masked = jnp.where(feas, scores, -jnp.inf)
+    arm = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    return jnp.where(jnp.any(feas), arm, -1)
+
+
+def fused_round_step_ref(a_inv_t: jax.Array, theta: jax.Array, x: jax.Array,
+                         feasible: jax.Array, lower: jax.Array,
+                         mean_ext: jax.Array, w: jax.Array, gate: jax.Array,
+                         alpha: float, *, recompose: bool = False):
+    """Oracle for ``fused_round.fused_round_step``: select via
+    :func:`fused_select_ref`, then the selected arm's masked rank-1
+    update (``sherman_morrison_arm_ref`` with the execution gate
+    ``gate·(arm ≥ 0)``). Returns ``(a_inv_t_new, arm, ax)`` with the
+    kernel's signed-arm / pre-update-``ax`` contract."""
+    d, kd = a_inv_t.shape
+    arm = fused_select_ref(x[None], theta, a_inv_t, feasible, lower,
+                           jnp.asarray(mean_ext, jnp.float32)[None], w,
+                           alpha, recompose=recompose)[0]
+    arm_safe = jnp.clip(arm, 0, kd // d - 1)
+    m = jnp.asarray(gate, jnp.float32) * (arm >= 0)
+    out, ax = sherman_morrison_arm_ref(a_inv_t, x, arm_safe, m)
+    return out, arm, ax
+
+
+def fused_select_pool_ref(x: jax.Array, users: jax.Array,
+                          theta_pool: jax.Array, a_inv_pool: jax.Array,
+                          feasible: jax.Array, alpha: float) -> jax.Array:
+    """Oracle for ``fused_round.fused_select_pool``: per-user pool scores
+    then the shared-mask argmax. x: (B, d); users: (B,); feasible: (K,)
+    → (B,) int32 signed arms."""
+    scores = linucb_score_pool_ref(x, users, theta_pool, a_inv_pool, alpha)
+    feas = jnp.asarray(feasible, bool)
+    masked = jnp.where(feas[None, :], scores, -jnp.inf)
+    arm = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    return jnp.where(jnp.any(feas), arm, -1)

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import linucb, router
+from repro.core import fused as fused_mod
 from repro.core import policy as policy_mod
 from repro.core import scenario as scenario_mod
 from repro.engine import driver as engine_driver
@@ -129,20 +130,31 @@ class Response:
 @functools.lru_cache(maxsize=128)
 def _scheduler_programs(spec: policy_mod.PolicySpec, num_arms: int,
                         dim: int, alpha: float, lam: float, horizon_t: int,
-                        c_max: float):
+                        c_max: float, fuse_rounds: bool = False):
     """Jitted route/update/update_batch programs for one policy spec.
 
-    Cached at module level on the FULL hashable spec (+ the build scale),
-    with the backend a static jit argument — so compiled programs are
-    keyed on ``(spec, backend)``, shared across scheduler instances, and
-    two differently-configured same-name specs compile distinct programs
+    Cached at module level on the FULL hashable spec (+ the build scale
+    and the ``fuse_rounds`` switch), with the backend a static jit
+    argument — so compiled programs are keyed on ``(spec, backend,
+    fuse_rounds)``, shared across scheduler instances, and two
+    differently-configured same-name specs compile distinct programs
     (the legacy name-string keying collided them).
+
+    ``fuse_rounds`` routes selection through the fused select kernel
+    (``kernels.fused_round``): scoring, quarantine masking and the
+    argmax in one launch, bitwise-identical arms. Unsupported specs
+    raise :class:`ValueError` at build; the pure-JAX ``ref`` backend
+    keeps the legacy trace (nothing to fuse).
     """
     policy = policy_mod.build_policy(spec, num_arms, dim, alpha=alpha,
                                      lam=lam, horizon_t=horizon_t,
                                      c_max=c_max)
     plain_greedy = spec.name == "greedy_linucb" and not spec.transforms
     alpha_eff = float(spec.kwargs.get("alpha", alpha))
+    fused = (fused_mod.build_fused(spec, num_arms, dim, alpha=alpha,
+                                   lam=lam, horizon_t=horizon_t,
+                                   c_max=c_max)
+             if fuse_rounds else None)
 
     def route_fn(state, xs, steps, remaining, arm_mask, *, backend: str,
                  masked: bool):
@@ -152,6 +164,26 @@ def _scheduler_programs(spec: policy_mod.PolicySpec, num_arms: int,
         # pay for the mask composition — and get a distinct compiled
         # program, keyed on the flag.
         with linucb.backend_scope(backend):
+            if fused is not None and backend != "ref":
+                if plain_greedy:
+                    # same operands the pool route uses: unit lower, no
+                    # recompose — the kernel replicates the legacy
+                    # gated-argmax bitwise, one launch for the batch
+                    feas = (jnp.asarray(arm_mask, jnp.int32) if masked
+                            else jnp.ones((num_arms,), jnp.int32))
+                    return linucb.fused_select(
+                        state, xs, feas,
+                        jnp.ones((num_arms,), jnp.float32),
+                        jnp.zeros((xs.shape[0], num_arms), jnp.float32),
+                        jnp.float32(1.0), alpha_eff)
+
+                def one(x, h, rem):
+                    plan = policy.plan(state, x, rem)
+                    return fused.select(state, plan, x, h, rem,
+                                        arm_mask=arm_mask if masked
+                                        else None)
+
+                return jax.vmap(one)(xs, steps, remaining)
             if plain_greedy:
                 # the scoring hot loop: one batched (B,d)@(d,K·d) GEMM /
                 # fused Pallas kernel straight off the block state
@@ -199,6 +231,7 @@ class BanditScheduler:
                  budget_env: Union[None, scenario_mod.EnvSpec,
                                    object] = None,
                  state_store: Optional[UserStateStore] = None,
+                 fuse_rounds: bool = False,
                  use_kernels: Optional[bool] = None):
         """``backend``: pin this scheduler's routing to one linucb backend
         ("ref" | "pallas" | "pallas_interpret"); ``None`` follows the
@@ -214,7 +247,12 @@ class BanditScheduler:
         (default user 0), scoring and folding against each user's pool
         blocks instead of the shared ``self.state``; requires the plain
         ``greedy_linucb`` policy (per-user state pooling is defined for
-        the LinUCB posterior). ``use_kernels`` is the deprecated
+        the LinUCB posterior). ``fuse_rounds=True`` routes selection
+        through the single-launch fused select kernel
+        (``kernels.fused_round``) — scoring, quarantine masking and the
+        argmax in ONE ``pallas_call``, bitwise-identical arms; a no-op
+        on the ``ref`` backend, :class:`ValueError` for policies the
+        kernel cannot express. ``use_kernels`` is the deprecated
         spelling of the kernel path (True ≙ backend="pallas" on TPU,
         "pallas_interpret" on CPU)."""
         if use_kernels is not None:
@@ -238,9 +276,11 @@ class BanditScheduler:
         self.spec = policy_mod.as_spec(policy)
         c_max = max((a.cost_per_token for a in self.arms), default=1.0) \
             * max_new_tokens
+        self.fuse_rounds = bool(fuse_rounds)
         (self._policy, self._route, self._update,
          self._update_batch) = _scheduler_programs(
-            self.spec, len(self.arms), dim, alpha, lam, horizon_t, c_max)
+            self.spec, len(self.arms), dim, alpha, lam, horizon_t, c_max,
+            self.fuse_rounds)
         self.state = self._policy.init()
         self.state_store = state_store
         if state_store is not None:
@@ -296,7 +336,8 @@ class BanditScheduler:
             uids = (np.zeros((b,), np.int64) if user_ids is None
                     else np.asarray(user_ids).reshape(-1))
             return self.state_store.route(uids, xs, arm_mask=arm_mask,
-                                          backend=self._backend())
+                                          backend=self._backend(),
+                                          fuse_rounds=self.fuse_rounds)
         if user_ids is not None:
             raise ValueError("user_ids= requires a scheduler state_store")
         steps_j = (jnp.zeros((b,), jnp.int32) if steps is None

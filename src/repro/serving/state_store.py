@@ -44,11 +44,21 @@ from repro.training import checkpoint
 
 
 @functools.lru_cache(maxsize=32)
-def _store_programs(alpha: float):
-    """Jitted pool route/fold programs, shared across store instances."""
+def _store_programs(alpha: float, fuse_rounds: bool = False):
+    """Jitted pool route/fold programs, shared across store instances.
+
+    ``fuse_rounds`` swaps the route for the user-gridded fused select
+    kernel (``linucb.pool_fused_select``): per-user scoring, quarantine
+    masking and the argmax in ONE launch — bitwise-identical arms; the
+    pure-JAX ``ref`` backend keeps the legacy trace (nothing to fuse)."""
 
     def route_fn(pool, slots, xs, arm_mask, *, backend: str, masked: bool):
         with linucb.backend_scope(backend):
+            if fuse_rounds and backend != "ref":
+                feas = (jnp.asarray(arm_mask, jnp.int32) if masked
+                        else jnp.ones((pool.num_arms,), jnp.int32))
+                return linucb.pool_fused_select(pool, slots, xs, feas,
+                                                alpha)
             scores = linucb.pool_ucb_scores(pool, slots, xs, alpha)
             if not masked:
                 return jnp.argmax(scores, axis=-1).astype(jnp.int32)
@@ -175,15 +185,19 @@ class UserStateStore:
         return spans
 
     def route(self, user_ids: Sequence[int], contexts, *,
-              arm_mask=None, backend: Optional[str] = None) -> np.ndarray:
+              arm_mask=None, backend: Optional[str] = None,
+              fuse_rounds: bool = False) -> np.ndarray:
         """Per-user greedy UCB routing for a (B, d) batch. Batches over
-        more than ``capacity`` distinct users route in sub-batches."""
+        more than ``capacity`` distinct users route in sub-batches.
+        ``fuse_rounds`` routes through the user-gridded fused select
+        kernel (one launch, bitwise-identical arms; ``ref`` no-op)."""
         uids = [int(u) for u in np.asarray(user_ids).reshape(-1)]
         xs = np.asarray(contexts, np.float32)
         masked = arm_mask is not None
         mask_j = (jnp.ones((self.cfg.num_arms,), bool) if not masked
                   else jnp.asarray(arm_mask, bool))
-        route_fn, _ = _store_programs(float(self.cfg.alpha))
+        route_fn, _ = _store_programs(float(self.cfg.alpha),
+                                      bool(fuse_rounds))
         be = backend or linucb.resolved_backend()
         out = []
         for lo, hi in self._spans_by_capacity(uids):

@@ -1,0 +1,399 @@
+"""Fused round mega-kernel: parity and launch-count guarantees.
+
+The fused kernel (``kernels.fused_round``) collapses score → masked
+argmax → Sherman–Morrison inverse update into ONE ``pallas_call``. Its
+contract is *bitwise* equality with the three-launch path everywhere the
+drivers run it: identical selections, identical posteriors, identical
+logs — plus a jaxpr assertion that the fused round body really contains
+exactly one ``pallas_call``. The pure-jnp oracles in ``kernels.ref``
+pin the semantics (allclose, since op order differs by construction).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fused as fused_mod
+from repro.core import linucb, policy as policy_mod, router
+from repro.engine import driver
+from repro.kernels import ref
+from repro.kernels.fused_round import (fused_round_step, fused_select,
+                                       fused_select_pool)
+from repro.kernels.linucb_score import linucb_score_blocked, \
+    linucb_score_pool
+from repro.kernels.sherman_morrison import sherman_morrison_arm
+
+FIELDS = ("arms", "rewards", "costs", "regrets", "budgets", "datasets")
+
+GATE_SPEC = policy_mod.PolicySpec("greedy_linucb").wrap(
+    policy_mod.BudgetGate(costs=(0.001, 0.002, 0.001, 0.003, 0.001, 0.002),
+                          slack=1.0))
+POSW_SPEC = policy_mod.PolicySpec("budget_linucb").wrap(
+    policy_mod.PositionalWeight(gamma=0.7))
+FUSABLE = ["greedy_linucb", "budget_linucb", "positional_linucb",
+           GATE_SPEC, POSW_SPEC]
+
+
+def _assert_results_equal(a, b, label=""):
+    for f in FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{label}: field {f!r}")
+
+
+def _state(key, k, d):
+    """A well-conditioned (theta, a_inv_t) pair off a few real updates."""
+    cfg = linucb.LinUCBConfig(num_arms=k, dim=d)
+    s = linucb.init(cfg)
+    for i in range(3 * k):
+        kx, kr, key = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (d,)) / np.sqrt(d)
+        s = linucb.update(s, jnp.int32(i % k), x,
+                          jax.random.bernoulli(kr).astype(jnp.float32))
+    return s
+
+
+def _compose_round(a_inv_t, theta, x, feasible, lower, mean_ext, w, gate,
+                   alpha, recompose):
+    """The three-launch path the kernel must replicate bitwise: blocked
+    score kernel → jnp masked argmax → selected-arm SM kernel."""
+    total = linucb_score_blocked(x[None], theta, a_inv_t, alpha,
+                                 interpret=True)[0]
+    if recompose:
+        m = mean_ext / lower
+        t = total / lower
+        scores = m + w * (t - m)
+    else:
+        scores = total / lower
+    feas = feasible.astype(bool)
+    masked = jnp.where(feas, scores, -jnp.inf)
+    arm = jnp.argmax(masked).astype(jnp.int32)
+    any_f = jnp.any(feas)
+    signed = jnp.where(any_f, arm, -1)
+    m_upd = jnp.asarray(gate, jnp.float32) * jnp.where(any_f, 1.0, 0.0)
+    arm_safe = jnp.clip(signed, 0, theta.shape[0] - 1)
+    a_new, ax = sherman_morrison_arm(a_inv_t, x, arm_safe, m_upd,
+                                     interpret=True)
+    return a_new, signed, ax
+
+
+class TestFusedRoundKernel:
+    """Kernel vs three-launch composition (bitwise) and ref oracle."""
+
+    @pytest.mark.parametrize("recompose", [False, True])
+    @pytest.mark.parametrize("feas_kind", ["all", "partial", "none"])
+    @pytest.mark.parametrize("gate", [1.0, 0.0])
+    def test_bitwise_vs_three_launch(self, recompose, feas_kind, gate):
+        k, d = 6, 64
+        case = ({"all": 0, "partial": 1, "none": 2}[feas_kind] * 4
+                + int(recompose) * 2 + int(gate))
+        key = jax.random.PRNGKey(case)
+        s = _state(key, k, d)
+        kx, kl, km = jax.random.split(jax.random.fold_in(key, 1), 3)
+        x = jax.random.normal(kx, (d,)) / np.sqrt(d)
+        feasible = {"all": jnp.ones((k,), jnp.int32),
+                    "partial": jnp.asarray([1, 0, 1, 1, 0, 1], jnp.int32),
+                    "none": jnp.zeros((k,), jnp.int32)}[feas_kind]
+        lower = (jnp.abs(jax.random.normal(kl, (k,))) + 0.1
+                 if recompose else jnp.ones((k,), jnp.float32))
+        mean_ext = (linucb.mean_scores(s, x) if recompose
+                    else jnp.zeros((k,), jnp.float32))
+        w = jnp.float32(0.75) if recompose else jnp.float32(1.0)
+        alpha = 0.675
+
+        a_got, arm_got, ax_got = fused_round_step(
+            s.a_inv_t, s.theta, x, feasible, lower, mean_ext, w,
+            jnp.float32(gate), alpha, recompose=recompose, interpret=True)
+        a_want, arm_want, ax_want = _compose_round(
+            s.a_inv_t, s.theta, x, feasible, lower, mean_ext, w, gate,
+            alpha, recompose)
+        assert int(arm_got) == int(arm_want)
+        np.testing.assert_array_equal(np.asarray(ax_got),
+                                      np.asarray(ax_want))
+        np.testing.assert_array_equal(np.asarray(a_got), np.asarray(a_want))
+
+        # interpret-mode kernel vs pure-jnp oracle (allclose: op order
+        # legitimately differs)
+        a_ref, arm_ref, ax_ref = ref.fused_round_step_ref(
+            s.a_inv_t, s.theta, x, feasible, lower, mean_ext, w,
+            jnp.float32(gate), alpha, recompose=recompose)
+        assert int(arm_got) == int(arm_ref)
+        np.testing.assert_allclose(np.asarray(a_got), np.asarray(a_ref),
+                                   atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(ax_got), np.asarray(ax_ref),
+                                   atol=2e-4, rtol=2e-4)
+
+
+class TestFusedSelectKernel:
+    @pytest.mark.parametrize("b", [1, 5, 130])
+    @pytest.mark.parametrize("recompose", [False, True])
+    def test_bitwise_vs_score_then_argmax(self, b, recompose):
+        k, d = 6, 64
+        key = jax.random.PRNGKey(b * 10 + recompose)
+        s = _state(key, k, d)
+        kx, kl = jax.random.split(jax.random.fold_in(key, 2))
+        xs = jax.random.normal(kx, (b, d)) / np.sqrt(d)
+        feasible = jnp.asarray([1, 1, 0, 1, 1, 1], jnp.int32)
+        lower = (jnp.abs(jax.random.normal(kl, (k,))) + 0.1
+                 if recompose else jnp.ones((k,), jnp.float32))
+        mean_ext = (linucb.mean_scores(s, xs) if recompose
+                    else jnp.zeros((b, k), jnp.float32))
+        w = jnp.float32(0.6) if recompose else jnp.float32(1.0)
+
+        got = fused_select(xs, s.theta, s.a_inv_t, feasible, lower,
+                           mean_ext, w, 0.675, recompose=recompose,
+                           interpret=True)
+        total = linucb_score_blocked(xs, s.theta, s.a_inv_t, 0.675,
+                                     interpret=True)
+        if recompose:
+            m = mean_ext / lower
+            t = total / lower
+            scores = m + w * (t - m)
+        else:
+            scores = total / lower
+        masked = jnp.where(feasible.astype(bool)[None, :], scores,
+                           -jnp.inf)
+        want = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_all_masked_opts_out(self):
+        k, d = 4, 64
+        s = _state(jax.random.PRNGKey(0), k, d)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (3, d))
+        got = fused_select(xs, s.theta, s.a_inv_t,
+                           jnp.zeros((k,), jnp.int32),
+                           jnp.ones((k,), jnp.float32),
+                           jnp.zeros((3, k), jnp.float32),
+                           jnp.float32(1.0), 0.5, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), -np.ones(3))
+
+
+class TestFusedSelectPoolKernel:
+    @pytest.mark.parametrize("masked", [False, True])
+    def test_bitwise_vs_pool_score_argmax(self, masked):
+        u, k, d, b = 3, 5, 64, 9
+        key = jax.random.PRNGKey(7)
+        states = [_state(jax.random.fold_in(key, i), k, d)
+                  for i in range(u)]
+        theta_pool = jnp.stack([s.theta for s in states])
+        a_inv_pool = jnp.stack([s.a_inv_t for s in states])
+        xs = jax.random.normal(jax.random.fold_in(key, 9), (b, d))
+        users = jnp.asarray([0, 1, 2, 0, 1, 2, 0, 1, 2], jnp.int32)
+        feasible = (jnp.asarray([1, 0, 1, 1, 1], jnp.int32) if masked
+                    else jnp.ones((k,), jnp.int32))
+
+        got = fused_select_pool(xs, users, theta_pool, a_inv_pool,
+                                feasible, 0.675, interpret=True)
+        scores = linucb_score_pool(xs, users, theta_pool, a_inv_pool,
+                                   0.675, interpret=True)
+        gated = jnp.where(feasible.astype(bool)[None, :], scores, -jnp.inf)
+        arm = jnp.argmax(gated, axis=-1).astype(jnp.int32)
+        want = jnp.where(jnp.any(feasible.astype(bool)), arm, -1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+        osc = ref.fused_select_pool_ref(xs, users, theta_pool, a_inv_pool,
+                                        feasible, 0.675)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(osc))
+
+
+class TestDriverFusedParity:
+    """fuse_rounds=True is invisible in results: bitwise logs + state."""
+
+    @pytest.mark.parametrize("policy", FUSABLE)
+    def test_pool_experiment_bitwise(self, policy):
+        with linucb.backend_scope("pallas_interpret"):
+            a = driver.run_pool_experiment(policy, rounds=24, seed=3)
+            b = driver.run_pool_experiment(policy, rounds=24, seed=3,
+                                           fuse_rounds=True)
+        _assert_results_equal(a, b, str(policy))
+
+    def test_per_round_dispatch_bitwise(self):
+        with linucb.backend_scope("pallas_interpret"):
+            a = driver.run_pool_experiment("budget_linucb", rounds=10,
+                                           seed=1, dispatch="per_round")
+            b = driver.run_pool_experiment("budget_linucb", rounds=10,
+                                           seed=1, dispatch="per_round",
+                                           fuse_rounds=True)
+        _assert_results_equal(a, b, "per_round")
+
+    def test_final_state_bitwise(self):
+        env = driver._resolve_env(None)
+        spec = policy_mod.as_spec("greedy_linucb")
+        with linucb.backend_scope("pallas_interpret"):
+            be = linucb.resolved_backend()
+            states = []
+            for fuse in (False, True):
+                pol, round_fn, _ = driver._jitted_pool_drivers(
+                    spec, env, 0.675, 0.45, 100, env.max_cost(), 0, 0.05,
+                    None, be, fuse)
+                key = jax.random.PRNGKey(0)
+                kenv, kround = jax.random.split(key)
+                params = env.make(kenv)
+                table = driver._pool_budget_table(1e-3, env.num_datasets,
+                                                 False)
+                s = pol.init()
+                for t in range(12):
+                    s, _, _ = round_fn(params, s,
+                                       jax.random.fold_in(kround, t), table)
+                states.append(s)
+        for la, lb in zip(jax.tree.leaves(states[0]),
+                          jax.tree.leaves(states[1])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_sweep_bitwise(self):
+        with linucb.backend_scope("pallas_interpret"):
+            a = driver.run_pool_experiment_sweep(
+                "budget_linucb", seeds=[0, 1], rounds=8, shard="none")
+            b = driver.run_pool_experiment_sweep(
+                "budget_linucb", seeds=[0, 1], rounds=8, shard="none",
+                fuse_rounds=True)
+        for ra, rb in zip(a, b):
+            _assert_results_equal(ra, rb, "sweep")
+
+    @pytest.mark.parametrize("users", [1, 3])
+    def test_multistream_bitwise(self, users):
+        with linucb.backend_scope("pallas_interpret"):
+            a = driver.run_pool_multistream("budget_linucb", rounds=6,
+                                            streams=4, users=users, seed=5)
+            b = driver.run_pool_multistream("budget_linucb", rounds=6,
+                                            streams=4, users=users, seed=5,
+                                            fuse_rounds=True)
+        _assert_results_equal(a, b, f"multistream users={users}")
+
+    def test_ref_backend_noop(self):
+        """On the pure-JAX backend the flag changes nothing — same
+        compiled path, bitwise."""
+        with linucb.backend_scope("ref"):
+            a = driver.run_pool_experiment("greedy_linucb", rounds=15,
+                                           seed=2)
+            b = driver.run_pool_experiment("greedy_linucb", rounds=15,
+                                           seed=2, fuse_rounds=True)
+        _assert_results_equal(a, b, "ref no-op")
+
+
+class TestSingleLaunchJaxpr:
+    def test_round_body_launch_count(self):
+        """The fused round body traces exactly ONE pallas_call; the
+        three-launch body traces two (score + SM; argmax is jnp)."""
+        env = driver._resolve_env(None)
+        spec = policy_mod.as_spec("greedy_linucb")
+        with linucb.backend_scope("pallas_interpret"):
+            be = linucb.resolved_backend()
+            key = jax.random.PRNGKey(0)
+            kenv, kround = jax.random.split(key)
+            params = env.make(kenv)
+            table = driver._pool_budget_table(1e-3, env.num_datasets, False)
+            counts = {}
+            for fuse in (False, True):
+                pol, round_fn, _ = driver._jitted_pool_drivers(
+                    spec, env, 0.675, 0.45, 100, env.max_cost(), 0, 0.05,
+                    None, be, fuse)
+                jaxpr = jax.make_jaxpr(round_fn.__wrapped__)(
+                    params, pol.init(), kround, table)
+                counts[fuse] = str(jaxpr).count("pallas_call")
+        assert counts[True] == 1, counts
+        assert counts[False] == 2, counts
+
+
+class TestServingFusedParity:
+    def _warmed_pair(self, policy, d=16, k=4):
+        from repro.serving import scheduler as sched_mod
+
+        arms = [sched_mod.ArmSpec(f"m{i}", None, 0.001 * (i + 1))
+                for i in range(k)]
+        a = sched_mod.BanditScheduler(arms, dim=d,
+                                      backend="pallas_interpret",
+                                      policy=policy)
+        b = sched_mod.BanditScheduler(arms, dim=d,
+                                      backend="pallas_interpret",
+                                      policy=policy, fuse_rounds=True)
+        rng = np.random.default_rng(0)
+        for t in range(10):
+            x = rng.normal(size=(d,)).astype(np.float32)
+            r = float(rng.random())
+            a.feedback(t % k, x, r, 0.002)
+            b.feedback(t % k, x, r, 0.002)
+        return a, b, rng
+
+    @pytest.mark.parametrize("policy", ["greedy_linucb", "budget_linucb",
+                                        "positional_linucb"])
+    @pytest.mark.parametrize("masked", [False, True])
+    def test_route_bitwise(self, policy, masked):
+        a, b, rng = self._warmed_pair(policy)
+        xs = rng.normal(size=(7, 16)).astype(np.float32)
+        am = np.array([True, False, True, True]) if masked else None
+        kw = dict(steps=np.arange(7) % 3,
+                  remaining=np.full(7, 0.5, np.float32), arm_mask=am)
+        np.testing.assert_array_equal(a.route(xs, **kw), b.route(xs, **kw))
+
+    def test_feedback_batch_state_bitwise(self):
+        a, b, rng = self._warmed_pair("greedy_linucb")
+        xs = rng.normal(size=(5, 16)).astype(np.float32)
+        arms = np.asarray([0, 1, 2, 3, 0], np.int32)
+        rs = rng.random(5).astype(np.float32)
+        a.feedback_batch(arms, xs, rs)
+        b.feedback_batch(arms, xs, rs)
+        for la, lb in zip(jax.tree.leaves(a.state), jax.tree.leaves(b.state)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    @pytest.mark.parametrize("masked", [False, True])
+    def test_state_store_route_bitwise(self, masked):
+        from repro.serving.state_store import UserStateStore
+
+        d = 16
+        rng = np.random.default_rng(1)
+        xs = rng.normal(size=(6, d)).astype(np.float32)
+        rewards = rng.random(6).astype(np.float32)
+        am = np.array([True, False, True, True]) if masked else None
+        outs = []
+        for fuse in (False, True):
+            store = UserStateStore(
+                linucb.LinUCBConfig(num_arms=4, dim=d), capacity=3)
+            uids = [1, 2, 1, 3, 2, 1]
+            with linucb.backend_scope("pallas_interpret"):
+                store.fold(uids, np.asarray([0, 1, 2, 3, 0, 1], np.int32),
+                           xs, rewards)
+                outs.append(store.route(uids, xs, arm_mask=am,
+                                        backend="pallas_interpret",
+                                        fuse_rounds=fuse))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+class TestLoudOptIn:
+    def test_unsupported_transform_raises(self):
+        spec = policy_mod.PolicySpec("greedy_linucb").wrap(
+            policy_mod.EpsilonMix(eps=0.1))
+        with pytest.raises(ValueError, match="cannot express"):
+            fused_mod.build_fused(spec, 6, 64)
+        assert not fused_mod.supports_fusion(spec)
+
+    def test_unknown_base_raises(self):
+        with pytest.raises(ValueError, match="fuse_rounds only supports"):
+            fused_mod.build_fused(policy_mod.as_spec("random"), 6, 64)
+
+    def test_unknown_args_raise(self):
+        spec = policy_mod.PolicySpec("greedy_linucb", (("bogus", 1),))
+        with pytest.raises(ValueError, match="unknown policy args"):
+            fused_mod.build_fused(spec, 6, 64)
+
+    def test_double_positional_weight_raises(self):
+        spec = policy_mod.as_spec("positional_linucb").wrap(
+            policy_mod.PositionalWeight(gamma=0.5))
+        with pytest.raises(ValueError, match="at most one"):
+            fused_mod.build_fused(spec, 6, 64)
+
+    def test_budget_gate_over_greedy_needs_costs(self):
+        spec = policy_mod.PolicySpec("greedy_linucb").wrap(
+            policy_mod.BudgetGate(slack=1.0))
+        with pytest.raises(ValueError, match="static costs"):
+            fused_mod.build_fused(spec, 6, 64)
+
+    def test_voting_rejected_by_drivers(self):
+        with pytest.raises(ValueError, match="no bandit hot loop"):
+            driver.run_pool_experiment("voting", rounds=4, fuse_rounds=True)
+        with pytest.raises(ValueError, match="no bandit hot loop"):
+            driver.run_pool_experiment_sweep("voting", seeds=[0], rounds=4,
+                                             fuse_rounds=True)
+
+    def test_supported_specs_probe(self):
+        for spec in FUSABLE:
+            assert fused_mod.supports_fusion(policy_mod.as_spec(spec)), spec
