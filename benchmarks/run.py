@@ -19,7 +19,7 @@ import sys
 import time
 
 from benchmarks import (appendix_context, bench_driver, bench_fused,
-                        bench_kernels, bench_serving_faults,
+                        bench_kernels, bench_neural, bench_serving_faults,
                         bench_user_store, fig2_budget_cdf,
                         fig3_budget_sensitivity, table1_2_accuracy_cost,
                         table3_position, theorem_regret)
@@ -50,6 +50,9 @@ def main() -> None:
          lambda p: p["pool_d64_sweep6_greedy_linucb"]["speedup"]),
         ("bench_fused", bench_fused,
          lambda p: p["round_d64"]["speedup"]),
+        ("bench_neural", bench_neural,
+         lambda p: p["pipeline"]["neural"]["accuracy_mean"]
+         - p["pipeline"]["linear"]["accuracy_mean"]),
         ("bench_serving_faults", bench_serving_faults,
          lambda p: p["regret_ratio"]),
         ("bench_user_store", bench_user_store,

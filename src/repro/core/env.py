@@ -327,9 +327,9 @@ PIPELINE_COST_SCALE = 2e-3
 
 
 class PipelineParams(NamedTuple):
-    qual: jax.Array      # (K, M) base per-(arm, stage) success probabilities
-    cost: jax.Array      # (K, M) mean per-(arm, stage) costs
-    e_stage: jax.Array   # (M, d) stage feature directions
+    qual: jax.Array      # (D, K, M) per-(dataset, arm, stage) success probs
+    cost: jax.Array      # (D, K, M) mean per-(dataset, arm, stage) costs
+    e_stage: jax.Array   # (D, M, d) per-dataset stage feature directions
     e_qual: jax.Array    # (d,) carried-quality direction
     e_diff: jax.Array    # (d,) difficulty direction
     sens: jax.Array      # (K,) difficulty sensitivity per arm
@@ -341,6 +341,7 @@ class PipelineState(NamedTuple):
     stage: jax.Array       # () int — which subtask this step solves
     quality: jax.Array     # () float in [0, 1] — previous stage's output
     difficulty: jax.Array  # () float — round-level task difficulty
+    dataset: jax.Array     # () int — which task-type stream this round is
 
 
 @scenario.register_env("pipeline")
@@ -361,6 +362,18 @@ class PipelineEnv:
     own best arm) and costs grow quadratically with quality, so cheap
     weak arms are competitive on easy stages — the cost-aware policies
     have real signal to exploit.
+
+    ``num_datasets > 1`` turns the single task stream into a MIXTURE of
+    task-type streams: each dataset draws its own per-(arm, stage)
+    quality/cost banks and its own stage feature directions, and every
+    round belongs to one stream (drawn uniformly at reset unless the
+    driver pins ``dataset=``). The learner still only sees ``x`` — the
+    stream identity reaches it exclusively through the per-dataset stage
+    directions, so exploiting the mixture requires picking the
+    (dataset, stage) structure out of the raw context. The default
+    ``num_datasets=1`` is bit-identical to the pre-mixture environment
+    (every parameter bank keeps a leading dataset axis of size 1 and the
+    reset key is only split when a mixture actually exists).
     """
 
     num_arms: int = 6
@@ -370,8 +383,8 @@ class PipelineEnv:
     carry_gain: float = 0.25   # how much carried quality lifts success
     quality_decay: float = 0.5  # EMA factor of the carried output quality
     cost_jitter: float = 0.25
+    num_datasets: int = 1      # task-type mixture width
 
-    num_datasets = 1
     stops_on_success = False   # pipelines always play every stage
 
     @property
@@ -379,22 +392,26 @@ class PipelineEnv:
         return self.stages
 
     def make(self, key: jax.Array) -> PipelineParams:
+        # D=1 draws the SAME bits as the pre-mixture env: every bank has
+        # a leading dataset axis (same element count at D=1, so the same
+        # key yields the same values, reshaped) and the split stays at 5
         ks = jax.random.split(key, 5)
-        k_arms, m, d = self.num_arms, self.stages, self.dim
+        n, k_arms, m, d = (self.num_datasets, self.num_arms, self.stages,
+                           self.dim)
 
         def unit(k, shape):
             v = jax.random.normal(k, shape)
             return v / jnp.linalg.norm(v, axis=-1, keepdims=True)
 
-        qual = jax.random.uniform(ks[0], (k_arms, m), minval=0.25,
+        qual = jax.random.uniform(ks[0], (n, k_arms, m), minval=0.25,
                                   maxval=0.9)
         cost = (PIPELINE_COST_SCALE * (0.15 + qual ** 2)
-                * jax.random.uniform(ks[1], (k_arms, m), minval=0.5,
+                * jax.random.uniform(ks[1], (n, k_arms, m), minval=0.5,
                                      maxval=1.5))
         return PipelineParams(
             qual=qual,
             cost=cost,
-            e_stage=unit(ks[2], (m, d)),
+            e_stage=unit(ks[2], (n, m, d)),
             e_diff=unit(ks[3], (d,)),
             e_qual=unit(ks[4], (d,)),
             sens=jnp.linspace(0.2, 0.1, k_arms),
@@ -402,26 +419,36 @@ class PipelineEnv:
 
     def _context(self, params: PipelineParams,
                  q: PipelineState) -> jax.Array:
-        x = (params.e_stage[q.stage]
+        x = (params.e_stage[q.dataset, q.stage]
              + 0.5 * q.quality * params.e_qual
              + 0.3 * q.difficulty * params.e_diff)
         return x / jnp.linalg.norm(x)
 
     def reset(self, params: PipelineParams, key: jax.Array,
               dataset: jax.Array | None = None) -> PipelineState:
-        """Fresh pipeline: stage 0, neutral carried quality. ``dataset``
-        is accepted (Scenario protocol) and ignored — one task stream."""
+        """Fresh pipeline: stage 0, neutral carried quality, a task
+        stream drawn uniformly (or pinned by ``dataset=``). With one
+        stream the key is never split — bit-identical to the
+        pre-mixture reset."""
+        if self.num_datasets > 1:
+            kd, key = jax.random.split(key)
+            ds = (jax.random.randint(kd, (), 0, self.num_datasets,
+                                     jnp.int32)
+                  if dataset is None else jnp.asarray(dataset, jnp.int32))
+        else:
+            ds = jnp.zeros((), jnp.int32)
         diff = self.diff_sd * jax.random.normal(key)
         q = PipelineState(x=jnp.zeros((self.dim,)),
                           stage=jnp.zeros((), jnp.int32),
                           quality=jnp.full((), 0.5),
-                          difficulty=diff)
+                          difficulty=diff,
+                          dataset=ds)
         return q._replace(x=self._context(params, q))
 
     def oracle_scores(self, params: PipelineParams,
                       q: PipelineState) -> jax.Array:
         """Ground-truth per-arm success probability at the current stage."""
-        p = (params.qual[:, q.stage]
+        p = (params.qual[q.dataset, :, q.stage]
              + self.carry_gain * (q.quality - 0.5)
              - params.sens * q.difficulty)
         return jnp.clip(p, 0.02, 0.98)
@@ -432,7 +459,7 @@ class PipelineEnv:
         k1, k2 = jax.random.split(key)
         p = self.oracle_scores(params, q)[arm]
         r = jax.random.bernoulli(k1, p).astype(jnp.float32)
-        mu = params.cost[arm, q.stage]
+        mu = params.cost[q.dataset, arm, q.stage]
         c = jnp.clip(mu * (1.0 + self.cost_jitter
                            * jax.random.truncated_normal(k2, -3.0, 3.0)),
                      mu * 0.25, mu * 4.0)
@@ -447,11 +474,11 @@ class PipelineEnv:
         return q.x
 
     def dataset_of(self, q: PipelineState) -> jax.Array:
-        return jnp.zeros((), jnp.int32)
+        return q.dataset
 
     def arm_costs(self, params: PipelineParams,
                   q: PipelineState) -> jax.Array:
-        return params.cost[:, q.stage]
+        return params.cost[q.dataset, :, q.stage]
 
     def max_cost(self) -> float:
         # step() clips at 4·mu; mu ≤ SCALE · (0.15 + 0.9²) · 1.5

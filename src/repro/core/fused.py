@@ -15,10 +15,15 @@ Supported specs (the LinUCB family whose hot loop the kernel fuses):
   feasibility rule of ``budget.select``;
 * ``positional_linucb`` (greedy or budget base) — the
   :class:`PositionalWeight` bonus scale ``w = 1 − γ^(h+1)``;
+* ``neural_linucb`` — the neural-linear head: the trunk's features
+  ``phi`` replace the raw context as the kernel operand (``embed``), and
+  the reward tail also folds the observation into the trunk's replay/SGD
+  state; the bandit-head traffic is the same single launch at
+  ``d = features``;
 * any of the above wrapped in :class:`PositionalWeight` (at most one —
   the kernel applies a single scale; a second would change float
   association) and/or :class:`BudgetGate` transforms (feasibility ANDs
-  compose exactly).
+  compose exactly; over a cost-stat-free base they need static costs).
 
 Whenever any combinator is attached (or the base is positional), the
 spec's select is the ``select_from_parts`` recomposition ``mean +
@@ -27,7 +32,11 @@ w·bonus`` rather than the raw index — the bridge switches the kernel to
 the parts path uses, keeping parity bitwise. Everything else —
 plan-based policies, stochastic selects (:class:`EpsilonMix`,
 :class:`CostTieBreak`), unknown bases — raises :class:`ValueError`:
-``fuse_rounds=`` is a loud opt-in, not a best-effort fallback.
+``fuse_rounds=`` is a loud opt-in, not a best-effort fallback. So does
+``neural_versatile``: its exploitation mean mixes the learned reward
+head into the posterior mean, which the kernel's ``m + w·(t − m)``
+recomposition cannot express without changing float association — run
+it unfused.
 """
 from __future__ import annotations
 
@@ -56,7 +65,12 @@ class FusedPolicy:
     ``bandit_of`` projects the policy state onto the
     :class:`~repro.core.linucb.LinUCBState` the kernel updates;
     ``finish`` folds the kernel result plus the observed reward/cost
-    back into the full policy state (the reward-dependent tail).
+    back into the full policy state (the reward-dependent tail);
+    ``embed`` (optional) maps the raw context to the context the bandit
+    head actually consumes — the neural-linear trunk's features — so
+    the kernel operand is ``embed(state, x)`` while ``finish`` still
+    receives the raw ``x`` (it re-derives ``phi`` from the same params,
+    bitwise; CSE folds the two forwards into one).
     """
 
     name: str
@@ -65,12 +79,15 @@ class FusedPolicy:
     inputs: Callable
     bandit_of: Callable
     finish: Callable
+    embed: Optional[Callable] = None
 
     def step(self, state, plan, x, h, remaining, gate):
         """One fused launch: returns ``(a_inv_t_new, arm, ax)`` with the
         signed arm (−1 = no feasible arm; the round does not execute)."""
         feasible, lower, mean_ext, w = self.inputs(state, plan, x, h,
                                                    remaining)
+        if self.embed is not None:
+            x = self.embed(state, x)
         return linucb.fused_step(self.bandit_of(state), x, feasible, lower,
                                  mean_ext, w, gate, self.alpha,
                                  recompose=self.recompose)
@@ -90,6 +107,8 @@ class FusedPolicy:
                                                    recompose=recompose)
         if arm_mask is not None:
             feasible = feasible * jnp.asarray(arm_mask, feasible.dtype)
+        if self.embed is not None:
+            x = self.embed(state, x)
         return linucb.fused_select(self.bandit_of(state), x, feasible,
                                    lower, mean_ext, w, self.alpha,
                                    recompose=recompose)
@@ -114,10 +133,13 @@ def build_fused(spec, num_arms: int, dim: int, *, alpha: float = 0.675,
     selection the kernel cannot express.
     """
     spec = policy_mod.as_spec(spec)
+    if spec.name in ("neural_linucb", "neural_versatile"):
+        return _build_fused_neural(spec, num_arms, dim, alpha=alpha,
+                                   lam=lam, horizon_t=horizon_t)
     if spec.name not in _SUPPORTED:
         raise ValueError(
-            f"fuse_rounds only supports the LinUCB family {_SUPPORTED}, "
-            f"got {spec.name!r}")
+            f"fuse_rounds only supports the LinUCB family {_SUPPORTED} "
+            f"and the neural_linucb head, got {spec.name!r}")
     kw = spec.kwargs
     alpha = float(kw.pop("alpha", alpha))
     lam = float(kw.pop("lam", lam))
@@ -222,3 +244,83 @@ def build_fused(spec, num_arms: int, dim: int, *, alpha: float = 0.675,
 
     return FusedPolicy(name=spec.name, alpha=alpha, recompose=recompose,
                        inputs=inputs, bandit_of=bandit_of, finish=finish)
+
+
+def _build_fused_neural(spec, num_arms: int, dim: int, *, alpha: float,
+                        lam: float, horizon_t: int) -> FusedPolicy:
+    """The neural-linear bridge: the kernel operand is the trunk's
+    feature vector (``embed``), the updated inverse is the bandit head
+    at ``d = features``, and ``finish`` folds the reward tail into BOTH
+    halves — the O(d) θ/b/counts tail on the head and the replay/SGD
+    step on the trunk — exactly the unfused adapter's update, so parity
+    stays bitwise.
+    """
+    # lazy: core.fused is imported by the engine at module load; the
+    # neural family registers lazily like every built-in
+    from repro.neural import policy as neural_mod
+    from repro.neural import scorer as scorer_mod
+
+    if spec.name == "neural_versatile":
+        raise ValueError(
+            "fuse_rounds cannot express neural_versatile (its select "
+            "mixes the learned reward head into the exploitation mean, "
+            "which the kernel's recomposition cannot reproduce bitwise); "
+            "run unfused")
+    scfg, bcfg, opt_cfg, _, train_every, _ = neural_mod.resolve_configs(
+        spec, num_arms, dim, alpha, lam, horizon_t)
+    del scfg
+
+    gammas = []
+    gates = []
+    for t in spec.transforms:
+        if isinstance(t, policy_mod.PositionalWeight):
+            g = float(t.gamma)
+            if not 0.0 <= g < 1.0:
+                raise ValueError(f"gamma must be in [0, 1), got {g}")
+            gammas.append(g)
+        elif isinstance(t, policy_mod.BudgetGate):
+            if t.costs is None:
+                raise ValueError(
+                    "BudgetGate over neural_linucb needs static costs= "
+                    "(its state tracks no cost statistics)")
+            gates.append((jnp.asarray(t.costs, jnp.float32),
+                          float(t.slack)))
+        else:
+            raise ValueError(
+                f"fuse_rounds cannot express {type(t).__name__} (its "
+                f"select is not a shaped-score argmax); run unfused")
+    if len(gammas) > 1:
+        raise ValueError(
+            "fuse_rounds supports at most one PositionalWeight scale "
+            "(a second would change the bonus float association)")
+    recompose = bool(spec.transforms)
+    gamma: Optional[float] = gammas[0] if gammas else None
+
+    def embed(state, x):
+        return scorer_mod.features(state.trunk.params, x)
+
+    def inputs(state, plan, x, h, remaining, recompose=recompose):
+        del plan
+        lower = jnp.ones((num_arms,), jnp.float32)
+        feasible = jnp.ones((num_arms,), bool)
+        for static_costs, slack in gates:
+            feasible = feasible & (static_costs <= slack * remaining)
+        mean_ext = (linucb.mean_scores(state.bandit, embed(state, x))
+                    if recompose else jnp.zeros((num_arms,), jnp.float32))
+        w = (jnp.float32(1.0) if gamma is None
+             else 1.0 - jnp.power(gamma, jnp.asarray(h, jnp.float32) + 1.0))
+        return feasible.astype(jnp.int32), lower, mean_ext, w
+
+    def finish(state, a_new, ax, arm, x, reward, cost, executed):
+        del cost
+        phi = scorer_mod.features(state.trunk.params, x)
+        bandit = linucb.fused_update_finish(state.bandit, a_new, ax, arm,
+                                            phi, reward, executed)
+        trunk = neural_mod.trunk_update(opt_cfg, train_every, state.trunk,
+                                        x, arm, reward, executed)
+        return neural_mod.NeuralState(trunk=trunk, bandit=bandit)
+
+    return FusedPolicy(name=spec.name, alpha=bcfg.alpha,
+                       recompose=recompose, inputs=inputs,
+                       bandit_of=lambda s: s.bandit, finish=finish,
+                       embed=embed)

@@ -181,7 +181,8 @@ _REGISTRY: Dict[str, PolicyDef] = {}
 # Modules whose import registers the built-in policies (builders live next
 # to their math). Imported lazily so this module stays a leaf.
 _BUILTIN_MODULES = ("repro.core.linucb", "repro.core.budget",
-                    "repro.core.knapsack", "repro.core.baselines")
+                    "repro.core.knapsack", "repro.core.baselines",
+                    "repro.neural.policy")
 _builtins_loaded = False
 
 

@@ -268,6 +268,10 @@ class EnvSpec:
         return _make_env_cached(self)
 
 
+# explicit bound, like every jitted-program cache: eviction only drops
+# the canonical-instance guarantee (a re-made env is EQUAL, so driver
+# caches re-key cleanly), never correctness — tests/test_neural.py
+# floods past maxsize and asserts bitwise-identical runs
 @functools.lru_cache(maxsize=128)
 def _make_env_cached(spec: EnvSpec):
     _ensure_builtins()

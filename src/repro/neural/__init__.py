@@ -1,0 +1,27 @@
+"""Neural-bandit subsystem: learned representations over the LinUCB head.
+
+The contract, in one paragraph
+------------------------------
+A neural-linear policy splits its state into two halves with different
+owners. **Trained online (gradient descent owns it):** the MLP trunk
+and per-arm reward head params plus their AdamW moments, updated by a
+masked-MSE step over a replay ring of the last ``replay`` raw
+``(x, arm, reward)`` observations (``neural.scorer.train_step`` — the
+``training/optimizer`` + ``training/train_step`` idiom). **Posterior
+state (Bayesian linear regression owns it):** an ordinary
+:class:`~repro.core.linucb.LinUCBState` over the trunk's normalized
+features ``phi``, scored and folded by the SAME ``(d, K·d)``
+block-layout Pallas kernels as every linear policy — at
+``d = features`` — including the fused round kernel under
+``fuse_rounds=`` and the per-user :class:`~repro.core.linucb.
+PosteriorPool` behind the serving :class:`~repro.serving.state_store.
+UserStateStore` (shared trunk, per-user bandit heads). Both halves
+checkpoint bit-exactly through ``training.checkpoint`` as one pytree.
+
+Policies register lazily like every built-in family — build specs with
+``PolicySpec.from_name("neural_linucb", width=64, features=32)`` (or
+``"neural_versatile"``) and hand them to any driver, the scheduler, or
+a combinator stack; see :mod:`repro.neural.policy`.
+"""
+from repro.neural.scorer import (NeuralScorer, ScorerConfig, features,  # noqa: F401
+                                 init_params, predict_rewards, train_step)

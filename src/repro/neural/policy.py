@@ -1,0 +1,276 @@
+"""Neural-linear bandit policies: a learned trunk over the LinUCB head.
+
+Registers two first-class :class:`~repro.core.policy.PolicySpec` names
+(loaded lazily via ``core.policy._BUILTIN_MODULES`` like every other
+built-in family):
+
+* ``neural_linucb`` — NeuralUCB-style (Atalar et al.): the MLP trunk's
+  normalized features ``phi`` replace the raw context in an otherwise
+  unchanged greedy LinUCB; select is the UCB argmax over ``phi``.
+* ``neural_versatile`` — the versatile-reward variant (Dai et al.): the
+  learned per-arm reward head's prediction is mixed into the
+  exploitation mean (``eta`` convex weight), with the LinUCB bonus over
+  ``phi`` unchanged; select is the ``select_from_parts`` recomposition.
+
+Both expose the standard ``ScoreParts(mean, bonus, feasible)``
+decomposition, so ``PositionalWeight`` / ``BudgetGate`` / ``EpsilonMix``
+compose over the neural index exactly as over the linear one — and both
+keep the posterior math on the existing ``(d, K·d)`` block kernels
+(``linucb.ucb_scores`` / ``linucb.update``), just at ``d = features``.
+
+State layout (:class:`NeuralState`): ``trunk`` carries what gradient
+descent owns — MLP/head params, AdamW moments, and the replay ring of
+the last ``replay`` observations; ``bandit`` is the ordinary
+:class:`~repro.core.linucb.LinUCBState` posterior over ``phi``. Every
+update is mask-gated into a bitwise no-op when the step did not execute
+(the replay write, the posterior fold AND the SGD step), so the state
+threads through the scan/sweep/multistream drivers' masked round bodies
+unchanged.
+
+The trunk init is keyed on the STATIC ``init_seed`` spec arg, never the
+driver seed: the vmapped seed sweep broadcasts ONE ``init()`` across
+all seed rows and builds adapters under traced seeds, so the network
+must start identically per spec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linucb
+from repro.core import policy as policy_mod
+from repro.neural import scorer
+from repro.training import optimizer as opt_mod
+
+NEURAL_POLICY_NAMES = ("neural_linucb", "neural_versatile")
+
+# spec-arg defaults shared by both builders and the serving programs.
+# ``train_steps`` bounds the trunk's SGD phase: the lr cosine-decays to
+# exactly zero by that step, freezing the representation so the LinUCB
+# posterior over phi stops chasing a moving target (the commit-then-
+# exploit discipline standard for neural-linear bandits).
+_ARG_DEFAULTS = dict(width=64, depth=2, features=32, replay=64, lr=1e-3,
+                     train_every=1, train_steps=64, init_seed=0)
+
+
+class TrunkState(NamedTuple):
+    """What online SGD owns: params, AdamW moments, the replay ring."""
+
+    params: Any                 # scorer.init_params pytree
+    opt: opt_mod.OptState
+    replay_x: jax.Array         # (W, in_dim) raw contexts
+    replay_arm: jax.Array       # (W,) int32 logged arms
+    replay_r: jax.Array         # (W,) observed rewards
+    replay_n: jax.Array         # () int32 total rows ever inserted
+
+
+class NeuralState(NamedTuple):
+    """Neural-linear policy state: learned trunk + LinUCB posterior.
+
+    ``bandit`` is a plain :class:`~repro.core.linucb.LinUCBState` at
+    ``d = features`` — combinators that probe posterior entropy
+    (``EpsilonMix``) find it via the ``.bandit.counts`` convention."""
+
+    trunk: TrunkState
+    bandit: linucb.LinUCBState
+
+
+def init_trunk(scfg: scorer.ScorerConfig, replay: int) -> TrunkState:
+    params = scorer.init_params(scfg)
+    return TrunkState(
+        params=params, opt=opt_mod.init(params),
+        replay_x=jnp.zeros((replay, scfg.in_dim), jnp.float32),
+        replay_arm=jnp.zeros((replay,), jnp.int32),
+        replay_r=jnp.zeros((replay,), jnp.float32),
+        replay_n=jnp.zeros((), jnp.int32))
+
+
+def trunk_update(opt_cfg: opt_mod.OptimizerConfig, train_every: int,
+                 trunk: TrunkState, x: jax.Array, arm: jax.Array,
+                 reward: jax.Array, mask) -> TrunkState:
+    """Fold one observation into the trunk: gated replay-ring write +
+    one AdamW step on the window (every ``train_every``-th insert).
+
+    The gate is a where-select over the tiny param/moment pytrees (the
+    grads are computed unconditionally to keep the scan body's graph
+    static — the trunk is O(width²), not the (d, K·d) inverse, so the
+    select costs nothing); a masked call returns ``trunk`` bitwise."""
+    m = jnp.asarray(mask, bool)
+    w = trunk.replay_x.shape[0]
+    slot = trunk.replay_n % w
+    row_x = jnp.where(m, jnp.asarray(x, jnp.float32),
+                      jax.lax.dynamic_index_in_dim(trunk.replay_x, slot,
+                                                   keepdims=False))
+    row_a = jnp.where(m, jnp.asarray(arm, jnp.int32), trunk.replay_arm[slot])
+    row_r = jnp.where(m, jnp.asarray(reward, jnp.float32),
+                      trunk.replay_r[slot])
+    replay_x = jax.lax.dynamic_update_index_in_dim(trunk.replay_x, row_x,
+                                                   slot, 0)
+    replay_arm = trunk.replay_arm.at[slot].set(row_a)
+    replay_r = trunk.replay_r.at[slot].set(row_r)
+    n = trunk.replay_n + m.astype(jnp.int32)
+
+    valid = jnp.arange(w, dtype=jnp.int32) < jnp.minimum(n, w)
+    params_t, opt_t, _ = scorer.train_step(trunk.params, trunk.opt, opt_cfg,
+                                           replay_x, replay_arm, replay_r,
+                                           valid)
+    gate = m & (n % jnp.int32(train_every) == 0)
+    sel = lambda new, old: jnp.where(gate, new, old)
+    return TrunkState(
+        params=jax.tree.map(sel, params_t, trunk.params),
+        opt=jax.tree.map(sel, opt_t, trunk.opt),
+        replay_x=replay_x, replay_arm=replay_arm, replay_r=replay_r,
+        replay_n=n)
+
+
+def resolve_configs(spec: policy_mod.PolicySpec, num_arms: int, dim: int,
+                    alpha: float = 0.675, lam: float = 0.45,
+                    horizon_t: int = 10_000):
+    """Parse a neural spec's args into the concrete configs the adapter
+    (and the scheduler's shared-trunk programs) build from. Returns
+    ``(scfg, bcfg, opt_cfg, replay, train_every, eta)`` — ``eta`` is
+    ``None`` for ``neural_linucb``."""
+    if spec.name not in NEURAL_POLICY_NAMES:
+        raise ValueError(f"not a neural policy spec: {spec.name!r}")
+    kw = spec.kwargs
+    alpha = float(kw.pop("alpha", alpha))
+    lam = float(kw.pop("lam", lam))
+    horizon_t = int(kw.pop("horizon_t", horizon_t))
+    kw.pop("c_max", None)
+    eta = (float(kw.pop("eta", 0.5))
+           if spec.name == "neural_versatile" else None)
+    (width, depth, features, replay, lr, train_every, train_steps,
+     init_seed) = policy_mod.take_args(kw, **_ARG_DEFAULTS)
+    scfg = scorer.ScorerConfig(in_dim=dim, num_arms=num_arms,
+                               width=int(width), depth=int(depth),
+                               features=int(features),
+                               init_seed=int(init_seed))
+    bcfg = linucb.LinUCBConfig(num_arms=num_arms, dim=scfg.features,
+                               alpha=alpha, lam=lam)
+    opt_cfg = _opt_config(float(lr), int(train_steps))
+    return scfg, bcfg, opt_cfg, int(replay), int(train_every), eta
+
+
+def _opt_config(lr: float, train_steps: int) -> opt_mod.OptimizerConfig:
+    # warmup then cosine to EXACTLY zero by train_steps: past that point
+    # the trunk is bitwise frozen and the posterior sees a fixed phi
+    steps = max(int(train_steps), 1)
+    return opt_mod.OptimizerConfig(peak_lr=lr,
+                                   warmup_steps=min(32, max(steps // 4, 1)),
+                                   total_steps=steps, min_lr_ratio=0.0,
+                                   weight_decay=1e-4, clip_norm=1.0)
+
+
+def _make_adapter(name: str, ctx: policy_mod.BuildContext, width, depth,
+                  features, replay, lr, train_every, train_steps,
+                  init_seed, eta: Optional[float]) -> policy_mod.PolicyAdapter:
+    scfg = scorer.ScorerConfig(in_dim=ctx.dim, num_arms=ctx.num_arms,
+                               width=int(width), depth=int(depth),
+                               features=int(features),
+                               init_seed=int(init_seed))
+    bcfg = linucb.LinUCBConfig(num_arms=ctx.num_arms, dim=scfg.features,
+                               alpha=ctx.alpha, lam=ctx.lam)
+    opt_cfg = _opt_config(float(lr), int(train_steps))
+    replay, train_every = int(replay), int(train_every)
+
+    def score_parts(s, p, x, h, rem):
+        del p, h, rem
+        phi = scorer.features(s.trunk.params, x)
+        total = linucb.ucb_scores(s.bandit, phi, bcfg.alpha)
+        lin_mean = linucb.mean_scores(s.bandit, phi)
+        mean = lin_mean if eta is None else (
+            (1.0 - eta) * lin_mean
+            + eta * scorer.predict_rewards(s.trunk.params, phi))
+        return policy_mod.ScoreParts(mean, total - lin_mean,
+                                     jnp.ones_like(total, dtype=bool))
+
+    if eta is None:
+        # the greedy UCB argmax over phi — same fused launch as
+        # greedy_linucb, just at d = features
+        def select(s, p, x, h, rem):
+            phi = scorer.features(s.trunk.params, x)
+            return linucb.select(s.bandit, phi, bcfg)
+    else:
+        def select(s, p, x, h, rem):
+            return policy_mod.select_from_parts(
+                score_parts(s, p, x, h, rem))
+
+    def update(s, p, a, x, r, c, m):
+        del p, c
+        phi = scorer.features(s.trunk.params, x)
+        bandit = linucb.update(s.bandit, jnp.asarray(a, jnp.int32), phi, r,
+                               mask=m)
+        trunk = trunk_update(opt_cfg, train_every, s.trunk, x, a, r, m)
+        return NeuralState(trunk=trunk, bandit=bandit)
+
+    return policy_mod.PolicyAdapter(
+        name, True,
+        init=lambda: NeuralState(trunk=init_trunk(scfg, replay),
+                                 bandit=linucb.init(bcfg)),
+        plan=policy_mod.no_plan,
+        select=select,
+        update=update,
+        score_parts=score_parts)
+
+
+@policy_mod.register_policy("neural_linucb")
+def _neural_builder(args, ctx):
+    vals = policy_mod.take_args(args, **_ARG_DEFAULTS)
+    return _make_adapter("neural_linucb", ctx, *vals, eta=None)
+
+
+@policy_mod.register_policy("neural_versatile")
+def _versatile_builder(args, ctx):
+    *vals, eta = policy_mod.take_args(args, **_ARG_DEFAULTS, eta=0.5)
+    return _make_adapter("neural_versatile", ctx, *vals, eta=float(eta))
+
+
+# ---------------------------------------------------------------------------
+# Serving: shared trunk, per-user bandit heads
+# ---------------------------------------------------------------------------
+
+def is_neural_spec(spec: policy_mod.PolicySpec) -> bool:
+    """True for a PLAIN neural spec (no combinators) — the shape the
+    scheduler's shared-trunk / per-user-head store path accepts."""
+    return spec.name in NEURAL_POLICY_NAMES and not spec.transforms
+
+
+def feature_dim(spec: policy_mod.PolicySpec) -> int:
+    """The phi dim a spec's bandit head runs at (= the store cfg dim)."""
+    return int(spec.kwargs.get("features", _ARG_DEFAULTS["features"]))
+
+
+@functools.lru_cache(maxsize=32)
+def serving_programs(spec: policy_mod.PolicySpec, num_arms: int, dim: int,
+                     alpha: float = 0.675, lam: float = 0.45,
+                     horizon_t: int = 10_000):
+    """Jitted shared-trunk programs for the store-backed scheduler:
+    ``(featurize, trunk_fold, init)``.
+
+    ``featurize(params, xs)`` maps raw (B, d) contexts to (B, F)
+    features — the contexts the :class:`~repro.serving.state_store.
+    UserStateStore`'s per-user LinUCB pool then scores/folds natively;
+    ``trunk_fold(trunk, arms, xs, rewards, masks)`` plays the batch
+    through :func:`trunk_update` row by row (mask rows are bitwise
+    no-ops, matching the delayed-feedback contract). Cached on the full
+    hashable spec + scale, with an explicit ``maxsize`` bound like every
+    other jitted-program cache."""
+    scfg, _, opt_cfg, replay, train_every, _ = resolve_configs(
+        spec, num_arms, dim, alpha, lam, horizon_t)
+
+    def featurize(params, xs):
+        return scorer.features(params, xs)
+
+    def trunk_fold(trunk, arms, xs, rewards, masks):
+        def body(tr, obs):
+            a, x, r, m = obs
+            return trunk_update(opt_cfg, train_every, tr, x, a, r, m), None
+
+        trunk, _ = jax.lax.scan(body, trunk, (arms, xs, rewards, masks))
+        return trunk
+
+    return (jax.jit(featurize), jax.jit(trunk_fold),
+            lambda: init_trunk(scfg, replay))

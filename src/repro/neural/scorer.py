@@ -1,0 +1,137 @@
+"""The jitted MLP feature network behind the neural-linear policies.
+
+``NeuralScorer`` is deliberately small: a tanh MLP trunk maps the raw
+environment context ``x`` (dim ``in_dim``) to an L2-normalized feature
+vector ``phi`` (dim ``features``), plus a per-arm linear reward head
+used to train the trunk online (and, for the versatile-reward variant,
+to score arms directly). The LinUCB posterior the policies maintain
+lives OVER ``phi`` — the trunk never touches the ``(d, K·d)`` bandit
+state, it only produces the contexts that state consumes.
+
+Normalizing ``phi`` keeps the learned representation inside the unit
+ball the paper's assumptions (and the UCB width calibration) expect, so
+a trained and an untrained trunk feed the posterior contexts of the
+same scale.
+
+Training is the repo's own online-SGD idiom: ``loss_fn`` is a masked
+MSE over a replay window of (x, arm, reward) rows, differentiated with
+``jax.value_and_grad`` and applied through ``training.optimizer``'s
+AdamW (:func:`train_step`) — the same optimizer/train-step shape as
+``training/train_step.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ScorerConfig:
+    """Static shape/seed description of one scorer (hashable — it rides
+    inside jitted-program cache keys via the policy spec args)."""
+
+    in_dim: int            # raw environment context dim
+    num_arms: int
+    width: int = 64        # hidden width of the tanh trunk
+    depth: int = 2         # number of hidden layers
+    features: int = 32     # phi dim == the LinUCB posterior dim
+    init_seed: int = 0     # static init key — NOT the driver seed: the
+                           # sweep broadcasts one init across seeds, so
+                           # the network must start identically per spec
+
+
+def init_params(cfg: ScorerConfig) -> Dict[str, Any]:
+    """Glorot-ish tanh init, keyed on the STATIC ``cfg.init_seed``."""
+    key = jax.random.PRNGKey(cfg.init_seed)
+    sizes = [cfg.in_dim] + [cfg.width] * cfg.depth
+    layers = []
+    for fan_in, fan_out in zip(sizes[:-1], sizes[1:]):
+        key, kw = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+        layers.append({
+            "w": scale * jax.random.normal(kw, (fan_in, fan_out),
+                                           jnp.float32),
+            "b": jnp.zeros((fan_out,), jnp.float32),
+        })
+    key, kp, kh = jax.random.split(key, 3)
+    proj = {
+        "w": jnp.sqrt(2.0 / (cfg.width + cfg.features))
+        * jax.random.normal(kp, (cfg.width, cfg.features), jnp.float32),
+        "b": jnp.zeros((cfg.features,), jnp.float32),
+    }
+    # head stored (features, num_arms): predict is a plain phi @ w with no
+    # transpose primitive entering traced programs (the jaxpr-cleanliness
+    # contract the bandit path is tested against)
+    head = {
+        "w": jnp.sqrt(1.0 / cfg.features)
+        * jax.random.normal(kh, (cfg.features, cfg.num_arms), jnp.float32),
+        "b": jnp.zeros((cfg.num_arms,), jnp.float32),
+    }
+    return {"layers": tuple(layers), "proj": proj, "head": head}
+
+
+def features(params: Dict[str, Any], x: jax.Array) -> jax.Array:
+    """Trunk forward: ``x`` (…, in_dim) → L2-normalized ``phi``
+    (…, features). Pure dot_generals — no transposes enter the traced
+    program, so the bandit-head jaxpr downstream stays as clean as the
+    raw-context path."""
+    h = jnp.asarray(x, jnp.float32)
+    for layer in params["layers"]:
+        h = jnp.tanh(h @ layer["w"] + layer["b"])
+    z = h @ params["proj"]["w"] + params["proj"]["b"]
+    return z * jax.lax.rsqrt(jnp.sum(z * z, axis=-1, keepdims=True) + 1e-8)
+
+
+def predict_rewards(params: Dict[str, Any], phi: jax.Array) -> jax.Array:
+    """Per-arm reward-head prediction over trunk features:
+    ``phi`` (…, features) → (…, K)."""
+    return phi @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(params: Dict[str, Any], xs: jax.Array, arms: jax.Array,
+            rewards: jax.Array, valid: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Masked replay MSE: predicted reward of each row's logged arm vs
+    the observed reward; invalid (not-yet-filled) rows contribute 0."""
+    phi = features(params, xs)                       # (W, F)
+    preds = predict_rewards(params, phi)             # (W, K)
+    picked = jnp.take_along_axis(preds, arms[:, None], axis=-1)[:, 0]
+    v = jnp.asarray(valid, jnp.float32)
+    n = jnp.maximum(v.sum(), 1.0)
+    loss = jnp.sum(v * (picked - rewards) ** 2) / n
+    return loss, {"replay_rows": n}
+
+
+@dataclasses.dataclass
+class NeuralScorer:
+    """Config + params bundled for interactive use (the policies thread
+    the raw pytrees through their jitted programs instead)."""
+
+    cfg: ScorerConfig
+    params: Dict[str, Any]
+
+    @classmethod
+    def create(cls, cfg: ScorerConfig) -> "NeuralScorer":
+        return cls(cfg, init_params(cfg))
+
+    def features(self, x: jax.Array) -> jax.Array:
+        return features(self.params, x)
+
+    def predict_rewards(self, x: jax.Array) -> jax.Array:
+        return predict_rewards(self.params, features(self.params, x))
+
+
+def train_step(params: Dict[str, Any], opt_state: opt_mod.OptState,
+               opt_cfg: opt_mod.OptimizerConfig, xs: jax.Array,
+               arms: jax.Array, rewards: jax.Array, valid: jax.Array):
+    """One AdamW step on the replay window — the ``training/train_step``
+    idiom (value_and_grad with aux → ``optimizer.apply``)."""
+    (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, xs, arms, rewards, valid)
+    params, opt_state, opt_metrics = opt_mod.apply(params, grads, opt_state,
+                                                   opt_cfg)
+    return params, opt_state, {"loss": loss, **aux, **opt_metrics}

@@ -70,6 +70,7 @@ from repro.core import fused as fused_mod
 from repro.core import policy as policy_mod
 from repro.core import scenario as scenario_mod
 from repro.engine import driver as engine_driver
+from repro.neural import policy as neural_policy
 from repro.serving.engine import Engine
 from repro.serving.state_store import UserStateStore
 
@@ -246,8 +247,10 @@ class BanditScheduler:
         :meth:`feedback_batch` then key every request by ``user_ids``
         (default user 0), scoring and folding against each user's pool
         blocks instead of the shared ``self.state``; requires the plain
-        ``greedy_linucb`` policy (per-user state pooling is defined for
-        the LinUCB posterior). ``fuse_rounds=True`` routes selection
+        ``greedy_linucb`` policy or a plain neural spec (per-user state
+        pooling is defined for the LinUCB posterior — a neural spec
+        shares ONE trunk across users and pools the per-user bandit
+        HEADS, so the store must be built at the spec's feature dim). ``fuse_rounds=True`` routes selection
         through the single-launch fused select kernel
         (``kernels.fused_round``) — scoring, quarantine masking and the
         argmax in ONE ``pallas_call``, bitwise-identical arms; a no-op
@@ -283,19 +286,32 @@ class BanditScheduler:
             self.fuse_rounds)
         self.state = self._policy.init()
         self.state_store = state_store
+        self._neural_store = None
         if state_store is not None:
-            if not (self.spec.name == "greedy_linucb"
-                    and not self.spec.transforms):
+            plain_greedy = (self.spec.name == "greedy_linucb"
+                            and not self.spec.transforms)
+            neural = neural_policy.is_neural_spec(self.spec)
+            if not (plain_greedy or neural):
                 raise ValueError(
                     "state_store= requires the plain greedy_linucb policy "
-                    f"(got {self.spec.name!r}); per-user pooling is "
-                    "defined for the LinUCB posterior")
+                    "or a plain neural spec (got "
+                    f"{self.spec.name!r}); per-user pooling is defined "
+                    "for the LinUCB posterior")
+            # neural specs share ONE trunk across users; the per-user
+            # pool holds the bandit HEADS, so the store lives at the
+            # trunk's feature dim, not the raw context dim
+            want_dim = neural_policy.feature_dim(self.spec) if neural \
+                else dim
             if (state_store.cfg.num_arms, state_store.cfg.dim) != \
-                    (len(self.arms), dim):
+                    (len(self.arms), want_dim):
                 raise ValueError(
                     f"state_store cfg (K={state_store.cfg.num_arms}, "
                     f"d={state_store.cfg.dim}) does not match scheduler "
-                    f"(K={len(self.arms)}, d={dim})")
+                    f"(K={len(self.arms)}, d={want_dim})")
+            if neural:
+                featurize, trunk_fold, _ = neural_policy.serving_programs(
+                    self.spec, len(self.arms), dim, alpha, lam, horizon_t)
+                self._neural_store = (featurize, trunk_fold)
 
     def _backend(self) -> str:
         return self._backend_override or linucb.resolved_backend()
@@ -335,6 +351,11 @@ class BanditScheduler:
         if self.state_store is not None:
             uids = (np.zeros((b,), np.int64) if user_ids is None
                     else np.asarray(user_ids).reshape(-1))
+            if self._neural_store is not None:
+                # shared trunk, per-user heads: each row's raw context
+                # is embedded once and the per-user pool scores phi
+                featurize, _ = self._neural_store
+                xs = featurize(self.state.trunk.params, xs)
             return self.state_store.route(uids, xs, arm_mask=arm_mask,
                                           backend=self._backend(),
                                           fuse_rounds=self.fuse_rounds)
@@ -364,12 +385,11 @@ class BanditScheduler:
         """Fold one observation back into the policy state (with a
         ``state_store``: into ``user_id``'s posterior, default user 0)."""
         if self.state_store is not None:
-            self.state_store.fold(
-                [0 if user_id is None else int(user_id)],
+            self.feedback_batch(
                 np.asarray([arm], np.int32),
-                jnp.asarray(context, jnp.float32)[None, :],
-                jnp.asarray([reward], jnp.float32),
-                backend=self._backend())
+                np.asarray(context, np.float32)[None, :],
+                np.asarray([reward], np.float32),
+                user_ids=[0 if user_id is None else int(user_id)])
             return
         if user_id is not None:
             raise ValueError("user_id= requires a scheduler state_store")
@@ -422,9 +442,23 @@ class BanditScheduler:
                 # user — their zero gate makes the fold row a no-op
                 live = m_np > 0
                 uids = np.where(live, uids, uids[int(np.argmax(live))])
-            self.state_store.fold(uids, arms_np,
-                                  jnp.asarray(contexts, jnp.float32),
-                                  jnp.asarray(rewards, jnp.float32),
+            xs_j = jnp.asarray(contexts, jnp.float32)
+            rs_j = jnp.asarray(rewards, jnp.float32)
+            if self._neural_store is not None:
+                # per-user heads fold phi from the PRE-update trunk
+                # (matching the adapter's update ordering), then the
+                # shared trunk trains on the raw batch
+                featurize, trunk_fold = self._neural_store
+                phi = featurize(self.state.trunk.params, xs_j)
+                self.state_store.fold(uids, arms_np, phi, rs_j,
+                                      mask=m_np, backend=self._backend())
+                ms_j = (jnp.ones(arms_np.shape, jnp.float32)
+                        if m_np is None else jnp.asarray(m_np))
+                trunk = trunk_fold(self.state.trunk,
+                                   jnp.asarray(arms_np), xs_j, rs_j, ms_j)
+                self.state = self.state._replace(trunk=trunk)
+                return
+            self.state_store.fold(uids, arms_np, xs_j, rs_j,
                                   mask=m_np, backend=self._backend())
             return
         if user_ids is not None:

@@ -343,6 +343,59 @@ class TestPipelineEnv:
         assert np.isfinite(res.budgets).all()
 
 
+class TestPipelineMixture:
+    """``num_datasets > 1`` turns the pipeline env into a task-type
+    mixture: per-dataset parameter banks, a dataset drawn per round,
+    recorded in the result's ``datasets`` stream."""
+
+    MIX = env_mod.PipelineEnv(dim=16, num_datasets=4)
+
+    def test_default_is_single_stream(self):
+        env = env_mod.PipelineEnv(dim=16)
+        res = router.run_pool_experiment("greedy_linucb", rounds=12, seed=0,
+                                         env=env)
+        assert (res.datasets == 0).all()
+
+    def test_mixture_draws_multiple_streams(self):
+        res = router.run_pool_experiment("greedy_linucb", rounds=40, seed=0,
+                                         env=self.MIX)
+        seen = set(np.asarray(res.datasets).tolist())
+        assert len(seen) > 1 and seen <= set(range(4))
+
+    def test_explicit_dataset_pins_stream(self):
+        res = router.run_pool_experiment("greedy_linucb", rounds=12, seed=0,
+                                         env=self.MIX, dataset=2)
+        assert (res.datasets == 2).all()
+
+    def test_param_banks_differ_per_dataset(self):
+        params = self.MIX.make(jax.random.PRNGKey(0))
+        assert params.qual.shape[0] == 4
+        assert not np.array_equal(params.qual[0], params.qual[1])
+        assert not np.array_equal(params.e_stage[0], params.e_stage[1])
+
+    def test_dataset_of_and_arm_costs_follow_stream(self):
+        params = self.MIX.make(jax.random.PRNGKey(0))
+        q = self.MIX.reset(params, jax.random.PRNGKey(1), dataset=3)
+        assert int(self.MIX.dataset_of(q)) == 3
+        np.testing.assert_array_equal(
+            self.MIX.arm_costs(params, q),
+            params.cost[3, :, int(q.stage)])
+
+    def test_scan_equals_per_round_on_mixture(self):
+        a = router.run_pool_experiment("greedy_linucb", rounds=16, seed=5,
+                                       env=self.MIX, chunk_size=8,
+                                       dispatch="scan")
+        b = router.run_pool_experiment("greedy_linucb", rounds=16, seed=5,
+                                       env=self.MIX, dispatch="per_round")
+        _assert_results_equal(a, b, "mixture scan-vs-per_round")
+
+    def test_budget_table_covers_all_streams(self):
+        t = scheduler_mod.env_budget_table(
+            EnvSpec.from_name("pipeline", dim=16, num_datasets=4))
+        assert np.asarray(t).shape == (4,)    # one budget per stream
+        assert np.isfinite(np.asarray(t)).all() and (np.asarray(t) > 0).all()
+
+
 class TestSchedulerBudgetTable:
     def test_pool_table_matches_cost_model(self):
         t = scheduler_mod.env_budget_table(

@@ -1,0 +1,430 @@
+"""Neural-bandit policy family: spec surface, combinators, driver
+parity, checkpointing, learning, backend/fused parity, serving, and the
+jaxpr-cleanliness contract of the bandit head.
+
+Mirrors ``tests/test_policy_api.py`` for the neural family: the specs
+must parse/hash/cache-key like every other first-class policy
+(same-name different-width specs compile DISTINCT programs), the
+``ScoreParts`` decomposition must compose under the standard
+combinators, and the scan / per_round / sweep / fused dispatch modes
+must stay bitwise-identical — the neural trunk rides in the round carry
+like any other state. The bandit head must keep running on the existing
+``(d, K·d)`` block kernels: the jaxpr tests assert the neural path adds
+no transpose round-trips and never materializes per-arm (F, F) blocks.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import env as env_mod
+from repro.core import linucb, router
+from repro.core import policy as policy_mod
+from repro.core import scenario as scenario_mod
+from repro.core.policy import (BudgetGate, EpsilonMix, PolicySpec,
+                               PositionalWeight)
+from repro.core.scenario import EnvSpec
+from repro.engine import driver as engine_driver
+from repro.neural import policy as neural_policy
+from repro.neural import scorer as scorer_mod
+from repro.serving import scheduler as scheduler_mod
+from repro.serving.state_store import UserStateStore
+from repro.training import checkpoint
+
+FIELDS = ("arms", "rewards", "costs", "regrets", "budgets", "datasets")
+ENV32 = env_mod.CalibratedPoolEnv(dim=32)
+PIPE32 = env_mod.PipelineEnv(dim=32)
+
+# small trunk for the parity/serving tests — fast, and distinct from the
+# defaults so cache-keying bugs cannot hide behind the default config
+SMALL = PolicySpec.from_name("neural_linucb", width=16, features=8)
+SMALL_VERS = PolicySpec.from_name("neural_versatile", width=16, features=8)
+
+
+def _assert_results_equal(a, b, label=""):
+    for f in FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{label}: field {f!r}")
+
+
+def _run_updates(adapter, state, n=6, dim=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    for i in range(n):
+        key, kx, kr = jax.random.split(key, 3)
+        x = jax.random.uniform(kx, (dim,))
+        state = adapter.update(state, jnp.int32(0), jnp.int32(i % 4), x,
+                               jax.random.bernoulli(kr).astype(jnp.float32),
+                               jnp.float32(0.0), jnp.asarray(True))
+    return state
+
+
+class TestNeuralSpec:
+    def test_registered_and_parses(self):
+        for name in neural_policy.NEURAL_POLICY_NAMES:
+            assert name in policy_mod.available_policies()
+        s = PolicySpec.from_name("neural_linucb", features=16, width=32)
+        assert s.kwargs == {"features": 16, "width": 32}
+        assert not s.budgeted and not s.select_uses_seed
+
+    def test_hashable_and_static_pytree(self):
+        s1 = PolicySpec.from_name("neural_linucb")
+        s2 = PolicySpec.from_name("neural_linucb", width=32)
+        assert s1 != s2 and hash(s1) != hash(s2)
+        assert {s1: "a", s2: "b"}[s2] == "b"
+        assert jax.tree_util.tree_leaves(s1) == []
+
+    def test_unknown_args_rejected(self):
+        with pytest.raises(ValueError, match="unknown policy args"):
+            PolicySpec.from_name("neural_linucb", bogus=1).build(4, 8)
+
+    def test_eta_only_for_versatile(self):
+        with pytest.raises(ValueError, match="unknown policy args"):
+            PolicySpec.from_name("neural_linucb", eta=0.3).build(4, 8)
+        assert PolicySpec.from_name("neural_versatile", eta=0.3) \
+            .build(4, 8) is not None
+
+    def test_same_name_different_width_distinct_programs(self):
+        """Regression guard: the jitted driver cache must key on the full
+        spec — two neural specs differing only in trunk width compile
+        DISTINCT programs, and a respelled equal spec cache-hits."""
+        def programs(spec):
+            return engine_driver._jitted_pool_drivers(
+                spec, ENV32, 0.675, 0.45, 100, ENV32.max_cost(), 0, 0.05,
+                None, linucb.resolved_backend())
+
+        _, _, a = programs(PolicySpec.from_name("neural_linucb", width=16))
+        _, _, b = programs(PolicySpec.from_name("neural_linucb", width=32))
+        assert a is not b
+        _, _, a2 = programs(PolicySpec.from_name("neural_linucb")
+                            .with_args(width=16))
+        assert a is a2
+
+    def test_init_keyed_on_static_seed_not_driver_seed(self):
+        """The sweep broadcasts ONE trunk init across seed rows — init
+        must depend on the init_seed spec arg only."""
+        ad = SMALL.build(4, 32)
+        a, b = ad.init(), ad.init()
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(la, lb)
+        other = SMALL.with_args(init_seed=1).build(4, 32).init()
+        assert not np.array_equal(a.trunk.params["layers"][0]["w"],
+                                  other.trunk.params["layers"][0]["w"])
+
+
+class TestCombinators:
+    """ScoreParts composition: the standard combinators wrap the neural
+    index exactly as they wrap the linear one."""
+
+    def test_positional_weight_composes_and_bites(self):
+        plain = router.run_pool_experiment(SMALL, rounds=24, seed=3,
+                                           env=PIPE32)
+        pos = router.run_pool_experiment(
+            SMALL.wrap(PositionalWeight(gamma=0.2)), rounds=24, seed=3,
+            env=PIPE32)
+        assert plain.arms.shape == pos.arms.shape
+        assert not np.array_equal(plain.arms, pos.arms)
+
+    def test_epsilon_mix_composes(self):
+        spec = SMALL.wrap(EpsilonMix(0.5))
+        assert spec.select_uses_seed
+        res = router.run_pool_experiment(spec, rounds=24, seed=0, env=ENV32)
+        assert (res.arms[res.arms >= 0] >= 0).all()
+
+    def test_budget_gate_composes(self):
+        spec = SMALL.wrap(BudgetGate(costs=(0.1,) * ENV32.num_arms))
+        assert spec.budgeted
+        res = router.run_pool_experiment(spec, rounds=24, seed=0, env=ENV32,
+                                         base_budget=ENV32.max_cost())
+        assert np.isfinite(res.budgets).all()
+
+    def test_versatile_mixes_reward_head(self):
+        a = router.run_pool_experiment(SMALL, rounds=24, seed=5, env=ENV32)
+        b = router.run_pool_experiment(SMALL_VERS.with_args(eta=0.9),
+                                       rounds=24, seed=5, env=ENV32)
+        assert not np.array_equal(a.arms, b.arms)
+
+
+class TestDriverParity:
+    @pytest.mark.parametrize("spec", [SMALL, SMALL_VERS],
+                             ids=["linucb", "versatile"])
+    @pytest.mark.parametrize("env", [ENV32, PIPE32], ids=["pool", "pipe"])
+    def test_scan_equals_per_round(self, spec, env):
+        a = router.run_pool_experiment(spec, rounds=16, seed=7, env=env,
+                                       chunk_size=8, dispatch="scan")
+        b = router.run_pool_experiment(spec, rounds=16, seed=7, env=env,
+                                       dispatch="per_round")
+        _assert_results_equal(a, b, f"{spec.name} scan-vs-per_round")
+
+    def test_sweep_matches_sequential(self):
+        seeds = [0, 2]
+        sweep = router.run_pool_experiment_sweep(SMALL, seeds, rounds=12,
+                                                 env=ENV32, chunk_size=6)
+        for s, got in zip(seeds, sweep):
+            want = router.run_pool_experiment(SMALL, rounds=12, seed=s,
+                                              env=ENV32, chunk_size=6)
+            _assert_results_equal(want, got, f"seed={s}")
+
+    def test_multistream_deterministic(self):
+        a = router.run_pool_multistream(SMALL, rounds=6, streams=3, seed=2,
+                                        env=ENV32, chunk_size=3)
+        b = router.run_pool_multistream(SMALL, rounds=6, streams=3, seed=2,
+                                        env=ENV32, chunk_size=3)
+        assert a.arms.shape == (18, ENV32.horizon)
+        _assert_results_equal(a, b, "multistream determinism")
+
+
+class TestCheckpoint:
+    def test_round_trip_bit_exact(self):
+        """(params, opt state, replay, posterior) all survive
+        ``checkpoint.dumps``/``loads`` bitwise."""
+        ad = SMALL.build(4, 32)
+        state = _run_updates(ad, ad.init(), n=6)
+        blob = checkpoint.dumps(state)
+        restored = checkpoint.loads(blob, like=ad.init())
+        la, lb = jax.tree.leaves(state), jax.tree.leaves(restored)
+        assert len(la) == len(lb)
+        for i, (x, y) in enumerate(zip(la, lb)):
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"leaf {i}")
+
+    def test_resumed_run_continues_bitwise(self):
+        ad = SMALL.build(4, 32)
+        state = _run_updates(ad, ad.init(), n=4)
+        resumed = checkpoint.loads(checkpoint.dumps(state), like=ad.init())
+        a = _run_updates(ad, state, n=3, seed=9)
+        b = _run_updates(ad, resumed, n=3, seed=9)
+        x = jax.random.uniform(jax.random.PRNGKey(11), (32,))
+        arm_a = ad.select(a, jnp.int32(0), x, jnp.int32(0),
+                          jnp.float32(1.0))
+        arm_b = ad.select(b, jnp.int32(0), x, jnp.int32(0),
+                          jnp.float32(1.0))
+        assert int(arm_a) == int(arm_b)
+        for x_, y_ in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x_), np.asarray(y_))
+
+
+class TestMaskedUpdate:
+    def test_masked_update_is_bitwise_noop(self):
+        """The trunk's replay write, SGD step and the posterior fold must
+        all gate to exact no-ops on masked rounds (the scan round bodies
+        and the delayed-feedback serving path rely on it)."""
+        ad = SMALL.build(4, 32)
+        state = _run_updates(ad, ad.init(), n=3)
+        x = jax.random.uniform(jax.random.PRNGKey(5), (32,))
+        after = ad.update(state, jnp.int32(0), jnp.int32(1), x,
+                          jnp.float32(1.0), jnp.float32(0.1),
+                          jnp.asarray(False))
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestLearning:
+    def test_train_step_reduces_replay_loss(self):
+        """Supervised sanity: AdamW on the replay window lowers the
+        reward-prediction loss."""
+        scfg = scorer_mod.ScorerConfig(in_dim=16, num_arms=4, width=16,
+                                       features=8)
+        params = scorer_mod.init_params(scfg)
+        from repro.training import optimizer as opt_mod
+        opt = opt_mod.init(params)
+        cfg = neural_policy._opt_config(1e-2, 200)
+        key = jax.random.PRNGKey(0)
+        xs = jax.random.uniform(key, (32, 16))
+        arms = jnp.arange(32, dtype=jnp.int32) % 4
+        rewards = (xs.sum(axis=-1) > 8.0).astype(jnp.float32)
+        valid = jnp.ones((32,), bool)
+        loss0, _ = scorer_mod.loss_fn(params, xs, arms, rewards, valid)
+        for _ in range(50):
+            params, opt, metrics = scorer_mod.train_step(
+                params, opt, cfg, xs, arms, rewards, valid)
+        assert float(metrics["loss"]) < float(loss0) * 0.8
+
+    def test_trained_net_beats_untrained_net(self):
+        """Learning smoke: the versatile policy's learned reward head
+        must cut regret vs the same policy with the net frozen at init
+        (lr=0) — mean over seeds on the pipeline env."""
+        spec = PolicySpec.from_name("neural_versatile", features=8)
+        frozen = spec.with_args(lr=0.0)
+        seeds = [0, 1, 2]
+        env = EnvSpec.from_name("pipeline")
+        trained_res = router.run_pool_experiment_sweep(
+            spec, seeds, rounds=400, env=env, chunk_size=100)
+        frozen_res = router.run_pool_experiment_sweep(
+            frozen, seeds, rounds=400, env=env, chunk_size=100)
+        trained = np.mean([float(r.regrets.sum()) for r in trained_res])
+        untrained = np.mean([float(r.regrets.sum()) for r in frozen_res])
+        assert trained < untrained
+
+    def test_neural_beats_random(self):
+        neu = router.run_pool_experiment(SMALL, rounds=200, seed=0,
+                                         env=PIPE32, chunk_size=100)
+        rnd = router.run_pool_experiment("random", rounds=200, seed=0,
+                                         env=PIPE32, chunk_size=100)
+        n_neu, n_rnd = neu.executed.sum(), rnd.executed.sum()
+        assert neu.rewards.sum() / n_neu > rnd.rewards.sum() / n_rnd
+
+
+class TestBackendParity:
+    def test_ref_vs_pallas_interpret(self):
+        with linucb.backend_scope("ref"):
+            want = router.run_pool_experiment(SMALL, rounds=30, seed=1,
+                                              env=ENV32)
+        with linucb.backend_scope("pallas_interpret"):
+            got = router.run_pool_experiment(SMALL, rounds=30, seed=1,
+                                             env=ENV32)
+        np.testing.assert_array_equal(want.arms, got.arms)
+        np.testing.assert_allclose(want.rewards, got.rewards, atol=1e-5)
+
+
+class TestFusedRounds:
+    """``fuse_rounds=`` applies to the bandit head: trunk features feed
+    the single-launch fused kernel, bitwise-identical to unfused."""
+
+    @pytest.mark.parametrize("wrap", [None, PositionalWeight(gamma=0.9)],
+                             ids=["plain", "positional"])
+    def test_fused_parity(self, wrap):
+        spec = SMALL if wrap is None else SMALL.wrap(wrap)
+        with linucb.backend_scope("pallas_interpret"):
+            a = router.run_pool_experiment(spec, rounds=20, seed=3,
+                                           env=ENV32, fuse_rounds=False)
+            b = router.run_pool_experiment(spec, rounds=20, seed=3,
+                                           env=ENV32, fuse_rounds=True)
+        _assert_results_equal(a, b, f"fused parity {spec.label}")
+
+    def test_versatile_fusion_raises(self):
+        """The reward-head mean mix cannot be recomposed from the
+        kernel's lower-divided scores — fusing must fail loudly, not
+        silently change arms."""
+        with linucb.backend_scope("pallas_interpret"):
+            with pytest.raises(ValueError, match="neural_versatile"):
+                router.run_pool_experiment(SMALL_VERS, rounds=4, seed=0,
+                                           env=ENV32, fuse_rounds=True)
+
+    def test_dynamic_budget_gate_fusion_raises(self):
+        spec = SMALL.wrap(BudgetGate())     # no static costs
+        with linucb.backend_scope("pallas_interpret"):
+            with pytest.raises(ValueError, match="cost"):
+                router.run_pool_experiment(spec, rounds=4, seed=0,
+                                           env=ENV32, fuse_rounds=True,
+                                           base_budget=1.0)
+
+
+class TestJaxprClean:
+    """The neural path must not reintroduce transpose round-trips or
+    per-arm (F, F) materialization on the bandit head (the (d, K·d)
+    block-layout contract of the Pallas kernels)."""
+
+    K, D, F = 4, 32, 8
+
+    def _adapter(self):
+        return SMALL.build(self.K, self.D)
+
+    def test_select_jaxpr_fully_clean(self):
+        ad = self._adapter()
+        state = ad.init()
+        x = jnp.ones((self.D,))
+        with linucb.backend_scope("pallas_interpret"):
+            txt = str(jax.make_jaxpr(
+                lambda s, xv: ad.select(s, jnp.int32(0), xv, jnp.int32(0),
+                                        jnp.float32(1.0)))(state, x))
+        assert "transpose" not in txt
+        assert f"f32[{self.K},{self.F},{self.F}]" not in txt
+        assert f"f32[{self.K},{self.D},{self.D}]" not in txt
+
+    def test_update_jaxpr_bandit_block_untouched(self):
+        """Trunk backprop transposes its own tiny MLP matrices; the
+        bandit state's (F, K·F) block must never be transposed and no
+        per-arm (F, F) tensor may appear."""
+        ad = self._adapter()
+        state = ad.init()
+        x = jnp.ones((self.D,))
+        with linucb.backend_scope("pallas_interpret"):
+            txt = str(jax.make_jaxpr(
+                lambda s, xv: ad.update(s, jnp.int32(0), jnp.int32(1), xv,
+                                        jnp.float32(1.0), jnp.float32(0.1),
+                                        jnp.asarray(True)))(state, x))
+        assert f"f32[{self.K},{self.F},{self.F}]" not in txt
+        kf = self.K * self.F
+        banned = {(self.F, kf), (kf, self.F)}
+        for m in re.finditer(r"f32\[(\d+),(\d+)\] = transpose", txt):
+            shape = (int(m.group(1)), int(m.group(2)))
+            assert shape not in banned, \
+                f"bandit block transposed: f32{list(shape)}"
+
+
+class TestCacheBounds:
+    def test_program_caches_have_explicit_bounds(self):
+        assert scenario_mod._make_env_cached.cache_info().maxsize == 128
+        assert neural_policy.serving_programs.cache_info().maxsize == 32
+
+    def test_env_cache_eviction_does_not_corrupt(self):
+        """Flooding the env cache past maxsize must not corrupt earlier
+        specs — a re-made env is equal and drives bitwise-equal runs."""
+        spec = EnvSpec.from_name("synthetic", dim=8)
+        env_before = spec.make_env()
+        before = router.run_pool_experiment("greedy_linucb", rounds=10,
+                                            seed=0, env=spec)
+        maxsize = scenario_mod._make_env_cached.cache_info().maxsize
+        for h in range(maxsize + 4):
+            EnvSpec.from_name("synthetic", dim=8, horizon=2 + h).make_env()
+        env_after = spec.make_env()
+        assert env_after == env_before
+        after = router.run_pool_experiment("greedy_linucb", rounds=10,
+                                           seed=0, env=spec)
+        _assert_results_equal(before, after, "post-eviction")
+
+
+class TestServingScheduler:
+    """Shared trunk, per-user bandit heads through the scheduler."""
+
+    def _arms(self, k=4):
+        return [scheduler_mod.ArmSpec(f"m{i}", None, 1e-5 * (i + 1))
+                for i in range(k)]
+
+    def _store(self, k=4, f=8, capacity=4):
+        cfg = linucb.LinUCBConfig(num_arms=k, dim=f)
+        return UserStateStore(cfg, capacity=capacity)
+
+    def test_plain_neural_scheduler_routes_and_learns(self):
+        sched = scheduler_mod.BanditScheduler(self._arms(), dim=32,
+                                              policy=SMALL)
+        xs = np.random.default_rng(0).uniform(size=(5, 32)) \
+            .astype(np.float32)
+        arms = sched.route(xs)
+        assert arms.shape == (5,) and (arms >= 0).all()
+        n0 = int(sched.state.trunk.replay_n)
+        sched.feedback(int(arms[0]), xs[0], 1.0)
+        assert int(sched.state.trunk.replay_n) == n0 + 1
+
+    def test_store_backed_neural_shared_trunk_per_user_heads(self):
+        sched = scheduler_mod.BanditScheduler(
+            self._arms(), dim=32, policy=SMALL, state_store=self._store())
+        xs = np.random.default_rng(1).uniform(size=(6, 32)) \
+            .astype(np.float32)
+        uids = np.asarray([0, 1, 0, 1, 2, 2], np.int32)
+        arms = sched.route(xs, user_ids=uids)
+        assert arms.shape == (6,)
+        sched.feedback_batch(arms, xs, np.ones(6, np.float32),
+                             user_ids=uids)
+        # ONE shared trunk saw all six rows...
+        assert int(sched.state.trunk.replay_n) == 6
+        # ...while the per-user heads diverged from the prior at F dim
+        store = sched.state_store
+        assert store.cfg.dim == neural_policy.feature_dim(SMALL)
+        assert len(store.resident_users) == 3
+
+    def test_store_dim_mismatch_raises(self):
+        with pytest.raises(ValueError, match="does not match"):
+            scheduler_mod.BanditScheduler(
+                self._arms(), dim=32, policy=SMALL,
+                state_store=self._store(f=32))
+
+    def test_store_rejects_transformed_neural_spec(self):
+        with pytest.raises(ValueError, match="plain"):
+            scheduler_mod.BanditScheduler(
+                self._arms(), dim=32,
+                policy=SMALL.wrap(PositionalWeight(gamma=0.9)),
+                state_store=self._store())
