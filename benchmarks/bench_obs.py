@@ -1,0 +1,273 @@
+"""Observability overhead benchmark: the obs= hooks must be ~free.
+
+The ``repro.obs`` contract has two halves, and this suite measures both:
+
+* **Off is bitwise-invisible.** ``obs=None`` must trace the exact
+  pre-obs program — asserted here by running the d=64 scan driver and a
+  chaos serving loop with and without ``obs=`` and comparing results
+  field-by-field (driver logs bitwise, serving report exactly, modulo
+  wall-clock fields).
+* **On is ≤ 5% overhead.** Device metrics ride the scan carry as ONE
+  packed vector updated by one fused scatter-add per round, flushed
+  once per chunk; serving counters/spans are O(1) host appends per
+  event. Overhead is the median of interleaved per-pair off/on ratios
+  (adjacent samples share container load, so the ratio is robust to
+  the box's noisy-neighbor swings) and the claim run FAILS if either
+  path regresses past 5%.
+
+A structural audit backs the timing: the obs-on chunk program must
+contain the same number of ``pallas_call``s as the obs-off one (metrics
+add arithmetic, never kernel launches) and must not materialize a
+per-arm (K, d, d) tensor. The obs-on chaos run also exports its
+Perfetto trace to ``results/traces/serve_chaos.json`` (git-ignored; CI
+uploads it as an artifact).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_obs``
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import obs as obs_mod
+from repro.core import env as env_mod
+from repro.core import linucb
+from repro.core import policy as policy_mod
+from repro.engine import driver
+from repro.obs import metrics as obs_metrics
+from repro.serving.faults import FaultSpec, SyntheticArmPool, bursty_arrivals
+from repro.serving.runtime import (HealthConfig, RetryPolicy, RuntimeConfig,
+                                   ServingRuntime)
+from repro.serving.scheduler import ArmSpec, BanditScheduler
+
+ROUNDS = int(os.environ.get("REPRO_BENCH_OBS_ROUNDS", "4000"))
+REPS = int(os.environ.get("REPRO_BENCH_OBS_REPS", "15"))
+MAX_OVERHEAD = 1.05
+RESULT_FIELDS = ("arms", "rewards", "costs", "regrets", "budgets",
+                 "datasets")
+TRACE_DIR = os.path.join(os.path.dirname(common.RESULTS_DIR.rstrip("/"))
+                         or ".", "traces")
+
+
+def _paired_overhead(fn_off, fn_on, reps: int = REPS):
+    """Measure obs overhead as the MEDIAN of per-pair ratios over
+    interleaved (off, on) samples.
+
+    A ≤5% claim cannot survive this container's ±40% noisy-neighbor
+    swings with block medians or best-of-N minima (both compare samples
+    taken under different load). Adjacent off/on samples share nearly
+    the same load, so each pair's ratio centers on the true overhead
+    and the median sheds the pairs a load step landed inside. Returns
+    ``(off_best_s, on_best_s, overhead)`` — the minima are reported for
+    throughput only; the claim is the median pair ratio."""
+    offs, ons = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn_off()
+        offs.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_on()
+        ons.append(time.perf_counter() - t0)
+    ratios = sorted(on / off for off, on in zip(offs, ons))
+    return min(offs), min(ons), ratios[len(ratios) // 2]
+
+
+# ---------------------------------------------------------------------------
+# d=64 scan driver: obs-off vs obs-on
+# ---------------------------------------------------------------------------
+
+def _driver_compare() -> Dict[str, object]:
+    env64 = env_mod.CalibratedPoolEnv(dim=64)
+
+    def run(obs=None):
+        return driver.run_pool_experiment("greedy_linucb", rounds=ROUNDS,
+                                          env=env64, obs=obs)
+
+    res_off = run()                                  # warm the off program
+    obs_on = obs_mod.Obs()
+    res_on = run(obs_on)                             # warm the on program
+    parity = all(np.array_equal(getattr(res_off, f), getattr(res_on, f))
+                 for f in RESULT_FIELDS)
+
+    off_s, on_s, overhead = _paired_overhead(
+        run, lambda: run(obs_mod.Obs()))
+
+    # the device metrics must agree with the logs they rode along with
+    reg = obs_on.registry
+    pulls = reg.value("pulls")
+    executed = res_on.arms[res_on.arms >= 0]
+    metrics_ok = (
+        int(reg.value("rounds")) == ROUNDS
+        and int(pulls.sum()) == executed.size
+        and np.array_equal(pulls, np.bincount(executed,
+                                              minlength=pulls.size))
+        and abs(reg.value("regret_sum") - float(res_on.regrets.sum()))
+        <= 1e-3 * max(1.0, abs(float(res_on.regrets.sum()))))
+
+    return {
+        "rounds": ROUNDS,
+        "off_s": off_s,
+        "on_s": on_s,
+        "off_rounds_per_s": ROUNDS / off_s,
+        "on_rounds_per_s": ROUNDS / on_s,
+        "overhead": overhead,
+        "bitwise_parity": bool(parity),
+        "metrics_consistent": bool(metrics_ok),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chaos serving loop: obs-off vs obs-on (+ trace export)
+# ---------------------------------------------------------------------------
+
+def _chaos_runtime(obs=None, trace_len_s: float = 20.0):
+    pool = SyntheticArmPool(4, 16, seed=1)
+    arms = [ArmSpec(f"a{k}", None, float(pool.costs[k]))
+            for k in range(4)]
+    sched = BanditScheduler(arms, dim=16, alpha=1.0, obs=obs)
+    cfg = RuntimeConfig(
+        max_batch=16, ring_capacity=8, timeout_s=0.25, deadline_s=8.0,
+        retry=RetryPolicy(max_attempts=3, base_delay_s=0.05,
+                          max_delay_s=0.5),
+        health=HealthConfig(window=12, fail_threshold=0.6, min_samples=4,
+                            probe_interval_s=0.5))
+    rt = ServingRuntime(
+        sched, pool.arm_fns(),
+        faults=FaultSpec(timeout_rate=0.15, error_rate=0.1,
+                         drop_feedback_rate=0.2, seed=7),
+        config=cfg, oracle=pool.oracle, obs=obs)
+    times = bursty_arrivals(t_end=trace_len_s, rate=10.0, seed=11)
+    rt.submit_trace(pool.contexts(len(times), seed=5), times)
+    return rt
+
+
+_WALL_KEYS = ("wall_s", "user_rounds_per_s", "route_p50_ms", "route_p99_ms")
+
+
+def _serving_compare() -> Dict[str, object]:
+    rep_off = _chaos_runtime().run()                 # warm programs
+    obs_on = obs_mod.Obs(trace=True)
+    rep_on = _chaos_runtime(obs_on).run()
+    s_off, s_on = rep_off.summary(), rep_on.summary()
+    parity = all(s_off[k] == s_on[k] for k in s_off if k not in _WALL_KEYS)
+
+    os.makedirs(TRACE_DIR, exist_ok=True)
+    trace_path = os.path.join(TRACE_DIR, "serve_chaos.json")
+    obs_on.export_trace(trace_path)
+
+    off_s, on_s, overhead = _paired_overhead(
+        lambda: _chaos_runtime().run(),
+        lambda: _chaos_runtime(obs_mod.Obs(trace=True)).run())
+
+    reg = obs_on.registry
+    counters_ok = (
+        int(reg.value("rt_admitted")) == rep_on.admitted
+        and int(reg.value("rt_feedback_arrived")) == rep_on.feedback_arrived
+        and int(reg.value("ring_folded_rows")) == rep_on.feedback_folded
+        and reg.value("rt_lost_feedback") == 0.0)
+
+    return {
+        "served": len(rep_on.served),
+        "off_s": off_s,
+        "on_s": on_s,
+        "off_requests_per_s": len(rep_off.served) / off_s,
+        "on_requests_per_s": len(rep_on.served) / on_s,
+        "overhead": overhead,
+        "report_parity": bool(parity),
+        "counters_consistent": bool(counters_ok),
+        "trace_events": len(obs_on.trace.events),
+        "trace_path": trace_path,
+    }
+
+
+# ---------------------------------------------------------------------------
+# structural audit: metrics add arithmetic, never launches
+# ---------------------------------------------------------------------------
+
+def _audit_round_body() -> Dict[str, object]:
+    env64 = env_mod.CalibratedPoolEnv(dim=64)
+    spec = policy_mod.as_spec("greedy_linucb")
+    chunk = 32
+    backend = "pallas" if jax.default_backend() == "tpu" \
+        else "pallas_interpret"
+    with linucb.backend_scope(backend):
+        be = linucb.resolved_backend()
+        key = jax.random.PRNGKey(0)
+        kenv, kround = jax.random.split(key)
+        params = env64.make(kenv)
+        table = driver._pool_budget_table(1e-3, env64.num_datasets, False)
+        ts = jnp.arange(chunk, dtype=jnp.int32)
+        schema = obs_metrics.round_schema(env64.num_arms,
+                                          env64.num_datasets)
+
+        pol, _, chunk_off = driver._jitted_pool_drivers(
+            spec, env64, 0.675, 0.45, ROUNDS, env64.max_cost(), 0, 0.05,
+            None, be, False)
+        _, _, chunk_on = driver._jitted_pool_drivers(
+            spec, env64, 0.675, 0.45, ROUNDS, env64.max_cost(), 0, 0.05,
+            None, be, False, schema, ROUNDS)
+
+        audit_off = obs_mod.jaxpr_audit(
+            chunk_off.__wrapped__, params, pol.init(), kround, table, ts)
+        audit_on = obs_mod.jaxpr_audit(
+            chunk_on.__wrapped__, params, (pol.init(), schema.init()),
+            kround, table, ts)
+        # the claim-run guard: obs adds no launches, no (K, d, d)
+        audit_on.expect(
+            pallas_calls=audit_off.pallas_calls,
+            banned=[obs_mod.shape_sig(env64.num_arms, 64, 64)])
+    return {
+        "backend": backend,
+        "pallas_calls_off": audit_off.pallas_calls,
+        "pallas_calls_on": audit_on.pallas_calls,
+        "launch_parity": audit_off.pallas_calls == audit_on.pallas_calls,
+    }
+
+
+def run() -> Dict:
+    out: Dict[str, object] = {"max_overhead": MAX_OVERHEAD}
+    with obs_mod.profile_session("bench_obs"):
+        out["driver_d64"] = _driver_compare()
+        out["serving_chaos"] = _serving_compare()
+    out["audit"] = _audit_round_body()
+    common.save_json("bench_obs", out)
+    return out
+
+
+def main():
+    out = run()
+    d, s = out["driver_d64"], out["serving_chaos"]
+    print("\n=== Observability overhead (obs-off vs obs-on) ===")
+    print(f"driver_d64: {d['off_rounds_per_s']:.0f} rounds/s off vs "
+          f"{d['on_rounds_per_s']:.0f} on "
+          f"(overhead {d['overhead']:.3f}x, parity={d['bitwise_parity']})")
+    print(f"serving_chaos: {s['off_requests_per_s']:.0f} req/s off vs "
+          f"{s['on_requests_per_s']:.0f} on "
+          f"(overhead {s['overhead']:.3f}x, parity={s['report_parity']}, "
+          f"{s['trace_events']} trace events)")
+    print(f"audit: {out['audit']['pallas_calls_off']} pallas launches "
+          f"off == {out['audit']['pallas_calls_on']} on")
+    claims = {
+        "driver_overhead_le_5pct": d["overhead"] <= MAX_OVERHEAD,
+        "serving_overhead_le_5pct": s["overhead"] <= MAX_OVERHEAD,
+        "driver_bitwise_parity": d["bitwise_parity"],
+        "driver_metrics_consistent": d["metrics_consistent"],
+        "serving_report_parity": s["report_parity"],
+        "serving_counters_consistent": s["counters_consistent"],
+        "obs_adds_no_launches": out["audit"]["launch_parity"],
+    }
+    print("claims:", claims)
+    return out, claims
+
+
+if __name__ == "__main__":
+    import sys
+    _, claims = main()
+    if not all(claims.values()):
+        sys.exit(1)

@@ -9,57 +9,109 @@ config edit, not a code change.
 Prints a ``name,us_per_call,derived`` CSV summary line per benchmark
 (us_per_call = wall time per simulated routing round or kernel call;
 derived = the headline metric of that table), plus each module's own
-detailed table. Full payloads land in results/benchmarks/*.json.
+detailed table. Full payloads land in results/benchmarks/*.json, and
+every suite also emits an observability snapshot
+(``<suite>.metrics.json`` — wall time, headline, claim pass/fail as a
+:class:`repro.obs.MetricsRegistry` export) next to its payload.
 
-Run: ``PYTHONPATH=src python -m benchmarks.run``
+Run: ``PYTHONPATH=src python -m benchmarks.run`` (all suites), or name
+a subset: ``python -m benchmarks.run bench_obs bench_fused``. With
+``--all`` the harness additionally writes
+``results/benchmarks/summary.json`` — one machine-readable entry per
+suite (headline claim, key numbers, pass/fail) so the perf trajectory
+across PRs lives in one file.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 from benchmarks import (appendix_context, bench_driver, bench_fused,
-                        bench_kernels, bench_neural, bench_serving_faults,
-                        bench_user_store, fig2_budget_cdf,
-                        fig3_budget_sensitivity, table1_2_accuracy_cost,
-                        table3_position, theorem_regret)
+                        bench_kernels, bench_neural, bench_obs,
+                        bench_serving_faults, bench_user_store,
+                        fig2_budget_cdf, fig3_budget_sensitivity,
+                        table1_2_accuracy_cost, table3_position,
+                        theorem_regret)
 from benchmarks import common
+from repro import obs as obs_mod
 
 
-def main() -> None:
+SUITES = [
+    ("table1_2_accuracy_cost", table1_2_accuracy_cost,
+     lambda p: p["accuracy"]["knapsack"]["avg"]),
+    ("table3_position", table3_position,
+     lambda p: p["knapsack"]["first_step_share"]),
+    ("fig2_budget_cdf", fig2_budget_cdf,
+     lambda p: p["budget_linucb"]["within_budget_frac"]),
+    ("fig3_budget_sensitivity", fig3_budget_sensitivity,
+     lambda p: list(p["knapsack"].values())[-1]),
+    ("theorem_regret", theorem_regret,
+     lambda p: p["greedy_linucb"]["loglog_slope"]),
+    ("appendix_context", appendix_context,
+     lambda p: p["strategy2_mistral_then_gemini"]
+     - p["strategy1_gemini_only"]),
+    ("bench_kernels", bench_kernels,
+     lambda p: p["linucb_score_B128_K6_d384"]),
+    ("bench_driver", bench_driver,
+     lambda p: p["pool_d64_sweep6_greedy_linucb"]["speedup"]),
+    ("bench_fused", bench_fused,
+     lambda p: p["round_d64"]["speedup"]),
+    ("bench_neural", bench_neural,
+     lambda p: p["pipeline"]["neural"]["accuracy_mean"]
+     - p["pipeline"]["linear"]["accuracy_mean"]),
+    ("bench_serving_faults", bench_serving_faults,
+     lambda p: p["regret_ratio"]),
+    ("bench_user_store", bench_user_store,
+     lambda p: p["cold_start_regret_ratio"]),
+    ("bench_obs", bench_obs,
+     lambda p: p["driver_d64"]["overhead"]),
+]
+
+
+def _suite_metrics(name: str, wall_s: float, us: float, derived: float,
+                   claims: dict) -> None:
+    """The per-suite observability snapshot: a tiny registry of
+    suite-level gauges exported next to the payload JSON."""
+    obs = obs_mod.Obs()
+    reg = obs.registry
+    reg.set("suite_wall_s", wall_s, labels={"suite": name})
+    reg.set("suite_us_per_call", us, labels={"suite": name})
+    reg.set("suite_derived", float(derived), labels={"suite": name})
+    reg.set("suite_claims_total", float(len(claims)),
+            labels={"suite": name})
+    reg.set("suite_claims_passed", float(sum(map(bool, claims.values()))),
+            labels={"suite": name})
+    common.save_json(f"{name}.metrics", obs.snapshot())
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("suites", nargs="*",
+                    help="suite names to run (default: all)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every suite AND write "
+                         "results/benchmarks/summary.json")
+    ap.add_argument("--summary", action="store_true",
+                    help="write summary.json for whatever suites ran "
+                         "(implied by --all; lets CI consolidate a "
+                         "quick subset)")
+    args = ap.parse_args(argv)
+
+    selected = SUITES
+    if args.suites and not args.all:
+        known = {name for name, _, _ in SUITES}
+        unknown = [s for s in args.suites if s not in known]
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; choose from "
+                     f"{sorted(known)}")
+        selected = [row for row in SUITES if row[0] in args.suites]
+
     rows = []
     all_claims = {}
+    summary = {}
 
-    suites = [
-        ("table1_2_accuracy_cost", table1_2_accuracy_cost,
-         lambda p: p["accuracy"]["knapsack"]["avg"]),
-        ("table3_position", table3_position,
-         lambda p: p["knapsack"]["first_step_share"]),
-        ("fig2_budget_cdf", fig2_budget_cdf,
-         lambda p: p["budget_linucb"]["within_budget_frac"]),
-        ("fig3_budget_sensitivity", fig3_budget_sensitivity,
-         lambda p: list(p["knapsack"].values())[-1]),
-        ("theorem_regret", theorem_regret,
-         lambda p: p["greedy_linucb"]["loglog_slope"]),
-        ("appendix_context", appendix_context,
-         lambda p: p["strategy2_mistral_then_gemini"]
-         - p["strategy1_gemini_only"]),
-        ("bench_kernels", bench_kernels,
-         lambda p: p["linucb_score_B128_K6_d384"]),
-        ("bench_driver", bench_driver,
-         lambda p: p["pool_d64_sweep6_greedy_linucb"]["speedup"]),
-        ("bench_fused", bench_fused,
-         lambda p: p["round_d64"]["speedup"]),
-        ("bench_neural", bench_neural,
-         lambda p: p["pipeline"]["neural"]["accuracy_mean"]
-         - p["pipeline"]["linear"]["accuracy_mean"]),
-        ("bench_serving_faults", bench_serving_faults,
-         lambda p: p["regret_ratio"]),
-        ("bench_user_store", bench_user_store,
-         lambda p: p["cold_start_regret_ratio"]),
-    ]
-
-    for name, mod, derive in suites:
+    for name, mod, derive in selected:
         t0 = time.perf_counter()
         payload, claims = mod.main()
         # every suite's full payload lands under its SUITE name — the
@@ -71,8 +123,17 @@ def main() -> None:
         # per-round (or per-call) time in µs
         rounds = common.ROUNDS if not name.startswith("bench") else 1
         us = dt / max(rounds, 1) * 1e6
-        rows.append((name, us, derive(payload)))
+        derived = derive(payload)
+        rows.append((name, us, derived))
         all_claims[name] = claims
+        _suite_metrics(name, dt, us, derived, claims)
+        summary[name] = {
+            "headline": float(derived),
+            "us_per_call": us,
+            "wall_s": dt,
+            "claims": claims,
+            "pass": all(claims.values()),
+        }
 
     print("\n================ SUMMARY (name,us_per_call,derived) ===========")
     for name, us, derived in rows:
@@ -83,6 +144,8 @@ def main() -> None:
     print("\nclaim checks:",
           "ALL PASS" if not failed else f"FAILURES: {failed}")
     common.save_json("claims", all_claims)
+    if args.all or args.summary:
+        common.save_json("summary", summary)
     if failed:
         sys.exit(1)
 

@@ -8,13 +8,19 @@ once the outage lifts, and the zero-lost-feedback ring fold — then
 compares regret against the same trace with no faults injected.
 
 Run: PYTHONPATH=src python examples/serve_faulty.py [--chaos]
+     PYTHONPATH=src python examples/serve_faulty.py --trace out.json
 
 ``--chaos`` asserts the CI invariants (drained loop, no lost feedback,
 quarantine → probe → re-admission observed) and exits non-zero on
-violation — the chaos-smoke CI leg runs exactly this.
+violation — the chaos-smoke CI leg runs exactly this. The chaos run is
+instrumented with ``repro.obs`` (device-free serving counters, span
+tracing): the final metrics snapshot prints below the report, and
+``--trace out.json`` dumps the span timeline as Chrome trace-event
+JSON, loadable directly in Perfetto / ``chrome://tracing``.
 """
 import argparse
 
+from repro import obs as obs_mod
 from repro.serving.faults import (FaultSpec, SyntheticArmPool,
                                   bursty_arrivals)
 from repro.serving.runtime import (HealthConfig, RetryPolicy,
@@ -25,10 +31,10 @@ from repro.serving.scheduler import ArmSpec, BanditScheduler
 NUM_ARMS, DIM = 6, 16
 
 
-def build_runtime(pool, faults, seed=0):
+def build_runtime(pool, faults, seed=0, obs=None):
     arms = [ArmSpec(f"llm-{k}", None, float(pool.costs[k]))
             for k in range(NUM_ARMS)]
-    scheduler = BanditScheduler(arms, dim=DIM, alpha=1.0)
+    scheduler = BanditScheduler(arms, dim=DIM, alpha=1.0, obs=obs)
     cfg = RuntimeConfig(
         max_queue=256, max_batch=32, timeout_s=0.25, deadline_s=8.0,
         ring_capacity=16,
@@ -37,7 +43,33 @@ def build_runtime(pool, faults, seed=0):
         health=HealthConfig(window=16, fail_threshold=0.6, min_samples=6,
                             probe_interval_s=0.5))
     return ServingRuntime(scheduler, pool.arm_fns(), faults=faults,
-                          config=cfg, oracle=pool.oracle)
+                          config=cfg, oracle=pool.oracle, obs=obs)
+
+
+def _counter_total(reg, name):
+    """Sum a counter across all of its label series (0.0 if absent)."""
+    return sum(float(vals.sum()) for spec, _, vals in reg.series()
+               if spec.name == name)
+
+
+def print_metrics_snapshot(obs):
+    reg = obs.registry
+    print("observability snapshot (chaos run):")
+    print(f"  lost feedback     = {reg.value('rt_lost_feedback'):.0f}   "
+          f"(arrived {reg.value('rt_feedback_arrived'):.0f}, "
+          f"folded {reg.value('ring_folded_rows'):.0f} over "
+          f"{reg.value('ring_flushes'):.0f} ring flushes)")
+    print(f"  quarantine cycles = "
+          f"{_counter_total(reg, 'health_quarantines'):.0f} quarantines / "
+          f"{_counter_total(reg, 'health_probes'):.0f} probes / "
+          f"{_counter_total(reg, 'health_readmits'):.0f} re-admissions")
+    print(f"  latency p50/p99   = {reg.quantile('rt_latency_s', 0.5)*1e3:.1f}"
+          f"/{reg.quantile('rt_latency_s', 0.99)*1e3:.1f} ms (virtual)   "
+          f"route p50/p99 = {reg.quantile('route_wall_ms', 0.5):.2f}"
+          f"/{reg.quantile('route_wall_ms', 0.99):.2f} ms (wall)")
+    print(f"  routed batches    = {reg.value('sched_route_batches'):.0f} "
+          f"({reg.value('sched_requests'):.0f} requests; per-arm "
+          f"{[int(v) for v in reg.value('sched_routed')]})")
 
 
 def main():
@@ -46,6 +78,9 @@ def main():
                     help="assert the CI chaos invariants")
     ap.add_argument("--t-end", type=float, default=30.0)
     ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--trace", metavar="OUT_JSON",
+                    help="export the chaos run's span timeline as "
+                         "Perfetto-loadable Chrome trace JSON")
     args = ap.parse_args()
 
     pool = SyntheticArmPool(NUM_ARMS, DIM, seed=1)
@@ -60,9 +95,11 @@ def main():
                       drop_feedback_rate=0.1, spike_rate=0.02,
                       outages=((best, 5.0, 15.0),))
 
+    obs = obs_mod.Obs(trace=True)   # instruments the chaos run only
     reports = {}
     for label, spec in (("no-fault", FaultSpec(seed=7)), ("chaos", chaos)):
-        rt = build_runtime(pool, spec)
+        rt = build_runtime(pool, spec,
+                           obs=obs if label == "chaos" else None)
         # warm posterior from offline data — live traffic then actually
         # concentrates on the learned-best arm the outage takes down
         pool.warmup(rt.scheduler, 512)
@@ -93,7 +130,13 @@ def main():
     ratio = (reports["chaos"].regret
              / max(reports["no-fault"].regret, 1e-9))
     print(f"regret under faults / no-fault baseline = {ratio:.2f}× "
-          f"(matched traffic)")
+          f"(matched traffic)\n")
+
+    print_metrics_snapshot(obs)
+    if args.trace:
+        obs.export_trace(args.trace)
+        print(f"  trace             = {len(obs.trace.events)} events "
+              f"→ {args.trace} (open in Perfetto)")
 
     if args.chaos:
         rep = reports["chaos"]

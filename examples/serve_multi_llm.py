@@ -17,10 +17,16 @@ Two modes:
   it, and requests are keyed by user id against a fixed-capacity
   :class:`repro.serving.state_store.UserStateStore` (per-user posteriors,
   LRU eviction to host, cohort warm-start). The run asserts the loop
-  drained and that no arrived feedback was lost.
+  drained and that no arrived feedback was lost. The whole stack
+  (scheduler, runtime, user store) is instrumented with ``repro.obs``:
+  a final metrics snapshot prints after the report, and
+  ``--trace out.json`` dumps the span timeline as Perfetto-loadable
+  Chrome trace JSON.
 
 Run: PYTHONPATH=src python examples/serve_multi_llm.py [--rounds N]
      PYTHONPATH=src python examples/serve_multi_llm.py --runtime
+     PYTHONPATH=src python examples/serve_multi_llm.py --runtime \
+         --trace out.json
 """
 import argparse
 
@@ -28,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.configs import get_config
 from repro.core import features, linucb
 from repro.models import registry
@@ -91,10 +98,12 @@ def run_runtime(args):
     rng = np.random.default_rng(0)
     affinity = rng.dirichlet(np.ones(len(arms)), size=len(TOPICS))
 
+    obs = obs_mod.Obs(trace=True)
     store = UserStateStore(
-        linucb.LinUCBConfig(num_arms=len(arms), dim=DIM), capacity=4)
+        linucb.LinUCBConfig(num_arms=len(arms), dim=DIM), capacity=4,
+        obs=obs)
     sched = BanditScheduler(arms, dim=DIM, max_new_tokens=4,
-                            state_store=store)
+                            state_store=store, obs=obs)
     arm_fns, oracle = make_engine_arm_fns(arms, affinity, DIM)
     rt = ServingRuntime(
         sched, arm_fns,
@@ -102,7 +111,7 @@ def run_runtime(args):
                          drop_feedback_rate=0.1, feedback_delay_s=0.05),
         config=RuntimeConfig(max_batch=8, ring_capacity=16,
                              timeout_s=0.3, deadline_s=10.0),
-        oracle=oracle)
+        oracle=oracle, obs=obs)
 
     n = args.rounds * args.batch
     users = rng.integers(0, args.users, n)
@@ -123,7 +132,25 @@ def run_runtime(args):
           f"{store.cold_starts} cold starts")
     assert report.drained, "runtime failed to drain"
     assert report.lost_feedback == 0, "arrived feedback was lost"
-    print("runtime invariants hold: drained, no feedback lost")
+    print("runtime invariants hold: drained, no feedback lost\n")
+
+    reg = obs.registry
+    print("observability snapshot:")
+    print(f"  lost feedback     = {reg.value('rt_lost_feedback'):.0f}   "
+          f"(arrived {reg.value('rt_feedback_arrived'):.0f}, "
+          f"folded {reg.value('ring_folded_rows'):.0f})")
+    print(f"  latency p50/p99   = "
+          f"{reg.quantile('rt_latency_s', 0.5)*1e3:.1f}"
+          f"/{reg.quantile('rt_latency_s', 0.99)*1e3:.1f} ms (virtual)")
+    print(f"  user store        = "
+          f"{reg.value('store_resident_users'):.0f} resident / "
+          f"{reg.value('store_evictions'):.0f} evictions / "
+          f"{reg.value('store_restores'):.0f} restores / "
+          f"{reg.value('store_cold_starts'):.0f} cold starts")
+    if args.trace:
+        obs.export_trace(args.trace)
+        print(f"  trace             = {len(obs.trace.events)} events "
+              f"→ {args.trace} (open in Perfetto)")
 
 
 def main():
@@ -135,6 +162,9 @@ def main():
     ap.add_argument("--runtime", action="store_true",
                     help="fault-tolerant ServingRuntime mode with a "
                          "per-user posterior store")
+    ap.add_argument("--trace", metavar="OUT_JSON",
+                    help="(with --runtime) export the span timeline as "
+                         "Perfetto-loadable Chrome trace JSON")
     args = ap.parse_args()
     if args.runtime:
         run_runtime(args)

@@ -92,6 +92,7 @@ from repro.core.router import (DEFAULT_CHUNK_SIZE, DISPATCH_MODES,
                                ExperimentResult, RoundLog)
 from repro.engine import shard as shard_mod
 from repro.engine import sink as sink_mod
+from repro.obs import metrics as obs_metrics
 
 POOL_FIELDS = ("arms", "rewards", "costs", "regrets", "budgets", "datasets")
 
@@ -255,15 +256,41 @@ def _pad_step_axis(pad: int, arms, rewards, costs, regrets):
     return arms, rewards, costs, regrets
 
 
+def _with_round_metrics(body, obs_schema, rounds_total: int):
+    """Lift a round-scan body ``state, t → state, (log, ds)`` into one
+    whose carry also threads the device metric pytree of ``obs_schema``.
+
+    With ``obs_schema=None`` the body is returned UNTOUCHED — the traced
+    program is byte-for-byte the pre-obs one (the bitwise-invisibility
+    contract of ``obs=``). Rounds at ``t ≥ rounds_total`` are the
+    driver's chunk padding: their logs are discarded host-side, so their
+    metric contribution is gated to exactly zero on device."""
+    if obs_schema is None:
+        return body
+
+    def body_obs(carry, t):
+        state, m = carry
+        state, (log, ds) = body(state, t)
+        gate = (t < rounds_total).astype(jnp.float32)
+        m = obs_metrics.record_round(obs_schema, m, log, ds, gate)
+        return (state, m), (log, ds)
+
+    return body_obs
+
+
 def _scenario_chunk(policy: PolicyAdapter, env: Any, params: Any,
                     state: Any, kround: jax.Array, budget_table: jax.Array,
                     ts: jax.Array, *, budget_jitter: float,
-                    dataset: Optional[jax.Array], fused=None):
+                    dataset: Optional[jax.Array], fused=None,
+                    obs_schema=None, rounds_total: int = 0):
     """Scan the per-round transition over a chunk of round indices.
 
     Carry = policy state; each round re-derives its key as
     ``fold_in(kround, t)`` so the stream matches the per-round driver
-    bitwise. Returns the final state plus stacked (chunk, …) logs."""
+    bitwise. Returns the final state plus stacked (chunk, …) logs. With
+    ``obs_schema`` the carry becomes ``(state, metric pytree)`` and each
+    real round folds into the device metrics (flushed at the chunk
+    boundary by the caller — zero host sync inside the scan)."""
 
     def body(state, t):
         state, log, ds = _scenario_round(policy, env, params, state,
@@ -272,7 +299,8 @@ def _scenario_chunk(policy: PolicyAdapter, env: Any, params: Any,
                                          dataset, fused=fused)
         return state, (log, ds)
 
-    return jax.lax.scan(body, state, ts)
+    return jax.lax.scan(_with_round_metrics(body, obs_schema, rounds_total),
+                        state, ts)
 
 
 def _voting_chunk(env: Any, params: Any, kround: jax.Array, ts: jax.Array,
@@ -345,7 +373,8 @@ def _jitted_pool_drivers(spec: PolicySpec, env: Any, alpha: float,
                          lam: float, horizon_t: int, c_max: float,
                          seed_key: int, budget_jitter: float,
                          dataset: Optional[int], backend: str,
-                         fuse_rounds: bool = False):
+                         fuse_rounds: bool = False,
+                         obs_schema=None, rounds_total: int = 0):
     ds_arg = None if dataset is None else jnp.int32(dataset)
     policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                         horizon_t=horizon_t, c_max=c_max, seed=seed_key)
@@ -356,7 +385,8 @@ def _jitted_pool_drivers(spec: PolicySpec, env: Any, alpha: float,
         dataset=ds_arg, fused=fused))
     chunk_fn = jax.jit(functools.partial(
         _scenario_chunk, policy, env, budget_jitter=budget_jitter,
-        dataset=ds_arg, fused=fused))
+        dataset=ds_arg, fused=fused, obs_schema=obs_schema,
+        rounds_total=rounds_total))
     return policy, round_fn, chunk_fn
 
 
@@ -371,7 +401,8 @@ def _jitted_voting_drivers(env: Any, dataset: Optional[int]):
 def _pool_sweep_chunk_callable(spec: PolicySpec, env: Any, alpha: float,
                                lam: float, horizon_t: int, c_max: float,
                                budget_jitter: float, dataset: Optional[int],
-                               fused=None):
+                               fused=None, obs_schema=None,
+                               rounds_total: int = 0):
     """The UNjitted vmapped sweep chunk — shared by the single-device jit
     path and the shard_map path (which splits its seed axis per device).
 
@@ -387,7 +418,9 @@ def _pool_sweep_chunk_callable(spec: PolicySpec, env: Any, alpha: float,
                             horizon_t=horizon_t, c_max=c_max, seed=seed)
         return _scenario_chunk(policy, env, params_s, state, kround,
                                table_row, ts, budget_jitter=budget_jitter,
-                               dataset=ds_arg, fused=fused)
+                               dataset=ds_arg, fused=fused,
+                               obs_schema=obs_schema,
+                               rounds_total=rounds_total)
 
     return jax.vmap(chunk_fn, in_axes=(0, 0, 0, 0, 0, None))
 
@@ -397,12 +430,15 @@ def _jitted_pool_sweep_chunk(spec: PolicySpec, env: Any, alpha: float,
                              lam: float, horizon_t: int, c_max: float,
                              budget_jitter: float, dataset: Optional[int],
                              backend: str, num_devices: int = 1,
-                             fuse_rounds: bool = False):
+                             fuse_rounds: bool = False,
+                             obs_schema=None, rounds_total: int = 0):
     fused = _build_fused(spec, env, alpha, lam, horizon_t, c_max, backend,
                          fuse_rounds)
     vchunk = _pool_sweep_chunk_callable(spec, env, alpha, lam,
                                         horizon_t, c_max, budget_jitter,
-                                        dataset, fused=fused)
+                                        dataset, fused=fused,
+                                        obs_schema=obs_schema,
+                                        rounds_total=rounds_total)
     if num_devices == 1:
         return jax.jit(vchunk), None
     fn, mesh = shard_mod.shard_vmapped(vchunk, num_devices,
@@ -526,6 +562,37 @@ def _pool_chunk_arrays(log: RoundLog, ds) -> Dict[str, Any]:
             "regrets": log.regrets, "budgets": log.budget, "datasets": ds}
 
 
+def _obs_setup(obs, env, spec: PolicySpec):
+    """Resolve an ``obs=`` handle to ``(schema, metrics sink)``.
+
+    The schema is the static piece (it joins the jitted-program cache
+    keys); the sink is the host flush path. ``obs=None`` resolves to
+    ``(None, None)`` and every downstream branch keys off the schema, so
+    the off path never touches obs code."""
+    if obs is None:
+        return None, None
+    if spec.name == "voting":
+        raise ValueError(
+            "obs metrics record the bandit round log (per-arm pulls, "
+            "budget headroom); voting is stateless with no arm choice — "
+            "run it with obs=None")
+    schema = obs_metrics.round_schema(env.num_arms, env.num_datasets)
+    obs.registry.register_schema(schema)
+    return schema, obs.sink(schema)
+
+
+def _flush_obs(msink, obs, mdelta, n: int, state) -> None:
+    """Chunk-boundary flush: device metric delta → host registry (the
+    LogSink-shaped append), plus the chunk-cadence gauges that need the
+    live policy state (neural replay loss — one forward over the replay
+    ring per CHUNK, never per round)."""
+    msink.append(mdelta, n)
+    nl = obs_metrics.neural_replay_loss(state)
+    if nl:
+        for name, value in nl.items():
+            obs.registry.set(name, value)
+
+
 class _RowBuffer:
     """Group the per_round driver's one-row logs into chunk-sized sink
     appends, so the legacy/debug dispatch mode produces the same shard
@@ -564,9 +631,16 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
                         dispatch: str = "scan",
                         chunk_size: int = DEFAULT_CHUNK_SIZE,
                         fuse_rounds: bool = False,
-                        sink: Optional[sink_mod.LogSink] = None):
+                        sink: Optional[sink_mod.LogSink] = None,
+                        obs=None):
     """Play ``policy`` (name string or ``PolicySpec``) for ``rounds`` user
     queries. ``policy_name=`` is the deprecated keyword spelling.
+
+    ``obs=`` (an :class:`~repro.obs.metrics.Obs`) records device-resident
+    round metrics (pulls, regret, budget headroom, …) inside the jitted
+    chunk body and flushes them to ``obs.registry`` at chunk boundaries —
+    zero host sync per round, bitwise-identical results, and with
+    ``obs=None`` (default) the traced program is exactly the pre-obs one.
 
     With the default ``sink=None`` the logs land in a
     :class:`~repro.engine.sink.MemorySink` and an
@@ -589,6 +663,7 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
     if fuse_rounds and spec.name == "voting":
         raise ValueError("voting has no bandit hot loop to fuse; run it "
                          "with fuse_rounds=False")
+    obs_schema, msink = _obs_setup(obs, env, spec)
     if rounds == 0 and sink is None:
         # legacy contract: empty result, no compile (MemorySink cannot
         # infer field shapes from zero appends)
@@ -622,23 +697,39 @@ def run_pool_experiment(policy=None, *, policy_name=None, rounds: int = 1000,
     policy, round_fn, chunk_fn = _jitted_pool_drivers(
         spec, env, alpha, lam, rounds * env.horizon, env.max_cost(),
         seed if spec.select_uses_seed else 0, budget_jitter, dataset,
-        linucb.resolved_backend(), fuse_rounds)
+        linucb.resolved_backend(), fuse_rounds, obs_schema, T)
     state = policy.init()
     table_j = _pool_budget_table(base_budget, env.num_datasets, budgeted)
 
     if dispatch == "per_round":
+        # the legacy/debug loop has no scan carry to ride — metrics
+        # accumulate host-side through the numpy recorder instead
+        macc = (None if obs_schema is None else
+                {s.name: np.zeros(s.shape) for s in obs_schema.metrics})
         buf = _RowBuffer(out_sink, chunk)
         for t in range(T):
             state, log, ds = round_fn(params, state,
                                       jax.random.fold_in(kround, t), table_j)
+            if macc is not None:
+                macc = obs_metrics.record_round_host(
+                    obs_schema, macc, log.arms, log.rewards, log.costs,
+                    log.regrets, log.budget, ds)
             buf.append_row(_pool_chunk_arrays(
                 jax.tree.map(lambda l: l[None], log),
                 jnp.reshape(ds, (1,))))
         buf.flush()
+        if macc is not None:
+            _flush_obs(msink, obs, macc, T, state)
     else:
+        mzero = None if obs_schema is None else obs_schema.init()
+        carry = state if obs_schema is None else (state, mzero)
         for lo, n, ts in _chunk_indices(T, chunk):
-            state, (log, ds) = chunk_fn(params, state, kround, table_j, ts)
+            carry, (log, ds) = chunk_fn(params, carry, kround, table_j, ts)
             out_sink.append(_pool_chunk_arrays(log, ds), n)
+            if obs_schema is not None:
+                state, mdelta = carry
+                _flush_obs(msink, obs, mdelta, n, state)
+                carry = (state, mzero)
     out = out_sink.finalize()
     return _result_from_logs(out) if return_result else out
 
@@ -657,8 +748,8 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
                               alpha: float = 0.675, lam: float = 0.45,
                               chunk_size: int = DEFAULT_CHUNK_SIZE,
                               fuse_rounds: bool = False,
-                              shard: shard_mod.ShardArg = "auto"
-                              ) -> List[ExperimentResult]:
+                              shard: shard_mod.ShardArg = "auto",
+                              obs=None) -> List[ExperimentResult]:
     """Run ``len(seeds) × users`` replications as ONE vmapped (optionally
     device-sharded) program.
 
@@ -698,6 +789,7 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
     if fuse_rounds and spec.name == "voting":
         raise ValueError("voting has no bandit hot loop to fuse; run it "
                          "with fuse_rounds=False")
+    obs_schema, msink = _obs_setup(obs, env, spec)
 
     # replication rows = (seed, user) pairs, seed-major; pad repeats the
     # last row (results discarded) so the axis divides the mesh
@@ -751,18 +843,27 @@ def run_pool_experiment_sweep(policy=None, seeds: Sequence[int] = None, *,
                                             env.max_cost(), budget_jitter,
                                             dataset,
                                             linucb.resolved_backend(), ndev,
-                                            fuse_rounds)
+                                            fuse_rounds, obs_schema, T)
     state = _broadcast_state(
         spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                    horizon_t=rounds * env.horizon, c_max=env.max_cost(),
                    seed=seeds[0]).init(), Rr)
+    if obs_schema is not None:
+        # the metric pytree rides the carry tuple, one row per
+        # replication; padded rows are dropped before the host merge
+        state = (state, _broadcast_state(obs_schema.init(), Rr))
     if mesh is not None:
         seeds_arr, params, state, krounds, table = shard_mod.place_seed_args(
             mesh, [seeds_arr, params, state, krounds, table])
+    mzero = state[1] if obs_schema is not None else None
 
     for lo, n, ts in _chunk_indices(T, chunk):
         state, (log, ds) = vchunk(seeds_arr, params, state, krounds, table,
                                   ts)
+        if obs_schema is not None:
+            state, mdelta = state
+            msink.append(jax.tree.map(lambda l: l[:R], mdelta), n)
+            state = (state, mzero)
         arms[:, lo:lo + n] = np.asarray(log.arms)[:, :n]
         rewards[:, lo:lo + n] = np.asarray(log.rewards)[:, :n]
         costs[:, lo:lo + n] = np.asarray(log.costs)[:, :n]
@@ -967,7 +1068,8 @@ def _jitted_multistream_chunk(spec: PolicySpec,
                               seed_key: int, budget_jitter: float,
                               dataset: Optional[int], streams: int,
                               num_devices: int, backend: str,
-                              users: int = 1, fuse_rounds: bool = False):
+                              users: int = 1, fuse_rounds: bool = False,
+                              obs_schema=None, rounds_total: int = 0):
     ds_arg = None if dataset is None else jnp.int32(dataset)
     policy = spec.build(env.num_arms, env.dim, alpha=alpha, lam=lam,
                         horizon_t=horizon_t, c_max=c_max, seed=seed_key)
@@ -996,7 +1098,9 @@ def _jitted_multistream_chunk(spec: PolicySpec,
                     cs_o.reshape(bh), ex_o.reshape(bh).astype(jnp.float32))
                 return state, (log, ds)
 
-            return jax.lax.scan(body, state, ts)
+            return jax.lax.scan(
+                _with_round_metrics(body, obs_schema, rounds_total),
+                state, ts)
 
         return policy, jax.jit(chunk_fn)
 
@@ -1028,7 +1132,8 @@ def _jitted_multistream_chunk(spec: PolicySpec,
                 cs_o.reshape(b * h), ex_o.reshape(b * h).astype(jnp.float32))
             return state, (log, ds)
 
-        return jax.lax.scan(body, state, ts)
+        return jax.lax.scan(
+            _with_round_metrics(body, obs_schema, rounds_total), state, ts)
 
     return policy, jax.jit(chunk_fn_users)
 
@@ -1044,7 +1149,8 @@ def run_pool_multistream(policy=None, *, policy_name=None,
                          chunk_size: int = DEFAULT_CHUNK_SIZE,
                          fuse_rounds: bool = False,
                          shard: shard_mod.ShardArg = "none",
-                         sink: Optional[sink_mod.LogSink] = None):
+                         sink: Optional[sink_mod.LogSink] = None,
+                         obs=None):
     """``rounds`` dispatches of ``streams`` concurrent user rounds over a
     population of ``users`` posteriors — T·B user rounds total.
 
@@ -1083,6 +1189,7 @@ def run_pool_multistream(policy=None, *, policy_name=None,
         raise ValueError(f"streams must be ≥ 1, got {streams}")
     if users < 1:
         raise ValueError(f"users must be ≥ 1, got {users}")
+    obs_schema, msink = _obs_setup(obs, env, spec)
     if rounds == 0 and sink is None:
         return _empty_pool_result(env)
     key = jax.random.PRNGKey(seed)
@@ -1105,7 +1212,7 @@ def run_pool_multistream(policy=None, *, policy_name=None,
         spec, env, alpha, lam, rounds * streams * env.horizon,
         env.max_cost(), seed if spec.select_uses_seed else 0,
         budget_jitter, dataset, streams, ndev, linucb.resolved_backend(),
-        users, fuse_rounds)
+        users, fuse_rounds, obs_schema, T)
     state = policy_ad.init()
     if users > 1:
         state = _broadcast_state(state, users)
@@ -1113,8 +1220,15 @@ def run_pool_multistream(policy=None, *, policy_name=None,
 
     return_result = sink is None
     out_sink = sink if sink is not None else sink_mod.MemorySink()
+    mzero = None if obs_schema is None else obs_schema.init()
+    if obs_schema is not None:
+        state = (state, mzero)
     for lo, n, ts in _chunk_indices(T, chunk):
         state, (log, ds) = chunk_fn(params, state, kround, table, ts)
+        if obs_schema is not None:
+            inner, mdelta = state
+            _flush_obs(msink, obs, mdelta, n, inner)
+            state = (inner, mzero)
         out_sink.append(_pool_chunk_arrays(log, ds), n)
     out = out_sink.finalize()
     if not return_result:

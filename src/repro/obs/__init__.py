@@ -1,0 +1,37 @@
+"""Observability for the bandit engine and serving stack.
+
+Four pieces, all opt-in through ``obs=None`` keywords (off by default,
+bitwise-invisible when off):
+
+* :mod:`repro.obs.metrics` — device-resident metric state that rides
+  inside the jitted chunk bodies and flushes to a host
+  :class:`~repro.obs.metrics.MetricsRegistry` at chunk boundaries
+  (LogSink-shaped), plus host-side counters for the serving loop.
+* :mod:`repro.obs.trace` — replay-deterministic span/event tracing of
+  the serving runtime's virtual clock with Chrome trace-event export.
+* :mod:`repro.obs.audit` — the shared :func:`~repro.obs.audit.jaxpr_audit`
+  structural-contract checker (pallas-launch counts, transpose freedom,
+  banned shape materialization) and ``REPRO_PROFILE`` profiler hooks.
+* :mod:`repro.obs.export` — Prometheus text exposition + JSON snapshots.
+
+Quickstart::
+
+    from repro import obs
+    from repro.engine import driver
+
+    o = obs.Obs()
+    driver.run_pool_experiment("greedy_linucb", rounds=2000, obs=o)
+    print(o.prometheus())          # pulls{arm="3"} 412 ...
+"""
+from repro.obs.audit import (AuditError, JaxprAudit, jaxpr_audit,
+                             profile_session, shape_sig)
+from repro.obs.metrics import (MetricSchema, MetricSpec, MetricsRegistry,
+                               MetricsSink, Obs, record_cache_stats,
+                               round_schema)
+from repro.obs.trace import Tracer
+
+__all__ = [
+    "AuditError", "JaxprAudit", "jaxpr_audit", "profile_session",
+    "shape_sig", "MetricSchema", "MetricSpec", "MetricsRegistry",
+    "MetricsSink", "Obs", "record_cache_stats", "round_schema", "Tracer",
+]

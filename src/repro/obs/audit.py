@@ -1,0 +1,136 @@
+"""First-class jaxpr auditing + profiler hooks.
+
+The repo's performance contracts are structural, not just numeric: the
+fused round body must trace exactly one ``pallas_call``, the LinUCB hot
+paths must never transpose the (d, K·d) block or materialize a per-arm
+(K, d, d) tensor, the batch fold must not build a (B, K) one-hot. Those
+assertions grew ad hoc across ``test_fused_round.py`` / ``test_neural.py``
+/ ``test_kernels.py`` / ``test_driver_scan.py`` as stringly ``str(
+jax.make_jaxpr(...))`` scans; :func:`jaxpr_audit` is the one shared
+implementation — usable in tests and as a runtime guard (benchmarks
+audit the programs they time, so a regression fails the claim run, not
+just the test suite).
+
+:func:`profile_session` adds ``jax.profiler`` start/stop keyed off one
+env var (``REPRO_PROFILE=<dir>``): a no-op unless set, so any entry
+point can wrap its hot section unconditionally.
+"""
+from __future__ import annotations
+
+import os
+import re
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+PROFILE_ENV = "REPRO_PROFILE"
+
+_TRANSPOSE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\] = transpose")
+
+
+class AuditError(AssertionError):
+    """A structural jaxpr contract was violated (subclass of
+    AssertionError so pytest renders it natively)."""
+
+
+def shape_sig(*dims: int, dtype: str = "f32") -> str:
+    """The jaxpr text signature of an array type, e.g.
+    ``shape_sig(4, 32, 32) == "f32[4,32,32]"`` — the currency of
+    banned-shape checks."""
+    return f"{dtype}[{','.join(str(int(d)) for d in dims)}]"
+
+
+class JaxprAudit:
+    """A traced program plus the structural queries the repo asserts."""
+
+    def __init__(self, jaxpr) -> None:
+        self.jaxpr = jaxpr
+        self.text = str(jaxpr)
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def pallas_calls(self) -> int:
+        return self.text.count("pallas_call")
+
+    def contains(self, sig: str) -> bool:
+        return sig in self.text
+
+    @property
+    def transpose_count(self) -> int:
+        return self.text.count("transpose")
+
+    @property
+    def transposes(self) -> Tuple[Tuple[str, Tuple[int, ...]], ...]:
+        """Every transpose output in the program as (dtype, shape)."""
+        out = []
+        for m in _TRANSPOSE_RE.finditer(self.text):
+            dims = tuple(int(d) for d in m.group(2).split(",") if d)
+            out.append((m.group(1), dims))
+        return tuple(out)
+
+    # -- assertions ---------------------------------------------------------
+    def expect(self, *, pallas_calls: Optional[int] = None,
+               transpose_free: bool = False,
+               banned: Sequence[str] = (),
+               required: Sequence[str] = (),
+               banned_transposes: Sequence[Tuple[int, ...]] = ()
+               ) -> "JaxprAudit":
+        """Assert the structural contract; raises :class:`AuditError`
+        naming the first violated clause. Returns self for chaining."""
+        if pallas_calls is not None and self.pallas_calls != pallas_calls:
+            raise AuditError(
+                f"expected {pallas_calls} pallas_call(s), traced "
+                f"{self.pallas_calls}")
+        if transpose_free and self.transpose_count:
+            raise AuditError(
+                f"program contains {self.transpose_count} transpose(s): "
+                f"{self.transposes}")
+        for sig in banned:
+            if sig in self.text:
+                raise AuditError(f"banned shape {sig} materialized in "
+                                 f"the traced program")
+        for sig in required:
+            if sig not in self.text:
+                raise AuditError(f"required shape {sig} absent from the "
+                                 f"traced program")
+        if banned_transposes:
+            bad = {tuple(int(d) for d in s) for s in banned_transposes}
+            for dtype, shape in self.transposes:
+                if shape in bad:
+                    raise AuditError(
+                        f"banned transpose to {dtype}{list(shape)}")
+        return self
+
+
+def jaxpr_audit(fn, *args, **kwargs) -> JaxprAudit:
+    """Trace ``fn(*args, **kwargs)`` (never executing it) and wrap the
+    jaxpr for structural assertions. Audit under the backend scope you
+    mean to ship — the traced program is backend-dependent."""
+    return JaxprAudit(jax.make_jaxpr(fn)(*args, **kwargs))
+
+
+# ---------------------------------------------------------------------------
+# jax.profiler hooks — one env var, zero-cost when unset
+# ---------------------------------------------------------------------------
+
+def profiling_enabled() -> bool:
+    return bool(os.environ.get(PROFILE_ENV))
+
+
+@contextmanager
+def profile_session(name: str):
+    """``jax.profiler`` trace of the wrapped block when
+    ``REPRO_PROFILE=<dir>`` is set (one subdirectory per session name);
+    a plain passthrough otherwise."""
+    base = os.environ.get(PROFILE_ENV)
+    if not base:
+        yield
+        return
+    path = os.path.join(base, name)
+    os.makedirs(path, exist_ok=True)
+    jax.profiler.start_trace(path)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

@@ -1,0 +1,82 @@
+"""Registry exporters: Prometheus text exposition + JSON snapshots.
+
+Pure read-side formatting over :class:`~repro.obs.metrics.MetricsRegistry`
+— no device work, callable any time (the registries only ever hold host
+numpy). Prometheus names are sanitized to ``[a-zA-Z0-9_:]`` and vector
+metrics expand one sample per index under their spec's ``label``;
+histograms emit cumulative ``_bucket`` samples with the exact ``_sum``
+tracked by the device/host observers (not a midpoint estimate).
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Any, Dict, Tuple
+
+from repro.obs import metrics as metrics_mod
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    return _NAME_RE.sub("_", name)
+
+
+def _fmt(v: float) -> str:
+    if v == float("inf"):
+        return "+Inf"
+    if v == float("-inf"):
+        return "-Inf"
+    f = float(v)
+    return repr(int(f)) if f == int(f) else repr(f)
+
+
+def _label_str(pairs: Tuple[Tuple[str, str], ...]) -> str:
+    if not pairs:
+        return ""
+    inner = ",".join(f'{_prom_name(k)}="{v}"' for k, v in pairs)
+    return "{" + inner + "}"
+
+
+def to_prometheus(registry: metrics_mod.MetricsRegistry) -> str:
+    """Prometheus text exposition (version 0.0.4) of every series."""
+    lines = []
+    seen_header = set()
+    for spec, labels, vals in registry.series():
+        name = _prom_name(spec.name)
+        if name not in seen_header:
+            seen_header.add(name)
+            if spec.help:
+                lines.append(f"# HELP {name} {spec.help}")
+            lines.append(f"# TYPE {name} {spec.kind}")
+        if spec.kind == "histogram":
+            edges = metrics_mod._edges(spec)
+            counts = vals[:spec.bins]
+            cum = 0.0
+            for i in range(spec.bins):
+                cum += counts[i]
+                le = _label_str(labels + (("le", _fmt(edges[i + 1])),))
+                lines.append(f"{name}_bucket{le} {_fmt(cum)}")
+            le = _label_str(labels + (("le", "+Inf"),))
+            lines.append(f"{name}_bucket{le} {_fmt(cum)}")
+            lines.append(f"{name}_sum{_label_str(labels)} "
+                         f"{_fmt(vals[spec.bins])}")
+            lines.append(f"{name}_count{_label_str(labels)} {_fmt(cum)}")
+        elif spec.size > 1:
+            for i in range(spec.size):
+                ls = _label_str(labels + ((spec.label, str(i)),))
+                lines.append(f"{name}{ls} {_fmt(vals[i])}")
+        else:
+            lines.append(f"{name}{_label_str(labels)} {_fmt(float(vals))}")
+    return "\n".join(lines) + "\n"
+
+
+def to_json(registry: metrics_mod.MetricsRegistry) -> Dict[str, Any]:
+    """JSON-ready snapshot (same payload as ``registry.snapshot()``)."""
+    return registry.snapshot()
+
+
+def write_snapshot(path: str,
+                   registry: metrics_mod.MetricsRegistry) -> None:
+    with open(path, "w") as f:
+        json.dump(to_json(registry), f, indent=2, sort_keys=True)

@@ -1,0 +1,611 @@
+"""Device-resident streaming metrics for the bandit engine.
+
+The experiment drivers scan thousands of rounds per dispatch; anything
+that syncs to host per round (a Python counter, a ``float()``) destroys
+the chunked-``lax.scan`` batching that PR 1–3 bought. This module keeps
+the metric state ON DEVICE, inside the jitted chunk body, packed into
+ONE flat f32 vector riding the scan carry — the same shape of solution
+as :mod:`repro.engine.aggregate`'s streaming reducers, moved into the
+traced program:
+
+* :class:`MetricSpec` / :class:`MetricSchema` — the hashable, frozen
+  description of a metric set (and its packed layout). Schemas
+  participate in the drivers' ``lru_cache`` keys, so obs-on and obs-off
+  compile to distinct cached programs and ``obs=None`` traces exactly
+  the pre-obs graph.
+* :func:`record_round` — the pure functional per-round fold: one fused
+  scatter-add on the packed vector (plus one gauge write); its ``gate``
+  is 0 for padded chunk-tail rounds (the driver pads ``T`` to a chunk
+  multiple) so they contribute exactly zero.
+* :class:`MetricsRegistry` — the HOST accumulator. The driver flushes
+  each chunk's device delta through :class:`MetricsSink` (the
+  :class:`~repro.engine.sink.LogSink` protocol, duck-typed to avoid an
+  import cycle with the engine package): one host sync per chunk, zero
+  per round. The registry also takes direct ``inc``/``set``/``observe``
+  calls from host-side code (the serving loop), auto-registering specs.
+* :class:`Obs` — the front-door handle threaded through ``obs=``
+  keywords: a registry plus an optional :class:`~repro.obs.trace.Tracer`.
+
+Accumulation contract: device deltas are f32 (exact for counts up to
+2^24 — far beyond any chunk), the host registry accumulates in f64.
+Counters and histograms SUM over any extra leading replication axes
+(sweep rows, users); gauges take the MEAN over replication rows and
+last-write-wins over time.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KINDS = ("counter", "gauge", "histogram")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One metric: a name, a kind and (for vectors/histograms) a shape.
+
+    ``size > 1`` makes a vector metric indexed by ``label`` (e.g. a
+    per-arm counter exported as ``pulls{arm="k"}``). Histograms carry
+    ``bins`` counts over fixed edges — log-spaced over [lo, hi] when
+    ``log_bins`` (with implicit under/overflow clamping into the end
+    bins) — plus one extra slot holding the exact running sum of
+    observed values (for Prometheus ``_sum``)."""
+
+    name: str
+    kind: str = "counter"
+    size: int = 1
+    bins: int = 32
+    lo: float = 1e-6
+    hi: float = 1e2
+    log_bins: bool = True
+    label: str = "i"
+    help: str = ""
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown metric kind {self.kind!r} "
+                             f"(choose from {KINDS})")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        if self.kind == "histogram":
+            return (self.bins + 1,)     # counts + trailing exact sum
+        return () if self.size == 1 else (self.size,)
+
+
+@functools.lru_cache(maxsize=64)
+def _layout(schema: "MetricSchema"):
+    """Packed layout of a schema: ``({name: (start, size)}, total)``."""
+    offsets, pos = {}, 0
+    for spec in schema.metrics:
+        size = int(np.prod(spec.shape, dtype=np.int64)) if spec.shape \
+            else 1
+        offsets[spec.name] = (pos, size)
+        pos += size
+    return offsets, pos
+
+
+@functools.lru_cache(maxsize=256)
+def _edges(spec: MetricSpec) -> np.ndarray:
+    """Static bin edges for a histogram spec (host constant)."""
+    if spec.log_bins:
+        return np.logspace(np.log10(spec.lo), np.log10(spec.hi),
+                           spec.bins + 1)
+    return np.linspace(spec.lo, spec.hi, spec.bins + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSchema:
+    """A frozen, hashable set of specs — the static key the drivers'
+    jitted-program caches add when obs is on."""
+
+    metrics: Tuple[MetricSpec, ...]
+
+    def __post_init__(self):
+        names = [m.name for m in self.metrics]
+        if len(names) != len(set(names)):
+            raise ValueError(f"duplicate metric names in schema: {names}")
+
+    def spec(self, name: str) -> MetricSpec:
+        for m in self.metrics:
+            if m.name == name:
+                return m
+        raise KeyError(name)
+
+    def __contains__(self, name: str) -> bool:
+        return any(m.name == name for m in self.metrics)
+
+    def offsets(self) -> Dict[str, Tuple[int, int]]:
+        """``name → (start, size)`` into the packed device vector."""
+        return _layout(self)[0]
+
+    def packed_size(self) -> int:
+        return _layout(self)[1]
+
+    def init(self) -> jax.Array:
+        """Fresh all-zeros device metric state: ONE flat f32 vector.
+
+        Packing every metric into a single buffer keeps the scan carry
+        at one extra leaf (ten separate leaves measurably slow the
+        per-round carry threading) and makes the chunk flush a single
+        ``device_get``."""
+        return jnp.zeros((self.packed_size(),), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Device-side recorder — pure functional, trace-safe, gate-masked
+# ---------------------------------------------------------------------------
+
+def _w(gate) -> jax.Array:
+    return jnp.asarray(gate, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# The engine round schema + recorder
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def round_schema(num_arms: int, num_datasets: int = 1) -> MetricSchema:
+    """The driver-side schema: what every pool round records.
+
+    Cached so equal (K, D) pairs share one schema object — the schema
+    is part of the jitted-program cache keys."""
+    return MetricSchema((
+        MetricSpec("rounds", help="user rounds played"),
+        MetricSpec("steps", help="executed adaptive steps"),
+        MetricSpec("reward_sum", help="total observed reward"),
+        MetricSpec("cost_sum", help="total realized cost"),
+        MetricSpec("regret_sum", help="total per-step regret"),
+        MetricSpec("pulls", size=num_arms, label="arm",
+                   help="per-arm executed pulls"),
+        MetricSpec("dataset_rounds", size=num_datasets, label="dataset",
+                   help="rounds per dataset stream"),
+        MetricSpec("round_regret", kind="histogram", bins=32,
+                   lo=1e-4, hi=10.0, help="per-round total regret"),
+        MetricSpec("round_cost", kind="histogram", bins=32,
+                   lo=1e-7, hi=10.0, help="per-round total cost"),
+        MetricSpec("budget_headroom", kind="gauge",
+                   help="last round's budget minus spend (mean over "
+                        "replications)"),
+    ))
+
+
+def record_round(schema: MetricSchema, m: jax.Array,
+                 log, ds, gate) -> jax.Array:
+    """Fold one round's :class:`~repro.core.router.RoundLog` into the
+    packed device metric vector. Accepts single-round ``(H,)`` logs
+    (scan/sweep bodies) or batched ``(B, H)`` logs (the multistream
+    round). ``gate`` is 0 for padded chunk-tail rounds so they
+    contribute nothing.
+
+    Every counter/histogram update lands in ONE fused scatter-add on the
+    packed vector — the recorder rides inside the per-round scan body,
+    so its op count is what the ≤5% obs-overhead claim is made of."""
+    arms, r, c, g, b = (log.arms, log.rewards, log.costs, log.regrets,
+                        log.budget)
+    off = schema.offsets()
+    w = _w(gate)
+    nrounds = 1 if jnp.ndim(b) == 0 else b.shape[0]
+    executed = (arms >= 0).astype(jnp.float32) * w
+
+    idx_parts: list = []
+    val_parts: list = []
+
+    def add(idx, val) -> None:
+        idx = jnp.asarray(idx, jnp.int32).reshape(-1)
+        val = jnp.asarray(val, jnp.float32)
+        val = (jnp.broadcast_to(val, idx.shape) if val.ndim == 0
+               else val.reshape(-1))
+        idx_parts.append(idx)
+        val_parts.append(val)
+
+    # rewards/costs/regrets are zero-masked for non-executed steps by the
+    # round body, so plain sums are already exact
+    add(np.array([off[n][0] for n in ("rounds", "steps", "reward_sum",
+                                      "cost_sum", "regret_sum")]),
+        jnp.stack([nrounds * w, jnp.sum(executed), jnp.sum(r) * w,
+                   jnp.sum(c) * w, jnp.sum(g) * w]))
+    add(off["pulls"][0] + jnp.clip(arms, 0), executed)
+    add(off["dataset_rounds"][0] + jnp.clip(jnp.asarray(ds), 0), w)
+    for name, vals in (("round_regret", jnp.sum(g, axis=-1)),
+                       ("round_cost", jnp.sum(c, axis=-1))):
+        spec = schema.spec(name)
+        edges = jnp.asarray(_edges(spec), jnp.float32)
+        v = jnp.asarray(vals, jnp.float32).reshape(-1)
+        wv = jnp.broadcast_to(w, v.shape)
+        hidx = jnp.clip(jnp.searchsorted(edges, v, side="right") - 1,
+                        0, spec.bins - 1)
+        add(off[name][0] + hidx, wv)            # bucket counts
+        add(off[name][0] + spec.bins, jnp.sum(v * wv))   # exact _sum slot
+    m = m.at[jnp.concatenate(idx_parts)].add(jnp.concatenate(val_parts))
+
+    # the gauge is last-write-wins: a zero gate keeps the old value, so
+    # padded chunk-tail rounds never overwrite the last real reading
+    o = off["budget_headroom"][0]
+    headroom = jnp.mean(b - jnp.sum(c, axis=-1))
+    return m.at[o].set(jnp.where(w > 0, headroom, m[o]))
+
+
+def record_round_host(schema: MetricSchema, acc: Dict[str, np.ndarray],
+                      arms, rewards, costs, regrets, budget,
+                      datasets) -> Dict[str, np.ndarray]:
+    """Numpy mirror of :func:`record_round` over ``(N, H)`` log arrays.
+
+    Dual use: the ``per_round`` dispatch mode's metric path (no scan
+    carry to ride) and the oracle the device recorder is tested
+    against in ``tests/test_obs.py``."""
+    arms = np.asarray(arms)
+    rewards, costs, regrets = (np.asarray(a, np.float64)
+                               for a in (rewards, costs, regrets))
+    budget = np.atleast_1d(np.asarray(budget, np.float64))
+    datasets = np.atleast_1d(np.asarray(datasets))
+    if arms.ndim == 1:
+        arms = arms[None]
+        rewards, costs, regrets = (a[None]
+                                   for a in (rewards, costs, regrets))
+    executed = arms >= 0
+    out = {k: np.array(v, np.float64) for k, v in acc.items()}
+    out["rounds"] += arms.shape[0]
+    out["steps"] += executed.sum()
+    out["reward_sum"] += rewards.sum()
+    out["cost_sum"] += costs.sum()
+    out["regret_sum"] += regrets.sum()
+    np.add.at(out["pulls"], np.clip(arms, 0, None)[executed.nonzero()],
+              1.0)
+    np.add.at(out["dataset_rounds"], np.clip(datasets, 0, None), 1.0)
+    for name, vals in (("round_regret", regrets.sum(-1)),
+                       ("round_cost", costs.sum(-1))):
+        spec = schema.spec(name)
+        edges = _edges(spec)
+        idx = np.clip(np.searchsorted(edges, vals, side="right") - 1,
+                      0, spec.bins - 1)
+        np.add.at(out[name], idx, 1.0)
+        out[name][spec.bins] += vals.sum()
+    out["budget_headroom"] = np.array(
+        np.mean(budget - costs.sum(-1)), np.float64).reshape(())
+    return out
+
+
+def neural_replay_loss(state) -> Optional[Dict[str, float]]:
+    """Current replay-window loss of a neural-linear policy state, or
+    ``None`` when the state has no trunk. One forward pass over the
+    replay ring — meant for chunk-boundary flushes, never per round."""
+    trunk = getattr(state, "trunk", None)
+    if trunk is None or jnp.ndim(trunk.replay_x) != 2:
+        return None    # batched (sweep/user-pool) trunks: no single loss
+    from repro.neural import scorer as scorer_mod  # lazy: keep obs light
+    w = trunk.replay_x.shape[0]
+    valid = jnp.arange(w) < jnp.minimum(trunk.replay_n, w)
+    loss, aux = scorer_mod.loss_fn(trunk.params, trunk.replay_x,
+                                   trunk.replay_arm, trunk.replay_r, valid)
+    return {"replay_loss": float(loss),
+            "replay_rows": float(aux["replay_rows"])}
+
+
+# ---------------------------------------------------------------------------
+# Host registry + LogSink-protocol flush
+# ---------------------------------------------------------------------------
+
+class MetricsRegistry:
+    """Host-side accumulator for device deltas and host-side events.
+
+    Device metrics arrive through :meth:`merge` (or the
+    :class:`MetricsSink` wrapper) as schema-keyed arrays, possibly with
+    extra leading replication axes (sweep rows): counters and histograms
+    sum those axes, gauges average them. Host metrics arrive through
+    :meth:`inc`/:meth:`set`/:meth:`observe` with optional Prometheus
+    labels, auto-registering a spec on first use."""
+
+    def __init__(self, schema: Optional[MetricSchema] = None) -> None:
+        self._specs: Dict[str, MetricSpec] = {}
+        self._values: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                           np.ndarray] = {}
+        self._syncs: List[Callable[[], None]] = []
+        if schema is not None:
+            self.register_schema(schema)
+
+    # -- deferred local accumulation ----------------------------------------
+    def add_sync(self, fn: Callable[[], None]) -> None:
+        """Register a drain hook run before any read.
+
+        Hot-path callers (the serving loop) accumulate events in plain
+        Python floats and drain them into registry slots lazily — a dict
+        add is ~10x cheaper than a numpy slot bump, and reads are rare.
+        Hooks must be idempotent (drain-then-zero)."""
+        self._syncs.append(fn)
+
+    def _sync(self) -> None:
+        for fn in self._syncs:
+            fn()
+
+    def counter_batch(self) -> "CounterBatch":
+        """A :class:`CounterBatch` wired to this registry's sync hooks."""
+        return CounterBatch(self)
+
+    # -- schema / spec management -----------------------------------------
+    def register_schema(self, schema: MetricSchema) -> None:
+        for spec in schema.metrics:
+            self._register(spec)
+
+    def _register(self, spec: MetricSpec) -> None:
+        have = self._specs.get(spec.name)
+        if have is not None and have != spec:
+            raise ValueError(f"metric {spec.name!r} re-registered with a "
+                             f"different spec")
+        self._specs[spec.name] = spec
+
+    def _slot(self, spec: MetricSpec,
+              labels: Optional[Mapping[str, str]]) -> np.ndarray:
+        key = (spec.name,
+               tuple(sorted((str(k), str(v))
+                            for k, v in (labels or {}).items())))
+        if key not in self._values:
+            self._values[key] = np.zeros(spec.shape, np.float64)
+        return self._values[key]
+
+    def _auto(self, name: str, kind: str, **kw) -> MetricSpec:
+        if name not in self._specs:
+            self._register(MetricSpec(name, kind=kind, **kw))
+        spec = self._specs[name]
+        if spec.kind != kind:
+            raise ValueError(f"metric {name!r} is a {spec.kind}, "
+                             f"not a {kind}")
+        return spec
+
+    # -- device-delta ingestion -------------------------------------------
+    def merge(self, schema: MetricSchema, delta: Any) -> None:
+        """Fold one flushed device metric state into the accumulators.
+
+        ``delta`` is either the packed device vector of ``schema``
+        (possibly with extra leading replication axes — sweep rows; ONE
+        host sync for the whole flush) or a name-keyed dict (the
+        per_round host recorder)."""
+        self.register_schema(schema)
+        packed = not isinstance(delta, Mapping)
+        if packed:
+            flat = np.asarray(jax.device_get(delta), np.float64)
+        for spec in schema.metrics:
+            if packed:
+                start, size = schema.offsets()[spec.name]
+                v = flat[..., start:start + size].reshape(
+                    flat.shape[:-1] + spec.shape)
+            else:
+                v = np.asarray(jax.device_get(delta[spec.name]),
+                               np.float64)
+            extra = v.ndim - len(spec.shape)
+            if extra:
+                lead = tuple(range(extra))
+                v = v.mean(axis=lead) if spec.kind == "gauge" \
+                    else v.sum(axis=lead)
+            slot = self._slot(spec, None)
+            if spec.kind == "gauge":
+                slot[...] = v
+            else:
+                slot[...] += v
+
+    # -- host-side events --------------------------------------------------
+    def inc(self, name: str, value: float = 1.0,
+            labels: Optional[Mapping[str, str]] = None) -> None:
+        spec = self._auto(name, "counter")
+        self._slot(spec, labels)[...] += float(value)
+
+    def handle(self, name: str, kind: str = "counter",
+               labels: Optional[Mapping[str, str]] = None,
+               **kw) -> np.ndarray:
+        """Persistent mutable slot for hot-path callers.
+
+        The returned array ALIASES registry storage, so ``h[...] += v``
+        is the allocation-free spelling of :meth:`inc` — resolve once,
+        bump per event. The serving loop holds its per-event counters
+        this way to stay inside the ≤5% obs-overhead budget."""
+        return self._slot(self._auto(name, kind, **kw), labels)
+
+    def observer(self, name: str, *, bins: int = 32, lo: float = 1e-6,
+                 hi: float = 1e2, log_bins: bool = True,
+                 labels: Optional[Mapping[str, str]] = None):
+        """Bound histogram-observe callable with the spec, bucket edges
+        and slot resolved ONCE (the hot-path spelling of
+        :meth:`observe`). Buckets accumulate in a plain Python list
+        (``bisect`` + list add, no numpy per event) and drain into the
+        registry slot through the sync hooks."""
+        spec = self._auto(name, "histogram", bins=bins, lo=lo, hi=hi,
+                          log_bins=log_bins)
+        edges, nbins = _edges(spec).tolist(), spec.bins
+        slot = self._slot(spec, labels)
+        local = [0.0] * (nbins + 1)
+
+        def drain() -> None:
+            if any(local):
+                slot[...] += local
+                local[:] = [0.0] * (nbins + 1)
+
+        self.add_sync(drain)
+
+        def observe(value: float) -> None:
+            i = bisect.bisect_right(edges, value) - 1
+            local[nbins - 1 if i >= nbins else (0 if i < 0 else i)] += 1.0
+            local[nbins] += value
+
+        return observe
+
+    def inc_vec(self, name: str, values, *, label: str = "idx") -> None:
+        """Vector counter ``+= values`` in ONE numpy add — the hot-path
+        spelling of per-index counting (e.g. per-arm routed counts via
+        ``bincount``), exported as one ``{label="i"}`` series per slot."""
+        vals = np.asarray(values, np.float64).reshape(-1)
+        spec = self._auto(name, "counter", size=int(vals.size), label=label)
+        self._slot(spec, None)[...] += vals
+
+    def set(self, name: str, value: float,
+            labels: Optional[Mapping[str, str]] = None) -> None:
+        spec = self._auto(name, "gauge")
+        self._slot(spec, labels)[...] = float(value)
+
+    def observe(self, name: str, value: float,
+                labels: Optional[Mapping[str, str]] = None, *,
+                bins: int = 32, lo: float = 1e-6, hi: float = 1e2,
+                log_bins: bool = True) -> None:
+        spec = self._auto(name, "histogram", bins=bins, lo=lo, hi=hi,
+                          log_bins=log_bins)
+        edges = _edges(spec)
+        idx = int(np.clip(np.searchsorted(edges, value, side="right") - 1,
+                          0, spec.bins - 1))
+        slot = self._slot(spec, labels)
+        slot[idx] += 1.0
+        slot[spec.bins] += float(value)
+
+    # -- read-out -----------------------------------------------------------
+    def series(self):
+        """Yield ``(spec, labels_tuple, values)`` rows (export order)."""
+        self._sync()
+        for (name, labels), vals in sorted(self._values.items()):
+            yield self._specs[name], labels, vals
+
+    def value(self, name: str,
+              labels: Optional[Mapping[str, str]] = None):
+        self._sync()
+        spec = self._specs[name]
+        key = (name, tuple(sorted((str(k), str(v))
+                                  for k, v in (labels or {}).items())))
+        v = self._values[key]
+        return float(v) if v.shape == () else v.copy()
+
+    def quantile(self, name: str, q: float,
+                 labels: Optional[Mapping[str, str]] = None) -> float:
+        """Histogram quantile from bucket counts (upper-edge estimate)."""
+        self._sync()
+        spec = self._specs[name]
+        if spec.kind != "histogram":
+            raise ValueError(f"{name!r} is not a histogram")
+        key = (name, tuple(sorted((str(k), str(v))
+                                  for k, v in (labels or {}).items())))
+        counts = self._values[key][:spec.bins]
+        total = counts.sum()
+        if total == 0:
+            return float("nan")
+        cum = np.cumsum(counts)
+        idx = int(np.searchsorted(cum, q * total))
+        return float(_edges(spec)[min(idx + 1, spec.bins)])
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-ready nested view of every series."""
+        out: Dict[str, Any] = {}
+        for spec, labels, vals in self.series():
+            entry = out.setdefault(spec.name,
+                                   {"kind": spec.kind, "help": spec.help,
+                                    "series": []})
+            row: Dict[str, Any] = {"labels": dict(labels)}
+            if spec.kind == "histogram":
+                row["counts"] = vals[:spec.bins].tolist()
+                row["edges"] = _edges(spec).tolist()
+                row["sum"] = float(vals[spec.bins])
+                row["count"] = float(vals[:spec.bins].sum())
+            elif spec.size > 1:
+                row["values"] = vals.tolist()
+                row["label"] = spec.label
+            else:
+                row["value"] = float(vals)
+            entry["series"].append(row)
+        return out
+
+
+class CounterBatch:
+    """Plain-Python-float counter accumulation for per-event hot paths.
+
+    The serving loop counts thousands of events per second; touching a
+    numpy registry slot per event (~1.5 µs of ufunc dispatch) blows the
+    ≤5% obs-overhead budget. :meth:`inc` is one dict add (~0.15 µs);
+    the batch drains into real registry slots on any registry read via
+    the :meth:`MetricsRegistry.add_sync` hook. ``label`` is a single
+    ``(key, value)`` pair or ``None`` — the one-label shape every
+    serving counter uses."""
+
+    def __init__(self, registry: MetricsRegistry) -> None:
+        self._reg = registry
+        self._counts: Dict[Tuple[str, Optional[Tuple[str, str]]],
+                           float] = {}
+        registry.add_sync(self.drain)
+
+    def inc(self, name: str, value: float = 1.0,
+            label: Optional[Tuple[str, str]] = None) -> None:
+        key = (name, label)
+        c = self._counts
+        c[key] = c.get(key, 0.0) + value
+
+    def drain(self) -> None:
+        # clears IN PLACE: hot-path callers may hold a direct reference
+        # to ``_counts`` to skip even the inc() call dispatch
+        if not self._counts:
+            return
+        counts = list(self._counts.items())
+        self._counts.clear()
+        for (name, label), v in counts:
+            self._reg.inc(name, v, dict((label,)) if label else None)
+
+
+class MetricsSink:
+    """The chunk-boundary flush path, shaped like the engine's
+    :class:`~repro.engine.sink.LogSink` protocol (``append``/
+    ``finalize``; duck-typed so ``repro.obs`` never imports the engine
+    package). ``append`` receives one chunk's device metric DELTA —
+    already gate-masked, so ``n`` is informational only."""
+
+    def __init__(self, registry: MetricsRegistry,
+                 schema: MetricSchema) -> None:
+        self.registry, self.schema = registry, schema
+
+    def append(self, arrays: Mapping[str, Any], n: int) -> None:
+        self.registry.merge(self.schema, arrays)
+
+    def finalize(self) -> MetricsRegistry:
+        return self.registry
+
+
+class Obs:
+    """The ``obs=`` handle: one registry (+ optional tracer) per run.
+
+    ``Obs()`` records metrics only; ``Obs(trace=True)`` also builds a
+    :class:`~repro.obs.trace.Tracer` the serving runtime fills with
+    spans. Everything downstream treats ``obs=None`` as "off" and must
+    trace bitwise-identical programs in that case."""
+
+    def __init__(self, *, schema: Optional[MetricSchema] = None,
+                 trace=False) -> None:
+        self.registry = MetricsRegistry(schema)
+        if trace is True:
+            from repro.obs.trace import Tracer
+            self.trace = Tracer()
+        else:
+            self.trace = trace or None
+
+    def sink(self, schema: MetricSchema) -> MetricsSink:
+        return MetricsSink(self.registry, schema)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return self.registry.snapshot()
+
+    def prometheus(self) -> str:
+        from repro.obs import export as export_mod
+        return export_mod.to_prometheus(self.registry)
+
+    def export_trace(self, path: str) -> None:
+        if self.trace is None:
+            raise ValueError("this Obs was built without trace=True")
+        self.trace.export(path)
+
+
+def record_cache_stats(registry: MetricsRegistry,
+                       stats: Mapping[str, Mapping[str, int]]) -> None:
+    """Fold ``cache_stats()``-shaped dicts into labeled gauges."""
+    for cache, info in stats.items():
+        for field, value in info.items():
+            if value is None:
+                continue
+            registry.set(f"program_cache_{field}", float(value),
+                         labels={"cache": cache})

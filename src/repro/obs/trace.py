@@ -1,0 +1,146 @@
+"""Span/event tracing for the serving runtime's virtual-clock loop.
+
+The :class:`~repro.serving.runtime.ServingRuntime` is an event-driven
+simulation: every interesting transition (admission → batch → route →
+launch → feedback-flush, retry/backoff, quarantine windows, LRU
+evict/restore in the user store) happens at a deterministic virtual
+time under a seeded fault stream. This module records those transitions
+as spans/events and exports them as Chrome trace-event JSON — loadable
+directly in Perfetto / ``chrome://tracing``.
+
+Determinism contract: span IDs are a per-tracer monotonic counter and
+timestamps come from the runtime's VIRTUAL clock (never wall time — the
+measured route wall-time rides in span ``args`` where it cannot perturb
+the event sequence), so two runs with the same seeds produce identical
+``key_sequence()`` streams. ``tests/test_obs.py`` locks this in by
+replaying the chaos demo twice.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+from contextlib import contextmanager
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+
+class TraceEvent(NamedTuple):
+    """Field order of the plain tuples in :attr:`Tracer.events`.
+
+    Events are stored as bare tuples (NamedTuple construction is ~3x
+    slower and the recorder is on the serving loop's per-event hot
+    path); wrap with ``TraceEvent._make(e)`` for attribute access."""
+
+    name: str
+    ph: str                 # "X" complete, "b"/"e" async, "i" instant, "C"
+    ts: float               # microseconds, virtual
+    dur: float              # microseconds ("X" only)
+    track: str
+    span_id: Optional[int]
+    args: Dict[str, Any]
+
+
+class Tracer:
+    """Collects trace events; all methods are O(1) appends.
+
+    ``clock`` (set by the runtime to its virtual now) supplies default
+    timestamps; without one, a deterministic step counter stands in so
+    host-only components (the user store under direct driver use) still
+    produce replay-stable traces."""
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None) -> None:
+        self.events: List[Tuple] = []   # TraceEvent-ordered plain tuples
+        self.clock = clock
+        self._ids = itertools.count(1)
+
+    # -- time / ids --------------------------------------------------------
+    def now(self) -> float:
+        if self.clock is not None:
+            return float(self.clock())
+        return float(len(self.events)) * 1e-6
+
+    def new_id(self) -> int:
+        return next(self._ids)
+
+    # -- recording ---------------------------------------------------------
+    # Hot path for the serving loop (thousands of events per simulated
+    # run): timestamps are resolved inline rather than through the
+    # _ts/_us helpers so each record is one append, not four calls.
+    def instant(self, name: str, *, ts: Optional[float] = None,
+                track: str = "main", **args) -> None:
+        if ts is None:
+            ts = self.now()
+        self.events.append((name, "i", ts * 1e6, 0.0, track, None, args))
+
+    def complete(self, name: str, ts: float, dur: float, *,
+                 track: str = "main", **args) -> None:
+        """A span with both endpoints known (seconds, virtual)."""
+        self.events.append((name, "X", ts * 1e6, dur * 1e6, track,
+                            next(self._ids), args))
+
+    def begin(self, name: str, *, ts: Optional[float] = None,
+              track: str = "main", span_id: Optional[int] = None,
+              **args) -> int:
+        """Open an async span (overlapping lifetimes on one track —
+        request lifecycles, quarantine windows). Returns the span id to
+        pass to :meth:`end`."""
+        if ts is None:
+            ts = self.now()
+        sid = next(self._ids) if span_id is None else span_id
+        self.events.append((name, "b", ts * 1e6, 0.0, track, sid, args))
+        return sid
+
+    def end(self, name: str, span_id: int, *, ts: Optional[float] = None,
+            track: str = "main", **args) -> None:
+        if ts is None:
+            ts = self.now()
+        self.events.append((name, "e", ts * 1e6, 0.0, track, span_id,
+                            args))
+
+    def counter(self, name: str, *, ts: Optional[float] = None,
+                track: str = "counters", **values) -> None:
+        """A Perfetto counter sample (rendered as a stacked area plot)."""
+        if ts is None:
+            ts = self.now()
+        self.events.append((name, "C", ts * 1e6, 0.0, track, None,
+                            values))
+
+    @contextmanager
+    def span(self, name: str, *, track: str = "main", **args):
+        """Wall-clock-free convenience: a complete span from the virtual
+        clock at entry to the virtual clock at exit."""
+        t0 = self.now()
+        try:
+            yield
+        finally:
+            self.complete(name, t0, self.now() - t0, track=track, **args)
+
+    # -- read-out ----------------------------------------------------------
+    def key_sequence(self) -> List[Tuple]:
+        """The determinism fingerprint: everything except ``args`` (which
+        may carry measured wall times)."""
+        return [e[:6] for e in self.events]
+
+    def to_chrome(self) -> Dict[str, Any]:
+        """Chrome trace-event JSON object (Perfetto-loadable)."""
+        tids: Dict[str, int] = {}
+        out: List[Dict[str, Any]] = []
+        for e in map(TraceEvent._make, self.events):
+            tid = tids.setdefault(e.track, len(tids))
+            rec: Dict[str, Any] = {"name": e.name, "ph": e.ph,
+                                   "ts": e.ts, "pid": 0, "tid": tid}
+            if e.ph == "X":
+                rec["dur"] = e.dur
+            if e.ph in ("b", "e"):
+                rec["cat"] = e.track
+                rec["id"] = e.span_id
+            if e.args:
+                rec["args"] = dict(e.args)
+            out.append(rec)
+        meta = [{"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+                 "args": {"name": track}}
+                for track, tid in tids.items()]
+        return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)

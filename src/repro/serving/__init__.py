@@ -52,7 +52,33 @@ attempt) coordinates — see :mod:`repro.serving.faults` for the knobs
 (``timeout_rate``, ``error_rate``, ``outages`` windows,
 ``drop_feedback_rate``, latency spikes). ``examples/serve_faulty.py``
 runs the full story end to end.
+
+Program caches & observability
+------------------------------
+
+The serving stack keeps four bounded ``functools.lru_cache`` compiled-
+program caches. Their eviction bounds (all LRU at the cache layer):
+
+* ``scheduler._scheduler_programs`` — ``maxsize=128`` route/update
+  program sets, keyed on the full hashable policy spec + build scale +
+  ``fuse_rounds``.
+* ``scheduler.env_budget_table`` — ``maxsize=32`` env-derived budget
+  tables, keyed on ``(env spec, seed)``.
+* ``neural.policy.serving_programs`` — ``maxsize=32`` featurize/fold
+  programs for neural specs.
+* ``state_store._store_programs`` — pool route/fold programs for the
+  per-user store.
+
+:func:`~repro.serving.scheduler.cache_stats` (re-exported here) surfaces
+every cache's hit/miss/size counters in one dict;
+``repro.obs.metrics.record_cache_stats`` turns that into labeled
+Prometheus gauges. ``BanditScheduler``, ``ServingRuntime``,
+``UserStateStore`` and the health tracker / feedback ring all accept
+``obs=`` (a :class:`repro.obs.Obs`) for counters, latency histograms and
+— with ``Obs(trace=True)`` — a replay-deterministic Perfetto trace of
+the virtual-clock event loop.
 """
 from repro.serving import engine, faults, runtime, scheduler
+from repro.serving.scheduler import cache_stats
 
-__all__ = ["engine", "faults", "runtime", "scheduler"]
+__all__ = ["engine", "faults", "runtime", "scheduler", "cache_stats"]

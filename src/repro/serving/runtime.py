@@ -163,7 +163,8 @@ class ArmHealthTracker:
     with a cleared window, a failed one doubles the wait.
     """
 
-    def __init__(self, num_arms: int, cfg: HealthConfig) -> None:
+    def __init__(self, num_arms: int, cfg: HealthConfig,
+                 obs=None) -> None:
         self.cfg = cfg
         self.num_arms = num_arms
         self._window = [collections.deque(maxlen=cfg.window)
@@ -173,6 +174,9 @@ class ArmHealthTracker:
         self._next_probe = np.full(num_arms, math.inf)
         self._interval = np.full(num_arms, cfg.probe_interval_s)
         self.events: List[HealthEvent] = []
+        self._reg = None if obs is None else obs.registry
+        self._tr = None if obs is None else obs.trace
+        self._qspan: Dict[int, int] = {}   # arm → open quarantine span id
 
     def mask(self) -> np.ndarray:
         return ~self._quarantined
@@ -197,6 +201,13 @@ class ArmHealthTracker:
             self._interval[arm] = self.cfg.probe_interval_s
             self._next_probe[arm] = now + self._interval[arm]
             self.events.append(HealthEvent(now, arm, "quarantine"))
+            if self._reg is not None:
+                self._reg.inc("health_quarantines",
+                              labels={"arm": str(arm)})
+            if self._tr is not None:
+                self._qspan[arm] = self._tr.begin(
+                    f"quarantine arm{arm}", ts=now, track="health",
+                    fail_rate=self.failure_rate(arm))
 
     def probes_due(self, now: float) -> List[int]:
         return [a for a in range(self.num_arms)
@@ -206,6 +217,10 @@ class ArmHealthTracker:
     def start_probe(self, arm: int, now: float) -> None:
         self._probing[arm] = True
         self.events.append(HealthEvent(now, arm, "probe"))
+        if self._reg is not None:
+            self._reg.inc("health_probes", labels={"arm": str(arm)})
+        if self._tr is not None:
+            self._tr.instant(f"probe arm{arm}", ts=now, track="health")
 
     def record_probe(self, arm: int, ok: bool, now: float) -> None:
         self._probing[arm] = False
@@ -214,6 +229,11 @@ class ArmHealthTracker:
             self._window[arm].clear()
             self._next_probe[arm] = math.inf
             self.events.append(HealthEvent(now, arm, "readmit"))
+            if self._reg is not None:
+                self._reg.inc("health_readmits", labels={"arm": str(arm)})
+            if self._tr is not None and arm in self._qspan:
+                self._tr.end(f"quarantine arm{arm}",
+                             self._qspan.pop(arm), ts=now, track="health")
         else:
             self._interval[arm] = min(
                 self._interval[arm] * self.cfg.probe_backoff,
@@ -254,7 +274,7 @@ class FeedbackRing:
 
     def __init__(self, capacity: int, dim: int,
                  fold_fn: Callable[..., None], *,
-                 track_users: bool = False) -> None:
+                 track_users: bool = False, obs=None) -> None:
         """``track_users=True`` grows each slot by the pushing request's
         external user id and appends a (capacity,) user-id array as a
         sixth ``fold_fn`` argument — the per-user serving path, where the
@@ -266,6 +286,8 @@ class FeedbackRing:
         self.track_users = track_users
         self.folded = 0
         self.flushes = 0
+        self._reg = None if obs is None else obs.registry
+        self._tr = None if obs is None else obs.trace
         self._alloc()
 
     def _alloc(self) -> None:
@@ -313,6 +335,11 @@ class FeedbackRing:
             self._fold(self._arms, self._xs, self._rs, self._cs, self._mask)
         self.folded += n
         self.flushes += 1
+        if self._reg is not None:
+            self._reg.inc("ring_flushes")
+            self._reg.inc("ring_folded_rows", float(n))
+        if self._tr is not None:
+            self._tr.instant("ring_flush", track="feedback", rows=n)
         self._alloc()
         return n
 
@@ -403,6 +430,7 @@ class _Ticket:
     probe: bool = False
     outcome: Optional[faults_mod.ArmOutcome] = None
     done: bool = False
+    span: Optional[int] = None   # open request-lifecycle trace span
 
 
 _ARRIVAL, _DISPATCH, _COMPLETE, _FEEDBACK, _RETRY = range(5)
@@ -431,7 +459,8 @@ class ServingRuntime:
                  faults: Optional[FaultSpec] = None,
                  config: Optional[RuntimeConfig] = None,
                  oracle: Optional[Callable[[np.ndarray], np.ndarray]] = None,
-                 arm_costs: Optional[Sequence[float]] = None) -> None:
+                 arm_costs: Optional[Sequence[float]] = None,
+                 obs=None) -> None:
         self.scheduler = scheduler
         self.arm_fns = list(arm_fns)
         self.num_arms = len(self.arm_fns)
@@ -442,14 +471,39 @@ class ServingRuntime:
         self.cfg = config if config is not None else RuntimeConfig()
         self.injector = FaultInjector(faults if faults is not None
                                       else FaultSpec(), self.num_arms)
-        self.health = ArmHealthTracker(self.num_arms, self.cfg.health)
+        # ``obs``: optional repro.obs.Obs. Counters/histograms land in its
+        # registry; with Obs(trace=True) every lifecycle transition also
+        # becomes a trace span on the VIRTUAL clock (wall times ride in
+        # span args only, so traces replay bit-identically under seeds).
+        self.obs = obs
+        self._reg = None if obs is None else obs.registry
+        self._tr = None if obs is None else obs.trace
+        self._cb = None
+        self._acc = None
+        self._arm_lbl = tuple(("arm", str(k))
+                              for k in range(self.num_arms))
+        self._attempt_name = tuple(f"attempt arm{k}"
+                                   for k in range(self.num_arms))
+        if self._reg is not None:
+            # pre-bound histogram/counter slots: per-event observes must
+            # not pay spec/label resolution (the ≤5% overhead budget)
+            self._cb = self._reg.counter_batch()
+            self._acc = self._cb._counts
+            self._obs_route_wall = self._reg.observer("route_wall_ms",
+                                                      lo=1e-3, hi=1e4)
+            self._obs_latency = self._reg.observer("rt_latency_s",
+                                                   lo=1e-4, hi=1e3)
+        if self._tr is not None:
+            self._tr.clock = lambda: self._now
+        self.health = ArmHealthTracker(self.num_arms, self.cfg.health,
+                                       obs=obs)
         # a scheduler with a per-user state store keys every route/fold
         # by request user_id; the ring then carries user ids through the
         # delayed-feedback path so late rewards land in the right user
         self._per_user = getattr(scheduler, "state_store", None) is not None
         self.ring = FeedbackRing(self.cfg.ring_capacity,
                                  scheduler.cfg.dim, self._fold,
-                                 track_users=self._per_user)
+                                 track_users=self._per_user, obs=obs)
         self.oracle = oracle
         self.arm_costs = np.asarray(
             [a.cost_per_token for a in scheduler.arms]
@@ -528,6 +582,18 @@ class ServingRuntime:
             handlers[kind](payload)
         self.ring.flush()
         wall = time.perf_counter() - t0
+        if self._reg is not None:
+            # end-of-run gauges: the report's invariants as scrapeable
+            # series, plus the serving stack's program-cache health
+            self._reg.set("rt_lost_feedback",
+                          float(self.feedback_arrived - self.ring.folded))
+            self._reg.set("rt_drained",
+                          float(len(self.served) + len(self.failed)
+                                == self.admitted))
+            self._reg.set("rt_wall_s", wall)
+            from repro.obs.metrics import record_cache_stats
+            from repro.serving.scheduler import cache_stats
+            record_cache_stats(self._reg, cache_stats())
         return RuntimeReport(
             admitted=self.admitted, rejected=self.rejected,
             served=self.served, failed=self.failed,
@@ -545,12 +611,32 @@ class ServingRuntime:
 
     # -- handlers ---------------------------------------------------------
 
+    def _count(self, name: str, value: float = 1.0,
+               label: Optional[tuple] = None) -> None:
+        # inlined CounterBatch.inc (no method dispatch): ~1000 calls per
+        # simulated run land here
+        c = self._acc
+        if c is not None:
+            key = (name, label)
+            c[key] = c.get(key, 0.0) + value
+
     def _on_arrival(self, req: ServeRequest) -> None:
         if len(self._waiting) >= self.cfg.max_queue:
             self.rejected += 1          # backpressure: loud, not lossy
+            self._count("rt_rejected")
+            if self._tr is not None:
+                self._tr.instant("reject", ts=self._now, track="admission",
+                                 uid=req.uid)
             return
         self.admitted += 1
-        self._tickets[req.uid] = _Ticket(req)
+        self._count("rt_admitted")
+        t = _Ticket(req)
+        if self._tr is not None:
+            t.span = self._tr.begin("request", ts=self._now,
+                                    track="requests", uid=req.uid)
+            self._tr.counter("queue", ts=self._now,
+                             depth=len(self._waiting) + 1)
+        self._tickets[req.uid] = t
         self._waiting.append(req.uid)
         if not self._dispatch_pending:
             self._dispatch_pending = True
@@ -583,7 +669,15 @@ class ServingRuntime:
                                           np.resize(uids, width), uids[0])
         t0 = time.perf_counter()
         arms = self.scheduler.route(padded, arm_mask=mask, **kwargs)
-        self._route_wall.append(time.perf_counter() - t0)
+        wall = time.perf_counter() - t0
+        self._route_wall.append(wall)
+        if self._reg is not None:
+            self._obs_route_wall(wall * 1e3)
+        if self._tr is not None:
+            # the measured wall time rides in args ONLY — key_sequence()
+            # ignores args, so traces stay replay-deterministic
+            self._tr.instant("route", ts=self._now, track="route",
+                             batch=b, wall_ms=wall * 1e3)
         return np.asarray(arms)[:b]
 
     def _route_and_launch(self, uids: List[int]) -> None:
@@ -595,6 +689,9 @@ class ServingRuntime:
             # count the bypass loudly.
             mask = np.ones(self.num_arms, bool)
             self.mask_bypass += 1
+            self._count("rt_mask_bypass")
+            if self._tr is not None:
+                self._tr.instant("mask_bypass", ts=now, track="health")
         contexts = np.stack([self._tickets[u].req.context for u in uids])
         users = np.asarray([self._tickets[u].req.user_id for u in uids],
                            np.int64)
@@ -620,6 +717,7 @@ class ServingRuntime:
                     self._fail(t, "no_feasible_arm")
                     continue
                 self.fallback_routed += 1
+                self._count("rt_fallback_routed")
             t.arm = int(arm)
             t.arm_attempts = 1
             self._launch(t)
@@ -644,16 +742,27 @@ class ServingRuntime:
         t.total_attempts += 1
         out = self.injector.draw(t.arm, t.req.uid, t.total_attempts, now)
         t.outcome = out
+        self._count("rt_attempts", label=self._arm_lbl[t.arm])
         if out.status == OK and out.latency_s <= self.cfg.timeout_s:
+            self._attempt_span(t, now, out.latency_s, OK)
             self._push(now + out.latency_s, _COMPLETE, (t.req.uid, OK))
         elif out.status == ERROR:
+            self._attempt_span(t, now, out.latency_s, ERROR)
             self._push(now + out.latency_s, _COMPLETE, (t.req.uid, ERROR))
         else:
             # declared timeout, outage, or an ok-but-spiked call slower
             # than the dispatch timeout: observed at timeout_s, not at
             # the call's true latency
+            self._attempt_span(t, now, self.cfg.timeout_s, TIMEOUT)
             self._push(now + self.cfg.timeout_s, _COMPLETE,
                        (t.req.uid, TIMEOUT))
+
+    def _attempt_span(self, t: _Ticket, now: float, dur: float,
+                      status: str) -> None:
+        if self._tr is not None:
+            self._tr.complete(self._attempt_name[t.arm], now, dur,
+                              track="arms", uid=t.req.uid, status=status,
+                              attempt=t.total_attempts)
 
     def _on_complete(self, payload: Tuple[int, str]) -> None:
         uid, status = payload
@@ -681,16 +790,27 @@ class ServingRuntime:
             latency_s=latency, attempts=t.total_attempts,
             rerouted=t.reroutes > 0, probe=False))
         self._latencies.append(latency)
+        self._count("rt_served", label=self._arm_lbl[t.arm])
+        if self._reg is not None:
+            self._obs_latency(latency)
+        if self._tr is not None and t.span is not None:
+            self._tr.end("request", t.span, ts=now, track="requests",
+                         outcome="served", arm=t.arm)
         if self.oracle is not None:
             probs = self.oracle(t.req.context)
             r = float(np.max(probs) - probs[t.arm])
             self.regret += r
             self.regret_served += r
         self.feedback_emitted += 1
+        self._count("rt_feedback_emitted")
         if t.outcome.feedback_dropped:
             # the reward never reaches us: it is MASKED out of the fold
             # (the ring slot is simply never written) — not zero-folded
             self.feedback_dropped += 1
+            self._count("rt_feedback_dropped")
+            if self._tr is not None:
+                self._tr.instant("feedback_dropped", ts=now,
+                                 track="feedback", uid=uid)
         else:
             self._push(now + t.outcome.feedback_delay_s, _FEEDBACK,
                        (uid, t.arm, t.req.context, float(reward),
@@ -714,6 +834,10 @@ class ServingRuntime:
             delay = r.delay(t.arm_attempts, u)
             if now + delay < deadline:
                 t.arm_attempts += 1
+                self._count("rt_retries", label=self._arm_lbl[t.arm])
+                if self._tr is not None:
+                    self._tr.complete("backoff", now, delay, track="retry",
+                                      uid=uid, arm=t.arm)
                 self._push(now + delay, _RETRY, uid)
                 return
         self._exhaust_and_reroute(t)
@@ -739,6 +863,10 @@ class ServingRuntime:
             return
         t.arm, t.arm_attempts, t.reroutes = arm, 1, t.reroutes + 1
         self.rerouted += 1
+        self._count("rt_rerouted")
+        if self._tr is not None:
+            self._tr.instant("reroute", ts=now, track="retry",
+                             uid=t.req.uid, arm=arm)
         self._launch(t)
 
     def _on_retry(self, uid: int) -> None:
@@ -755,6 +883,11 @@ class ServingRuntime:
     def _fail(self, t: _Ticket, reason: str) -> None:
         self.failed.append(FailedRequest(t.req.uid, reason, self._now,
                                          t.total_attempts))
+        self._count("rt_failed", label=("reason", reason))
+        if self._tr is not None and t.span is not None:
+            self._tr.end("request", t.span, ts=self._now,
+                         track="requests", outcome="failed",
+                         reason=reason)
         if self.oracle is not None:
             # a failed request is charged FULL regret: the user got
             # nothing, the oracle would have served the best arm
@@ -764,6 +897,7 @@ class ServingRuntime:
     def _on_feedback(self, payload) -> None:
         uid, arm, x, reward, cost, user_id = payload
         self.feedback_arrived += 1
+        self._count("rt_feedback_arrived")
         self.ring.push(arm, x, reward, cost, user_id=user_id)
 
     # -- posterior fold ---------------------------------------------------

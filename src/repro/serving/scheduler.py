@@ -102,6 +102,31 @@ def env_budget_table(env: Union[str, scenario_mod.EnvSpec, object],
     return np.asarray(rows, np.float32)
 
 
+def cache_stats() -> Dict[str, Dict[str, Optional[int]]]:
+    """Hit/miss/size stats for every bounded serving-side program cache.
+
+    The serving stack keeps four ``lru_cache``-bounded compiled-program
+    caches (documented in ``repro.serving.__init__``): the scheduler
+    route/update programs, the neural featurize/fold programs, the user
+    store's pool programs, and the env-derived budget tables. This is
+    the one place their ``cache_info()`` is surfaced — feed the result
+    to :func:`repro.obs.metrics.record_cache_stats` to export it as
+    labeled gauges, or read it directly when debugging recompiles."""
+    from repro.serving import state_store as state_store_mod
+    caches = {
+        "scheduler_programs": _scheduler_programs,
+        "env_budget_table": env_budget_table,
+        "neural_serving_programs": neural_policy.serving_programs,
+        "store_programs": state_store_mod._store_programs,
+    }
+    out: Dict[str, Dict[str, Optional[int]]] = {}
+    for name, fn in caches.items():
+        info = fn.cache_info()
+        out[name] = {"hits": info.hits, "misses": info.misses,
+                     "currsize": info.currsize, "maxsize": info.maxsize}
+    return out
+
+
 @dataclasses.dataclass
 class ArmSpec:
     name: str
@@ -233,7 +258,8 @@ class BanditScheduler:
                                    object] = None,
                  state_store: Optional[UserStateStore] = None,
                  fuse_rounds: bool = False,
-                 use_kernels: Optional[bool] = None):
+                 use_kernels: Optional[bool] = None,
+                 obs=None):
         """``backend``: pin this scheduler's routing to one linucb backend
         ("ref" | "pallas" | "pallas_interpret"); ``None`` follows the
         global ``linucb.set_backend`` / ``REPRO_LINUCB_BACKEND`` switch,
@@ -257,7 +283,10 @@ class BanditScheduler:
         on the ``ref`` backend, :class:`ValueError` for policies the
         kernel cannot express. ``use_kernels`` is the deprecated
         spelling of the kernel path (True ≙ backend="pallas" on TPU,
-        "pallas_interpret" on CPU)."""
+        "pallas_interpret" on CPU). ``obs``: an optional
+        :class:`repro.obs.Obs` — routed-batch / per-arm routing / fold
+        counters land in its registry (host-side, off the already-synced
+        route result; the compiled programs are untouched)."""
         if use_kernels is not None:
             warnings.warn("use_kernels is deprecated; pass backend="
                           "'pallas'/'pallas_interpret' (or set the global "
@@ -285,6 +314,23 @@ class BanditScheduler:
             self.spec, len(self.arms), dim, alpha, lam, horizon_t, c_max,
             self.fuse_rounds)
         self.state = self._policy.init()
+        self.obs = obs
+        self._reg = None if obs is None else obs.registry
+        self._obs_local = None
+        if self._reg is not None:
+            # local Python accumulators drained into the registry on any
+            # read (MetricsRegistry.add_sync): route() is the serving
+            # hot path, so per-batch counting must stay a few dict/list
+            # adds — no numpy ufunc dispatch per event
+            self._obs_local = {"sched_route_batches": 0.0,
+                               "sched_requests": 0.0, "sched_optout": 0.0,
+                               "sched_folds": 0.0, "sched_fold_rows": 0.0}
+            self._obs_routed = [0.0] * len(self.arms)
+            self._reg.add_sync(self._obs_drain)
+            for name in self._obs_local:      # export zeros from round 0
+                self._reg.inc(name, 0.0)
+            self._reg.inc_vec("sched_routed", self._obs_routed,
+                              label="arm")
         self.state_store = state_store
         self._neural_store = None
         if state_store is not None:
@@ -315,6 +361,42 @@ class BanditScheduler:
 
     def _backend(self) -> str:
         return self._backend_override or linucb.resolved_backend()
+
+    def _count_route(self, arm: np.ndarray) -> np.ndarray:
+        # host-side, on the already-synced route result — the compiled
+        # routing program never sees the registry. Serving batches are
+        # small (≤ max_batch), so a Python loop over ``tolist()`` beats
+        # any vectorized counting; bench_obs holds this to ≤5% of the
+        # serving loop.
+        if self._obs_local is not None:
+            lst, routed, optout = arm.tolist(), self._obs_routed, 0
+            for a in lst:
+                if a >= 0:
+                    routed[a] += 1.0
+                else:
+                    optout += 1
+            c = self._obs_local
+            c["sched_route_batches"] += 1.0
+            c["sched_requests"] += len(lst)
+            c["sched_optout"] += optout
+        return arm
+
+    def _count_fold(self, n_rows: float) -> None:
+        if self._obs_local is not None:
+            c = self._obs_local
+            c["sched_folds"] += 1.0
+            c["sched_fold_rows"] += n_rows
+
+    def _obs_drain(self) -> None:
+        c = self._obs_local
+        for name in c:
+            if c[name]:
+                self._reg.inc(name, c[name])
+                c[name] = 0.0
+        if any(self._obs_routed):
+            self._reg.inc_vec("sched_routed", self._obs_routed,
+                              label="arm")
+            self._obs_routed = [0.0] * len(self.arms)
 
     # -- public API -------------------------------------------------------
 
@@ -356,9 +438,9 @@ class BanditScheduler:
                 # is embedded once and the per-user pool scores phi
                 featurize, _ = self._neural_store
                 xs = featurize(self.state.trunk.params, xs)
-            return self.state_store.route(uids, xs, arm_mask=arm_mask,
-                                          backend=self._backend(),
-                                          fuse_rounds=self.fuse_rounds)
+            return self._count_route(np.asarray(self.state_store.route(
+                uids, xs, arm_mask=arm_mask, backend=self._backend(),
+                fuse_rounds=self.fuse_rounds)))
         if user_ids is not None:
             raise ValueError("user_ids= requires a scheduler state_store")
         steps_j = (jnp.zeros((b,), jnp.int32) if steps is None
@@ -377,7 +459,7 @@ class BanditScheduler:
                   else jnp.asarray(arm_mask, bool))
         arm = self._route(self.state, xs, steps_j, rem_j, mask_j,
                           backend=self._backend(), masked=masked)
-        return np.asarray(arm)
+        return self._count_route(np.asarray(arm))
 
     def feedback(self, arm: int, context: np.ndarray, reward: float,
                  cost: float = 0.0,
@@ -397,6 +479,7 @@ class BanditScheduler:
                                   jnp.asarray(context, jnp.float32),
                                   jnp.float32(reward), jnp.float32(cost),
                                   backend=self._backend())
+        self._count_fold(1.0)
 
     def feedback_batch(self, arms, contexts: np.ndarray, rewards,
                        costs=None, mask=None, user_ids=None) -> None:
@@ -432,6 +515,8 @@ class BanditScheduler:
         m_np = None if mask is None else np.asarray(mask, np.float32)
         if m_np is not None and not m_np.any():
             return
+        self._count_fold(float(arms_np.shape[0] if m_np is None
+                               else m_np.sum()))
         if self.state_store is not None:
             uids = (np.zeros((arms_np.shape[0],), np.int64)
                     if user_ids is None

@@ -95,7 +95,8 @@ class UserStateStore:
 
     def __init__(self, cfg: linucb.LinUCBConfig, capacity: int, *,
                  cohort_prior: bool = True,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 obs=None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.cfg = cfg
@@ -111,6 +112,10 @@ class UserStateStore:
         self.evictions = 0
         self.restores = 0
         self.cold_starts = 0
+        # obs=: residency transitions as counters + instants (the store's
+        # own evictions/restores/cold_starts stay authoritative)
+        self._reg = None if obs is None else obs.registry
+        self._tr = None if obs is None else obs.trace
 
     # -- residency ---------------------------------------------------------
 
@@ -155,17 +160,29 @@ class UserStateStore:
                     f.write(blob)
             self._host[victim] = blob
             self.evictions += 1
+            self._note("store_evictions", "evict", user=victim)
         if uid in self._host:
             state = checkpoint.loads(self._host.pop(uid), self._template)
             self.restores += 1
+            self._note("store_restores", "restore", user=uid)
         elif self.cohort_prior:
             state = self.cohort                # hierarchical warm start
             self.cold_starts += 1
+            self._note("store_cold_starts", "cold_start", user=uid)
         else:
             state = self._template             # flat λ⁻¹I prior
             self.cold_starts += 1
+            self._note("store_cold_starts", "cold_start", user=uid)
         self.pool = linucb.set_user_state(self.pool, slot, state)
         self._slots[uid] = slot
+        if self._reg is not None:
+            self._reg.set("store_resident_users", float(len(self._slots)))
+
+    def _note(self, counter: str, event: str, *, user: int) -> None:
+        if self._reg is not None:
+            self._reg.inc(counter)
+        if self._tr is not None:
+            self._tr.instant(event, track="store", user=user)
 
     # -- routing / feedback ------------------------------------------------
 

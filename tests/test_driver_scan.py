@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import linucb, router
 
 FIELDS = ("arms", "rewards", "costs", "regrets", "budgets", "datasets")
@@ -272,27 +273,26 @@ class TestZeroCopyJaxpr:
         return linucb.init(linucb.LinUCBConfig(num_arms=self.K, dim=self.D))
 
     def _kdd_sig(self):
-        return f"f32[{self.K},{self.D},{self.D}]"
+        return obs.shape_sig(self.K, self.D, self.D)
 
     def test_ucb_scores_jaxpr_clean(self):
         s = self._state()
         xs = jnp.ones((5, self.D))
         with linucb.backend_scope("pallas_interpret"):
-            txt = str(jax.make_jaxpr(
-                lambda s, x: linucb.ucb_scores(s, x, 0.5))(s, xs))
-        assert "transpose" not in txt
-        assert self._kdd_sig() not in txt
+            obs.jaxpr_audit(
+                lambda s, x: linucb.ucb_scores(s, x, 0.5), s, xs).expect(
+                    transpose_free=True, banned=[self._kdd_sig()])
 
     def test_update_jaxpr_clean(self):
         s = self._state()
         x = jnp.ones((self.D,))
         with linucb.backend_scope("pallas_interpret"):
-            txt = str(jax.make_jaxpr(
+            obs.jaxpr_audit(
                 lambda s, x: linucb.update(s, jnp.int32(1), x,
                                            jnp.float32(1.0),
-                                           mask=jnp.asarray(True)))(s, x))
-        assert "transpose" not in txt
-        assert self._kdd_sig() not in txt
+                                           mask=jnp.asarray(True)),
+                s, x).expect(transpose_free=True,
+                             banned=[self._kdd_sig()])
 
     def test_batch_update_jaxpr_no_kdd(self):
         s = self._state()
@@ -300,6 +300,6 @@ class TestZeroCopyJaxpr:
         xs = jnp.ones((2, self.D))
         rs = jnp.ones((2,))
         with linucb.backend_scope("pallas_interpret"):
-            txt = str(jax.make_jaxpr(
-                lambda s: linucb.batch_update(s, arms, xs, rs))(s))
-        assert self._kdd_sig() not in txt
+            obs.jaxpr_audit(
+                lambda s: linucb.batch_update(s, arms, xs, rs), s).expect(
+                    banned=[self._kdd_sig()])

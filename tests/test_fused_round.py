@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import fused as fused_mod
 from repro.core import linucb, policy as policy_mod, router
 from repro.engine import driver
@@ -282,16 +283,13 @@ class TestSingleLaunchJaxpr:
             kenv, kround = jax.random.split(key)
             params = env.make(kenv)
             table = driver._pool_budget_table(1e-3, env.num_datasets, False)
-            counts = {}
-            for fuse in (False, True):
+            for fuse, launches in ((False, 2), (True, 1)):
                 pol, round_fn, _ = driver._jitted_pool_drivers(
                     spec, env, 0.675, 0.45, 100, env.max_cost(), 0, 0.05,
                     None, be, fuse)
-                jaxpr = jax.make_jaxpr(round_fn.__wrapped__)(
-                    params, pol.init(), kround, table)
-                counts[fuse] = str(jaxpr).count("pallas_call")
-        assert counts[True] == 1, counts
-        assert counts[False] == 2, counts
+                obs.jaxpr_audit(round_fn.__wrapped__, params, pol.init(),
+                                kround, table).expect(
+                                    pallas_calls=launches)
 
 
 class TestServingFusedParity:

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.linucb_score import linucb_score, linucb_score_blocked
@@ -324,12 +325,11 @@ class TestSelectedBlockBatch:
         a_inv_t = ref.pack_block(_spd(jax.random.PRNGKey(0), k, d))
         xs = jnp.ones((b, d))
         arms = jnp.array([0, 3], jnp.int32)
-        txt = str(jax.make_jaxpr(
+        obs.jaxpr_audit(
             lambda a: sherman_morrison_batch_selected(a, xs, arms,
-                                                      interpret=True))(
-                                                          a_inv_t))
-        assert f"f32[{b},{k}]" not in txt
-        assert f"f32[{k},{b}]" not in txt
+                                                      interpret=True),
+            a_inv_t).expect(banned=[obs.shape_sig(b, k),
+                                    obs.shape_sig(k, b)])
 
     def test_batch_update_jaxpr_has_no_full_k_onehot(self):
         """linucb.batch_update on the pallas backend goes through the
@@ -341,14 +341,13 @@ class TestSelectedBlockBatch:
         xs = jnp.ones((b, d))
         rs = jnp.ones((b,))
         with lib.backend_scope("pallas_interpret"):
-            txt = str(jax.make_jaxpr(
-                lambda s: lib.batch_update(s, arms, xs, rs))(s))
-        assert f"f32[{b},{k}]" not in txt
-        assert f"f32[{k},{b}]" not in txt
+            obs.jaxpr_audit(
+                lambda s: lib.batch_update(s, arms, xs, rs), s).expect(
+                    banned=[obs.shape_sig(b, k), obs.shape_sig(k, b)])
         with lib.backend_scope("ref"):
-            ref_txt = str(jax.make_jaxpr(
-                lambda s: lib.batch_update(s, arms, xs, rs))(s))
-        assert f"f32[{b},{k}]" in ref_txt   # the ref path does use one
+            obs.jaxpr_audit(
+                lambda s: lib.batch_update(s, arms, xs, rs), s).expect(
+                    required=[obs.shape_sig(b, k)])  # ref path does use one
 
     def test_ops_jitted_wrapper(self):
         k, d, b = 3, 24, 4

@@ -12,13 +12,12 @@ like any other state. The bandit head must keep running on the existing
 ``(d, K·d)`` block kernels: the jaxpr tests assert the neural path adds
 no transpose round-trips and never materializes per-arm (F, F) blocks.
 """
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import env as env_mod
 from repro.core import linucb, router
 from repro.core import policy as policy_mod
@@ -327,12 +326,13 @@ class TestJaxprClean:
         state = ad.init()
         x = jnp.ones((self.D,))
         with linucb.backend_scope("pallas_interpret"):
-            txt = str(jax.make_jaxpr(
+            obs.jaxpr_audit(
                 lambda s, xv: ad.select(s, jnp.int32(0), xv, jnp.int32(0),
-                                        jnp.float32(1.0)))(state, x))
-        assert "transpose" not in txt
-        assert f"f32[{self.K},{self.F},{self.F}]" not in txt
-        assert f"f32[{self.K},{self.D},{self.D}]" not in txt
+                                        jnp.float32(1.0)),
+                state, x).expect(
+                    transpose_free=True,
+                    banned=[obs.shape_sig(self.K, self.F, self.F),
+                            obs.shape_sig(self.K, self.D, self.D)])
 
     def test_update_jaxpr_bandit_block_untouched(self):
         """Trunk backprop transposes its own tiny MLP matrices; the
@@ -341,18 +341,15 @@ class TestJaxprClean:
         ad = self._adapter()
         state = ad.init()
         x = jnp.ones((self.D,))
+        kf = self.K * self.F
         with linucb.backend_scope("pallas_interpret"):
-            txt = str(jax.make_jaxpr(
+            obs.jaxpr_audit(
                 lambda s, xv: ad.update(s, jnp.int32(0), jnp.int32(1), xv,
                                         jnp.float32(1.0), jnp.float32(0.1),
-                                        jnp.asarray(True)))(state, x))
-        assert f"f32[{self.K},{self.F},{self.F}]" not in txt
-        kf = self.K * self.F
-        banned = {(self.F, kf), (kf, self.F)}
-        for m in re.finditer(r"f32\[(\d+),(\d+)\] = transpose", txt):
-            shape = (int(m.group(1)), int(m.group(2)))
-            assert shape not in banned, \
-                f"bandit block transposed: f32{list(shape)}"
+                                        jnp.asarray(True)),
+                state, x).expect(
+                    banned=[obs.shape_sig(self.K, self.F, self.F)],
+                    banned_transposes=[(self.F, kf), (kf, self.F)])
 
 
 class TestCacheBounds:

@@ -1,0 +1,433 @@
+"""Observability subsystem tests: the device recorder against its numpy
+oracle, the obs-off bitwise-invisibility contract across every driver
+and serving route, obs-on result parity, trace replay determinism,
+exporter goldens, and the jaxpr-audit API."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs as obs_mod
+from repro.core import env as env_mod
+from repro.core import linucb
+from repro.core.router import RoundLog
+from repro.engine import driver
+from repro.obs import export as export_mod
+from repro.obs import metrics as metrics_mod
+from repro.obs.trace import TraceEvent, Tracer
+from repro.serving import cache_stats
+from repro.serving.faults import (FaultSpec, SyntheticArmPool,
+                                  bursty_arrivals)
+from repro.serving.runtime import (HealthConfig, RetryPolicy,
+                                   RuntimeConfig, ServingRuntime)
+from repro.serving.scheduler import ArmSpec, BanditScheduler
+
+K, D, H = 4, 16, 3
+RESULT_FIELDS = ("arms", "rewards", "costs", "regrets", "budgets",
+                 "datasets")
+
+
+@pytest.fixture(scope="module")
+def pool_env():
+    return env_mod.CalibratedPoolEnv(dim=D)
+
+
+# ---------------------------------------------------------------------------
+# Registry basics
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_inc_set_observe_value(self):
+        reg = metrics_mod.MetricsRegistry()
+        reg.inc("requests")
+        reg.inc("requests", 2.0)
+        reg.inc("requests", labels={"arm": "1"})
+        reg.set("depth", 7.0)
+        reg.set("depth", 3.0)              # gauges are last-write-wins
+        assert reg.value("requests") == 3.0
+        assert reg.value("requests", labels={"arm": "1"}) == 1.0
+        assert reg.value("depth") == 3.0
+
+    def test_quantile_and_observe(self):
+        reg = metrics_mod.MetricsRegistry()
+        for v in (0.1, 0.2, 0.9):
+            reg.observe("lat", v, bins=8, lo=0.0, hi=1.0, log_bins=False)
+        q = reg.quantile("lat", 0.5)
+        assert 0.2 <= q <= 0.4
+        reg.inc("n_served")
+        with pytest.raises(ValueError):
+            reg.quantile("n_served", 0.5)  # not a histogram
+
+    def test_kind_conflict_raises(self):
+        reg = metrics_mod.MetricsRegistry()
+        reg.inc("x")
+        with pytest.raises(ValueError):
+            reg.set("x", 1.0)
+
+    def test_inc_vec_and_handle(self):
+        reg = metrics_mod.MetricsRegistry()
+        reg.inc_vec("routed", [1, 0, 2], label="arm")
+        reg.inc_vec("routed", [0, 1, 1], label="arm")
+        assert np.array_equal(reg.value("routed"), [1.0, 1.0, 3.0])
+        h = reg.handle("hits")
+        h[...] += 5.0
+        assert reg.value("hits") == 5.0
+
+    def test_counter_batch_drains_on_read(self):
+        reg = metrics_mod.MetricsRegistry()
+        cb = reg.counter_batch()
+        cb.inc("served")
+        cb.inc("served", 2.0, label=("arm", "0"))
+        # nothing lands in the registry until a read syncs
+        assert ("served", ()) not in reg._values
+        assert reg.value("served") == 1.0
+        assert reg.value("served", labels={"arm": "0"}) == 2.0
+        # in-place clear: the same dict object keeps accumulating
+        cb.inc("served")
+        assert reg.value("served") == 2.0
+
+    def test_observer_defers_then_drains(self):
+        reg = metrics_mod.MetricsRegistry()
+        obs = reg.observer("lat_s", bins=4, lo=0.0, hi=1.0,
+                           log_bins=False)
+        for v in (0.1, 0.6, 0.6, 2.5):     # 2.5 clamps into the top bin
+            obs(v)
+        counts = reg.value("lat_s")[:4]
+        assert counts.sum() == 4.0
+        assert counts[-1] == 1.0
+        assert reg.value("lat_s")[4] == pytest.approx(0.1 + 0.6 + 0.6
+                                                      + 2.5)
+
+
+# ---------------------------------------------------------------------------
+# Device recorder vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+def _random_logs(rng, n):
+    arms = rng.integers(-1, K, size=(n, H)).astype(np.int32)
+    executed = arms >= 0
+    rewards = rng.random((n, H)) * executed
+    costs = rng.random((n, H)) * 1e-3 * executed
+    regrets = rng.random((n, H)) * 0.5 * executed
+    budgets = rng.random(n) * 1e-2
+    datasets = rng.integers(0, 2, size=n).astype(np.int32)
+    return arms, rewards, costs, regrets, budgets, datasets
+
+
+class TestDeviceRecorder:
+    def test_matches_host_oracle(self):
+        schema = metrics_mod.round_schema(K, 2)
+        rng = np.random.default_rng(3)
+        arms, rewards, costs, regrets, budgets, datasets = \
+            _random_logs(rng, 50)
+
+        m = schema.init()
+        rec = jax.jit(metrics_mod.record_round, static_argnums=0)
+        for t in range(arms.shape[0]):
+            log = RoundLog(
+                arms=jnp.asarray(arms[t]),
+                rewards=jnp.asarray(rewards[t], jnp.float32),
+                costs=jnp.asarray(costs[t], jnp.float32),
+                regrets=jnp.asarray(regrets[t], jnp.float32),
+                budget=jnp.asarray(budgets[t], jnp.float32))
+            m = rec(schema, m, log, jnp.asarray(datasets[t]),
+                    jnp.asarray(1.0))
+        reg_dev = metrics_mod.MetricsRegistry()
+        reg_dev.merge(schema, m)
+
+        # feed the oracle round-by-round too: the budget_headroom gauge
+        # is last-write-wins, so a single batched call would MEAN it
+        acc = {s.name: np.zeros(s.shape) for s in schema.metrics}
+        for t in range(arms.shape[0]):
+            acc = metrics_mod.record_round_host(
+                schema, acc, arms[t], rewards[t], costs[t], regrets[t],
+                budgets[t], datasets[t])
+        reg_host = metrics_mod.MetricsRegistry()
+        reg_host.merge(schema, acc)
+
+        for spec in schema.metrics:
+            a, b = reg_dev.value(spec.name), reg_host.value(spec.name)
+            np.testing.assert_allclose(
+                a, b, rtol=1e-5, atol=1e-6,
+                err_msg=f"device/host disagree on {spec.name}")
+
+    def test_gate_zero_contributes_nothing(self):
+        schema = metrics_mod.round_schema(K, 1)
+        m = schema.init()
+        log = RoundLog(arms=jnp.full((H,), 2, jnp.int32),
+                       rewards=jnp.ones((H,)),
+                       costs=jnp.ones((H,)),
+                       regrets=jnp.ones((H,)),
+                       budget=jnp.asarray(5.0))
+        m2 = metrics_mod.record_round(schema, m, log, jnp.asarray(0),
+                                      jnp.asarray(0.0))
+        np.testing.assert_array_equal(np.asarray(m2), np.asarray(m))
+
+    def test_merge_sums_replication_axes(self):
+        schema = metrics_mod.round_schema(K, 1)
+        m = np.zeros((3, schema.packed_size()), np.float32)
+        start, _ = schema.offsets()["rounds"]
+        m[:, start] = 2.0
+        gstart, _ = schema.offsets()["budget_headroom"]
+        m[:, gstart] = [1.0, 2.0, 3.0]
+        reg = metrics_mod.MetricsRegistry()
+        reg.merge(schema, jnp.asarray(m))
+        assert reg.value("rounds") == 6.0          # counters SUM rows
+        assert reg.value("budget_headroom") == 2.0  # gauges MEAN rows
+
+
+# ---------------------------------------------------------------------------
+# Driver routes: obs-off bitwise parity, obs-on parity + consistency
+# ---------------------------------------------------------------------------
+
+def _assert_result_parity(a, b):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"obs changed {f}")
+
+
+class TestDriverParity:
+    def test_scan_obs_on_bitwise_invisible(self, pool_env):
+        run = lambda **kw: driver.run_pool_experiment(
+            "greedy_linucb", rounds=96, env=pool_env, **kw)
+        res_off, res_on = run(), run(obs=(o := obs_mod.Obs()))
+        _assert_result_parity(res_off, res_on)
+        reg = o.registry
+        executed = res_on.arms[res_on.arms >= 0]
+        assert int(reg.value("rounds")) == 96
+        assert np.array_equal(
+            reg.value("pulls"),
+            np.bincount(executed, minlength=pool_env.num_arms))
+        assert reg.value("regret_sum") == pytest.approx(
+            float(res_on.regrets.sum()), rel=1e-4, abs=1e-5)
+        assert reg.quantile("round_cost", 0.5) > 0.0
+
+    def test_per_round_dispatch_records(self, pool_env):
+        o = obs_mod.Obs()
+        res = driver.run_pool_experiment("greedy_linucb", rounds=24,
+                                         env=pool_env,
+                                         dispatch="per_round", obs=o)
+        res_off = driver.run_pool_experiment("greedy_linucb", rounds=24,
+                                             env=pool_env,
+                                             dispatch="per_round")
+        _assert_result_parity(res_off, res)
+        assert int(o.registry.value("rounds")) == 24
+
+    def test_sweep_obs_parity(self, pool_env):
+        run = lambda **kw: driver.run_pool_experiment_sweep(
+            "greedy_linucb", seeds=[0, 1], rounds=48, env=pool_env, **kw)
+        offs, ons = run(), run(obs=(o := obs_mod.Obs()))
+        for a, b in zip(offs, ons):
+            _assert_result_parity(a, b)
+        # the sweep delta arrives with a leading replication axis: the
+        # registry must fold BOTH rows
+        assert int(o.registry.value("rounds")) == 2 * 48
+
+    def test_multistream_obs_parity(self, pool_env):
+        run = lambda **kw: driver.run_pool_multistream(
+            "greedy_linucb", rounds=32, streams=4, env=pool_env, **kw)
+        res_off, res_on = run(), run(obs=(o := obs_mod.Obs()))
+        _assert_result_parity(res_off, res_on)
+        reg = o.registry
+        assert int(reg.value("rounds")) == res_on.arms.shape[0]
+        executed = res_on.arms[res_on.arms >= 0]
+        assert int(reg.value("pulls").sum()) == executed.size
+
+
+# ---------------------------------------------------------------------------
+# Serving routes: parity, counter consistency, trace determinism
+# ---------------------------------------------------------------------------
+
+_WALL_KEYS = ("wall_s", "user_rounds_per_s", "route_p50_ms",
+              "route_p99_ms")
+
+
+def _chaos_runtime(obs=None, seed=7):
+    pool = SyntheticArmPool(K, D, seed=1)
+    arms = [ArmSpec(f"a{k}", None, float(pool.costs[k]))
+            for k in range(K)]
+    sched = BanditScheduler(arms, dim=D, alpha=1.0, obs=obs)
+    cfg = RuntimeConfig(
+        max_batch=16, ring_capacity=8, timeout_s=0.25, deadline_s=8.0,
+        retry=RetryPolicy(max_attempts=3, base_delay_s=0.05,
+                          max_delay_s=0.5),
+        health=HealthConfig(window=12, fail_threshold=0.6, min_samples=4,
+                            probe_interval_s=0.5))
+    rt = ServingRuntime(
+        sched, pool.arm_fns(),
+        faults=FaultSpec(timeout_rate=0.15, error_rate=0.1,
+                         drop_feedback_rate=0.2, seed=seed),
+        config=cfg, oracle=pool.oracle, obs=obs)
+    times = bursty_arrivals(t_end=8.0, rate=8.0, seed=11)
+    rt.submit_trace(pool.contexts(len(times), seed=5), times)
+    return rt
+
+
+class TestServingObs:
+    def test_report_parity_and_counters(self):
+        rep_off = _chaos_runtime().run()
+        o = obs_mod.Obs()
+        rep_on = _chaos_runtime(o).run()
+        s_off, s_on = rep_off.summary(), rep_on.summary()
+        for k in s_off:
+            if k not in _WALL_KEYS:
+                assert s_off[k] == s_on[k], f"obs changed report {k!r}"
+        reg = o.registry
+        assert int(reg.value("rt_admitted")) == rep_on.admitted
+        assert int(reg.value("rt_feedback_arrived")) == \
+            rep_on.feedback_arrived
+        assert int(reg.value("ring_folded_rows")) == rep_on.feedback_folded
+        assert reg.value("rt_lost_feedback") == 0.0
+        assert reg.value("rt_drained") == 1.0
+        served = sum(
+            float(vals.sum()) for spec, _, vals in reg.series()
+            if spec.name == "rt_served")
+        assert int(served) == len(rep_on.served)
+
+    def test_trace_replay_deterministic(self):
+        seqs = []
+        for _ in range(2):
+            o = obs_mod.Obs(trace=True)
+            _chaos_runtime(o).run()
+            seqs.append(o.trace.key_sequence())
+        assert seqs[0] == seqs[1]
+        assert len(seqs[0]) > 100
+
+    def test_trace_chrome_export(self, tmp_path):
+        o = obs_mod.Obs(trace=True)
+        _chaos_runtime(o).run()
+        path = tmp_path / "trace.json"
+        o.export_trace(str(path))
+        doc = json.loads(path.read_text())
+        events = doc["traceEvents"]
+        phases = {e["ph"] for e in events}
+        assert {"M", "i"} <= phases          # thread names + instants
+        assert {"b", "e"} <= phases          # async request spans
+        # every event tuple round-trips through the NamedTuple view
+        ev = TraceEvent._make(o.trace.events[0])
+        assert ev.ts >= 0.0 and isinstance(ev.args, dict)
+
+    def test_tracer_step_clock_fallback(self):
+        tr = Tracer()
+        tr.instant("a")
+        tr.instant("b")
+        ts = [e[2] for e in tr.events]
+        assert ts == sorted(ts) and ts[0] == 0.0
+
+    def test_obs_without_trace_export_raises(self):
+        with pytest.raises(ValueError):
+            obs_mod.Obs().export_trace("/tmp/never.json")
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+class TestExport:
+    def test_prometheus_golden(self):
+        reg = metrics_mod.MetricsRegistry()
+        reg.inc("served", 3.0)
+        reg.inc("served", 1.0, labels={"arm": "2"})
+        reg.set("depth", 1.5)
+        reg.inc_vec("routed", [2, 0], label="arm")
+        reg.observe("lat", 0.5, bins=2, lo=0.0, hi=1.0, log_bins=False)
+        text = export_mod.to_prometheus(reg)
+        assert text == (
+            "# TYPE depth gauge\n"
+            "depth 1.5\n"
+            "# TYPE lat histogram\n"
+            'lat_bucket{le="0.5"} 0\n'
+            'lat_bucket{le="1"} 1\n'
+            'lat_bucket{le="+Inf"} 1\n'
+            "lat_sum 0.5\n"
+            "lat_count 1\n"
+            "# TYPE routed counter\n"
+            'routed{arm="0"} 2\n'
+            'routed{arm="1"} 0\n'
+            "# TYPE served counter\n"
+            "served 3\n"
+            'served{arm="2"} 1\n')
+
+    def test_snapshot_round_trips_json(self):
+        reg = metrics_mod.MetricsRegistry()
+        reg.inc("a", 2.0)
+        reg.observe("h", 0.5)
+        snap = json.loads(json.dumps(reg.snapshot()))
+        assert snap["a"]["series"][0]["value"] == 2.0
+        assert snap["h"]["series"][0]["count"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# jaxpr audit API
+# ---------------------------------------------------------------------------
+
+class TestAudit:
+    def test_shape_sig(self):
+        assert obs_mod.shape_sig(4, 32, 32) == "f32[4,32,32]"
+        assert obs_mod.shape_sig(8, dtype="i32") == "i32[8]"
+
+    def test_expect_clauses(self):
+        x = jnp.ones((4, 8))
+        audit = obs_mod.jaxpr_audit(lambda a: (a.T @ a).sum(), x)
+        audit.expect(pallas_calls=0, required=[obs_mod.shape_sig(8, 8)])
+        with pytest.raises(obs_mod.AuditError):
+            audit.expect(pallas_calls=1)
+        with pytest.raises(obs_mod.AuditError):
+            audit.expect(banned=[obs_mod.shape_sig(8, 8)])
+        with pytest.raises(obs_mod.AuditError):
+            audit.expect(required=[obs_mod.shape_sig(3, 3)])
+        with pytest.raises(obs_mod.AuditError):
+            audit.expect(transpose_free=True)
+        with pytest.raises(obs_mod.AuditError):
+            audit.expect(banned_transposes=[(8, 4)])
+
+    def test_fused_round_audit_contract(self, pool_env):
+        """The obs-on chunk body adds arithmetic, never launches."""
+        from repro.core import policy as policy_mod
+        spec = policy_mod.as_spec("greedy_linucb")
+        schema = metrics_mod.round_schema(pool_env.num_arms,
+                                          pool_env.num_datasets)
+        with linucb.backend_scope("pallas_interpret"):
+            be = linucb.resolved_backend()
+            key = jax.random.PRNGKey(0)
+            kenv, kround = jax.random.split(key)
+            params = pool_env.make(kenv)
+            table = driver._pool_budget_table(
+                1e-3, pool_env.num_datasets, False)
+            ts = jnp.arange(16, dtype=jnp.int32)
+            pol, _, chunk_off = driver._jitted_pool_drivers(
+                spec, pool_env, 0.675, 0.45, 64, pool_env.max_cost(),
+                0, 0.05, None, be, False)
+            _, _, chunk_on = driver._jitted_pool_drivers(
+                spec, pool_env, 0.675, 0.45, 64, pool_env.max_cost(),
+                0, 0.05, None, be, False, schema, 64)
+            a_off = obs_mod.jaxpr_audit(chunk_off.__wrapped__, params,
+                                        pol.init(), kround, table, ts)
+            a_on = obs_mod.jaxpr_audit(chunk_on.__wrapped__, params,
+                                       (pol.init(), schema.init()),
+                                       kround, table, ts)
+            a_on.expect(pallas_calls=a_off.pallas_calls,
+                        banned=[obs_mod.shape_sig(pool_env.num_arms,
+                                                  D, D)])
+
+
+# ---------------------------------------------------------------------------
+# Serving cache stats
+# ---------------------------------------------------------------------------
+
+class TestCacheStats:
+    def test_shape_and_export(self):
+        stats = cache_stats()
+        assert {"scheduler_programs", "env_budget_table",
+                "neural_serving_programs",
+                "store_programs"} <= set(stats)
+        for info in stats.values():
+            assert {"hits", "misses", "currsize"} <= set(info)
+        reg = metrics_mod.MetricsRegistry()
+        metrics_mod.record_cache_stats(reg, stats)
+        assert reg.value(
+            "program_cache_hits",
+            labels={"cache": "scheduler_programs"}) >= 0.0
